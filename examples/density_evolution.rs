@@ -1,0 +1,79 @@
+//! Density evolution (Proposition 2 / Remark 3): the analytic `q_d`
+//! recursion, the ensemble threshold `q*(r, l)`, and an empirical
+//! validation against the actual peeling decoder on sampled codes.
+//!
+//! ```text
+//! cargo run --release --offline --example density_evolution
+//! ```
+
+use moment_ldpc::codes::density::DensityEvolution;
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::codes::peeling::PeelingDecoder;
+use moment_ldpc::error::Result;
+use moment_ldpc::harness::report::Table;
+use moment_ldpc::rng::Rng;
+
+fn main() -> Result<()> {
+    // Thresholds for the classic regular ensembles.
+    println!("BEC thresholds q*(r, l):");
+    for (l, r) in [(3usize, 6usize), (3, 4), (4, 8), (3, 5)] {
+        let de = DensityEvolution::new(l, r);
+        println!("  ({l},{r})-regular, rate {:.2}: q* = {:.4}", 1.0 - l as f64 / r as f64, de.threshold());
+    }
+
+    // The paper's tuning story: iterations needed vs straggler rate.
+    let de = DensityEvolution::new(3, 6);
+    let mut t = Table::new(
+        "analytic q_d and empirical peeling residual, (3,6) ensemble, N=512",
+        &["q0", "q_5 (analytic)", "q_5 (empirical)", "q_20 (analytic)", "q_20 (empirical)", "iters to 1e-6"],
+    );
+
+    // Empirical: sample a long (512, 256) code, erase i.i.d., peel.
+    let code = LdpcCode::gallager(512, 256, 3, 6, 21)?;
+    let dec = PeelingDecoder::new(&code);
+    let mut rng = Rng::new(33);
+    for q0 in [0.1f64, 0.2, 0.3, 0.35, 0.4, 0.45] {
+        let emp = |d: usize, rng: &mut Rng| -> f64 {
+            let trials = 60;
+            let mut still = 0usize;
+            let mut total = 0usize;
+            for _ in 0..trials {
+                let erased: Vec<usize> = (0..512).filter(|_| rng.bernoulli(q0)).collect();
+                let sched = dec.schedule(&erased, d);
+                still += sched.unrecovered.len();
+                total += erased.len();
+            }
+            if total == 0 {
+                0.0
+            } else {
+                still as f64 / (trials * 512) as f64
+            }
+        };
+        let e5 = emp(5, &mut rng);
+        let e20 = emp(20, &mut rng);
+        // Analytic node-perspective residual (probability a coordinate is
+        // erased after d rounds), comparable to the empirical fraction.
+        let a5 = de.node_residual(q0, 5);
+        let a20 = de.node_residual(q0, 20);
+        let iters = de
+            .iterations_to(q0, 1e-6, 100_000)
+            .map(|d| d.to_string())
+            .unwrap_or_else(|| "stalls".into());
+        t.row(vec![
+            format!("{q0:.2}"),
+            format!("{a5:.4}"),
+            format!("{e5:.4}"),
+            format!("{a20:.4}"),
+            format!("{e20:.4}"),
+            iters,
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nReading: below the threshold (≈0.429) the residual dies out and the\n\
+         decoder needs only a handful of rounds — the paper's 'decoding\n\
+         iterations adjust to the number of stragglers' claim. Above it, peeling\n\
+         stalls at a positive fraction no matter how many rounds are spent."
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+"""AOT lowering: JAX/Pallas (L1+L2) -> HLO text artifacts for the Rust
+runtime (L3).
+
+HLO **text** — not ``lowered.compile().serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact naming (parsed by ``rust/src/runtime/artifact.rs``):
+
+    shard_matvec_{R}x{K}.hlo.txt   (rows f32[R,K], theta f32[K]) -> (f32[R],)
+    local_grad_{R}x{K}.hlo.txt     (x f32[R,K], y f32[R], theta f32[K]) -> (f32[K],)
+
+The shape set covers the paper's experiment grid (Figs. 1-3 worker shard
+shapes) plus generic power-of-two fallbacks the Rust registry pads into.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (alpha = ceil(k/K_code), k) shard shapes for the moment schemes:
+# fig1 k in {200,400,800,1000} with the (40,20) code, fig3 k=2000;
+# power-of-two fallbacks for everything else.
+SHARD_MATVEC_SHAPES = [
+    (10, 200),
+    (20, 400),
+    (40, 800),
+    (50, 1000),
+    (100, 2000),
+    (64, 1024),
+    (128, 2048),
+]
+
+# (rows-per-worker, k) for the data-parallel schemes: uncoded/replication
+# (m=2048 over 40 workers -> 52), KSDY17 (4096 encoded rows over 40
+# workers -> 103), plus fallbacks.
+LOCAL_GRAD_SHAPES = [
+    (52, 200),
+    (52, 400),
+    (52, 800),
+    (52, 1000),
+    (103, 200),
+    (103, 400),
+    (103, 800),
+    (103, 1000),
+    (64, 2048),
+    (128, 2048),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_shard_matvec(r: int, k: int) -> str:
+    spec_rows = jax.ShapeDtypeStruct((r, k), jax.numpy.float32)
+    spec_theta = jax.ShapeDtypeStruct((k,), jax.numpy.float32)
+    return to_hlo_text(jax.jit(model.shard_matvec).lower(spec_rows, spec_theta))
+
+
+def lower_local_grad(r: int, k: int) -> str:
+    spec_x = jax.ShapeDtypeStruct((r, k), jax.numpy.float32)
+    spec_y = jax.ShapeDtypeStruct((r,), jax.numpy.float32)
+    spec_theta = jax.ShapeDtypeStruct((k,), jax.numpy.float32)
+    return to_hlo_text(jax.jit(model.local_grad).lower(spec_x, spec_y, spec_theta))
+
+
+def build(out_dir: pathlib.Path, force: bool = False) -> list[pathlib.Path]:
+    """Write all artifacts; skip files that already exist unless forced."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    jobs = [("shard_matvec", lower_shard_matvec, SHARD_MATVEC_SHAPES), (
+        "local_grad",
+        lower_local_grad,
+        LOCAL_GRAD_SHAPES,
+    )]
+    for name, lower, shapes in jobs:
+        for r, k in shapes:
+            path = out_dir / f"{name}_{r}x{k}.hlo.txt"
+            if path.exists() and not force:
+                continue
+            text = lower(r, k)
+            path.write_text(text)
+            written.append(path)
+            print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--force", action="store_true", help="rebuild existing artifacts")
+    # Back-compat: Makefile may pass --out <file> to request the default set.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.out_dir)
+    written = build(out_dir, force=args.force)
+    print(f"{len(written)} artifacts written to {out_dir}", file=sys.stderr)
+    # Stamp file so make can track freshness.
+    (out_dir / ".stamp").write_text("ok\n")
+
+
+if __name__ == "__main__":
+    main()

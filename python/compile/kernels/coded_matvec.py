@@ -1,0 +1,98 @@
+"""L1 — Pallas kernel for the coded-shard mat-vec (the worker hot-spot).
+
+Every worker task in the moment-encoded runtime reduces to a dense
+mat-vec over an encoded shard: ``out = rows @ theta`` with ``rows`` of
+shape ``(R, K)``. On TPU the kernel tiles the shard through VMEM:
+
+* grid = ``(R/TILE_R, K/TILE_K)``; each step stages a ``(TILE_R,
+  TILE_K)`` block of ``rows`` and a ``(TILE_K,)`` slice of ``theta`` into
+  VMEM (the ``BlockSpec``s below express the HBM->VMEM schedule a CUDA
+  implementation would write with threadblocks);
+* the inner product accumulates into a ``(TILE_R,)`` f32 accumulator in
+  the output ref; the K-axis is the *minor* (fastest-varying) grid axis,
+  so each output tile is initialized at ``j == 0`` and accumulated in
+  place across the K sweep — the standard Pallas reduction pattern;
+* ``TILE_K = 512`` keeps the staged block at 64*512*4 B = 128 KiB, far
+  below the ~16 MiB VMEM budget even with double buffering, and the
+  ``jnp.dot`` maps onto the MXU.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers the kernel to plain HLO
+that both the pytest oracle checks and the Rust runtime can run. VMEM /
+MXU utilization estimates for a real TPU are derived from the BlockSpecs
+in DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (see module docstring for the VMEM accounting).
+TILE_R = 64
+TILE_K = 512
+
+
+def _matvec_kernel(rows_ref, theta_ref, out_ref):
+    """One grid step: accumulate rows_block @ theta_block into out."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    block = rows_ref[...]  # (TILE_R, TILE_K)
+    theta = theta_ref[...]  # (TILE_K,)
+    # MXU-friendly contraction with explicit f32 accumulation.
+    out_ref[...] += jnp.dot(
+        block, theta, preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "tile_k", "interpret"))
+def coded_matvec(rows, theta, *, tile_r=TILE_R, tile_k=TILE_K, interpret=True):
+    """Tiled ``rows @ theta`` via a Pallas kernel.
+
+    Accepts arbitrary ``(R, K)`` shapes; pads statically to tile
+    multiples (zero rows/columns contribute nothing) and slices the
+    result back.
+    """
+    r, k = rows.shape
+    if theta.shape != (k,):
+        raise ValueError(f"theta shape {theta.shape} != ({k},)")
+    tr = min(tile_r, _ceil_to(r, 8))
+    tk = min(tile_k, _ceil_to(k, 128))
+    rp = _ceil_to(r, tr)
+    kp = _ceil_to(k, tk)
+    rows_p = jnp.pad(rows, ((0, rp - r), (0, kp - k)))
+    theta_p = jnp.pad(theta, (0, kp - k))
+    grid = (rp // tr, kp // tk)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, tk), lambda i, j: (i, j)),
+            pl.BlockSpec((tk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tr,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rp,), rows.dtype),
+        interpret=interpret,
+    )(rows_p, theta_p)
+    return out[:r]
+
+
+def vmem_bytes(tile_r: int = TILE_R, tile_k: int = TILE_K, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint of one grid step (double-buffered).
+
+    rows block + theta slice + out accumulator, x2 for double buffering —
+    the number DESIGN.md's roofline estimate uses.
+    """
+    single = (tile_r * tile_k + tile_k + tile_r) * dtype_bytes
+    return 2 * single

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the L1 kernels (the correctness reference).
+
+Everything the Pallas kernel and the L2 model compute must match these
+to float tolerance; pytest enforces it (``python/tests/test_kernel.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matvec(rows, theta):
+    """``rows @ theta`` — the Scheme 1/2 worker task."""
+    return jnp.dot(rows, theta)
+
+
+def local_grad(x, y, theta):
+    """``Xᵀ(Xθ − y)`` — the KSDY17 / uncoded / replication worker task."""
+    r = jnp.dot(x, theta) - y
+    return jnp.dot(x.T, r)
+
+
+def pgd_step(theta, grad, eta):
+    """Unprojected gradient step (the master update for least squares)."""
+    return theta - eta * grad
+
+
+def iht_step(theta, grad, eta, u: int):
+    """IHT step: gradient step followed by hard thresholding ``H_u``."""
+    t = theta - eta * grad
+    k = t.shape[0]
+    if u == 0:
+        return jnp.zeros_like(t)
+    if u >= k:
+        return t
+    mags = jnp.abs(t)
+    # Threshold at the u-th largest magnitude.
+    thresh = jnp.sort(mags)[k - u]
+    return jnp.where(mags >= thresh, t, 0.0)

@@ -1,0 +1,56 @@
+"""L2 — the JAX compute graphs the Rust runtime executes.
+
+Two worker-side graphs (both built on the L1 Pallas kernel, so the
+kernel lowers into the same HLO module):
+
+* :func:`shard_matvec` — ``rows @ theta``: the entire per-step task of a
+  moment-encoded worker (Scheme 1/2: one inner product per assigned
+  row).
+* :func:`local_grad` — ``Xᵀ(Xθ − y)``: the per-step task of a
+  data-parallel worker (KSDY17 / uncoded / replication). The transpose
+  mat-vec reuses the same kernel on ``Xᵀ`` (a lay-out change XLA fuses
+  into the surrounding module).
+
+And the master-side step updates (:func:`pgd_step`, :func:`iht_step`)
+for completeness / ablation; the Rust master normally applies these
+natively since they are O(k).
+
+`python/compile/aot.py` lowers each graph once per artifact shape to HLO
+text; Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.coded_matvec import coded_matvec
+
+
+def shard_matvec(rows, theta):
+    """Worker task (moment schemes): one mat-vec over the encoded shard."""
+    return (coded_matvec(rows, theta),)
+
+
+def local_grad(x, y, theta):
+    """Worker task (data-parallel schemes): ``Xᵀ(Xθ − y)``."""
+    r = coded_matvec(x, theta) - y
+    g = coded_matvec(x.T, r)
+    return (g,)
+
+
+def pgd_step(theta, grad, eta):
+    """Master update, least squares: ``θ − η·g``."""
+    return (theta - eta * grad,)
+
+
+def iht_step(theta, grad, eta, u: int):
+    """Master update, sparse recovery: gradient step + ``H_u``."""
+    t = theta - eta * grad
+    k = t.shape[0]
+    if u == 0:
+        return (jnp.zeros_like(t),)
+    if u >= k:
+        return (t,)
+    mags = jnp.abs(t)
+    thresh = jnp.sort(mags)[k - u]
+    return (jnp.where(mags >= thresh, t, 0.0),)

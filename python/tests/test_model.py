@@ -1,0 +1,80 @@
+"""L2 correctness: the model graphs vs the oracle, including the exact
+artifact shapes the Rust runtime will execute."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("r,k", [(10, 200), (50, 1000), (13, 77)])
+def test_shard_matvec(r, k):
+    rows = rand((r, k), seed=1)
+    theta = rand((k,), seed=2)
+    (got,) = model.shard_matvec(rows, theta)
+    want = ref.matvec(rows, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("r,k", [(52, 200), (103, 400), (9, 33)])
+def test_local_grad(r, k):
+    x = rand((r, k), seed=3)
+    y = rand((r,), seed=4)
+    theta = rand((k,), seed=5)
+    (got,) = model.local_grad(x, y, theta)
+    want = ref.local_grad(x, y, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-3)
+
+
+@hypothesis.given(
+    r=st.integers(min_value=1, max_value=120),
+    k=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_local_grad_hypothesis(r, k, seed):
+    x = rand((r, k), seed=seed)
+    y = rand((r,), seed=seed + 1)
+    theta = rand((k,), seed=seed + 2)
+    (got,) = model.local_grad(x, y, theta)
+    want = ref.local_grad(x, y, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-3)
+
+
+def test_pgd_step():
+    theta = rand((30,), seed=6)
+    grad = rand((30,), seed=7)
+    (got,) = model.pgd_step(theta, grad, 0.1)
+    want = ref.pgd_step(theta, grad, 0.1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("u", [0, 1, 5, 29, 30, 50])
+def test_iht_step_sparsity(u):
+    theta = rand((30,), seed=8)
+    grad = rand((30,), seed=9)
+    (got,) = model.iht_step(theta, grad, 0.1, u)
+    nnz = int(np.count_nonzero(np.asarray(got)))
+    assert nnz <= max(u, 0) or u >= 30
+    # Matches the oracle.
+    want = ref.iht_step(theta, grad, 0.1, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_iht_keeps_largest():
+    theta = jnp.zeros((5,), jnp.float32)
+    grad = jnp.asarray([-5.0, 1.0, -3.0, 0.5, 2.0], jnp.float32)
+    (got,) = model.iht_step(theta, grad, 1.0, 2)
+    # step = [5, -1, 3, -0.5, -2]; top-2 magnitudes at indices 0, 2.
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray([5.0, 0.0, 3.0, 0.0, 0.0], np.float32)
+    )

@@ -1,0 +1,79 @@
+//! Ablation: Remark 2 — code length `N ≠ w`.
+//!
+//! At a fixed rate (½) and a fixed straggler fraction, a longer code
+//! (more codeword positions per worker) has better finite-length peeling
+//! behaviour: small stopping sets become rarer, so fewer gradient
+//! coordinates stay erased per step. Notably the worker compute is
+//! *unchanged* — at rate ½, rows per worker is `(k/K)·ppw = 2k/w`
+//! regardless of `N` — so the longer code is nearly free (modulo the
+//! last block's padding). This bench sweeps `N ∈ {w, 2w, 3w}` over
+//! `w = 40` workers.
+//!
+//! `cargo bench --offline --bench ablation_code_length`
+
+use std::sync::Arc;
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::cluster::Cluster;
+use moment_ldpc::coordinator::run_with_cluster;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::straggler::StragglerModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::report::{write_csv, Table};
+
+fn main() {
+    let trials: usize = std::env::var("BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let workers = 40usize;
+    let k = 400usize;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(1024, k), 11);
+
+    let mut t = Table::new(
+        format!("Remark 2 — code length ablation (rate 1/2, w=40, k={k}, s=12, {trials} trials)"),
+        &["N", "pos/worker", "steps", "unrec/step", "rounds/step", "flops/worker"],
+    );
+    for ppw in [1usize, 2, 3] {
+        let n = workers * ppw;
+        let code = LdpcCode::gallager(n, n / 2, 3, 6, 13).expect("code");
+        let scheme =
+            LdpcMomentScheme::with_workers(&problem, code, workers).expect("scheme");
+        let flops = scheme.total_flops_per_step() / workers;
+        let backend: Arc<dyn moment_ldpc::runtime::ComputeBackend> =
+            Arc::new(moment_ldpc::runtime::NativeBackend);
+        let cluster = Cluster::spawn(scheme.payloads(), backend);
+        let mut steps = 0.0;
+        let mut unrec = 0.0;
+        let mut rounds = 0.0;
+        for trial in 0..trials {
+            let cfg = RunConfig {
+                workers,
+                straggler: StragglerModel::FixedCount { s: 12, seed: 100 + trial as u64 },
+                decode_iters: 40,
+                rel_tol: 1e-4,
+                max_steps: 8000,
+                ..Default::default()
+            };
+            let r = run_with_cluster(&scheme, &cluster, &problem, &cfg).expect("run");
+            assert!(r.converged, "N={n}: {}", r.summary());
+            steps += r.steps as f64 / trials as f64;
+            unrec += r.totals.mean_unrecovered() / trials as f64;
+            rounds += r.totals.mean_decode_rounds() / trials as f64;
+        }
+        cluster.shutdown();
+        t.row(vec![
+            n.to_string(),
+            ppw.to_string(),
+            format!("{steps:.1}"),
+            format!("{unrec:.2}"),
+            format!("{rounds:.2}"),
+            flops.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    write_csv(&t, std::path::Path::new("bench_out/ablation_code_length.csv")).unwrap();
+    eprintln!("ablation_code_length done -> bench_out/ablation_code_length.csv");
+}

@@ -1,0 +1,71 @@
+//! Ablation: the §3 communication/compute comparison — per step, a
+//! moment-encoded worker ships `k/K` **scalars** and computes `(k/K)·k`
+//! MACs, while a gradient-coding worker ships a full `k`-vector and
+//! computes `(s+1)·2(m/w)·k` MACs; KSDY/uncoded ship `k`-vectors too.
+//!
+//! The table regenerates the paper's argument quantitatively for the
+//! experiment grid, including storage per worker.
+//!
+//! `cargo bench --offline --bench ablation_comm_cost`
+
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::experiment::SchemeSpec;
+use moment_ldpc::harness::report::{write_csv, Table};
+
+fn main() {
+    let workers = 40;
+    let mut t = Table::new(
+        "per-step cost per worker (m=2048, w=40, s=5)",
+        &["k", "scheme", "upload (scalars)", "flops", "storage (KiB)"],
+    );
+    for k in [200usize, 400, 1000] {
+        let problem = RegressionProblem::generate(&SynthConfig::dense(2048, k), 1);
+        let specs = vec![
+            SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 },
+            SchemeSpec::Mds { code_k: 20 },
+            SchemeSpec::GradCoding { s: 5, seed: 9 },
+            SchemeSpec::Ksdy {
+                kind: moment_ldpc::coordinator::schemes::ksdy::SketchKind::Hadamard,
+                beta: 2.0,
+                seed: 11,
+            },
+            SchemeSpec::Uncoded,
+            SchemeSpec::Replication { r: 2 },
+        ];
+        for spec in specs {
+            let scheme = spec.build(&problem, workers).expect("build");
+            let upload = scheme.upload_scalars_per_worker();
+            let flops = scheme.total_flops_per_step() / workers;
+            let storage = scheme
+                .payloads()
+                .iter()
+                .map(|p| p.storage_bytes())
+                .max()
+                .unwrap_or(0) as f64
+                / 1024.0;
+            t.row(vec![
+                k.to_string(),
+                spec.label(),
+                upload.to_string(),
+                flops.to_string(),
+                format!("{storage:.0}"),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    write_csv(&t, std::path::Path::new("bench_out/ablation_comm_cost.csv")).unwrap();
+
+    // The §3 claims, asserted:
+    let problem = RegressionProblem::generate(&SynthConfig::dense(2048, 1000), 1);
+    let ldpc = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 }
+        .build(&problem, workers)
+        .unwrap();
+    let gc = SchemeSpec::GradCoding { s: 5, seed: 9 }.build(&problem, workers).unwrap();
+    assert_eq!(ldpc.upload_scalars_per_worker(), 50, "k/K scalars");
+    assert_eq!(gc.upload_scalars_per_worker(), 1000, "full k-vector");
+    assert!(
+        gc.total_flops_per_step() > 2 * ldpc.total_flops_per_step(),
+        "gradient coding computes (s+1)x replicated partial gradients"
+    );
+    eprintln!("ablation_comm_cost done -> bench_out/ablation_comm_cost.csv");
+}

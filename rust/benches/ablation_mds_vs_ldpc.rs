@@ -1,0 +1,100 @@
+//! Ablation: Scheme 1 (MDS, exact) vs Scheme 2 (LDPC, approximate) —
+//! Proposition 1's exactness region, decode cost, and end-to-end steps.
+//!
+//! The LDPC decoder is O(edges) peeling with ±1 arithmetic; the MDS
+//! decoder is an O(K³) dense solve per step whose cost and numerical
+//! quality degrade with the code dimension. This bench measures master
+//! decode time directly and runs both schemes end-to-end.
+//!
+//! `cargo bench --offline --bench ablation_mds_vs_ldpc`
+
+use std::time::Instant;
+
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::straggler::StragglerModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::experiment::{run_trials, ExperimentSpec, SchemeSpec};
+use moment_ldpc::harness::report::{write_csv, Table};
+use moment_ldpc::rng::Rng;
+use moment_ldpc::runtime::NativeBackend;
+
+/// Time `iters` decodes of a scheme at straggler count `s`.
+fn decode_time_us(
+    scheme: &dyn GradientScheme,
+    theta: &[f64],
+    s: usize,
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let clean: Vec<Option<Vec<f64>>> = scheme
+        .payloads()
+        .iter()
+        .map(|p| Some(p.compute(theta, &NativeBackend).unwrap()))
+        .collect();
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let mut responses = clean.clone();
+        for i in rng.choose_k(scheme.workers(), s) {
+            responses[i] = None;
+        }
+        let t0 = Instant::now();
+        let out = scheme.decode(&responses, 40).expect("decode");
+        total += t0.elapsed().as_secs_f64() * 1e6;
+        std::hint::black_box(out);
+    }
+    total / iters as f64
+}
+
+fn main() {
+    let trials: usize = std::env::var("BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let workers = 40;
+    let k = 400;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(1024, k), 3);
+    let mut rng = Rng::new(4);
+    let theta = rng.gaussian_vec(k);
+
+    let ldpc = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 };
+    let mds = SchemeSpec::Mds { code_k: 20 };
+    let ldpc_scheme = ldpc.build(&problem, workers).unwrap();
+    let mds_scheme = mds.build(&problem, workers).unwrap();
+
+    let mut t = Table::new(
+        format!("MDS vs LDPC moment decoding (k={k}, w=40, K=20)"),
+        &["s", "ldpc decode us", "mds decode us", "ldpc steps", "mds steps"],
+    );
+    for s in [0usize, 5, 10, 15] {
+        let l_us = decode_time_us(ldpc_scheme.as_ref(), &theta, s, 50, 10 + s as u64);
+        let m_us = decode_time_us(mds_scheme.as_ref(), &theta, s, 50, 20 + s as u64);
+        let spec = ExperimentSpec {
+            config: RunConfig {
+                straggler: if s == 0 {
+                    StragglerModel::None
+                } else {
+                    StragglerModel::FixedCount { s, seed: 0 }
+                },
+                rel_tol: 1e-4,
+                max_steps: 8000,
+                ..Default::default()
+            },
+            trials,
+            straggler_seed_base: 300,
+        };
+        let la = run_trials(&ldpc, &problem, &spec).unwrap();
+        let ma = run_trials(&mds, &problem, &spec).unwrap();
+        t.row(vec![
+            s.to_string(),
+            format!("{l_us:.1}"),
+            format!("{m_us:.1}"),
+            format!("{:.1}", la.mean_steps),
+            format!("{:.1}", ma.mean_steps),
+        ]);
+    }
+    print!("{}", t.render());
+    write_csv(&t, std::path::Path::new("bench_out/ablation_mds_vs_ldpc.csv")).unwrap();
+    eprintln!("ablation_mds_vs_ldpc done -> bench_out/ablation_mds_vs_ldpc.csv");
+}

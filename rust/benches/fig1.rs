@@ -1,0 +1,29 @@
+//! Bench: regenerate **Figure 1** — least-squares estimation, m = 2048,
+//! k ∈ {200, 400, 800, 1000}, s ∈ {5, 10}; number of gradient steps AND
+//! total computation time for the paper's five-scheme line-up.
+//!
+//! `cargo bench --offline --bench fig1` (env `BENCH_TRIALS` to override
+//! the per-cell trial count; `BENCH_QUICK=1` for the smoke-scale run).
+
+use moment_ldpc::harness::figures::{fig1, FigureScale};
+use moment_ldpc::harness::report::write_csv;
+
+fn main() {
+    let trials: usize = std::env::var("BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let scale = if std::env::var("BENCH_QUICK").is_ok() {
+        FigureScale::quick()
+    } else {
+        FigureScale::full(trials)
+    };
+    eprintln!("fig1: scale {scale:?}");
+    let t0 = std::time::Instant::now();
+    let (_, steps, time) = fig1(&scale).expect("fig1 driver");
+    print!("{}", steps.render());
+    print!("{}", time.render());
+    write_csv(&steps, std::path::Path::new("bench_out/fig1_steps.csv")).unwrap();
+    write_csv(&time, std::path::Path::new("bench_out/fig1_time.csv")).unwrap();
+    eprintln!("fig1 done in {:.1}s -> bench_out/fig1_*.csv", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate **Figure 2** — sparse recovery in the
+//! overdetermined regime (m = 2048 > k ∈ {800, 1000}), sparsity
+//! fractions f ∈ {0.1, …, 0.5}, s ∈ {5, 10}; gradient steps to
+//! convergence for the five-scheme line-up. (The paper plots steps only
+//! and notes the time trend is similar.)
+//!
+//! `cargo bench --offline --bench fig2`
+
+use moment_ldpc::harness::figures::{fig2, FigureScale};
+use moment_ldpc::harness::report::write_csv;
+
+fn main() {
+    let trials: usize = std::env::var("BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let scale = if std::env::var("BENCH_QUICK").is_ok() {
+        FigureScale::quick()
+    } else {
+        FigureScale::full(trials)
+    };
+    eprintln!("fig2: scale {scale:?}");
+    let t0 = std::time::Instant::now();
+    let (_, steps) = fig2(&scale).expect("fig2 driver");
+    print!("{}", steps.render());
+    write_csv(&steps, std::path::Path::new("bench_out/fig2_steps.csv")).unwrap();
+    eprintln!("fig2 done in {:.1}s -> bench_out/fig2_steps.csv", t0.elapsed().as_secs_f64());
+}

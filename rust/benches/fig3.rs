@@ -1,0 +1,28 @@
+//! Bench: regenerate **Figure 3** — sparse recovery in the
+//! underdetermined regime (k = 2000 > m = 1024), u ∈ {100, 200},
+//! s ∈ {5, 10}; gradient steps AND total computation time.
+//!
+//! `cargo bench --offline --bench fig3`
+
+use moment_ldpc::harness::figures::{fig3, FigureScale};
+use moment_ldpc::harness::report::write_csv;
+
+fn main() {
+    let trials: usize = std::env::var("BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let scale = if std::env::var("BENCH_QUICK").is_ok() {
+        FigureScale::quick()
+    } else {
+        FigureScale::full(trials)
+    };
+    eprintln!("fig3: scale {scale:?}");
+    let t0 = std::time::Instant::now();
+    let (_, steps, time) = fig3(&scale).expect("fig3 driver");
+    print!("{}", steps.render());
+    print!("{}", time.render());
+    write_csv(&steps, std::path::Path::new("bench_out/fig3_steps.csv")).unwrap();
+    write_csv(&time, std::path::Path::new("bench_out/fig3_time.csv")).unwrap();
+    eprintln!("fig3 done in {:.1}s -> bench_out/fig3_*.csv", t0.elapsed().as_secs_f64());
+}

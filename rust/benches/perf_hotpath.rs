@@ -1,0 +1,190 @@
+//! Perf harness for the hot paths (§Perf of EXPERIMENTS.md).
+//!
+//! Micro-benchmarks every stage of a gradient step in isolation:
+//!   encode (one-time)   — G·M blockwise moment encoding
+//!   worker matvec       — native vs PJRT (if artifacts exist)
+//!   peel schedule/apply — master decode at several straggler counts
+//!   update + project    — master-side O(k) tail
+//!   end-to-end step     — the full distributed loop (40 threads)
+//!
+//! `cargo bench --offline --bench perf_hotpath`
+
+use std::time::Instant;
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::codes::peeling::PeelingDecoder;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::run_distributed;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::straggler::StragglerModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::report::{write_csv, Table};
+use moment_ldpc::rng::Rng;
+use moment_ldpc::runtime::{ComputeBackend, NativeBackend};
+
+fn time_us<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / iters as f64
+}
+
+fn main() {
+    let k = 1024usize;
+    let m = 2048usize;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(m, k), 9);
+    let mut rng = Rng::new(10);
+    let theta = rng.gaussian_vec(k);
+    let mut table = Table::new(
+        format!("hot-path microbenchmarks (m={m}, k={k}, w=40, K=20)"),
+        &["stage", "time", "notes"],
+    );
+
+    // -- one-time encode --
+    let code = LdpcCode::gallager(40, 20, 3, 6, 7).unwrap();
+    let t0 = Instant::now();
+    let scheme = LdpcMomentScheme::new(&problem, code.clone()).unwrap();
+    table.row(vec![
+        "encode C=GM (one-time)".into(),
+        format!("{:.1} ms", t0.elapsed().as_secs_f64() * 1e3),
+        format!("{} blocks x (40x20)x(20x{k}) GEMMs", k / 20),
+    ]);
+
+    // -- worker matvec: native --
+    let shard = match &scheme.payloads()[0] {
+        moment_ldpc::coordinator::protocol::WorkerPayload::Rows { rows } => rows.clone(),
+        _ => unreachable!(),
+    };
+    let us = time_us(200, || {
+        std::hint::black_box(NativeBackend.matvec(&shard, &theta).unwrap());
+    });
+    table.row(vec![
+        "worker matvec (native)".into(),
+        format!("{us:.1} us"),
+        format!("{}x{} f64", shard.rows(), shard.cols()),
+    ]);
+
+    // -- worker matvec: pjrt (optional) --
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if let Ok(backend) = moment_ldpc::runtime::pjrt::PjrtBackend::load(&artifacts) {
+        let us = time_us(200, || {
+            std::hint::black_box(backend.matvec(&shard, &theta).unwrap());
+        });
+        table.row(vec![
+            "worker matvec (pjrt, uncached)".into(),
+            format!("{us:.1} us"),
+            "AOT XLA executable, f32, pad+literal every call".into(),
+        ]);
+        // §Perf optimization: device-resident shard buffer (keyed path).
+        let us = time_us(200, || {
+            std::hint::black_box(backend.matvec_keyed(Some(0), &shard, &theta).unwrap());
+        });
+        table.row(vec![
+            "worker matvec (pjrt, cached)".into(),
+            format!("{us:.1} us"),
+            "shard uploaded once; theta-only transfer per step".into(),
+        ]);
+    } else {
+        table.row(vec![
+            "worker matvec (pjrt)".into(),
+            "skipped".into(),
+            "run `make artifacts`".into(),
+        ]);
+    }
+
+    // -- peeling: schedule + apply --
+    let dec = PeelingDecoder::new(&code);
+    for s in [5usize, 10] {
+        let erased = Rng::new(s as u64).choose_k(40, s);
+        let us_sched = time_us(2000, || {
+            std::hint::black_box(dec.schedule(&erased, 40));
+        });
+        let sched = dec.schedule(&erased, 40);
+        let mut cw = rng.gaussian_vec(40);
+        let us_apply = time_us(5000, || {
+            std::hint::black_box(sched.apply(&mut cw));
+        });
+        table.row(vec![
+            format!("peel schedule (s={s})"),
+            format!("{us_sched:.2} us"),
+            "positions only, reused across k/K blocks".into(),
+        ]);
+        table.row(vec![
+            format!("peel apply x{} blocks (s={s})", k / 20),
+            format!("{:.2} us", us_apply * (k / 20) as f64),
+            format!("{:.3} us/block", us_apply),
+        ]);
+    }
+
+    // -- full master decode --
+    let clean: Vec<Option<Vec<f64>>> = scheme
+        .payloads()
+        .iter()
+        .map(|p| Some(p.compute(&theta, &NativeBackend).unwrap()))
+        .collect();
+    let mut masked = clean.clone();
+    for i in Rng::new(77).choose_k(40, 5) {
+        masked[i] = None;
+    }
+    let us = time_us(500, || {
+        std::hint::black_box(scheme.decode(&masked, 40).unwrap());
+    });
+    table.row(vec![
+        "master decode (s=5)".into(),
+        format!("{us:.1} us"),
+        format!("schedule + {} block applies + b-mask", k / 20),
+    ]);
+
+    // -- update + project --
+    let grad = rng.gaussian_vec(k);
+    let mut th = theta.clone();
+    let us = time_us(5000, || {
+        for (t, g) in th.iter_mut().zip(&grad) {
+            *t -= 1e-3 * g;
+        }
+        moment_ldpc::optim::projections::hard_threshold(&mut th, 100);
+    });
+    table.row(vec![
+        "update + H_u project".into(),
+        format!("{us:.1} us"),
+        "O(k) + quickselect".into(),
+    ]);
+
+    // -- end-to-end step loop --
+    let cfg = RunConfig {
+        straggler: StragglerModel::FixedCount { s: 5, seed: 1 },
+        rel_tol: 0.0, // never converge: measure steady-state step cost
+        max_steps: 200,
+        ..Default::default()
+    };
+    let scheme2 = LdpcMomentScheme::new(&problem, code).unwrap();
+    let t0 = Instant::now();
+    let report = run_distributed(Box::new(scheme2), &problem, &cfg).unwrap();
+    let wall_per_step = t0.elapsed().as_secs_f64() * 1e6 / report.steps as f64;
+    table.row(vec![
+        "end-to-end step (wall)".into(),
+        format!("{wall_per_step:.1} us"),
+        "broadcast + 40 threads + collect + decode + update".into(),
+    ]);
+    table.row(vec![
+        "end-to-end step (sim)".into(),
+        format!("{:.1} us", report.sim_time_ms() * 1e3 / report.steps as f64),
+        "max worker + decode + update (the paper's metric)".into(),
+    ]);
+
+    // Roofline context: the shard matvec moves R*C*8 bytes.
+    let bytes = shard.rows() * shard.cols() * 8;
+    table.row(vec![
+        "shard matvec roofline".into(),
+        format!("{:.1} us @ 20 GB/s", bytes as f64 / 20e9 * 1e6),
+        format!("{} KiB / worker / step, memory-bound", bytes / 1024),
+    ]);
+
+    print!("{}", table.render());
+    write_csv(&table, std::path::Path::new("bench_out/perf_hotpath.csv")).unwrap();
+    eprintln!("perf_hotpath done -> bench_out/perf_hotpath.csv");
+}

@@ -1,0 +1,142 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline crate set).
+//!
+//! Grammar: `moment-ldpc <subcommand> [--flag value]... [--switch]...`.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed arguments: a subcommand, `--key value` flags, and bare
+/// `--switch` toggles.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The subcommand (first positional).
+    pub command: String,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Flags that take no value.
+const SWITCHES: &[&str] = &["quick", "trace", "json", "help"];
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if SWITCHES.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else {
+                    let val = it.next().ok_or_else(|| {
+                        Error::Config(format!("flag --{name} expects a value"))
+                    })?;
+                    args.flags.insert(name.to_string(), val);
+                }
+            } else if args.command.is_empty() {
+                args.command = a;
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Get a typed flag with a default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                Error::Config(format!("flag --{name}: cannot parse '{v}'"))
+            }),
+        }
+    }
+
+    /// Get an optional flag.
+    pub fn get_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("flag --{name}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Raw string flag.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Is a switch present?
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// The CLI usage text.
+pub const USAGE: &str = "\
+moment-ldpc — robust distributed gradient descent via LDPC moment encoding
+
+USAGE: moment-ldpc <command> [flags]
+
+COMMANDS:
+  run        Run one distributed optimization
+             --scheme ldpc|mds|uncoded|replication|ksdy-hadamard|ksdy-gaussian|gradcoding
+             --m N --k N [--sparsity U] --workers W --stragglers S
+             --decode-iters D --rel-tol T --max-steps N --trials N
+             --backend native|pjrt [--trace] [--json]
+  fig1       Reproduce Figure 1 (least squares)        [--trials N] [--quick]
+  fig2       Reproduce Figure 2 (sparse, m > k)        [--trials N] [--quick]
+  fig3       Reproduce Figure 3 (sparse, k > m)        [--trials N] [--quick]
+  density    Density-evolution table (Prop. 2)         [--l N --r N]
+  artifacts  List discovered AOT artifacts             [--dir PATH]
+  help       Show this message
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("run --m 2048 --k 400 --quick");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get::<usize>("m", 0).unwrap(), 2048);
+        assert_eq!(a.get::<usize>("k", 0).unwrap(), 400);
+        assert!(a.has("quick"));
+        assert!(!a.has("json"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get::<usize>("m", 7).unwrap(), 7);
+        assert_eq!(a.get_str("scheme", "ldpc"), "ldpc");
+        assert_eq!(a.get_opt::<f64>("step").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("run --m abc");
+        assert!(a.get::<usize>("m", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(["run".to_string(), "--m".to_string()]).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse("run extra1 extra2");
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+}

@@ -1,0 +1,199 @@
+//! Density evolution for regular LDPC ensembles (Proposition 2).
+//!
+//! For an `(l, r)`-regular ensemble under i.i.d. erasures with probability
+//! `q₀`, the probability that a coordinate is still erased after `d`
+//! rounds of peeling follows the recursion
+//!
+//! ```text
+//! q_d = q₀ · (1 − (1 − q_{d−1})^{r−1})^{l−1}
+//! ```
+//!
+//! Remark 3: `q_d` is monotone non-increasing iff `q₀` lies below the
+//! ensemble threshold `q*(r, l)`; above it the recursion stalls at a
+//! positive fixed point. These quantities drive the `(1 − q_D)` factor in
+//! Theorem 1's convergence bound and are validated empirically against
+//! the peeling decoder in the test-suite.
+
+/// Density-evolution state for an `(l, r)`-regular ensemble.
+#[derive(Debug, Clone, Copy)]
+pub struct DensityEvolution {
+    /// Variable-node degree.
+    pub l: usize,
+    /// Check-node degree.
+    pub r: usize,
+}
+
+impl DensityEvolution {
+    /// New analysis object for an `(l, r)`-regular ensemble.
+    pub fn new(l: usize, r: usize) -> Self {
+        assert!(l >= 2 && r >= 2, "need l, r >= 2");
+        DensityEvolution { l, r }
+    }
+
+    /// One step of the recursion: `q₀ · (1 − (1 − q)^{r−1})^{l−1}`.
+    ///
+    /// Note the *edge*-perspective recursion from Proposition 2 (the form
+    /// printed in the paper); the node-perspective residual-erasure
+    /// probability replaces the outer exponent `l−1` by `l`.
+    #[inline]
+    pub fn step(&self, q0: f64, q_prev: f64) -> f64 {
+        q0 * (1.0 - (1.0 - q_prev).powi(self.r as i32 - 1)).powi(self.l as i32 - 1)
+    }
+
+    /// The sequence `q_0, q_1, …, q_D` (length `d + 1`).
+    pub fn evolve(&self, q0: f64, d: usize) -> Vec<f64> {
+        let mut qs = Vec::with_capacity(d + 1);
+        let mut q = q0;
+        qs.push(q);
+        for _ in 0..d {
+            q = self.step(q0, q);
+            qs.push(q);
+        }
+        qs
+    }
+
+    /// `q_D` after exactly `d` rounds.
+    pub fn q_after(&self, q0: f64, d: usize) -> f64 {
+        *self.evolve(q0, d).last().unwrap()
+    }
+
+    /// Node-perspective residual erasure probability after `d` rounds:
+    /// the probability a *coordinate* (not an edge message) is still
+    /// erased. `q0 · (1 − (1 − q_{d-1})^{r−1})^{l}`.
+    pub fn node_residual(&self, q0: f64, d: usize) -> f64 {
+        if d == 0 {
+            return q0;
+        }
+        let q_edge = self.q_after(q0, d - 1);
+        q0 * (1.0 - (1.0 - q_edge).powi(self.r as i32 - 1)).powi(self.l as i32)
+    }
+
+    /// Does the recursion converge to (numerically) zero from `q0`?
+    pub fn converges(&self, q0: f64, max_iters: usize, tol: f64) -> bool {
+        let mut q = q0;
+        for _ in 0..max_iters {
+            q = self.step(q0, q);
+            if q < tol {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// The erasure threshold `q*(r, l)`: the supremum of `q₀` for which
+    /// density evolution converges to zero. Found by bisection.
+    pub fn threshold(&self) -> f64 {
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.converges(mid, 20_000, 1e-12) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Number of rounds needed to drive `q_d` below `target` starting
+    /// from `q0`, or `None` if it stalls within `max_iters`.
+    pub fn iterations_to(&self, q0: f64, target: f64, max_iters: usize) -> Option<usize> {
+        let mut q = q0;
+        if q < target {
+            return Some(0);
+        }
+        for d in 1..=max_iters {
+            q = self.step(q0, q);
+            if q < target {
+                return Some(d);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recursion_matches_closed_form() {
+        let de = DensityEvolution::new(3, 6);
+        let q0 = 0.3;
+        let q1 = de.step(q0, q0);
+        let manual = q0 * (1.0 - (1.0 - q0).powi(5)).powi(2);
+        assert!((q1 - manual).abs() < 1e-15);
+    }
+
+    #[test]
+    fn monotone_below_threshold() {
+        // Remark 3: below threshold, q_d is monotone non-increasing.
+        let de = DensityEvolution::new(3, 6);
+        let qs = de.evolve(0.3, 200);
+        for w in qs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-15, "not monotone: {} -> {}", w[0], w[1]);
+        }
+        assert!(*qs.last().unwrap() < 1e-9, "did not converge");
+    }
+
+    #[test]
+    fn stalls_above_threshold() {
+        let de = DensityEvolution::new(3, 6);
+        assert!(!de.converges(0.5, 20_000, 1e-12), "0.5 is above the (3,6) threshold");
+        let q_inf = de.q_after(0.5, 5_000);
+        assert!(q_inf > 0.1, "should stall at a positive fixed point, got {q_inf}");
+    }
+
+    #[test]
+    fn threshold_3_6_matches_literature() {
+        // The BEC threshold of the (3,6)-regular ensemble is ≈ 0.4294
+        // (Richardson & Urbanke, Modern Coding Theory, Example 3.59).
+        let de = DensityEvolution::new(3, 6);
+        let t = de.threshold();
+        assert!((t - 0.4294).abs() < 0.002, "threshold {t}");
+    }
+
+    #[test]
+    fn threshold_3_4_matches_literature() {
+        // (3,4)-regular (rate 1/4): threshold ≈ 0.6474.
+        let de = DensityEvolution::new(3, 4);
+        let t = de.threshold();
+        assert!((t - 0.6474).abs() < 0.002, "threshold {t}");
+    }
+
+    #[test]
+    fn threshold_4_8_below_3_6() {
+        // (4,8) has a *lower* BEC threshold than (3,6) (≈ 0.3834).
+        let de = DensityEvolution::new(4, 8);
+        let t = de.threshold();
+        assert!((t - 0.3834).abs() < 0.002, "threshold {t}");
+    }
+
+    #[test]
+    fn iterations_to_decrease_with_q0() {
+        // Fewer stragglers -> fewer decoding iterations needed: the
+        // "decoder adjusts to the number of stragglers" claim (§1).
+        let de = DensityEvolution::new(3, 6);
+        let few = de.iterations_to(0.10, 1e-6, 10_000).unwrap();
+        let more = de.iterations_to(0.35, 1e-6, 10_000).unwrap();
+        assert!(few < more, "{few} !< {more}");
+        assert!(de.iterations_to(0.6, 1e-6, 10_000).is_none(), "above threshold");
+    }
+
+    #[test]
+    fn node_residual_bounded_by_edge() {
+        let de = DensityEvolution::new(3, 6);
+        for d in 1..10 {
+            let edge = de.q_after(0.3, d);
+            let node = de.node_residual(0.3, d);
+            assert!(node <= edge + 1e-15, "node {node} > edge {edge}");
+        }
+        assert_eq!(de.node_residual(0.3, 0), 0.3);
+    }
+
+    #[test]
+    fn q_zero_fixed_point() {
+        let de = DensityEvolution::new(3, 6);
+        assert_eq!(de.q_after(0.0, 10), 0.0);
+    }
+}

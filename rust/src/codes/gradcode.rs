@@ -1,0 +1,202 @@
+//! Gradient coding (Tandon et al., ICML 2017) — the §2.1 comparator.
+//!
+//! Data is split into `w` partitions; worker `i` holds the `s + 1`
+//! partitions `{i, i+1, …, i+s} (mod w)` (cyclic repetition) and sends a
+//! *single* `k`-dimensional linear combination `z_i = Σ_j B[i,j] g_j` of
+//! the partition gradients it can compute. The master must, for any set
+//! `S` of `w − s` responders, find `a` with `aᵀ B_S = (1, …, 1)` and
+//! output `Σ_i a_i z_i = Σ_j g_j`.
+//!
+//! Construction (Tandon et al., Algorithm 1): draw `H ∈ ℝ^{s x w}`
+//! Gaussian with each row summing to zero, so `1 ∈ null(H)` and
+//! `dim null(H) = w − s`. Row `i` of `B` is the unique null-space vector
+//! with `B[i, i] = 1` supported on the cyclic window `{i, …, i+s}` —
+//! obtained by solving the `s x s` system `H[:, i+1..i+s] x = −H[:, i]`.
+//! Any `w − s` rows of `B` then span all of `null(H) ∋ (1, …, 1)` (their
+//! Lemma 1, almost surely over `H`), so the master recovers `a` by a
+//! least-squares solve and verifies the residual, reporting a decode
+//! failure otherwise.
+//!
+//! This module exists for the paper's communication/compute comparison
+//! (§3, `ablation_comm_cost`): per step a gradient-coding worker ships a
+//! `k`-vector where a moment-encoded worker ships `k/K` scalars.
+
+use crate::error::{Error, Result};
+use crate::linalg::{solve, Matrix};
+use crate::rng::Rng;
+
+/// A cyclic-repetition gradient code for `w` workers tolerating `s`
+/// stragglers.
+#[derive(Debug, Clone)]
+pub struct GradientCode {
+    w: usize,
+    s: usize,
+    /// `w x w` coefficient matrix; row `i` supported on `{i, …, i+s}`.
+    b: Matrix,
+}
+
+impl GradientCode {
+    /// Construct with Tandon et al.'s null-space method (retrying the
+    /// random `H` draw if an `s x s` window system happens to be
+    /// singular — a probability-zero event hit only by degenerate seeds).
+    pub fn cyclic(w: usize, s: usize, seed: u64) -> Result<Self> {
+        if w == 0 || s + 1 > w {
+            return Err(Error::Config(format!("gradient code needs s+1 <= w, got w={w}, s={s}")));
+        }
+        if s == 0 {
+            // No redundancy: B = I.
+            return Ok(GradientCode { w, s, b: Matrix::identity(w) });
+        }
+        let mut rng = Rng::new(seed);
+        'attempt: for _ in 0..16 {
+            // H: s x w Gaussian with zero row sums => 1 ∈ null(H).
+            let mut h = Matrix::gaussian(s, w, &mut rng);
+            for r in 0..s {
+                let sum: f64 = h.row(r)[..w - 1].iter().sum();
+                h[(r, w - 1)] = -sum;
+            }
+            let mut b = Matrix::zeros(w, w);
+            for i in 0..w {
+                // Window columns i+1..=i+s (mod w).
+                let win: Vec<usize> = (1..=s).map(|d| (i + d) % w).collect();
+                let hw = h.select_cols(&win); // s x s
+                let rhs: Vec<f64> = (0..s).map(|r| -h[(r, i)]).collect();
+                let x = match solve(&hw, &rhs) {
+                    Ok(x) => x,
+                    Err(_) => continue 'attempt,
+                };
+                b[(i, i)] = 1.0;
+                for (d, &j) in win.iter().enumerate() {
+                    b[(i, j)] = x[d];
+                }
+            }
+            return Ok(GradientCode { w, s, b });
+        }
+        Err(Error::Code(format!(
+            "gradient code construction failed for w={w}, s={s} after 16 attempts"
+        )))
+    }
+
+    /// Number of workers / partitions.
+    pub fn workers(&self) -> usize {
+        self.w
+    }
+
+    /// Designed straggler tolerance.
+    pub fn tolerance(&self) -> usize {
+        self.s
+    }
+
+    /// Partitions assigned to worker `i` (cyclic window).
+    pub fn assignment(&self, i: usize) -> Vec<usize> {
+        (0..=self.s).map(|d| (i + d) % self.w).collect()
+    }
+
+    /// Coefficient `B[i][j]`.
+    pub fn coeff(&self, i: usize, j: usize) -> f64 {
+        self.b[(i, j)]
+    }
+
+    /// Number of partitions each worker processes per step.
+    pub fn load_per_worker(&self) -> usize {
+        self.s + 1
+    }
+
+    /// Find the recombination vector `a` for the responding workers:
+    /// `aᵀ B_S = 1ᵀ`. Errors if the all-ones vector is not (numerically)
+    /// in the row space of `B_S`.
+    pub fn recombine(&self, responders: &[usize]) -> Result<Vec<f64>> {
+        if responders.len() + self.s < self.w {
+            return Err(Error::Decode(format!(
+                "gradient code tolerates {} stragglers, got {}",
+                self.s,
+                self.w - responders.len()
+            )));
+        }
+        // Any w−s rows of B span null(H); with fewer stragglers the Gram
+        // matrix of all responders would be rank-deficient, so use exactly
+        // the first w−s responders (the rest contribute a = 0).
+        let need = self.w - self.s;
+        let used: Vec<usize> = responders[..need].to_vec();
+        let bs = self.b.select_rows(&used); // (w-s) x w
+        // Least squares: minimize ‖B_Sᵀ a − 1‖²  ⇒  (B_S B_Sᵀ) a = B_S 1.
+        let gram = bs.matmul(&bs.transpose())?;
+        let ones = vec![1.0; self.w];
+        let rhs = bs.matvec(&ones);
+        let a_used = solve(&gram, &rhs)
+            .map_err(|e| Error::Decode(format!("gradient-code recombination failed: {e}")))?;
+        // Verify the residual: exactness is required, not least-squares.
+        let recon = bs.matvec_t(&a_used);
+        let resid: f64 = recon.iter().map(|&r| (r - 1.0) * (r - 1.0)).sum::<f64>().sqrt();
+        if resid > 1e-6 {
+            return Err(Error::Decode(format!(
+                "all-ones not in row space (residual {resid:.3e})"
+            )));
+        }
+        // Scatter back to the full responder list.
+        let mut a = vec![0.0; responders.len()];
+        a[..need].copy_from_slice(&a_used);
+        Ok(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_cyclic_window() {
+        let gc = GradientCode::cyclic(10, 2, 1).unwrap();
+        assert_eq!(gc.assignment(0), vec![0, 1, 2]);
+        assert_eq!(gc.assignment(9), vec![9, 0, 1]);
+        assert_eq!(gc.load_per_worker(), 3);
+    }
+
+    #[test]
+    fn recombination_exact_for_any_straggler_set() {
+        let gc = GradientCode::cyclic(12, 3, 2).unwrap();
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let stragglers = rng.choose_k(12, 3);
+            let responders: Vec<usize> =
+                (0..12).filter(|w| !stragglers.contains(w)).collect();
+            let a = gc.recombine(&responders).unwrap();
+            // Verify against the definition with a synthetic gradient set.
+            let grads: Vec<Vec<f64>> = (0..12).map(|j| vec![j as f64, 1.0]).collect();
+            let mut sum = vec![0.0; 2];
+            for (ai, &i) in a.iter().zip(&responders) {
+                for j in 0..12 {
+                    let c = gc.coeff(i, j);
+                    if c != 0.0 {
+                        sum[0] += ai * c * grads[j][0];
+                        sum[1] += ai * c * grads[j][1];
+                    }
+                }
+            }
+            let want0: f64 = (0..12).map(|j| j as f64).sum();
+            assert!((sum[0] - want0).abs() < 1e-6, "{} vs {want0}", sum[0]);
+            assert!((sum[1] - 12.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn too_many_stragglers_rejected() {
+        let gc = GradientCode::cyclic(10, 2, 3).unwrap();
+        let responders: Vec<usize> = (0..7).collect(); // 3 stragglers > s=2
+        assert!(gc.recombine(&responders).is_err());
+    }
+
+    #[test]
+    fn zero_stragglers_works() {
+        let gc = GradientCode::cyclic(8, 1, 4).unwrap();
+        let responders: Vec<usize> = (0..8).collect();
+        let a = gc.recombine(&responders).unwrap();
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn invalid_params() {
+        assert!(GradientCode::cyclic(4, 4, 1).is_err(), "s+1 > w");
+        assert!(GradientCode::cyclic(0, 0, 1).is_err());
+    }
+}

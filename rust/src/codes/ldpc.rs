@@ -1,0 +1,336 @@
+//! Real-valued regular LDPC codes (Gallager ensembles).
+//!
+//! The paper (§3.2, Scheme 2) encodes the second moment with an
+//! `(N = w, K)` LDPC code over ℝ and cites the left/right-regular
+//! ensembles of Richardson–Urbanke [24] for the density-evolution
+//! analysis of Proposition 2. We construct the `(l, r)`-regular ensemble
+//! with the configuration model: `N·l` variable-node stubs are matched to
+//! `p·r` check-node stubs by a random permutation, then multi-edges are
+//! repaired by edge swaps so the Tanner graph is simple. Nonzero entries
+//! are random ±1 — over ℝ any nonzero coefficient works for peeling, and
+//! unit magnitudes keep the decoder perfectly conditioned (the contrast
+//! with Vandermonde/MDS matrices that the paper draws in §1).
+
+use super::systematic::SystematicGenerator;
+use super::SparseMatrix;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// An `(N, K)` real LDPC code with an `(l, r)`-regular parity-check matrix
+/// and a systematic generator.
+#[derive(Debug, Clone)]
+pub struct LdpcCode {
+    /// Code length (== number of workers in the canonical deployment).
+    n: usize,
+    /// Code dimension.
+    k: usize,
+    /// Variable (column) degree.
+    l: usize,
+    /// Check (row) degree.
+    r: usize,
+    /// Parity-check matrix, column-permuted so that positions `0..k` are
+    /// systematic and `k..n` are parity.
+    h: SparseMatrix,
+    /// Systematic generator `G = [I; P]` with `P = -H₂⁻¹ H₁`.
+    gen: SystematicGenerator,
+}
+
+impl LdpcCode {
+    /// Construct a random `(l, r)`-regular LDPC code from the Gallager /
+    /// configuration-model ensemble.
+    ///
+    /// Requirements: `n > k`, `n·l == (n-k)·r` (regularity), and the
+    /// sampled graph must admit an invertible parity submatrix (retried
+    /// internally up to 64 ensemble draws).
+    pub fn gallager(n: usize, k: usize, l: usize, r: usize, seed: u64) -> Result<Self> {
+        if k == 0 || n <= k {
+            return Err(Error::Code(format!("need 0 < k < n, got ({n}, {k})")));
+        }
+        let p = n - k;
+        if n * l != p * r {
+            return Err(Error::Code(format!(
+                "regularity requires n*l == (n-k)*r: {n}*{l} != {p}*{r}"
+            )));
+        }
+        if r < 2 || l < 2 {
+            return Err(Error::Code("need l >= 2 and r >= 2".into()));
+        }
+        if r >= n {
+            return Err(Error::Code(format!("check degree r={r} must be < n={n}")));
+        }
+        let mut rng = Rng::new(seed);
+        for attempt in 0..64u64 {
+            let mut attempt_rng = rng.fork(attempt);
+            let h_raw = match sample_simple_regular_graph(n, p, l, r, &mut attempt_rng) {
+                Some(h) => h,
+                None => continue,
+            };
+            // Derive a systematic generator; this also finds the column
+            // permutation placing parity positions last.
+            match SystematicGenerator::from_parity_check(&h_raw) {
+                Ok((gen, h_perm)) => {
+                    return Ok(LdpcCode { n, k, l, r, h: h_perm, gen });
+                }
+                Err(_) => continue,
+            }
+        }
+        Err(Error::Code(format!(
+            "failed to construct ({n},{k}) ({l},{r})-regular LDPC code after 64 attempts"
+        )))
+    }
+
+    /// Code length `N`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Code dimension `K`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Variable-node degree `l`.
+    pub fn var_degree(&self) -> usize {
+        self.l
+    }
+
+    /// Check-node degree `r`.
+    pub fn check_degree(&self) -> usize {
+        self.r
+    }
+
+    /// Rate `K/N`.
+    pub fn rate(&self) -> f64 {
+        self.k as f64 / self.n as f64
+    }
+
+    /// The (column-permuted, systematic-first) parity-check matrix.
+    pub fn parity_check(&self) -> &SparseMatrix {
+        &self.h
+    }
+
+    /// The systematic generator.
+    pub fn generator(&self) -> &SystematicGenerator {
+        &self.gen
+    }
+
+    /// Encode a message vector of length `K` into a codeword of length `N`
+    /// (`c = [x; P x]`).
+    pub fn encode(&self, x: &[f64]) -> Vec<f64> {
+        self.gen.encode(x)
+    }
+
+    /// Encode a `K x d` message matrix into an `N x d` codeword matrix;
+    /// every column is a codeword. This is the moment-encoding primitive:
+    /// `C = G · M_P`.
+    pub fn encode_matrix(&self, m: &Matrix) -> Result<Matrix> {
+        self.gen.encode_matrix(m)
+    }
+
+    /// Verify `H c ≈ 0` for a full codeword.
+    pub fn is_codeword(&self, c: &[f64], tol: f64) -> bool {
+        if c.len() != self.n {
+            return false;
+        }
+        self.h.matvec(c).iter().all(|s| s.abs() <= tol)
+    }
+
+    /// Syndrome `H c`.
+    pub fn syndrome(&self, c: &[f64]) -> Vec<f64> {
+        self.h.matvec(c)
+    }
+}
+
+/// Sample a simple `(l, r)`-regular bipartite graph with `n` variables and
+/// `p` checks via the configuration model, repairing multi-edges with edge
+/// swaps. Returns `None` if repair fails (caller resamples).
+fn sample_simple_regular_graph(
+    n: usize,
+    p: usize,
+    l: usize,
+    r: usize,
+    rng: &mut Rng,
+) -> Option<SparseMatrix> {
+    let edges_total = n * l;
+    // Stub lists: variable stub i belongs to variable i / l, check stub j
+    // to check j / r.
+    let mut check_stubs: Vec<usize> = (0..edges_total).map(|j| j / r).collect();
+    rng.shuffle(&mut check_stubs);
+    // edges[e] = (var, check)
+    let mut edges: Vec<(usize, usize)> = (0..edges_total).map(|e| (e / l, check_stubs[e])).collect();
+
+    // Repair multi-edges: for each duplicate (v, c) pair, swap the check
+    // endpoint with a random other edge, retrying bounded many times.
+    use std::collections::HashSet;
+    let mut seen: HashSet<(usize, usize)> = HashSet::with_capacity(edges_total);
+    let mut dups: Vec<usize> = Vec::new();
+    for (i, &e) in edges.iter().enumerate() {
+        if !seen.insert(e) {
+            dups.push(i);
+        }
+    }
+    let mut budget = 50 * edges_total;
+    while let Some(&i) = dups.last() {
+        if budget == 0 {
+            return None;
+        }
+        budget -= 1;
+        let j = rng.below(edges_total);
+        if i == j {
+            continue;
+        }
+        let (vi, ci) = edges[i];
+        let (vj, cj) = edges[j];
+        // Swapping check endpoints must not create new duplicates.
+        if vi == vj || ci == cj {
+            continue;
+        }
+        let e_new_i = (vi, cj);
+        let e_new_j = (vj, ci);
+        if seen.contains(&e_new_i) || seen.contains(&e_new_j) {
+            continue;
+        }
+        // The edge at j is currently valid (present in seen); remove both
+        // old entries, insert the new ones.
+        seen.remove(&(vj, cj));
+        // (vi, ci) may or may not be in seen (i is a duplicate of some
+        // earlier edge) — the earlier copy keeps its entry.
+        edges[i] = e_new_i;
+        edges[j] = e_new_j;
+        seen.insert(e_new_i);
+        seen.insert(e_new_j);
+        dups.pop();
+    }
+
+    // Assemble H rows: check -> [(var, ±1)].
+    let mut row_entries: Vec<Vec<(usize, f64)>> = vec![Vec::with_capacity(r); p];
+    for &(v, c) in &edges {
+        row_entries[c].push((v, rng.sign()));
+    }
+    // Sanity: exact regularity.
+    if row_entries.iter().any(|re| re.len() != r) {
+        return None;
+    }
+    Some(SparseMatrix::from_rows(p, n, row_entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_40_20() -> LdpcCode {
+        LdpcCode::gallager(40, 20, 3, 6, 7).expect("construction")
+    }
+
+    #[test]
+    fn construction_basic_shape() {
+        let c = code_40_20();
+        assert_eq!(c.n(), 40);
+        assert_eq!(c.k(), 20);
+        assert_eq!(c.rate(), 0.5);
+        let h = c.parity_check();
+        assert_eq!(h.rows(), 20);
+        assert_eq!(h.cols(), 40);
+        assert_eq!(h.nnz(), 120);
+    }
+
+    #[test]
+    fn construction_regular_degrees() {
+        let c = code_40_20();
+        let h = c.parity_check();
+        for row in 0..h.rows() {
+            assert_eq!(h.row(row).len(), 6, "check degree");
+        }
+        for col in 0..h.cols() {
+            assert_eq!(h.col(col).len(), 3, "variable degree");
+        }
+    }
+
+    #[test]
+    fn graph_is_simple() {
+        let c = code_40_20();
+        let h = c.parity_check();
+        for row in 0..h.rows() {
+            let cols: Vec<usize> = h.row(row).iter().map(|&(c, _)| c).collect();
+            let mut dedup = cols.clone();
+            dedup.dedup();
+            assert_eq!(cols, dedup, "row {row} has a repeated column");
+        }
+    }
+
+    #[test]
+    fn encode_produces_codewords() {
+        let c = code_40_20();
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let x = rng.gaussian_vec(20);
+            let cw = c.encode(&x);
+            assert_eq!(cw.len(), 40);
+            // Systematic: message in first K coordinates.
+            assert_eq!(&cw[..20], &x[..]);
+            assert!(c.is_codeword(&cw, 1e-9), "syndrome {:?}", c.syndrome(&cw));
+        }
+    }
+
+    #[test]
+    fn encode_matrix_columns_are_codewords() {
+        let c = code_40_20();
+        let mut rng = Rng::new(4);
+        let m = Matrix::gaussian(20, 5, &mut rng);
+        let cm = c.encode_matrix(&m).unwrap();
+        assert_eq!(cm.shape(), (40, 5));
+        for j in 0..5 {
+            let col = cm.col(j);
+            assert!(c.is_codeword(&col, 1e-9));
+        }
+        // Linearity: C θ is a codeword for any θ (the property Scheme 2
+        // relies on at every step).
+        let theta = rng.gaussian_vec(5);
+        let ctheta = cm.matvec(&theta);
+        assert!(c.is_codeword(&ctheta, 1e-8));
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(LdpcCode::gallager(40, 40, 3, 6, 1).is_err(), "k == n");
+        assert!(LdpcCode::gallager(40, 20, 3, 5, 1).is_err(), "irregular");
+        assert!(LdpcCode::gallager(40, 0, 3, 6, 1).is_err(), "k == 0");
+        assert!(LdpcCode::gallager(4, 2, 1, 2, 1).is_err(), "l < 2");
+    }
+
+    #[test]
+    fn different_seeds_different_codes() {
+        let a = LdpcCode::gallager(40, 20, 3, 6, 1).unwrap();
+        let b = LdpcCode::gallager(40, 20, 3, 6, 2).unwrap();
+        let da = a.parity_check().to_dense();
+        let db = b.parity_check().to_dense();
+        assert_ne!(da.as_slice(), db.as_slice());
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = LdpcCode::gallager(40, 20, 3, 6, 9).unwrap();
+        let b = LdpcCode::gallager(40, 20, 3, 6, 9).unwrap();
+        assert_eq!(a.parity_check().to_dense().as_slice(), b.parity_check().to_dense().as_slice());
+    }
+
+    #[test]
+    fn other_ensembles() {
+        // (3,4)-regular rate-1/4 and (4,8)-regular rate-1/2 codes.
+        let c34 = LdpcCode::gallager(40, 10, 3, 4, 5).unwrap();
+        assert_eq!(c34.rate(), 0.25);
+        let c48 = LdpcCode::gallager(80, 40, 4, 8, 5).unwrap();
+        assert_eq!(c48.rate(), 0.5);
+        let mut rng = Rng::new(6);
+        let x = rng.gaussian_vec(40);
+        assert!(c48.is_codeword(&c48.encode(&x), 1e-8));
+    }
+
+    #[test]
+    fn parity_check_full_rank() {
+        let c = code_40_20();
+        let d = c.parity_check().to_dense();
+        assert_eq!(crate::linalg::rank(&d, 1e-9), 20);
+    }
+}

@@ -1,0 +1,329 @@
+//! Real MDS codes via Vandermonde generators.
+//!
+//! Scheme 1 of the paper realizes *exact* gradient computation with any
+//! linear code whose minimum distance exceeds the straggler count; the
+//! canonical choice (and the Lee-et-al. baseline) is an MDS code. Over ℝ
+//! a Vandermonde matrix on distinct evaluation points is MDS: every `K`
+//! rows are invertible, so any `N − K` erasures are correctable by a
+//! dense solve.
+//!
+//! The paper's §1/§3 motivation for LDPC codes is that Vandermonde
+//! submatrices are *catastrophically ill-conditioned* as `K` grows; this
+//! module exposes [`VandermondeCode::submatrix_condition`] so the
+//! `ablation_conditioning` bench can reproduce that claim, and offers
+//! Chebyshev-point evaluation as the best-case variant.
+
+use crate::error::{Error, Result};
+use crate::linalg::{condition_number, solve, Matrix};
+use crate::rng::Rng;
+
+/// Placement of evaluation points for the Vandermonde generator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalPoints {
+    /// Equispaced in `[-1, 1]` — the naive choice; worst conditioning.
+    Equispaced,
+    /// Chebyshev nodes — the best-conditioned classical choice.
+    Chebyshev,
+}
+
+/// Polynomial basis used for the generator columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Basis {
+    /// Monomials `x^j` — the textbook Vandermonde; condition number
+    /// explodes with `K` (the pathology the paper cites).
+    Monomial,
+    /// Chebyshev polynomials `T_j(x)` — the numerically robust choice;
+    /// still MDS (a basis change away from monomials), used for the
+    /// *working* Scheme-1 comparator.
+    Chebyshev,
+}
+
+/// An `(N, K)` real MDS code with generator `G[i][j] = p_j(x_i)` for a
+/// polynomial basis `{p_j}` of degree < K on distinct evaluation points
+/// `x_i`, optionally put in systematic form.
+#[derive(Debug, Clone)]
+pub struct VandermondeCode {
+    n: usize,
+    k: usize,
+    /// Generator (systematic iff `systematic == true`).
+    g: Matrix,
+    systematic: bool,
+}
+
+impl VandermondeCode {
+    /// Construct with the given evaluation-point placement and the
+    /// numerically robust Chebyshev basis (see
+    /// [`VandermondeCode::with_basis`] for the monomial variant).
+    pub fn new(n: usize, k: usize, points: EvalPoints) -> Result<Self> {
+        Self::with_basis(n, k, points, Basis::Chebyshev)
+    }
+
+    /// Construct with explicit basis choice.
+    pub fn with_basis(n: usize, k: usize, points: EvalPoints, basis: Basis) -> Result<Self> {
+        if k == 0 || n < k {
+            return Err(Error::Code(format!("need 0 < k <= n, got ({n}, {k})")));
+        }
+        let xs: Vec<f64> = match points {
+            EvalPoints::Equispaced => (0..n)
+                .map(|i| {
+                    if n == 1 {
+                        0.0
+                    } else {
+                        -1.0 + 2.0 * i as f64 / (n - 1) as f64
+                    }
+                })
+                .collect(),
+            EvalPoints::Chebyshev => (0..n)
+                .map(|i| ((2 * i + 1) as f64 * std::f64::consts::PI / (2 * n) as f64).cos())
+                .collect(),
+        };
+        let mut g = Matrix::zeros(n, k);
+        for (i, &x) in xs.iter().enumerate() {
+            match basis {
+                Basis::Monomial => {
+                    let mut pw = 1.0;
+                    for j in 0..k {
+                        g[(i, j)] = pw;
+                        pw *= x;
+                    }
+                }
+                Basis::Chebyshev => {
+                    // T_0 = 1, T_1 = x, T_{j+1} = 2x T_j - T_{j-1}.
+                    let (mut t_prev, mut t_cur) = (1.0, x);
+                    for j in 0..k {
+                        g[(i, j)] = if j == 0 { 1.0 } else { t_cur };
+                        if j >= 1 {
+                            let t_next = 2.0 * x * t_cur - t_prev;
+                            t_prev = t_cur;
+                            t_cur = t_next;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(VandermondeCode { n, k, g, systematic: false })
+    }
+
+    /// Convert to systematic form: `G_sys = G · (G[0..K, :])⁻¹`, so the
+    /// first `K` codeword coordinates equal the message (Scheme 1 needs
+    /// this for the master to read `M_P θ` directly).
+    pub fn into_systematic(self) -> Result<Self> {
+        let top = self.g.select_rows(&(0..self.k).collect::<Vec<_>>());
+        let top_inv = crate::linalg::invert(&top)
+            .map_err(|e| Error::Code(format!("systematic transform failed: {e}")))?;
+        let g = self.g.matmul(&top_inv)?;
+        Ok(VandermondeCode { n: self.n, k: self.k, g, systematic: true })
+    }
+
+    /// Code length.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Code dimension.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Is the generator in systematic form?
+    pub fn is_systematic(&self) -> bool {
+        self.systematic
+    }
+
+    /// Dense generator matrix.
+    pub fn generator(&self) -> &Matrix {
+        &self.g
+    }
+
+    /// Encode a length-`K` message into a length-`N` codeword.
+    pub fn encode(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.k);
+        self.g.matvec(x)
+    }
+
+    /// Encode a `K x d` message matrix columnwise: `C = G M` (`N x d`).
+    pub fn encode_matrix(&self, m: &Matrix) -> Result<Matrix> {
+        if m.rows() != self.k {
+            return Err(Error::Code(format!(
+                "encode_matrix: {} rows vs code dimension {}",
+                m.rows(),
+                self.k
+            )));
+        }
+        self.g.matmul(m)
+    }
+
+    /// Decode the message from any `≥ K` surviving coordinates by solving
+    /// the `K x K` system on the first `K` survivors. Errors if fewer than
+    /// `K` coordinates survive (beyond the MDS erasure-correction radius).
+    pub fn decode_erasures(&self, available: &[usize], values: &[f64]) -> Result<Vec<f64>> {
+        if available.len() != values.len() {
+            return Err(Error::Decode("available/values length mismatch".into()));
+        }
+        if available.len() < self.k {
+            return Err(Error::Decode(format!(
+                "MDS decode needs {} survivors, got {}",
+                self.k,
+                available.len()
+            )));
+        }
+        let rows: Vec<usize> = available[..self.k].to_vec();
+        let sub = self.g.select_rows(&rows);
+        let rhs: Vec<f64> = values[..self.k].to_vec();
+        solve(&sub, &rhs).map_err(|e| Error::Decode(format!("MDS solve failed: {e}")))
+    }
+
+    /// 2-norm condition number of the decode submatrix induced by taking
+    /// the first `K` of the given surviving coordinates — the quantity the
+    /// paper's noise-stability argument is about.
+    pub fn submatrix_condition(&self, available: &[usize]) -> Result<f64> {
+        if available.len() < self.k {
+            return Err(Error::Decode("not enough survivors".into()));
+        }
+        let sub = self.g.select_rows(&available[..self.k]);
+        condition_number(&sub, 200, 0xC0DE)
+    }
+
+    /// Worst submatrix condition number over `trials` random straggler
+    /// patterns with `s` erasures.
+    pub fn worst_condition(&self, s: usize, trials: usize, seed: u64) -> Result<f64> {
+        let mut rng = Rng::new(seed);
+        let mut worst = 0.0f64;
+        for _ in 0..trials {
+            let stragglers = rng.choose_k(self.n, s);
+            let available: Vec<usize> =
+                (0..self.n).filter(|i| !stragglers.contains(i)).collect();
+            let c = self.submatrix_condition(&available)?;
+            worst = worst.max(c);
+        }
+        Ok(worst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip_any_erasures() {
+        let code = VandermondeCode::new(12, 6, EvalPoints::Chebyshev).unwrap();
+        let mut rng = Rng::new(1);
+        let x = rng.gaussian_vec(6);
+        let c = code.encode(&x);
+        for _ in 0..30 {
+            let erased = rng.choose_k(12, 6); // up to n-k erasures
+            let available: Vec<usize> = (0..12).filter(|i| !erased.contains(i)).collect();
+            let values: Vec<f64> = available.iter().map(|&i| c[i]).collect();
+            let got = code.decode_erasures(&available, &values).unwrap();
+            for (g, w) in got.iter().zip(&x) {
+                assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn too_many_erasures_rejected() {
+        let code = VandermondeCode::new(10, 6, EvalPoints::Chebyshev).unwrap();
+        let available: Vec<usize> = (0..5).collect();
+        let values = vec![0.0; 5];
+        assert!(code.decode_erasures(&available, &values).is_err());
+    }
+
+    #[test]
+    fn systematic_prefix_is_message() {
+        let code = VandermondeCode::new(10, 4, EvalPoints::Chebyshev)
+            .unwrap()
+            .into_systematic()
+            .unwrap();
+        assert!(code.is_systematic());
+        let mut rng = Rng::new(2);
+        let x = rng.gaussian_vec(4);
+        let c = code.encode(&x);
+        for i in 0..4 {
+            assert!((c[i] - x[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn systematic_still_mds() {
+        let code = VandermondeCode::new(10, 4, EvalPoints::Chebyshev)
+            .unwrap()
+            .into_systematic()
+            .unwrap();
+        let mut rng = Rng::new(3);
+        let x = rng.gaussian_vec(4);
+        let c = code.encode(&x);
+        let erased = vec![0usize, 1, 2, 3]; // erase the whole systematic part
+        let available: Vec<usize> = (0..10).filter(|i| !erased.contains(i)).collect();
+        let values: Vec<f64> = available.iter().map(|&i| c[i]).collect();
+        let got = code.decode_erasures(&available, &values).unwrap();
+        for (g, w) in got.iter().zip(&x) {
+            assert!((g - w).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn encode_matrix_columnwise() {
+        let code = VandermondeCode::new(8, 3, EvalPoints::Chebyshev).unwrap();
+        let mut rng = Rng::new(4);
+        let m = Matrix::gaussian(3, 5, &mut rng);
+        let cm = code.encode_matrix(&m).unwrap();
+        assert_eq!(cm.shape(), (8, 5));
+        for j in 0..5 {
+            assert_eq!(cm.col(j), code.encode(&m.col(j)));
+        }
+    }
+
+    #[test]
+    fn conditioning_grows_with_k() {
+        // The paper's motivation: Vandermonde decode matrices become
+        // ill-conditioned as K grows; LDPC ±1 peeling never divides by
+        // anything but ±1.
+        let mut conds = Vec::new();
+        for k in [4usize, 8, 16] {
+            let code =
+                VandermondeCode::with_basis(2 * k, k, EvalPoints::Equispaced, Basis::Monomial)
+                    .unwrap();
+            let c = code.worst_condition(k, 5, 9).unwrap();
+            conds.push(c);
+        }
+        assert!(conds[1] > 10.0 * conds[0], "{conds:?}");
+        assert!(conds[2] > 10.0 * conds[1], "{conds:?}");
+    }
+
+    #[test]
+    fn chebyshev_points_better_conditioned_than_equispaced() {
+        let k = 12;
+        let eq =
+            VandermondeCode::with_basis(2 * k, k, EvalPoints::Equispaced, Basis::Monomial)
+                .unwrap();
+        let ch =
+            VandermondeCode::with_basis(2 * k, k, EvalPoints::Chebyshev, Basis::Monomial)
+                .unwrap();
+        let ceq = eq.worst_condition(k, 5, 10).unwrap();
+        let cch = ch.worst_condition(k, 5, 10).unwrap();
+        assert!(cch < ceq, "chebyshev {cch} !< equispaced {ceq}");
+    }
+
+    #[test]
+    fn chebyshev_basis_better_conditioned_than_monomial() {
+        // The working Scheme-1 comparator uses the Chebyshev basis; the
+        // monomial Vandermonde at the same size is catastrophically worse.
+        let k = 16;
+        let mono =
+            VandermondeCode::with_basis(2 * k, k, EvalPoints::Chebyshev, Basis::Monomial)
+                .unwrap();
+        let cheb =
+            VandermondeCode::with_basis(2 * k, k, EvalPoints::Chebyshev, Basis::Chebyshev)
+                .unwrap();
+        let cm = mono.worst_condition(k, 5, 10).unwrap();
+        let cc = cheb.worst_condition(k, 5, 10).unwrap();
+        assert!(cc * 100.0 < cm, "chebyshev basis {cc} not >> better than monomial {cm}");
+    }
+
+    #[test]
+    fn invalid_params() {
+        assert!(VandermondeCode::new(4, 5, EvalPoints::Chebyshev).is_err());
+        assert!(VandermondeCode::new(4, 0, EvalPoints::Chebyshev).is_err());
+    }
+}

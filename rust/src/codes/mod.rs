@@ -1,0 +1,156 @@
+//! Erasure-coding substrate over the reals.
+//!
+//! The paper encodes the second moment `M = XᵀX` with a real-valued LDPC
+//! code and decodes erasures (stragglers) with an iterative peeling
+//! decoder. This module provides:
+//!
+//! * [`ldpc`] — Gallager-style regular LDPC ensembles over ℝ and their
+//!   systematic generators ([`systematic`]).
+//! * [`peeling`] — the iterative erasure-correction (peeling) decoder of
+//!   Scheme 2, with a position-only schedule that is computed once per
+//!   gradient step and replayed over all `k/K` block codewords.
+//! * [`density`] — the density-evolution recursion of Proposition 2 and
+//!   the decoding threshold `q*(r, l)` of Remark 3.
+//! * [`mds`] — real Vandermonde (MDS) codes: Scheme 1's exact decoder and
+//!   the Lee-et-al. baseline, plus the conditioning pathology they carry.
+//! * [`sketch`] — Gaussian and subsampled-Hadamard data sketches
+//!   (the KSDY17 baseline of Karakus et al.).
+//! * [`replication`] — r-fold replication assignments.
+//! * [`gradcode`] — cyclic gradient coding (Tandon et al.) with
+//!   least-squares recombination at the master.
+
+pub mod density;
+pub mod gradcode;
+pub mod ldpc;
+pub mod mds;
+pub mod peeling;
+pub mod replication;
+pub mod sketch;
+pub mod systematic;
+
+pub use ldpc::LdpcCode;
+pub use mds::VandermondeCode;
+pub use peeling::{PeelSchedule, PeelingDecoder};
+
+/// A sparse matrix in row-list + column-list form, used for parity-check
+/// matrices. Entries are real (±1 for the standard ensemble).
+#[derive(Debug, Clone)]
+pub struct SparseMatrix {
+    rows: usize,
+    cols: usize,
+    /// For each row: sorted `(col, value)` pairs.
+    row_entries: Vec<Vec<(usize, f64)>>,
+    /// For each column: sorted `(row, value)` pairs.
+    col_entries: Vec<Vec<(usize, f64)>>,
+}
+
+impl SparseMatrix {
+    /// Build from row entry lists; the column index is derived.
+    pub fn from_rows(rows: usize, cols: usize, row_entries: Vec<Vec<(usize, f64)>>) -> Self {
+        assert_eq!(row_entries.len(), rows);
+        let mut col_entries = vec![Vec::new(); cols];
+        let mut row_entries = row_entries;
+        for (r, entries) in row_entries.iter_mut().enumerate() {
+            entries.sort_unstable_by_key(|&(c, _)| c);
+            for &(c, v) in entries.iter() {
+                assert!(c < cols, "column {c} out of bounds ({cols})");
+                col_entries[c].push((r, v));
+            }
+        }
+        SparseMatrix { rows, cols, row_entries, col_entries }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(col, value)` pairs of row `r`.
+    pub fn row(&self, r: usize) -> &[(usize, f64)] {
+        &self.row_entries[r]
+    }
+
+    /// `(row, value)` pairs of column `c`.
+    pub fn col(&self, c: usize) -> &[(usize, f64)] {
+        &self.col_entries[c]
+    }
+
+    /// Total number of nonzero entries.
+    pub fn nnz(&self) -> usize {
+        self.row_entries.iter().map(|r| r.len()).sum()
+    }
+
+    /// Sparse mat-vec `H x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), self.cols);
+        self.row_entries
+            .iter()
+            .map(|row| row.iter().map(|&(c, v)| v * x[c]).sum())
+            .collect()
+    }
+
+    /// Densify (for rank checks / generator construction).
+    pub fn to_dense(&self) -> crate::linalg::Matrix {
+        let mut m = crate::linalg::Matrix::zeros(self.rows, self.cols);
+        for (r, entries) in self.row_entries.iter().enumerate() {
+            for &(c, v) in entries {
+                m[(r, c)] = v;
+            }
+        }
+        m
+    }
+
+    /// Apply a column permutation: entry at column `c` moves to column
+    /// `perm[c]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> SparseMatrix {
+        assert_eq!(perm.len(), self.cols);
+        let row_entries = self
+            .row_entries
+            .iter()
+            .map(|row| row.iter().map(|&(c, v)| (perm[c], v)).collect())
+            .collect();
+        SparseMatrix::from_rows(self.rows, self.cols, row_entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_matvec_matches_dense() {
+        let h = SparseMatrix::from_rows(
+            2,
+            4,
+            vec![vec![(0, 1.0), (2, -1.0)], vec![(1, 2.0), (3, 1.0)]],
+        );
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(h.matvec(&x), vec![-2.0, 8.0]);
+        let d = h.to_dense();
+        assert_eq!(d.matvec(&x), vec![-2.0, 8.0]);
+    }
+
+    #[test]
+    fn col_index_consistent() {
+        let h = SparseMatrix::from_rows(
+            3,
+            3,
+            vec![vec![(0, 1.0), (1, 1.0)], vec![(1, -1.0)], vec![(0, 2.0), (2, 1.0)]],
+        );
+        assert_eq!(h.col(0), &[(0, 1.0), (2, 2.0)]);
+        assert_eq!(h.col(1), &[(0, 1.0), (1, -1.0)]);
+        assert_eq!(h.nnz(), 5);
+    }
+
+    #[test]
+    fn permute_cols_roundtrip() {
+        let h = SparseMatrix::from_rows(1, 3, vec![vec![(0, 1.0), (2, 5.0)]]);
+        let p = h.permute_cols(&[2, 1, 0]);
+        assert_eq!(p.row(0), &[(0, 5.0), (2, 1.0)]);
+    }
+}

@@ -1,0 +1,332 @@
+//! Iterative erasure correction (peeling decoder) for LDPC codes.
+//!
+//! Scheme 2's master receives a codeword with the stragglers' coordinates
+//! erased and runs `D` iterations of the standard peeling decoder: any
+//! check equation with exactly one erased neighbour solves that neighbour
+//! (over ℝ: `c_e = -(1/h_e) Σ_{j≠e} h_j c_j`). We use *round-parallel*
+//! semantics — all checks solvable at the start of a round fire together —
+//! which is the schedule density evolution (Proposition 2) analyses.
+//!
+//! Because the erasure pattern of a gradient step is shared by all `k/K`
+//! block codewords of that step, the decoder separates **schedule
+//! construction** (positions only, done once per step) from **value
+//! application** (replayed per block codeword in `O(edges touched)`).
+
+use super::ldpc::LdpcCode;
+
+/// One resolved coordinate: `values[target] = -inv_coeff * Σ terms`.
+#[derive(Debug, Clone)]
+pub struct PeelOp {
+    /// Coordinate being solved.
+    pub target: usize,
+    /// `1 / h[check, target]`.
+    pub inv_coeff: f64,
+    /// `(coordinate, h-coefficient)` of the other neighbours of the check.
+    pub terms: Vec<(usize, f64)>,
+}
+
+/// A replayable decode schedule for a fixed erasure pattern.
+#[derive(Debug, Clone)]
+pub struct PeelSchedule {
+    /// Ops in execution order (within a round the order is irrelevant:
+    /// every op only reads coordinates known at the round start or solved
+    /// in earlier rounds).
+    pub ops: Vec<PeelOp>,
+    /// Round boundaries: `ops[rounds[i]..rounds[i+1]]` is round `i`.
+    pub round_offsets: Vec<usize>,
+    /// Coordinates still erased after the final round.
+    pub unrecovered: Vec<usize>,
+    /// Number of rounds actually executed (≤ requested `max_iters`).
+    pub rounds: usize,
+}
+
+impl PeelSchedule {
+    /// Number of coordinates recovered by the schedule.
+    pub fn recovered_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Apply the schedule to a codeword whose erased coordinates hold
+    /// arbitrary values; after the call every scheduled target holds its
+    /// decoded value. Coordinates in `unrecovered` are left untouched.
+    pub fn apply(&self, values: &mut [f64]) {
+        for op in &self.ops {
+            let mut s = 0.0;
+            for &(j, h) in &op.terms {
+                s += h * values[j];
+            }
+            values[op.target] = -op.inv_coeff * s;
+        }
+    }
+}
+
+/// Peeling decoder bound to a code.
+#[derive(Debug, Clone)]
+pub struct PeelingDecoder<'a> {
+    code: &'a LdpcCode,
+}
+
+impl<'a> PeelingDecoder<'a> {
+    /// Create a decoder for the given code.
+    pub fn new(code: &'a LdpcCode) -> Self {
+        PeelingDecoder { code }
+    }
+
+    /// Build the decode schedule for an erasure pattern, running at most
+    /// `max_iters` rounds (the paper's tuning parameter `D`).
+    ///
+    /// `erased` must contain valid coordinate indices; duplicates are
+    /// tolerated.
+    pub fn schedule(&self, erased: &[usize], max_iters: usize) -> PeelSchedule {
+        let h = self.code.parity_check();
+        let n = h.cols();
+        let p = h.rows();
+
+        let mut is_erased = vec![false; n];
+        for &e in erased {
+            debug_assert!(e < n, "erasure index {e} out of range {n}");
+            is_erased[e] = true;
+        }
+
+        // Per-check erased-neighbour counters.
+        let mut erased_count = vec![0usize; p];
+        for c in 0..p {
+            erased_count[c] = h.row(c).iter().filter(|&&(v, _)| is_erased[v]).count();
+        }
+
+        let mut ops: Vec<PeelOp> = Vec::new();
+        let mut round_offsets = vec![0usize];
+        let mut rounds = 0;
+
+        for _ in 0..max_iters {
+            // Collect all (check, target) solvable at this round start.
+            // A coordinate may be solvable through several checks; keep the
+            // first and mark it claimed so the round stays conflict-free.
+            let mut claimed: Vec<usize> = Vec::new();
+            let round_start = ops.len();
+            for check in 0..p {
+                if erased_count[check] != 1 {
+                    continue;
+                }
+                let row = h.row(check);
+                let (target, coeff) = row
+                    .iter()
+                    .copied()
+                    .find(|&(v, _)| is_erased[v])
+                    .expect("counter said one erased neighbour");
+                // Skip if another check already claimed this target in
+                // this round.
+                if claimed.contains(&target) {
+                    continue;
+                }
+                claimed.push(target);
+                let terms: Vec<(usize, f64)> =
+                    row.iter().copied().filter(|&(v, _)| v != target).collect();
+                ops.push(PeelOp { target, inv_coeff: 1.0 / coeff, terms });
+            }
+            if ops.len() == round_start {
+                break; // stalled: no degree-1 checks left
+            }
+            rounds += 1;
+            // Commit the round: clear erasure flags and update counters.
+            for op in &ops[round_start..] {
+                is_erased[op.target] = false;
+                for &(check, _) in h.col(op.target) {
+                    erased_count[check] -= 1;
+                }
+            }
+            round_offsets.push(ops.len());
+            if is_erased.iter().all(|&e| !e) {
+                break;
+            }
+        }
+
+        let unrecovered: Vec<usize> =
+            (0..n).filter(|&v| is_erased[v]).collect();
+        PeelSchedule { ops, round_offsets, unrecovered, rounds }
+    }
+
+    /// Convenience: schedule + apply in one call. `values[e]` for erased
+    /// `e` may hold garbage on entry. Returns the coordinates that remain
+    /// unrecovered.
+    pub fn decode(
+        &self,
+        values: &mut [f64],
+        erased: &[usize],
+        max_iters: usize,
+    ) -> Vec<usize> {
+        let sched = self.schedule(erased, max_iters);
+        sched.apply(values);
+        sched.unrecovered.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn code() -> LdpcCode {
+        LdpcCode::gallager(40, 20, 3, 6, 17).unwrap()
+    }
+
+    /// Erase `erased` coordinates of a random codeword, decode, compare.
+    fn roundtrip(code: &LdpcCode, erased: &[usize], max_iters: usize) -> (Vec<usize>, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(99);
+        let x = rng.gaussian_vec(code.k());
+        let truth = code.encode(&x);
+        let mut received = truth.clone();
+        for &e in erased {
+            received[e] = f64::NAN; // decoder must not read these
+        }
+        let dec = PeelingDecoder::new(code);
+        let un = dec.decode(&mut received, erased, max_iters);
+        (un, received, truth)
+    }
+
+    #[test]
+    fn no_erasures_is_noop() {
+        let c = code();
+        let (un, got, truth) = roundtrip(&c, &[], 10);
+        assert!(un.is_empty());
+        assert_eq!(got, truth);
+    }
+
+    #[test]
+    fn few_erasures_fully_recovered() {
+        let c = code();
+        let mut rng = Rng::new(5);
+        for trial in 0..50 {
+            let erased = rng.choose_k(40, 5);
+            let (un, got, truth) = roundtrip(&c, &erased, 40);
+            assert!(un.is_empty(), "trial {trial}: unrecovered {un:?} for erasures {erased:?}");
+            for (g, t) in got.iter().zip(&truth) {
+                assert!((g - t).abs() < 1e-8, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn recovered_values_exact_where_recovered() {
+        // Even when some coordinates stall, every *recovered* coordinate
+        // must equal the true codeword value.
+        let c = code();
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let erased = rng.choose_k(40, 15);
+            let (un, got, truth) = roundtrip(&c, &erased, 40);
+            for i in 0..40 {
+                if !un.contains(&i) {
+                    assert!(
+                        (got[i] - truth[i]).abs() < 1e-7,
+                        "coordinate {i} wrong: {} vs {}",
+                        got[i],
+                        truth[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unrecovered_monotone_in_iterations() {
+        // The number of still-erased coordinates is non-increasing in D —
+        // the paper's "quality is a non-increasing function of decoding
+        // iterations" claim.
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut rng = Rng::new(11);
+        for _ in 0..30 {
+            let erased = rng.choose_k(40, 12);
+            let mut prev = usize::MAX;
+            for d in 0..8 {
+                let sched = dec.schedule(&erased, d);
+                let cur = sched.unrecovered.len();
+                assert!(cur <= prev, "D={d}: {cur} > {prev}");
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn zero_iterations_recovers_nothing() {
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let erased = vec![0, 5, 13];
+        let sched = dec.schedule(&erased, 0);
+        assert_eq!(sched.unrecovered, erased);
+        assert_eq!(sched.ops.len(), 0);
+        assert_eq!(sched.rounds, 0);
+    }
+
+    #[test]
+    fn schedule_replays_across_codewords() {
+        // One schedule, many codewords with the same erasure pattern —
+        // exactly the per-step reuse in Scheme 2 (k/K block codewords).
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut rng = Rng::new(13);
+        let erased = rng.choose_k(40, 6);
+        let sched = dec.schedule(&erased, 40);
+        assert!(sched.unrecovered.is_empty());
+        for _ in 0..10 {
+            let x = rng.gaussian_vec(20);
+            let truth = c.encode(&x);
+            let mut recv = truth.clone();
+            for &e in &erased {
+                recv[e] = 0.0;
+            }
+            sched.apply(&mut recv);
+            for (g, t) in recv.iter().zip(&truth) {
+                assert!((g - t).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn round_offsets_consistent() {
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut rng = Rng::new(17);
+        let erased = rng.choose_k(40, 10);
+        let sched = dec.schedule(&erased, 40);
+        assert_eq!(*sched.round_offsets.first().unwrap(), 0);
+        assert_eq!(*sched.round_offsets.last().unwrap(), sched.ops.len());
+        assert!(sched.round_offsets.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(sched.round_offsets.len(), sched.rounds + 1);
+    }
+
+    #[test]
+    fn targets_unique() {
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut rng = Rng::new(19);
+        for _ in 0..20 {
+            let erased = rng.choose_k(40, 14);
+            let sched = dec.schedule(&erased, 40);
+            let mut targets: Vec<usize> = sched.ops.iter().map(|o| o.target).collect();
+            let total = targets.len();
+            targets.sort_unstable();
+            targets.dedup();
+            assert_eq!(targets.len(), total, "duplicate target in schedule");
+            // recovered + unrecovered == erased set
+            let mut all: Vec<usize> = targets;
+            all.extend_from_slice(&sched.unrecovered);
+            all.sort_unstable();
+            let mut want = erased.clone();
+            want.sort_unstable();
+            assert_eq!(all, want);
+        }
+    }
+
+    #[test]
+    fn erase_everything_stalls() {
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let erased: Vec<usize> = (0..40).collect();
+        let sched = dec.schedule(&erased, 100);
+        // No check has exactly one erased neighbour (all have 6).
+        assert_eq!(sched.unrecovered.len(), 40);
+        assert_eq!(sched.rounds, 0);
+    }
+}

@@ -1,0 +1,153 @@
+//! r-fold replication assignments (the classical straggler defence).
+//!
+//! The paper's experiments compare against "2-replication": partition the
+//! work into `w / r` pieces and hand each piece to `r` workers; a piece is
+//! lost only if *all* of its replicas straggle. This module provides the
+//! assignment combinatorics shared by the replication scheme and the
+//! gradient-coding fractional-repetition construction.
+
+use crate::error::{Error, Result};
+
+/// A replicated assignment of `num_parts` parts onto `workers` workers,
+/// each part held by exactly `r` workers and (when `r · num_parts ==
+/// workers`) each worker holding exactly one part.
+#[derive(Debug, Clone)]
+pub struct ReplicatedAssignment {
+    workers: usize,
+    num_parts: usize,
+    r: usize,
+    /// worker -> part
+    worker_part: Vec<usize>,
+    /// part -> workers
+    part_workers: Vec<Vec<usize>>,
+}
+
+impl ReplicatedAssignment {
+    /// Block assignment: workers `[p·r, (p+1)·r)` hold part `p`.
+    /// Requires `r` to divide `workers`.
+    pub fn block(workers: usize, r: usize) -> Result<Self> {
+        if r == 0 || workers == 0 || workers % r != 0 {
+            return Err(Error::Config(format!(
+                "replication: r={r} must divide workers={workers}"
+            )));
+        }
+        let num_parts = workers / r;
+        let worker_part: Vec<usize> = (0..workers).map(|w| w / r).collect();
+        let mut part_workers = vec![Vec::with_capacity(r); num_parts];
+        for (w, &p) in worker_part.iter().enumerate() {
+            part_workers[p].push(w);
+        }
+        Ok(ReplicatedAssignment { workers, num_parts, r, worker_part, part_workers })
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Number of distinct parts.
+    pub fn num_parts(&self) -> usize {
+        self.num_parts
+    }
+
+    /// Replication factor.
+    pub fn replication(&self) -> usize {
+        self.r
+    }
+
+    /// The part held by `worker`.
+    pub fn part_of(&self, worker: usize) -> usize {
+        self.worker_part[worker]
+    }
+
+    /// The workers holding `part`.
+    pub fn workers_of(&self, part: usize) -> &[usize] {
+        &self.part_workers[part]
+    }
+
+    /// Given the responding workers, return for each part the first
+    /// responder holding it (`None` = all replicas straggled).
+    pub fn resolve(&self, responded: &[usize]) -> Vec<Option<usize>> {
+        let mut got = vec![None; self.num_parts];
+        for &w in responded {
+            let p = self.worker_part[w];
+            if got[p].is_none() {
+                got[p] = Some(w);
+            }
+        }
+        got
+    }
+
+    /// Fraction of parts surviving a given straggler set.
+    pub fn survival_fraction(&self, stragglers: &[usize]) -> f64 {
+        let responded: Vec<usize> =
+            (0..self.workers).filter(|w| !stragglers.contains(w)).collect();
+        let got = self.resolve(&responded);
+        got.iter().filter(|g| g.is_some()).count() as f64 / self.num_parts as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn block_assignment_shape() {
+        let a = ReplicatedAssignment::block(40, 2).unwrap();
+        assert_eq!(a.num_parts(), 20);
+        assert_eq!(a.part_of(0), 0);
+        assert_eq!(a.part_of(1), 0);
+        assert_eq!(a.part_of(2), 1);
+        assert_eq!(a.workers_of(19), &[38, 39]);
+    }
+
+    #[test]
+    fn every_part_has_r_replicas() {
+        let a = ReplicatedAssignment::block(40, 4).unwrap();
+        for p in 0..a.num_parts() {
+            assert_eq!(a.workers_of(p).len(), 4);
+        }
+    }
+
+    #[test]
+    fn resolve_prefers_responders() {
+        let a = ReplicatedAssignment::block(6, 2).unwrap();
+        // workers 0,1 -> part0; 2,3 -> part1; 4,5 -> part2
+        let got = a.resolve(&[1, 2, 3]);
+        assert_eq!(got[0], Some(1));
+        assert_eq!(got[1], Some(2));
+        assert_eq!(got[2], None);
+    }
+
+    #[test]
+    fn part_lost_only_if_all_replicas_straggle() {
+        let a = ReplicatedAssignment::block(40, 2).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let stragglers = rng.choose_k(40, 5);
+            let responded: Vec<usize> = (0..40).filter(|w| !stragglers.contains(w)).collect();
+            let got = a.resolve(&responded);
+            for (p, g) in got.iter().enumerate() {
+                let all_straggled =
+                    a.workers_of(p).iter().all(|w| stragglers.contains(w));
+                assert_eq!(g.is_none(), all_straggled, "part {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_params() {
+        assert!(ReplicatedAssignment::block(40, 3).is_err(), "3 does not divide 40");
+        assert!(ReplicatedAssignment::block(0, 2).is_err());
+        assert!(ReplicatedAssignment::block(4, 0).is_err());
+    }
+
+    #[test]
+    fn survival_fraction_bounds() {
+        let a = ReplicatedAssignment::block(40, 2).unwrap();
+        assert_eq!(a.survival_fraction(&[]), 1.0);
+        let all: Vec<usize> = (0..40).collect();
+        assert_eq!(a.survival_fraction(&all), 0.0);
+    }
+}

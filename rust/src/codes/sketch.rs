@@ -1,0 +1,273 @@
+//! Data sketches for the KSDY17 baseline (Karakus et al., NeurIPS 2017).
+//!
+//! KSDY17 mitigates stragglers by *data encoding*: replace `(X, y)` with
+//! `(SX, Sy)` for a tall `n x m` encoding matrix `S` with near-orthogonal
+//! columns (`SᵀS ≈ I`), partition the rows of `SX` over workers, and run
+//! distributed gradient descent on the *encoded* problem — losing a few
+//! row blocks to stragglers perturbs the effective objective only mildly.
+//! The paper's experiments (§4) instantiate `S` as (a) a column-subsampled
+//! 4096×4096 Hadamard matrix and (b) a 4096×2048 i.i.d. Gaussian matrix;
+//! both are reproduced here.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// In-place fast Walsh–Hadamard transform (size must be a power of two).
+/// Unnormalized: applying twice multiplies by `len`.
+pub fn fwht(v: &mut [f64]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "fwht length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        let step = h * 2;
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = v[j];
+                let y = v[j + h];
+                v[j] = x + y;
+                v[j + h] = x - y;
+            }
+            i += step;
+        }
+        h = step;
+    }
+}
+
+/// The kind of sketch matrix `S`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sketch {
+    /// `n x m` with i.i.d. `N(0, 1/n)` entries.
+    Gaussian,
+    /// `n` rows of the `n x n` Hadamard matrix restricted to `m` sampled
+    /// columns, scaled by `1/√n` (requires `n` a power of two).
+    SubsampledHadamard,
+}
+
+/// A realized sketch `S ∈ ℝ^{n x m}` with an efficient `S · X` product.
+#[derive(Debug, Clone)]
+pub struct SketchMatrix {
+    n: usize,
+    m: usize,
+    kind: Sketch,
+    /// Gaussian: dense `n x m`. Hadamard: unused.
+    dense: Option<Matrix>,
+    /// Hadamard: the `m` sampled column indices.
+    cols: Option<Vec<usize>>,
+}
+
+impl SketchMatrix {
+    /// Sample a sketch. For [`Sketch::SubsampledHadamard`], `n` must be a
+    /// power of two and `m <= n`.
+    pub fn sample(kind: Sketch, n: usize, m: usize, seed: u64) -> Result<Self> {
+        if m == 0 || n < m {
+            return Err(Error::Config(format!("sketch needs 0 < m <= n, got ({n}, {m})")));
+        }
+        let mut rng = Rng::new(seed);
+        match kind {
+            Sketch::Gaussian => {
+                let mut dense = Matrix::gaussian(n, m, &mut rng);
+                let scale = 1.0 / (n as f64).sqrt();
+                for v in dense.as_mut_slice() {
+                    *v *= scale;
+                }
+                Ok(SketchMatrix { n, m, kind, dense: Some(dense), cols: None })
+            }
+            Sketch::SubsampledHadamard => {
+                if !n.is_power_of_two() {
+                    return Err(Error::Config(format!("Hadamard size {n} must be a power of two")));
+                }
+                let cols = rng.choose_k(n, m);
+                Ok(SketchMatrix { n, m, kind, dense: None, cols: Some(cols) })
+            }
+        }
+    }
+
+    /// Rows of the sketch (`n`).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Columns of the sketch (`m`).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Which kind of sketch this is.
+    pub fn kind(&self) -> Sketch {
+        self.kind
+    }
+
+    /// Apply to a vector: `S v` (`v` has length `m`).
+    pub fn apply_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.m);
+        match self.kind {
+            Sketch::Gaussian => self.dense.as_ref().unwrap().matvec(v),
+            Sketch::SubsampledHadamard => {
+                // S v = H(:, cols) v = H (scatter(v)) scaled by 1/sqrt(n).
+                let cols = self.cols.as_ref().unwrap();
+                let mut buf = vec![0.0; self.n];
+                for (&c, &x) in cols.iter().zip(v) {
+                    buf[c] = x;
+                }
+                fwht(&mut buf);
+                let scale = 1.0 / (self.n as f64).sqrt();
+                for b in buf.iter_mut() {
+                    *b *= scale;
+                }
+                buf
+            }
+        }
+    }
+
+    /// Apply to a matrix: `S X` (`X` is `m x k`, result `n x k`).
+    /// Hadamard path is `O(k · n log n)` via columnwise FWHT.
+    pub fn apply(&self, x: &Matrix) -> Result<Matrix> {
+        if x.rows() != self.m {
+            return Err(Error::Config(format!(
+                "sketch apply: X has {} rows, sketch has {} columns",
+                x.rows(),
+                self.m
+            )));
+        }
+        match self.kind {
+            Sketch::Gaussian => self.dense.as_ref().unwrap().matmul(x),
+            Sketch::SubsampledHadamard => {
+                let k = x.cols();
+                let cols = self.cols.as_ref().unwrap();
+                let mut out = Matrix::zeros(self.n, k);
+                let scale = 1.0 / (self.n as f64).sqrt();
+                let mut buf = vec![0.0; self.n];
+                for j in 0..k {
+                    buf.iter_mut().for_each(|b| *b = 0.0);
+                    for (&c, i) in cols.iter().zip(0..self.m) {
+                        buf[c] = x[(i, j)];
+                    }
+                    fwht(&mut buf);
+                    for i in 0..self.n {
+                        out[(i, j)] = scale * buf[i];
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Densify (tests only).
+    pub fn to_dense(&self) -> Matrix {
+        match self.kind {
+            Sketch::Gaussian => self.dense.clone().unwrap(),
+            Sketch::SubsampledHadamard => {
+                let mut out = Matrix::zeros(self.n, self.m);
+                let scale = 1.0 / (self.n as f64).sqrt();
+                let cols = self.cols.as_ref().unwrap();
+                for (j, &c) in cols.iter().enumerate() {
+                    // Column c of H computed by transforming e_c.
+                    let mut e = vec![0.0; self.n];
+                    e[c] = 1.0;
+                    fwht(&mut e);
+                    for i in 0..self.n {
+                        out[(i, j)] = scale * e[i];
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    #[test]
+    fn fwht_is_hadamard() {
+        // H_2 = [[1,1],[1,-1]] Kronecker powers; check H_4 columns.
+        let mut e0 = vec![1.0, 0.0, 0.0, 0.0];
+        fwht(&mut e0);
+        assert_eq!(e0, vec![1.0, 1.0, 1.0, 1.0]);
+        let mut e1 = vec![0.0, 1.0, 0.0, 0.0];
+        fwht(&mut e1);
+        assert_eq!(e1, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn fwht_involution_up_to_n() {
+        let mut rng = Rng::new(1);
+        let orig = rng.gaussian_vec(64);
+        let mut v = orig.clone();
+        fwht(&mut v);
+        fwht(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - 64.0 * b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn hadamard_columns_orthogonal() {
+        let s = SketchMatrix::sample(Sketch::SubsampledHadamard, 64, 16, 3).unwrap();
+        let d = s.to_dense();
+        // SᵀS == I exactly for Hadamard subsampling (orthogonal columns).
+        for a in 0..16 {
+            for b in 0..16 {
+                let ip = dot(&d.col(a), &d.col(b));
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((ip - want).abs() < 1e-9, "({a},{b}): {ip}");
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_columns_near_orthonormal() {
+        let s = SketchMatrix::sample(Sketch::Gaussian, 1024, 32, 5).unwrap();
+        let d = s.to_dense();
+        for a in 0..32 {
+            let nn = dot(&d.col(a), &d.col(a));
+            assert!((nn - 1.0).abs() < 0.3, "col norm² {nn}");
+        }
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut rng = Rng::new(7);
+        for kind in [Sketch::Gaussian, Sketch::SubsampledHadamard] {
+            let s = SketchMatrix::sample(kind, 32, 10, 11).unwrap();
+            let x = Matrix::gaussian(10, 3, &mut rng);
+            let fast = s.apply(&x).unwrap();
+            let slow = s.to_dense().matmul(&x).unwrap();
+            for (a, b) in fast.as_slice().iter().zip(slow.as_slice()) {
+                assert!((a - b).abs() < 1e-9, "{kind:?}");
+            }
+            let v = rng.gaussian_vec(10);
+            let fv = s.apply_vec(&v);
+            let sv = s.to_dense().matvec(&v);
+            for (a, b) in fv.iter().zip(&sv) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_preserves_objective() {
+        // ‖S(y - Xθ)‖² ≈ ‖y - Xθ‖² for Hadamard (exact: orthogonal cols).
+        let mut rng = Rng::new(9);
+        let x = Matrix::gaussian(16, 4, &mut rng);
+        let theta = rng.gaussian_vec(4);
+        let y = x.matvec(&theta);
+        let resid: Vec<f64> = y.iter().zip(x.matvec(&[0.1; 4]).iter()).map(|(a, b)| a - b).collect();
+        let s = SketchMatrix::sample(Sketch::SubsampledHadamard, 32, 16, 13).unwrap();
+        let sr = s.apply_vec(&resid);
+        let n1 = dot(&resid, &resid);
+        let n2 = dot(&sr, &sr);
+        assert!((n1 - n2).abs() < 1e-8, "{n1} vs {n2}");
+    }
+
+    #[test]
+    fn invalid_shapes() {
+        assert!(SketchMatrix::sample(Sketch::SubsampledHadamard, 48, 16, 1).is_err(), "non-pow2");
+        assert!(SketchMatrix::sample(Sketch::Gaussian, 8, 16, 1).is_err(), "m > n");
+        assert!(SketchMatrix::sample(Sketch::Gaussian, 8, 0, 1).is_err(), "m == 0");
+    }
+}

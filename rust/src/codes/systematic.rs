@@ -1,0 +1,269 @@
+//! Systematic generator construction from a parity-check matrix over ℝ.
+//!
+//! Scheme 2 requires a *systematic* encoding (`M` must appear verbatim in
+//! the first `k` rows of `C = GM`, so the master can read `Mθ` straight
+//! off the recovered codeword). Given a full-row-rank `p x n` parity
+//! check `H`, we find `p` columns forming an invertible submatrix `H₂`
+//! (Gaussian elimination with column pivoting), permute them to the back,
+//! and set
+//!
+//! ```text
+//! G = [ I_K ]            P = -H₂⁻¹ H₁ ∈ ℝ^{p x K}
+//!     [  P  ]
+//! ```
+//!
+//! so that `H' (Gx) = H₁ x + H₂ P x = 0` for every message `x`.
+
+use super::SparseMatrix;
+use crate::error::{Error, Result};
+use crate::linalg::{invert, Matrix};
+
+/// A systematic generator `G = [I; P]` for an `(n, k)` linear code.
+#[derive(Debug, Clone)]
+pub struct SystematicGenerator {
+    n: usize,
+    k: usize,
+    /// Parity block `P` (`(n-k) x k`), dense.
+    p: Matrix,
+}
+
+impl SystematicGenerator {
+    /// Derive a systematic generator from a parity-check matrix.
+    ///
+    /// Returns the generator together with the column-permuted parity
+    /// check (systematic positions first, parity positions last) that the
+    /// generator is consistent with.
+    pub fn from_parity_check(h: &SparseMatrix) -> Result<(Self, SparseMatrix)> {
+        let p_rows = h.rows();
+        let n = h.cols();
+        if p_rows >= n {
+            return Err(Error::Code("parity check must have fewer rows than columns".into()));
+        }
+        let k = n - p_rows;
+
+        // Column-pivoted Gaussian elimination on a dense copy to find p
+        // linearly independent columns.
+        let dense = h.to_dense();
+        let pivot_cols = independent_columns(&dense, p_rows)?;
+
+        // Permutation: non-pivot columns (systematic) first, pivots last.
+        let mut is_pivot = vec![false; n];
+        for &c in &pivot_cols {
+            is_pivot[c] = true;
+        }
+        let mut perm = vec![0usize; n]; // old index -> new index
+        let mut next_sys = 0;
+        let mut next_par = k;
+        for (c, &piv) in is_pivot.iter().enumerate() {
+            if piv {
+                perm[c] = next_par;
+                next_par += 1;
+            } else {
+                perm[c] = next_sys;
+                next_sys += 1;
+            }
+        }
+        let h_perm = h.permute_cols(&perm);
+
+        // Split H' = [H1 | H2], H2 square invertible.
+        let dense_perm = h_perm.to_dense();
+        let h1 = dense_perm.select_cols(&(0..k).collect::<Vec<_>>());
+        let h2 = dense_perm.select_cols(&(k..n).collect::<Vec<_>>());
+        let h2_inv = invert(&h2)
+            .map_err(|e| Error::Code(format!("parity submatrix not invertible: {e}")))?;
+        let mut p = h2_inv.matmul(&h1)?;
+        for v in p.as_mut_slice() {
+            *v = -*v;
+        }
+        Ok((SystematicGenerator { n, k, p }, h_perm))
+    }
+
+    /// Code length.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Code dimension.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The parity block `P`.
+    pub fn parity_block(&self) -> &Matrix {
+        &self.p
+    }
+
+    /// Encode a length-`k` message: `c = [x; Px]`.
+    pub fn encode(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.k, "message length");
+        let mut c = Vec::with_capacity(self.n);
+        c.extend_from_slice(x);
+        c.extend(self.p.matvec(x));
+        c
+    }
+
+    /// Encode a `k x d` message matrix columnwise: `C = [M; PM]`
+    /// (`n x d`). Each column of `C` is a codeword.
+    pub fn encode_matrix(&self, m: &Matrix) -> Result<Matrix> {
+        if m.rows() != self.k {
+            return Err(Error::Code(format!(
+                "encode_matrix: message has {} rows, code dimension is {}",
+                m.rows(),
+                self.k
+            )));
+        }
+        let pm = self.p.matmul(m)?;
+        let mut data = Vec::with_capacity(self.n * m.cols());
+        data.extend_from_slice(m.as_slice());
+        data.extend_from_slice(pm.as_slice());
+        Matrix::from_vec(self.n, m.cols(), data)
+    }
+
+    /// Dense `n x k` generator matrix `[I; P]` (tests / MDS interop).
+    pub fn to_dense(&self) -> Matrix {
+        let mut g = Matrix::zeros(self.n, self.k);
+        for i in 0..self.k {
+            g[(i, i)] = 1.0;
+        }
+        for r in 0..self.n - self.k {
+            let src = self.p.row(r);
+            g.row_mut(self.k + r).copy_from_slice(src);
+        }
+        g
+    }
+}
+
+/// Find `want` linearly independent columns via column-pivoted Gaussian
+/// elimination. Errors if the matrix has row rank < `want`.
+fn independent_columns(a: &Matrix, want: usize) -> Result<Vec<usize>> {
+    let (rows, cols) = a.shape();
+    let mut m = a.clone();
+    let mut pivots = Vec::with_capacity(want);
+    let mut used_col = vec![false; cols];
+    for step in 0..want {
+        // Find the largest remaining entry across all unused columns in
+        // rows >= step.
+        let mut best = 0.0f64;
+        let mut best_rc = None;
+        for c in 0..cols {
+            if used_col[c] {
+                continue;
+            }
+            for r in step..rows {
+                let v = m[(r, c)].abs();
+                if v > best {
+                    best = v;
+                    best_rc = Some((r, c));
+                }
+            }
+        }
+        let (pr, pc) = match best_rc {
+            Some(rc) if best > 1e-10 => rc,
+            _ => {
+                return Err(Error::Code(format!(
+                    "rank deficient: only {step} independent columns, need {want}"
+                )))
+            }
+        };
+        used_col[pc] = true;
+        pivots.push(pc);
+        // Swap pivot row into position `step`.
+        if pr != step {
+            for j in 0..cols {
+                let t = m[(step, j)];
+                m[(step, j)] = m[(pr, j)];
+                m[(pr, j)] = t;
+            }
+        }
+        // Eliminate below.
+        let d = m[(step, pc)];
+        for r in step + 1..rows {
+            let f = m[(r, pc)] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..cols {
+                let v = m[(step, j)];
+                m[(r, j)] -= f * v;
+            }
+        }
+    }
+    pivots.sort_unstable();
+    Ok(pivots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// A small handmade parity check: p=2, n=5, k=3.
+    fn small_h() -> SparseMatrix {
+        SparseMatrix::from_rows(
+            2,
+            5,
+            vec![
+                vec![(0, 1.0), (1, 1.0), (3, 1.0)],
+                vec![(1, -1.0), (2, 1.0), (4, 1.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn generator_satisfies_parity() {
+        let h = small_h();
+        let (gen, h_perm) = SystematicGenerator::from_parity_check(&h).unwrap();
+        assert_eq!(gen.n(), 5);
+        assert_eq!(gen.k(), 3);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let x = rng.gaussian_vec(3);
+            let c = gen.encode(&x);
+            assert_eq!(&c[..3], &x[..], "systematic prefix");
+            let syn = h_perm.matvec(&c);
+            assert!(syn.iter().all(|s| s.abs() < 1e-10), "syndrome {syn:?}");
+        }
+    }
+
+    #[test]
+    fn encode_matrix_matches_columnwise_encode() {
+        let h = small_h();
+        let (gen, _) = SystematicGenerator::from_parity_check(&h).unwrap();
+        let mut rng = Rng::new(2);
+        let m = Matrix::gaussian(3, 4, &mut rng);
+        let cm = gen.encode_matrix(&m).unwrap();
+        for j in 0..4 {
+            let col_msg = m.col(j);
+            let col_cw = cm.col(j);
+            assert_eq!(col_cw, gen.encode(&col_msg));
+        }
+    }
+
+    #[test]
+    fn dense_generator_in_null_space() {
+        let h = small_h();
+        let (gen, h_perm) = SystematicGenerator::from_parity_check(&h).unwrap();
+        let g = gen.to_dense();
+        let hg = h_perm.to_dense().matmul(&g).unwrap();
+        assert!(hg.max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn rank_deficient_h_rejected() {
+        // Two identical rows: rank 1 < 2.
+        let h = SparseMatrix::from_rows(
+            2,
+            4,
+            vec![vec![(0, 1.0), (1, 1.0)], vec![(0, 1.0), (1, 1.0)]],
+        );
+        assert!(SystematicGenerator::from_parity_check(&h).is_err());
+    }
+
+    #[test]
+    fn wrong_message_shape_rejected() {
+        let h = small_h();
+        let (gen, _) = SystematicGenerator::from_parity_check(&h).unwrap();
+        let m = Matrix::zeros(2, 4);
+        assert!(gen.encode_matrix(&m).is_err());
+    }
+}

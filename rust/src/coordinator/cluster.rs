@@ -1,0 +1,154 @@
+//! The worker cluster: thread topology and message plumbing.
+//!
+//! One OS thread per worker, one shared response channel into the master.
+//! The cluster outlives a single run only if the caller keeps it; the
+//! harness spins up a fresh cluster per run (thread spawn cost is
+//! negligible next to the optimization loop).
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::protocol::{Request, Response, WorkerPayload};
+use crate::coordinator::worker::worker_loop;
+use crate::error::{Error, Result};
+use crate::runtime::ComputeBackend;
+
+/// A running cluster of worker threads.
+pub struct Cluster {
+    senders: Vec<Sender<Request>>,
+    responses: Receiver<Response>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl Cluster {
+    /// Spawn one thread per payload.
+    pub fn spawn(payloads: &[WorkerPayload], backend: Arc<dyn ComputeBackend>) -> Cluster {
+        let workers = payloads.len();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for (id, payload) in payloads.iter().enumerate() {
+            let (req_tx, req_rx) = mpsc::channel();
+            let payload = Arc::new(payload.clone());
+            let backend = Arc::clone(&backend);
+            let resp = resp_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(id, payload, backend, req_rx, resp)
+            }));
+            senders.push(req_tx);
+        }
+        Cluster { senders, responses: resp_rx, handles, workers }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Broadcast the step-`t` iterate to every worker.
+    pub fn broadcast(&self, t: usize, theta: Arc<Vec<f64>>) -> Result<()> {
+        for s in &self.senders {
+            s.send(Request::Step { t, theta: Arc::clone(&theta) })
+                .map_err(|_| Error::Runtime("worker channel closed".into()))?;
+        }
+        Ok(())
+    }
+
+    /// Collect exactly one step-`t` response from every worker, returned
+    /// indexed by worker id. (All workers always respond; straggler
+    /// masking is the master's business.)
+    pub fn collect(&self, t: usize) -> Result<Vec<Response>> {
+        let mut slots: Vec<Option<Response>> = (0..self.workers).map(|_| None).collect();
+        let mut got = 0;
+        while got < self.workers {
+            let r = self
+                .responses
+                .recv()
+                .map_err(|_| Error::Runtime("response channel closed".into()))?;
+            if r.t != t {
+                return Err(Error::Runtime(format!(
+                    "stale response: step {} while collecting step {t}",
+                    r.t
+                )));
+            }
+            let w = r.worker;
+            if slots[w].is_some() {
+                return Err(Error::Runtime(format!("duplicate response from worker {w}")));
+            }
+            slots[w] = Some(r);
+            got += 1;
+        }
+        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+    }
+
+    /// Shut the cluster down and join all threads.
+    pub fn shutdown(mut self) {
+        for s in &self.senders {
+            let _ = s.send(Request::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for s in &self.senders {
+            let _ = s.send(Request::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::runtime::NativeBackend;
+
+    fn payloads(n: usize) -> Vec<WorkerPayload> {
+        (0..n)
+            .map(|i| WorkerPayload::Rows {
+                rows: Matrix::from_rows(&[vec![i as f64, 1.0]]).unwrap(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn broadcast_collect_roundtrip() {
+        let cluster = Cluster::spawn(&payloads(8), Arc::new(NativeBackend));
+        for t in 1..=5 {
+            cluster.broadcast(t, Arc::new(vec![2.0, 3.0])).unwrap();
+            let rs = cluster.collect(t).unwrap();
+            assert_eq!(rs.len(), 8);
+            for (w, r) in rs.iter().enumerate() {
+                assert_eq!(r.worker, w);
+                assert_eq!(r.t, t);
+                let v = r.values.as_ref().unwrap();
+                assert_eq!(v, &vec![2.0 * w as f64 + 3.0]);
+            }
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn drop_joins_threads() {
+        let cluster = Cluster::spawn(&payloads(4), Arc::new(NativeBackend));
+        drop(cluster); // must not hang
+    }
+
+    #[test]
+    fn compute_time_recorded() {
+        let cluster = Cluster::spawn(&payloads(2), Arc::new(NativeBackend));
+        cluster.broadcast(1, Arc::new(vec![1.0, 1.0])).unwrap();
+        let rs = cluster.collect(1).unwrap();
+        // Non-zero (the clock has ns resolution and the task does work).
+        assert!(rs.iter().all(|r| r.compute_ns > 0));
+        cluster.shutdown();
+    }
+}

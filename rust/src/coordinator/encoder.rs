@@ -1,0 +1,201 @@
+//! Moment encoding: partition `M = XᵀX` into row blocks and encode each
+//! with an `(N, K)` linear code (Scheme 1 / Scheme 2 with the k > K
+//! generalization of footnote 2).
+//!
+//! * Rows of `M` are split into `⌈k/K⌉` blocks `M_{P_i}` of `K` rows
+//!   (the last block zero-padded if `K ∤ k`).
+//! * Each block is encoded columnwise: `C⁽ⁱ⁾ = G · M_{P_i} ∈ ℝ^{N x k}`.
+//! * Worker `j` receives row `j` of every `C⁽ⁱ⁾`, stacked into one
+//!   `(blocks x k)` shard so its whole per-step task is a single mat-vec
+//!   `shard_j · θ` (α = k/K inner products, one scalar per block).
+//!
+//! At the master, the response vector of worker `j` holds coordinate `j`
+//! of every block codeword `C⁽ⁱ⁾θ`; the per-step erasure pattern (the
+//! straggler set) is therefore *identical across blocks*, which is what
+//! lets the peeling schedule be computed once and replayed.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+/// The result of block moment encoding.
+#[derive(Debug, Clone)]
+pub struct BlockMomentEncoding {
+    /// Problem dimension `k` (columns of `M`).
+    pub k: usize,
+    /// Code length `N` (== number of workers).
+    pub n: usize,
+    /// Code dimension `K`.
+    pub code_k: usize,
+    /// Number of row blocks `⌈k/K⌉`.
+    pub blocks: usize,
+    /// Per-worker shards, each `(blocks x k)`.
+    pub shards: Vec<Matrix>,
+}
+
+impl BlockMomentEncoding {
+    /// Encode the moment matrix with a columnwise encoder
+    /// `encode(M_block: K x k) -> N x k`.
+    pub fn new<F>(moment: &Matrix, n: usize, code_k: usize, mut encode: F) -> Result<Self>
+    where
+        F: FnMut(&Matrix) -> Result<Matrix>,
+    {
+        let k = moment.cols();
+        if moment.rows() != k {
+            return Err(Error::Config("moment matrix must be square".into()));
+        }
+        if code_k == 0 {
+            return Err(Error::Config("code dimension must be positive".into()));
+        }
+        let blocks = k.div_ceil(code_k);
+        let mut shards = vec![Matrix::zeros(blocks, k); n];
+        for i in 0..blocks {
+            let lo = i * code_k;
+            let hi = ((i + 1) * code_k).min(k);
+            // Block of K rows, zero-padded at the tail if K does not
+            // divide k.
+            let mut block = Matrix::zeros(code_k, k);
+            for (bi, r) in (lo..hi).enumerate() {
+                block.row_mut(bi).copy_from_slice(moment.row(r));
+            }
+            let coded = encode(&block)?;
+            if coded.shape() != (n, k) {
+                return Err(Error::Config(format!(
+                    "encoder returned {:?}, expected ({n}, {k})",
+                    coded.shape()
+                )));
+            }
+            for (j, shard) in shards.iter_mut().enumerate() {
+                shard.row_mut(i).copy_from_slice(coded.row(j));
+            }
+        }
+        Ok(BlockMomentEncoding { k, n, code_k, blocks, shards })
+    }
+
+    /// Per-worker row count α = blocks = ⌈k/K⌉ (Table 1's `α = n/w` with
+    /// `n = N·k/K` and `N = w`).
+    pub fn alpha(&self) -> usize {
+        self.blocks
+    }
+
+    /// Assemble the block-`i` codeword from per-worker responses
+    /// (`responses[j][i]`), writing 0.0 at erased positions.
+    pub fn block_codeword(
+        &self,
+        block: usize,
+        responses: &[Option<Vec<f64>>],
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        out.reserve(self.n);
+        for r in responses.iter() {
+            out.push(match r {
+                Some(v) => v[block],
+                None => 0.0,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::ldpc::LdpcCode;
+    use crate::rng::Rng;
+
+    #[test]
+    fn shards_reconstruct_coded_blocks() {
+        let mut rng = Rng::new(1);
+        let k = 40; // 2 blocks of K=20
+        let m = Matrix::gaussian(k, k, &mut rng);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 2).unwrap();
+        let enc =
+            BlockMomentEncoding::new(&m, 40, 20, |blk| code.encode_matrix(blk)).unwrap();
+        assert_eq!(enc.blocks, 2);
+        assert_eq!(enc.alpha(), 2);
+        assert_eq!(enc.shards.len(), 40);
+        for shard in &enc.shards {
+            assert_eq!(shard.shape(), (2, 40));
+        }
+        // Worker j, block i must hold row j of G * M_{P_i}.
+        let block0 = m.select_rows(&(0..20).collect::<Vec<_>>());
+        let coded0 = code.encode_matrix(&block0).unwrap();
+        for j in 0..40 {
+            assert_eq!(enc.shards[j].row(0), coded0.row(j));
+        }
+    }
+
+    #[test]
+    fn responses_form_codewords() {
+        // The paper's key step-invariant: for any θ, the vector of worker
+        // inner products for a block is a codeword of C.
+        let mut rng = Rng::new(3);
+        let k = 60;
+        let m = Matrix::gaussian(k, k, &mut rng);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 4).unwrap();
+        let enc =
+            BlockMomentEncoding::new(&m, 40, 20, |blk| code.encode_matrix(blk)).unwrap();
+        let theta = rng.gaussian_vec(k);
+        let responses: Vec<Option<Vec<f64>>> =
+            enc.shards.iter().map(|s| Some(s.matvec(&theta))).collect();
+        let mut cw = Vec::new();
+        for i in 0..enc.blocks {
+            enc.block_codeword(i, &responses, &mut cw);
+            assert!(code.is_codeword(&cw, 1e-7), "block {i}");
+            // Systematic prefix must equal (M θ) on the block rows.
+            let mtheta = m.matvec(&theta);
+            let lo = i * 20;
+            for p in 0..20.min(k - lo) {
+                assert!((cw[p] - mtheta[lo + p]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_when_k_not_divisible() {
+        let mut rng = Rng::new(5);
+        let k = 50; // K=20 -> 3 blocks, last padded with 10 zero rows
+        let m = Matrix::gaussian(k, k, &mut rng);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 6).unwrap();
+        let enc =
+            BlockMomentEncoding::new(&m, 40, 20, |blk| code.encode_matrix(blk)).unwrap();
+        assert_eq!(enc.blocks, 3);
+        let theta = rng.gaussian_vec(k);
+        let responses: Vec<Option<Vec<f64>>> =
+            enc.shards.iter().map(|s| Some(s.matvec(&theta))).collect();
+        let mut cw = Vec::new();
+        enc.block_codeword(2, &responses, &mut cw);
+        let mtheta = m.matvec(&theta);
+        // First 10 message coords are real rows 40..50, rest are padding.
+        for p in 0..10 {
+            assert!((cw[p] - mtheta[40 + p]).abs() < 1e-8);
+        }
+        for p in 10..20 {
+            assert!(cw[p].abs() < 1e-9, "padded row should produce 0");
+        }
+    }
+
+    #[test]
+    fn erased_positions_zero_filled() {
+        let mut rng = Rng::new(7);
+        let m = Matrix::gaussian(20, 20, &mut rng);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 8).unwrap();
+        let enc =
+            BlockMomentEncoding::new(&m, 40, 20, |blk| code.encode_matrix(blk)).unwrap();
+        let theta = rng.gaussian_vec(20);
+        let mut responses: Vec<Option<Vec<f64>>> =
+            enc.shards.iter().map(|s| Some(s.matvec(&theta))).collect();
+        responses[3] = None;
+        responses[17] = None;
+        let mut cw = Vec::new();
+        enc.block_codeword(0, &responses, &mut cw);
+        assert_eq!(cw[3], 0.0);
+        assert_eq!(cw[17], 0.0);
+    }
+
+    #[test]
+    fn bad_encoder_shape_rejected() {
+        let m = Matrix::zeros(10, 10);
+        let r = BlockMomentEncoding::new(&m, 8, 5, |_| Ok(Matrix::zeros(7, 10)));
+        assert!(r.is_err());
+    }
+}

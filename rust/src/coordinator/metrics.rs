@@ -1,0 +1,237 @@
+//! Per-step and per-run metrics.
+//!
+//! The paper reports two headline metrics (Figs. 1–3): the number of
+//! gradient steps to convergence and the total computation time. We track
+//! both, plus the decode-quality counters that drive the analysis
+//! (erased/unrecovered coordinates, peeling rounds) and a wall/simulated
+//! time breakdown (worker compute, collection, decode, update).
+
+/// Metrics for a single gradient step.
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    /// Step index (1-based).
+    pub t: usize,
+    /// Number of stragglers this step.
+    pub stragglers: usize,
+    /// Gradient coordinates left unrecovered (Scheme 2's `|U_t|`).
+    pub unrecovered: usize,
+    /// Peeling rounds executed.
+    pub decode_rounds: usize,
+    /// Slowest non-straggler worker compute time (ns).
+    pub worker_ns: u64,
+    /// Master decode time (ns).
+    pub decode_ns: u64,
+    /// Master update + projection time (ns).
+    pub update_ns: u64,
+    /// Simulated collection time (ms; latency models only).
+    pub collect_ms: Option<f64>,
+    /// Simulated communication time (ms; comm model only).
+    pub comm_ms: f64,
+    /// Distance ‖θ_t − θ*‖ after the step.
+    pub error: f64,
+}
+
+impl StepMetrics {
+    /// The step's contribution to "total computation time": the slowest
+    /// counted worker plus master-side work (plus simulated collection
+    /// latency when a latency model is active).
+    pub fn step_time_ms(&self) -> f64 {
+        let compute =
+            (self.worker_ns + self.decode_ns + self.update_ns) as f64 / 1.0e6;
+        compute + self.collect_ms.unwrap_or(0.0) + self.comm_ms
+    }
+}
+
+/// Aggregate totals over a run.
+#[derive(Debug, Clone, Default)]
+pub struct MetricTotals {
+    /// Total steps.
+    pub steps: usize,
+    /// Σ stragglers.
+    pub stragglers: usize,
+    /// Σ unrecovered coordinates.
+    pub unrecovered: usize,
+    /// Σ decode rounds.
+    pub decode_rounds: usize,
+    /// Σ slowest-worker compute (ns).
+    pub worker_ns: u64,
+    /// Σ decode (ns).
+    pub decode_ns: u64,
+    /// Σ update (ns).
+    pub update_ns: u64,
+    /// Σ simulated collection (ms).
+    pub collect_ms: f64,
+    /// Σ simulated communication (ms).
+    pub comm_ms: f64,
+}
+
+impl MetricTotals {
+    /// Fold in one step.
+    pub fn add(&mut self, s: &StepMetrics) {
+        self.steps += 1;
+        self.stragglers += s.stragglers;
+        self.unrecovered += s.unrecovered;
+        self.decode_rounds += s.decode_rounds;
+        self.worker_ns += s.worker_ns;
+        self.decode_ns += s.decode_ns;
+        self.update_ns += s.update_ns;
+        self.collect_ms += s.collect_ms.unwrap_or(0.0);
+        self.comm_ms += s.comm_ms;
+    }
+
+    /// Simulated total computation time (ms).
+    pub fn sim_time_ms(&self) -> f64 {
+        (self.worker_ns + self.decode_ns + self.update_ns) as f64 / 1.0e6
+            + self.collect_ms
+            + self.comm_ms
+    }
+
+    /// Mean unrecovered coordinates per step.
+    pub fn mean_unrecovered(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.unrecovered as f64 / self.steps as f64
+        }
+    }
+
+    /// Mean decode rounds per step.
+    pub fn mean_decode_rounds(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.decode_rounds as f64 / self.steps as f64
+        }
+    }
+}
+
+/// Full report of a distributed run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Scheme name.
+    pub scheme: String,
+    /// Steps executed.
+    pub steps: usize,
+    /// Did the convergence rule fire?
+    pub converged: bool,
+    /// Final ‖θ − θ*‖.
+    pub final_error: f64,
+    /// Final relative error ‖θ − θ*‖ / max(‖θ*‖, 1).
+    pub final_rel_error: f64,
+    /// Final iterate.
+    pub theta: Vec<f64>,
+    /// Real wall-clock time of the run (ms).
+    pub wall_ms: f64,
+    /// Aggregated totals.
+    pub totals: MetricTotals,
+    /// Per-step trace (only if requested in the config).
+    pub trace: Vec<StepMetrics>,
+}
+
+impl RunReport {
+    /// Simulated total computation time (the paper's Fig-1 right-panel
+    /// metric).
+    pub fn sim_time_ms(&self) -> f64 {
+        self.totals.sim_time_ms()
+    }
+
+    /// Compact single-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<24} steps={:<6} converged={:<5} err={:.3e} sim_ms={:.2} (worker {:.2} decode {:.3} update {:.3}) unrec/step={:.2} rounds/step={:.2}",
+            self.scheme,
+            self.steps,
+            self.converged,
+            self.final_error,
+            self.sim_time_ms(),
+            self.totals.worker_ns as f64 / 1e6,
+            self.totals.decode_ns as f64 / 1e6,
+            self.totals.update_ns as f64 / 1e6,
+            self.totals.mean_unrecovered(),
+            self.totals.mean_decode_rounds(),
+        )
+    }
+
+    /// Minimal JSON object (hand-rolled; no serde in the offline crate
+    /// set).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"scheme\":\"{}\",\"steps\":{},\"converged\":{},",
+                "\"final_error\":{:.6e},\"final_rel_error\":{:.6e},",
+                "\"wall_ms\":{:.3},\"sim_ms\":{:.3},",
+                "\"mean_unrecovered\":{:.4},\"mean_decode_rounds\":{:.4}}}"
+            ),
+            self.scheme,
+            self.steps,
+            self.converged,
+            self.final_error,
+            self.final_rel_error,
+            self.wall_ms,
+            self.sim_time_ms(),
+            self.totals.mean_unrecovered(),
+            self.totals.mean_decode_rounds(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(t: usize) -> StepMetrics {
+        StepMetrics {
+            t,
+            stragglers: 5,
+            unrecovered: 2,
+            decode_rounds: 3,
+            worker_ns: 1_000_000,
+            decode_ns: 10_000,
+            update_ns: 5_000,
+            collect_ms: None,
+            comm_ms: 0.0,
+            error: 0.5,
+        }
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut tot = MetricTotals::default();
+        for t in 1..=10 {
+            tot.add(&step(t));
+        }
+        assert_eq!(tot.steps, 10);
+        assert_eq!(tot.stragglers, 50);
+        assert_eq!(tot.unrecovered, 20);
+        assert!((tot.mean_unrecovered() - 2.0).abs() < 1e-12);
+        assert!((tot.mean_decode_rounds() - 3.0).abs() < 1e-12);
+        assert!((tot.sim_time_ms() - 10.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_time_includes_collect() {
+        let mut s = step(1);
+        assert!((s.step_time_ms() - 1.015).abs() < 1e-9);
+        s.collect_ms = Some(20.0);
+        assert!((s.step_time_ms() - 21.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_shape() {
+        let r = RunReport {
+            scheme: "test".into(),
+            steps: 3,
+            converged: true,
+            final_error: 1e-5,
+            final_rel_error: 1e-6,
+            theta: vec![],
+            wall_ms: 12.0,
+            totals: MetricTotals::default(),
+            trace: vec![],
+        };
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"scheme\":\"test\""));
+        assert!(j.contains("\"steps\":3"));
+    }
+}

@@ -1,0 +1,284 @@
+//! The distributed coordinator — the paper's system contribution.
+//!
+//! Topology: one master (this thread) and `w` workers (OS threads).
+//! Before the loop, the chosen [`schemes::GradientScheme`] shards its
+//! encoded payloads across the workers. Each gradient step then follows
+//! Scheme 1/2's protocol:
+//!
+//! 1. master broadcasts `θ_{t-1}`;
+//! 2. workers compute their task (inner products / local gradients);
+//! 3. the straggler model picks this step's straggler set; the master
+//!    masks those responses (deadline semantics);
+//! 4. the scheme decodes a gradient estimate from the survivors —
+//!    for LDPC moment encoding, `D` peeling rounds, unrecovered
+//!    coordinates zeroed in both `ĉ` and `b̂` (eq. 15);
+//! 5. master applies `θ_t = P_Θ(θ_{t-1} − η g_t)` and checks
+//!    convergence against `θ*`.
+
+pub mod cluster;
+pub mod encoder;
+pub mod metrics;
+pub mod protocol;
+pub mod schemes;
+pub mod straggler;
+pub mod worker;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::RunConfig;
+use crate::data::RegressionProblem;
+use crate::error::{Error, Result};
+use crate::optim::convergence::ConvergenceRule;
+use crate::runtime::{BackendChoice, ComputeBackend, NativeBackend};
+
+use cluster::Cluster;
+use metrics::{MetricTotals, RunReport, StepMetrics};
+use schemes::GradientScheme;
+
+/// Instantiate the configured compute backend.
+pub fn make_backend(cfg: &RunConfig) -> Result<Arc<dyn ComputeBackend>> {
+    match cfg.backend {
+        BackendChoice::Native => Ok(Arc::new(NativeBackend)),
+        BackendChoice::Pjrt => {
+            let b = crate::runtime::pjrt::PjrtBackend::load(&cfg.artifacts_dir)?;
+            Ok(Arc::new(b))
+        }
+    }
+}
+
+/// Run the distributed optimization loop to convergence (or the step
+/// cap). See the module docs for the per-step protocol.
+pub fn run_distributed(
+    scheme: Box<dyn GradientScheme>,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+) -> Result<RunReport> {
+    if scheme.workers() != cfg.workers {
+        return Err(Error::Config(format!(
+            "scheme shards over {} workers but config says {}",
+            scheme.workers(),
+            cfg.workers
+        )));
+    }
+    if scheme.dimension() != problem.k() {
+        return Err(Error::Config("scheme/problem dimension mismatch".into()));
+    }
+    let backend = make_backend(cfg)?;
+    let cluster = Cluster::spawn(scheme.payloads(), backend);
+    let report = run_with_cluster(scheme.as_ref(), &cluster, problem, cfg);
+    cluster.shutdown();
+    report
+}
+
+/// The step loop against an existing cluster (separated so the harness
+/// can reuse a cluster across trials).
+pub fn run_with_cluster(
+    scheme: &dyn GradientScheme,
+    cluster: &Cluster,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+) -> Result<RunReport> {
+    let k = problem.k();
+    let w = cfg.workers;
+    let eta = cfg.step_size.unwrap_or_else(|| problem.spectral_step_size());
+    let rule = ConvergenceRule::RelativeDistance {
+        theta_star: problem.theta_star.clone(),
+        tol: cfg.rel_tol,
+    };
+    let mut sampler = cfg.straggler.sampler();
+    let mut theta = vec![0.0; k];
+    let mut totals = MetricTotals::default();
+    let mut trace = Vec::new();
+    let wall_start = Instant::now();
+    let mut converged = false;
+    let mut steps = 0;
+
+    for t in 1..=cfg.max_steps {
+        steps = t;
+        let straggling = sampler.next_step(w);
+
+        cluster.broadcast(t, Arc::new(theta.clone()))?;
+        let responses = cluster.collect(t)?;
+
+        // Deadline semantics: drop the stragglers' responses.
+        let mut masked: Vec<Option<Vec<f64>>> = Vec::with_capacity(w);
+        let mut worker_ns = 0u64;
+        {
+            let mut strag_iter = straggling.stragglers.iter().peekable();
+            for (j, r) in responses.into_iter().enumerate() {
+                let is_straggler = matches!(strag_iter.peek(), Some(&&s) if s == j);
+                if is_straggler {
+                    strag_iter.next();
+                    masked.push(None);
+                } else {
+                    let values = r
+                        .values
+                        .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
+                    worker_ns = worker_ns.max(r.compute_ns);
+                    masked.push(Some(values));
+                }
+            }
+        }
+
+        // Simulated communication: broadcast θ + the largest surviving
+        // upload (collection waits for the slowest counted worker).
+        let comm_ms = match &cfg.comm {
+            Some(cm) => {
+                let broadcast = k * 8;
+                let upload = masked
+                    .iter()
+                    .filter_map(|r| r.as_ref().map(|v| v.len() * 8))
+                    .max()
+                    .unwrap_or(0);
+                cm.step_ms(broadcast, upload)
+            }
+            None => 0.0,
+        };
+
+        let decode_start = Instant::now();
+        let out = scheme.decode(&masked, cfg.decode_iters)?;
+        let decode_ns = decode_start.elapsed().as_nanos() as u64;
+
+        let update_start = Instant::now();
+        for (th, g) in theta.iter_mut().zip(&out.gradient) {
+            *th -= eta * g;
+        }
+        cfg.projection.apply(&mut theta);
+        let update_ns = update_start.elapsed().as_nanos() as u64;
+
+        if ConvergenceRule::is_diverged(&theta) {
+            return Err(Error::Runtime(format!(
+                "iterate diverged at step {t} (step size {eta:.3e} too large?)"
+            )));
+        }
+
+        let error = crate::linalg::dist2(&theta, &problem.theta_star);
+        let sm = StepMetrics {
+            t,
+            stragglers: straggling.stragglers.len(),
+            unrecovered: out.unrecovered_coords,
+            decode_rounds: out.decode_rounds,
+            worker_ns,
+            decode_ns,
+            update_ns,
+            collect_ms: straggling.collect_ms,
+            comm_ms,
+            error,
+        };
+        totals.add(&sm);
+        if cfg.record_trace {
+            trace.push(sm);
+        }
+
+        if rule.is_converged(&theta, Some(&out.gradient)) {
+            converged = true;
+            break;
+        }
+    }
+
+    let final_error = crate::linalg::dist2(&theta, &problem.theta_star);
+    let final_rel_error =
+        final_error / crate::linalg::norm2(&problem.theta_star).max(1.0);
+    Ok(RunReport {
+        scheme: scheme.name(),
+        steps,
+        converged,
+        final_error,
+        final_rel_error,
+        theta,
+        wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
+        totals,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::schemes::ldpc_moment::LdpcMomentScheme;
+    use super::schemes::uncoded::UncodedScheme;
+    use super::straggler::StragglerModel;
+    use super::*;
+    use crate::codes::ldpc::LdpcCode;
+    use crate::data::SynthConfig;
+
+    fn problem(k: usize) -> RegressionProblem {
+        RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 42)
+    }
+
+    #[test]
+    fn ldpc_run_converges_no_stragglers() {
+        let p = problem(40);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 1).unwrap();
+        let scheme = LdpcMomentScheme::new(&p, code).unwrap();
+        let cfg = RunConfig { rel_tol: 1e-6, max_steps: 3000, ..Default::default() };
+        let r = run_distributed(Box::new(scheme), &p, &cfg).unwrap();
+        assert!(r.converged, "{}", r.summary());
+        assert!(r.final_rel_error <= 1e-6);
+        assert_eq!(r.totals.stragglers, 0);
+    }
+
+    #[test]
+    fn ldpc_run_converges_with_stragglers() {
+        let p = problem(40);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 2).unwrap();
+        let scheme = LdpcMomentScheme::new(&p, code).unwrap();
+        let cfg = RunConfig {
+            straggler: StragglerModel::FixedCount { s: 5, seed: 7 },
+            rel_tol: 1e-6,
+            max_steps: 5000,
+            ..Default::default()
+        };
+        let r = run_distributed(Box::new(scheme), &p, &cfg).unwrap();
+        assert!(r.converged, "{}", r.summary());
+        assert!(r.totals.stragglers > 0);
+    }
+
+    #[test]
+    fn uncoded_needs_more_steps_than_ldpc_under_straggling() {
+        let p = problem(40);
+        let cfg = RunConfig {
+            straggler: StragglerModel::FixedCount { s: 10, seed: 3 },
+            rel_tol: 1e-5,
+            max_steps: 8000,
+            ..Default::default()
+        };
+        let code = LdpcCode::gallager(40, 20, 3, 6, 4).unwrap();
+        let ldpc = run_distributed(
+            Box::new(LdpcMomentScheme::new(&p, code).unwrap()),
+            &p,
+            &cfg,
+        )
+        .unwrap();
+        let unc =
+            run_distributed(Box::new(UncodedScheme::new(&p, 40).unwrap()), &p, &cfg)
+                .unwrap();
+        assert!(ldpc.converged && unc.converged, "{} | {}", ldpc.summary(), unc.summary());
+        assert!(
+            ldpc.steps < unc.steps,
+            "ldpc {} steps !< uncoded {} steps",
+            ldpc.steps,
+            unc.steps
+        );
+    }
+
+    #[test]
+    fn trace_recorded_when_requested() {
+        let p = problem(40);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 5).unwrap();
+        let scheme = LdpcMomentScheme::new(&p, code).unwrap();
+        let cfg = RunConfig { max_steps: 10, record_trace: true, ..Default::default() };
+        let r = run_distributed(Box::new(scheme), &p, &cfg).unwrap();
+        assert_eq!(r.trace.len(), r.steps);
+        // Errors decrease overall on this easy problem.
+        assert!(r.trace.last().unwrap().error < r.trace.first().unwrap().error);
+    }
+
+    #[test]
+    fn worker_count_mismatch_rejected() {
+        let p = problem(40);
+        let scheme = UncodedScheme::new(&p, 8).unwrap();
+        let cfg = RunConfig::default(); // says 40
+        assert!(run_distributed(Box::new(scheme), &p, &cfg).is_err());
+    }
+}

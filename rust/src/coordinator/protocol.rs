@@ -1,0 +1,198 @@
+//! Master ↔ worker message protocol and worker task payloads.
+//!
+//! The "network" is `std::sync::mpsc` channels between OS threads — the
+//! message discipline (broadcast `θ_{t-1}`, collect per-worker vectors)
+//! mirrors the paper's MPI deployment; see DESIGN.md §4 for why this
+//! substitution preserves the paper's metrics.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::runtime::ComputeBackend;
+
+/// A coded block for gradient-coding workers: `coeff · Xᵀ(Xθ − y)`.
+#[derive(Debug, Clone)]
+pub struct CodedBlock {
+    /// Combination coefficient `B[i, j]`.
+    pub coeff: f64,
+    /// Partition features.
+    pub x: Matrix,
+    /// Partition labels.
+    pub y: Vec<f64>,
+}
+
+/// What a worker holds and computes each step.
+#[derive(Debug, Clone)]
+pub enum WorkerPayload {
+    /// Encoded moment rows; per step the worker returns `rows · θ`
+    /// (one scalar per row — Scheme 1/2's α inner products).
+    Rows { rows: Matrix },
+    /// A data block; per step the worker returns the `k`-dimensional
+    /// local gradient `Xᵀ(Xθ − y)` (uncoded / replication / KSDY17).
+    LocalGrad { x: Matrix, y: Vec<f64> },
+    /// Coded combination of local gradients (gradient coding):
+    /// `Σ_c coeff_c · X_cᵀ(X_c θ − y_c)`.
+    CodedGrad { blocks: Vec<CodedBlock> },
+    /// Nothing assigned.
+    Idle,
+}
+
+impl WorkerPayload {
+    /// Execute the worker task against a backend.
+    pub fn compute(&self, theta: &[f64], backend: &dyn ComputeBackend) -> Result<Vec<f64>> {
+        self.compute_keyed(theta, backend, None)
+    }
+
+    /// Execute with a payload-identity key, allowing backends to cache
+    /// device-resident copies of the (constant) payload data. `key` must
+    /// be unique per payload for the lifetime of the backend (the worker
+    /// id serves in the cluster).
+    pub fn compute_keyed(
+        &self,
+        theta: &[f64],
+        backend: &dyn ComputeBackend,
+        key: Option<u64>,
+    ) -> Result<Vec<f64>> {
+        match self {
+            WorkerPayload::Rows { rows } => backend.matvec_keyed(key, rows, theta),
+            WorkerPayload::LocalGrad { x, y } => backend.local_grad_keyed(key, x, y, theta),
+            WorkerPayload::CodedGrad { blocks } => {
+                let k = theta.len();
+                let mut acc = vec![0.0; k];
+                for (i, b) in blocks.iter().enumerate() {
+                    // Derive a distinct key per block.
+                    let bk = key.map(|kk| kk ^ ((i as u64 + 1) << 32));
+                    let g = backend.local_grad_keyed(bk, &b.x, &b.y, theta)?;
+                    crate::linalg::axpy(b.coeff, &g, &mut acc);
+                }
+                Ok(acc)
+            }
+            WorkerPayload::Idle => Ok(Vec::new()),
+        }
+    }
+
+    /// Length of the per-step response vector.
+    pub fn response_len(&self, k: usize) -> usize {
+        match self {
+            WorkerPayload::Rows { rows } => rows.rows(),
+            WorkerPayload::LocalGrad { .. } | WorkerPayload::CodedGrad { .. } => k,
+            WorkerPayload::Idle => 0,
+        }
+    }
+
+    /// Per-step floating-point work (multiply-adds) — used in the
+    /// communication/compute cost tables (§3 comparison).
+    pub fn flops(&self) -> usize {
+        match self {
+            WorkerPayload::Rows { rows } => rows.rows() * rows.cols(),
+            WorkerPayload::LocalGrad { x, .. } => 2 * x.rows() * x.cols(),
+            WorkerPayload::CodedGrad { blocks } => {
+                blocks.iter().map(|b| 2 * b.x.rows() * b.x.cols()).sum()
+            }
+            WorkerPayload::Idle => 0,
+        }
+    }
+
+    /// Bytes held by the worker (payload storage footprint).
+    pub fn storage_bytes(&self) -> usize {
+        let fl = std::mem::size_of::<f64>();
+        match self {
+            WorkerPayload::Rows { rows } => rows.rows() * rows.cols() * fl,
+            WorkerPayload::LocalGrad { x, y } => (x.rows() * x.cols() + y.len()) * fl,
+            WorkerPayload::CodedGrad { blocks } => blocks
+                .iter()
+                .map(|b| (b.x.rows() * b.x.cols() + b.y.len() + 1) * fl)
+                .sum(),
+            WorkerPayload::Idle => 0,
+        }
+    }
+}
+
+/// Master → worker message.
+pub enum Request {
+    /// Compute for step `t` with the broadcast iterate.
+    Step { t: usize, theta: Arc<Vec<f64>> },
+    /// Terminate the worker thread.
+    Shutdown,
+}
+
+/// Worker → master message.
+#[derive(Debug)]
+pub struct Response {
+    /// Worker id.
+    pub worker: usize,
+    /// Step index.
+    pub t: usize,
+    /// Task result (see [`WorkerPayload::response_len`]).
+    pub values: Result<Vec<f64>>,
+    /// Worker compute time in nanoseconds.
+    pub compute_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn rows_payload_computes_matvec() {
+        let rows = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 2.0]]).unwrap();
+        let p = WorkerPayload::Rows { rows };
+        let out = p.compute(&[3.0, 4.0], &NativeBackend).unwrap();
+        assert_eq!(out, vec![3.0, 8.0]);
+        assert_eq!(p.response_len(2), 2);
+    }
+
+    #[test]
+    fn local_grad_payload() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::gaussian(8, 3, &mut rng);
+        let y = rng.gaussian_vec(8);
+        let theta = rng.gaussian_vec(3);
+        let p = WorkerPayload::LocalGrad { x: x.clone(), y: y.clone() };
+        let got = p.compute(&theta, &NativeBackend).unwrap();
+        let want = NativeBackend.local_grad(&x, &y, &theta).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(p.response_len(3), 3);
+    }
+
+    #[test]
+    fn coded_grad_combines_blocks() {
+        let mut rng = Rng::new(2);
+        let x1 = Matrix::gaussian(4, 3, &mut rng);
+        let y1 = rng.gaussian_vec(4);
+        let x2 = Matrix::gaussian(4, 3, &mut rng);
+        let y2 = rng.gaussian_vec(4);
+        let theta = rng.gaussian_vec(3);
+        let p = WorkerPayload::CodedGrad {
+            blocks: vec![
+                CodedBlock { coeff: 2.0, x: x1.clone(), y: y1.clone() },
+                CodedBlock { coeff: -1.0, x: x2.clone(), y: y2.clone() },
+            ],
+        };
+        let got = p.compute(&theta, &NativeBackend).unwrap();
+        let g1 = NativeBackend.local_grad(&x1, &y1, &theta).unwrap();
+        let g2 = NativeBackend.local_grad(&x2, &y2, &theta).unwrap();
+        for i in 0..3 {
+            assert!((got[i] - (2.0 * g1[i] - g2[i])).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn idle_payload_empty() {
+        let p = WorkerPayload::Idle;
+        assert!(p.compute(&[1.0], &NativeBackend).unwrap().is_empty());
+        assert_eq!(p.response_len(5), 0);
+        assert_eq!(p.flops(), 0);
+    }
+
+    #[test]
+    fn cost_accounting() {
+        let rows = Matrix::zeros(10, 100);
+        let p = WorkerPayload::Rows { rows };
+        assert_eq!(p.flops(), 1000);
+        assert_eq!(p.storage_bytes(), 8000);
+    }
+}

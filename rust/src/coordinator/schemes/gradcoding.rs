@@ -1,0 +1,154 @@
+//! Gradient coding (Tandon et al.) as a [`GradientScheme`] — the §2.1
+//! comparator used for the communication/compute cost ablation.
+//!
+//! Each worker holds `s + 1` sample partitions (cyclic) and uploads one
+//! coded `k`-vector per step; the master recombines the responders'
+//! vectors into the *exact* gradient whenever at most `s` workers
+//! straggle.
+
+use super::{partition_ranges, DecodeOutput, GradientScheme};
+use crate::codes::gradcode::GradientCode;
+use crate::coordinator::protocol::{CodedBlock, WorkerPayload};
+use crate::data::RegressionProblem;
+use crate::error::{Error, Result};
+
+/// The gradient-coding scheme.
+pub struct GradCodingScheme {
+    code: GradientCode,
+    k: usize,
+    payloads: Vec<WorkerPayload>,
+}
+
+impl GradCodingScheme {
+    /// Build a cyclic gradient code over `workers` workers tolerating `s`
+    /// stragglers.
+    pub fn new(problem: &RegressionProblem, workers: usize, s: usize, seed: u64) -> Result<Self> {
+        let code = GradientCode::cyclic(workers, s, seed)?;
+        let ranges = partition_ranges(problem.m(), workers);
+        let payloads = (0..workers)
+            .map(|i| {
+                let blocks = code
+                    .assignment(i)
+                    .into_iter()
+                    .map(|j| {
+                        let idx: Vec<usize> = ranges[j].clone().collect();
+                        CodedBlock {
+                            coeff: code.coeff(i, j),
+                            x: problem.x.select_rows(&idx),
+                            y: idx.iter().map(|&r| problem.y[r]).collect(),
+                        }
+                    })
+                    .collect();
+                WorkerPayload::CodedGrad { blocks }
+            })
+            .collect();
+        Ok(GradCodingScheme { code, k: problem.k(), payloads })
+    }
+
+    /// Designed straggler tolerance.
+    pub fn tolerance(&self) -> usize {
+        self.code.tolerance()
+    }
+}
+
+impl GradientScheme for GradCodingScheme {
+    fn name(&self) -> String {
+        format!("gradient-coding(s={})", self.code.tolerance())
+    }
+
+    fn workers(&self) -> usize {
+        self.code.workers()
+    }
+
+    fn dimension(&self) -> usize {
+        self.k
+    }
+
+    fn payloads(&self) -> &[WorkerPayload] {
+        &self.payloads
+    }
+
+    fn decode(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        _decode_iters: usize,
+    ) -> Result<DecodeOutput> {
+        if responses.len() != self.code.workers() {
+            return Err(Error::Runtime("response count mismatch".into()));
+        }
+        let responders: Vec<usize> =
+            (0..responses.len()).filter(|&j| responses[j].is_some()).collect();
+        let a = self.code.recombine(&responders)?;
+        let mut gradient = vec![0.0; self.k];
+        for (ai, &j) in a.iter().zip(&responders) {
+            if *ai != 0.0 {
+                crate::linalg::axpy(*ai, responses[j].as_ref().unwrap(), &mut gradient);
+            }
+        }
+        Ok(DecodeOutput { gradient, unrecovered_coords: 0, decode_rounds: 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthConfig;
+    use crate::rng::Rng;
+
+    fn respond(s: &GradCodingScheme, theta: &[f64]) -> Vec<Option<Vec<f64>>> {
+        s.payloads()
+            .iter()
+            .map(|p| Some(p.compute(theta, &crate::runtime::NativeBackend).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn exact_gradient_up_to_designed_tolerance() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(60, 6), 1);
+        let s = GradCodingScheme::new(&p, 10, 2, 2).unwrap();
+        let mut rng = Rng::new(3);
+        let theta = rng.gaussian_vec(6);
+        let want = p.gradient(&theta);
+        for s_count in [0usize, 1, 2] {
+            let mut responses = respond(&s, &theta);
+            for i in rng.choose_k(10, s_count) {
+                responses[i] = None;
+            }
+            let out = s.decode(&responses, 0).unwrap();
+            for (g, w) in out.gradient.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "s={s_count}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn beyond_tolerance_fails() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(30, 4), 4);
+        let s = GradCodingScheme::new(&p, 6, 1, 5).unwrap();
+        let mut responses = respond(&s, &[0.5, -0.5, 1.0, 0.0]);
+        responses[0] = None;
+        responses[3] = None; // two stragglers, tolerance one
+        assert!(s.decode(&responses, 0).is_err());
+    }
+
+    #[test]
+    fn upload_is_k_scalars_per_worker() {
+        // The §3 communication comparison: gradient coding ships a full
+        // k-vector per worker per step.
+        let p = RegressionProblem::generate(&SynthConfig::dense(40, 12), 6);
+        let s = GradCodingScheme::new(&p, 8, 2, 7).unwrap();
+        assert_eq!(s.upload_scalars_per_worker(), 12);
+    }
+
+    #[test]
+    fn each_worker_holds_s_plus_1_partitions() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(40, 4), 8);
+        let s = GradCodingScheme::new(&p, 8, 3, 9).unwrap();
+        for pl in s.payloads() {
+            match pl {
+                WorkerPayload::CodedGrad { blocks } => assert_eq!(blocks.len(), 4),
+                _ => panic!("wrong payload"),
+            }
+        }
+    }
+}

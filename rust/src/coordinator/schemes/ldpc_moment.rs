@@ -1,0 +1,468 @@
+//! **Scheme 2** — the paper's contribution: LDPC moment encoding with
+//! approximate gradients.
+//!
+//! Setup: `C⁽ⁱ⁾ = G·M_{P_i}` for a systematic LDPC generator `G`; worker
+//! `j` stores row `j` of every block. Per step the master:
+//!
+//! 1. assembles each block codeword `C⁽ⁱ⁾θ` with erasures at the
+//!    straggler positions (identical pattern across blocks),
+//! 2. builds one peeling schedule for that pattern with at most `D`
+//!    rounds and replays it over every block,
+//! 3. zeroes the still-erased systematic coordinates **and the matching
+//!    coordinates of `b = Xᵀy`** (the `b̂_t` masking of eq. 15), and
+//! 4. returns `ĉ_sys − b̂` as the gradient estimate.
+//!
+//! Under Assumption 1 this estimator satisfies
+//! `E[g_t] = (1 − q_D) ∇L(θ_{t-1})` (Lemma 1), which the
+//! `lemma1_unbiasedness` test validates empirically.
+
+use super::{DecodeOutput, GradientScheme};
+use crate::codes::ldpc::LdpcCode;
+use crate::codes::peeling::PeelingDecoder;
+use crate::coordinator::encoder::BlockMomentEncoding;
+use crate::coordinator::protocol::WorkerPayload;
+use crate::data::RegressionProblem;
+use crate::error::{Error, Result};
+
+/// The LDPC moment-encoding scheme (Scheme 2).
+pub struct LdpcMomentScheme {
+    code: LdpcCode,
+    enc: BlockMomentEncoding,
+    /// `b = Xᵀy`, computed once.
+    b: Vec<f64>,
+    payloads: Vec<WorkerPayload>,
+    /// Number of workers `w` (Remark 2: the code length `N` may exceed
+    /// `w`; each worker then owns `N/w` codeword positions).
+    workers: usize,
+    /// Codeword positions per worker.
+    ppw: usize,
+    /// position -> owning worker.
+    pos_worker: Vec<usize>,
+    /// position -> slot within the owner's per-block group.
+    pos_slot: Vec<usize>,
+}
+
+impl LdpcMomentScheme {
+    /// Build the scheme with the canonical `N = w` allocation: encode
+    /// `M = XᵀX` blockwise with `code`; worker `j` owns codeword
+    /// position `j`.
+    pub fn new(problem: &RegressionProblem, code: LdpcCode) -> Result<Self> {
+        let w = code.n();
+        Self::with_workers(problem, code, w)
+    }
+
+    /// Remark 2 allocation: an `(N, K)` code over `w` workers with
+    /// `N = ppw · w`; worker `j` owns the `ppw` codeword positions
+    /// `{j·ppw, …, (j+1)·ppw − 1}` of every block, so one straggler
+    /// erases a *burst* of `ppw` positions per codeword. At a fixed rate
+    /// and straggler fraction, longer codes peel better (fewer
+    /// finite-length stopping sets) — see `ablation_code_length`.
+    pub fn with_workers(
+        problem: &RegressionProblem,
+        code: LdpcCode,
+        workers: usize,
+    ) -> Result<Self> {
+        if workers == 0 || code.n() % workers != 0 {
+            return Err(Error::Config(format!(
+                "code length {} must be a positive multiple of the worker count {workers}",
+                code.n()
+            )));
+        }
+        let ppw = code.n() / workers;
+        let n = code.n();
+        let pos_worker: Vec<usize> = (0..n).map(|p| p / ppw).collect();
+        let pos_slot: Vec<usize> = (0..n).map(|p| p % ppw).collect();
+        let enc = BlockMomentEncoding::new(&problem.moment, n, code.k(), |blk| {
+            code.encode_matrix(blk)
+        })?;
+        // Worker j's shard: for each block i and slot s, row of the
+        // position j*ppw + s — laid out block-major so the response
+        // value for (block i, slot s) sits at index i*ppw + s.
+        let blocks = enc.blocks;
+        let k = enc.k;
+        let payloads = (0..workers)
+            .map(|j| {
+                let mut rows = crate::linalg::Matrix::zeros(blocks * ppw, k);
+                for i in 0..blocks {
+                    for s in 0..ppw {
+                        let pos = j * ppw + s;
+                        // enc.shards is per-*position* (length n).
+                        rows.row_mut(i * ppw + s)
+                            .copy_from_slice(enc.shards[pos].row(i));
+                    }
+                }
+                WorkerPayload::Rows { rows }
+            })
+            .collect();
+        Ok(LdpcMomentScheme {
+            code,
+            enc,
+            b: problem.b.clone(),
+            payloads,
+            workers,
+            ppw,
+            pos_worker,
+            pos_slot,
+        })
+    }
+
+    /// The underlying code.
+    pub fn code(&self) -> &LdpcCode {
+        &self.code
+    }
+
+    /// α = ⌈k/K⌉ rows per worker per codeword position.
+    pub fn alpha(&self) -> usize {
+        self.enc.alpha()
+    }
+
+    /// Codeword positions owned by each worker (1 in the canonical
+    /// `N = w` deployment).
+    pub fn positions_per_worker(&self) -> usize {
+        self.ppw
+    }
+}
+
+impl GradientScheme for LdpcMomentScheme {
+    fn name(&self) -> String {
+        format!(
+            "ldpc-moment({},{})",
+            self.code.n(),
+            self.code.k()
+        )
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn dimension(&self) -> usize {
+        self.enc.k
+    }
+
+    fn payloads(&self) -> &[WorkerPayload] {
+        &self.payloads
+    }
+
+    fn decode(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        decode_iters: usize,
+    ) -> Result<DecodeOutput> {
+        let n = self.code.n();
+        let kc = self.code.k();
+        let k = self.enc.k;
+        if responses.len() != self.workers {
+            return Err(Error::Runtime(format!(
+                "expected {} responses, got {}",
+                self.workers,
+                responses.len()
+            )));
+        }
+        // Erasure pattern: every position owned by a straggler (a burst
+        // of `ppw` per straggler when N > w); one schedule for all
+        // blocks (the LDPC efficiency the paper leans on).
+        let erased: Vec<usize> = (0..n)
+            .filter(|&p| responses[self.pos_worker[p]].is_none())
+            .collect();
+        let decoder = PeelingDecoder::new(&self.code);
+        let sched = decoder.schedule(&erased, decode_iters);
+
+        // Systematic positions that stay erased => the set U_t.
+        let unrec_sys: Vec<usize> =
+            sched.unrecovered.iter().copied().filter(|&p| p < kc).collect();
+
+        let mut gradient = vec![0.0; k];
+        let mut cw: Vec<f64> = vec![0.0; n];
+        for i in 0..self.enc.blocks {
+            // Assemble the block-i codeword from the position map.
+            for p in 0..n {
+                cw[p] = match &responses[self.pos_worker[p]] {
+                    Some(v) => v[i * self.ppw + self.pos_slot[p]],
+                    None => 0.0,
+                };
+            }
+            sched.apply(&mut cw);
+            let lo = i * kc;
+            let hi = ((i + 1) * kc).min(k);
+            // g = ĉ_sys − b̂ (b̂ zeroed on U_t, handled by skipping).
+            for p in 0..hi - lo {
+                gradient[lo + p] = cw[p] - self.b[lo + p];
+            }
+            for &p in &unrec_sys {
+                if lo + p < hi {
+                    gradient[lo + p] = 0.0;
+                }
+            }
+        }
+        // Count unrecovered *gradient* coordinates (padding excluded).
+        let mut unrecovered_coords = 0;
+        for i in 0..self.enc.blocks {
+            let lo = i * kc;
+            let hi = ((i + 1) * kc).min(k);
+            unrecovered_coords +=
+                unrec_sys.iter().filter(|&&p| lo + p < hi).count();
+        }
+        Ok(DecodeOutput { gradient, unrecovered_coords, decode_rounds: sched.rounds })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthConfig;
+    use crate::rng::Rng;
+
+    fn setup(k: usize) -> (RegressionProblem, LdpcMomentScheme) {
+        let p = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 1);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 2).unwrap();
+        let s = LdpcMomentScheme::new(&p, code).unwrap();
+        (p, s)
+    }
+
+    fn respond(s: &LdpcMomentScheme, theta: &[f64]) -> Vec<Option<Vec<f64>>> {
+        s.payloads()
+            .iter()
+            .map(|p| Some(p.compute(theta, &crate::runtime::NativeBackend).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn no_stragglers_decodes_exact_gradient() {
+        let (p, s) = setup(40);
+        let mut rng = Rng::new(3);
+        let theta = rng.gaussian_vec(40);
+        let out = s.decode(&respond(&s, &theta), 10).unwrap();
+        let want = p.gradient(&theta);
+        assert_eq!(out.unrecovered_coords, 0);
+        for (g, w) in out.gradient.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn few_stragglers_still_exact_with_enough_iters() {
+        let (p, s) = setup(60);
+        let mut rng = Rng::new(4);
+        let theta = rng.gaussian_vec(60);
+        for _ in 0..20 {
+            let mut responses = respond(&s, &theta);
+            for i in rng.choose_k(40, 5) {
+                responses[i] = None;
+            }
+            let out = s.decode(&responses, 40).unwrap();
+            if out.unrecovered_coords == 0 {
+                let want = p.gradient(&theta);
+                for (g, w) in out.gradient.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unrecovered_coords_zeroed() {
+        let (p, s) = setup(40);
+        let mut rng = Rng::new(5);
+        let theta = rng.gaussian_vec(40);
+        // Erase many workers so peeling stalls.
+        let mut responses = respond(&s, &theta);
+        for i in rng.choose_k(40, 25) {
+            responses[i] = None;
+        }
+        let out = s.decode(&responses, 2).unwrap();
+        assert!(out.unrecovered_coords > 0, "expected stalling with 25 erasures");
+        let want = p.gradient(&theta);
+        let mut zeros = 0;
+        for (g, w) in out.gradient.iter().zip(&want) {
+            if *g == 0.0 && w.abs() > 1e-9 {
+                zeros += 1;
+            } else {
+                assert!((g - w).abs() < 1e-6, "recovered coordinate must be exact");
+            }
+        }
+        assert_eq!(zeros, out.unrecovered_coords);
+    }
+
+    #[test]
+    fn more_decode_iters_never_worse() {
+        let (_, s) = setup(40);
+        let mut rng = Rng::new(6);
+        let theta = rng.gaussian_vec(40);
+        for _ in 0..10 {
+            let mut responses = respond(&s, &theta);
+            for i in rng.choose_k(40, 12) {
+                responses[i] = None;
+            }
+            let mut prev = usize::MAX;
+            for d in 0..8 {
+                let out = s.decode(&responses, d).unwrap();
+                assert!(out.unrecovered_coords <= prev);
+                prev = out.unrecovered_coords;
+            }
+        }
+    }
+
+    #[test]
+    fn lemma1_unbiasedness() {
+        // E[g_t] = (1 - q_D) grad under Bernoulli straggling, where q_D is
+        // the *empirical* per-coordinate erasure survival rate. We check
+        // the coordinate-wise scaling: averaging many straggler draws,
+        // each coordinate approaches (1 - q_D_emp) * grad coordinate.
+        let (p, s) = setup(40);
+        let mut rng = Rng::new(7);
+        let theta = rng.gaussian_vec(40);
+        let want = p.gradient(&theta);
+        let clean = respond(&s, &theta);
+        let trials = 3000;
+        let q0 = 0.2;
+        let d = 10;
+        let mut sum = vec![0.0; 40];
+        let mut unrec_total = 0usize;
+        for _ in 0..trials {
+            let mut responses = clean.clone();
+            for j in 0..40 {
+                if rng.bernoulli(q0) {
+                    responses[j] = None;
+                }
+            }
+            let out = s.decode(&responses, d).unwrap();
+            unrec_total += out.unrecovered_coords;
+            crate::linalg::axpy(1.0, &out.gradient, &mut sum);
+        }
+        let q_emp = unrec_total as f64 / (trials * 40) as f64;
+        let scale = 1.0 - q_emp;
+        let gnorm = crate::linalg::norm2(&want);
+        for i in 0..40 {
+            let avg = sum[i] / trials as f64;
+            let expect = scale * want[i];
+            assert!(
+                (avg - expect).abs() < 0.05 * gnorm,
+                "coord {i}: {avg} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn payload_is_alpha_rows() {
+        let (_, s) = setup(60);
+        assert_eq!(s.alpha(), 3);
+        for p in s.payloads() {
+            match p {
+                WorkerPayload::Rows { rows } => assert_eq!(rows.shape(), (3, 60)),
+                _ => panic!("wrong payload kind"),
+            }
+        }
+        // Communication: α scalars per worker per step — the §3 claim.
+        assert_eq!(s.upload_scalars_per_worker(), 3);
+    }
+
+    #[test]
+    fn wrong_response_count_rejected() {
+        let (_, s) = setup(40);
+        assert!(s.decode(&[None, None], 5).is_err());
+    }
+}
+
+#[cfg(test)]
+mod remark2_tests {
+    use super::*;
+    use crate::data::SynthConfig;
+    use crate::rng::Rng;
+
+    fn respond(s: &LdpcMomentScheme, theta: &[f64]) -> Vec<Option<Vec<f64>>> {
+        s.payloads()
+            .iter()
+            .map(|p| Some(p.compute(theta, &crate::runtime::NativeBackend).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn n_equals_2w_exact_without_stragglers() {
+        // Remark 2: an (80, 40) code over 40 workers, 2 positions each.
+        let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), 1);
+        let code = LdpcCode::gallager(80, 40, 3, 6, 2).unwrap();
+        let s = LdpcMomentScheme::with_workers(&p, code, 40).unwrap();
+        assert_eq!(s.workers(), 40);
+        assert_eq!(s.positions_per_worker(), 2);
+        let mut rng = Rng::new(3);
+        let theta = rng.gaussian_vec(40);
+        let out = s.decode(&respond(&s, &theta), 20).unwrap();
+        let want = p.gradient(&theta);
+        assert_eq!(out.unrecovered_coords, 0);
+        for (g, w) in out.gradient.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn n_equals_2w_survives_burst_erasures() {
+        // One straggler erases a burst of 2 codeword positions; the
+        // random ensemble still peels them out.
+        let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), 4);
+        let code = LdpcCode::gallager(80, 40, 3, 6, 5).unwrap();
+        let s = LdpcMomentScheme::with_workers(&p, code, 40).unwrap();
+        let mut rng = Rng::new(6);
+        let theta = rng.gaussian_vec(40);
+        let want = p.gradient(&theta);
+        let mut full_recoveries = 0;
+        for _ in 0..20 {
+            let mut responses = respond(&s, &theta);
+            for i in rng.choose_k(40, 5) {
+                responses[i] = None;
+            }
+            let out = s.decode(&responses, 40).unwrap();
+            if out.unrecovered_coords == 0 {
+                full_recoveries += 1;
+                for (g, w) in out.gradient.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-6);
+                }
+            }
+        }
+        assert!(full_recoveries >= 18, "only {full_recoveries}/20 full recoveries");
+    }
+
+    #[test]
+    fn longer_code_recovers_at_least_as_much() {
+        // Finite-length scaling: at the same rate and straggler count,
+        // the longer code leaves (weakly) fewer coordinates unrecovered
+        // on average.
+        let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), 7);
+        let short = LdpcMomentScheme::new(
+            &p,
+            LdpcCode::gallager(40, 20, 3, 6, 8).unwrap(),
+        )
+        .unwrap();
+        let long = LdpcMomentScheme::with_workers(
+            &p,
+            LdpcCode::gallager(120, 60, 3, 6, 8).unwrap(),
+            40,
+        )
+        .unwrap();
+        let mut rng = Rng::new(9);
+        let theta = rng.gaussian_vec(40);
+        let (mut unrec_short, mut unrec_long) = (0usize, 0usize);
+        for _ in 0..60 {
+            let stragglers = rng.choose_k(40, 12);
+            let mut rs = respond(&short, &theta);
+            let mut rl = respond(&long, &theta);
+            for &i in &stragglers {
+                rs[i] = None;
+                rl[i] = None;
+            }
+            unrec_short += short.decode(&rs, 60).unwrap().unrecovered_coords;
+            unrec_long += long.decode(&rl, 60).unwrap().unrecovered_coords;
+        }
+        assert!(
+            unrec_long <= unrec_short,
+            "longer code worse: {unrec_long} > {unrec_short}"
+        );
+    }
+
+    #[test]
+    fn indivisible_length_rejected() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(80, 20), 10);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 11).unwrap();
+        assert!(LdpcMomentScheme::with_workers(&p, code, 7).is_err());
+    }
+}

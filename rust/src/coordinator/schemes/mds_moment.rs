@@ -1,0 +1,203 @@
+//! **Scheme 1** — exact gradient computation via MDS moment encoding.
+//!
+//! Identical sharding to Scheme 2 but with a (systematic) Vandermonde
+//! generator: any `s < d_min = N − K + 1` stragglers are correctable
+//! *exactly* by a dense solve on `K` surviving coordinates (Proposition
+//! 1). The cost — and the paper's argument for LDPC codes — is the
+//! `O(K³)` solve with an ill-conditioned Vandermonde submatrix, versus
+//! peeling's `O(edges)` with ±1 arithmetic.
+
+use super::{DecodeOutput, GradientScheme};
+use crate::codes::mds::VandermondeCode;
+use crate::coordinator::encoder::BlockMomentEncoding;
+use crate::coordinator::protocol::WorkerPayload;
+use crate::data::RegressionProblem;
+use crate::error::{Error, Result};
+
+/// The MDS (Vandermonde) moment-encoding scheme (Scheme 1).
+pub struct MdsMomentScheme {
+    code: VandermondeCode,
+    enc: BlockMomentEncoding,
+    b: Vec<f64>,
+    payloads: Vec<WorkerPayload>,
+}
+
+impl MdsMomentScheme {
+    /// Build the scheme. The code is put in systematic form internally.
+    pub fn new(problem: &RegressionProblem, code: VandermondeCode) -> Result<Self> {
+        let code = if code.is_systematic() { code } else { code.into_systematic()? };
+        let enc = BlockMomentEncoding::new(&problem.moment, code.n(), code.k(), |blk| {
+            code.encode_matrix(blk)
+        })?;
+        let payloads = enc
+            .shards
+            .iter()
+            .map(|s| WorkerPayload::Rows { rows: s.clone() })
+            .collect();
+        Ok(MdsMomentScheme { code, enc, b: problem.b.clone(), payloads })
+    }
+
+    /// The underlying code.
+    pub fn code(&self) -> &VandermondeCode {
+        &self.code
+    }
+}
+
+impl GradientScheme for MdsMomentScheme {
+    fn name(&self) -> String {
+        format!("mds-moment({},{})", self.code.n(), self.code.k())
+    }
+
+    fn workers(&self) -> usize {
+        self.code.n()
+    }
+
+    fn dimension(&self) -> usize {
+        self.enc.k
+    }
+
+    fn payloads(&self) -> &[WorkerPayload] {
+        &self.payloads
+    }
+
+    fn decode(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        _decode_iters: usize,
+    ) -> Result<DecodeOutput> {
+        let n = self.code.n();
+        let kc = self.code.k();
+        let k = self.enc.k;
+        if responses.len() != n {
+            return Err(Error::Runtime(format!(
+                "expected {n} responses, got {}",
+                responses.len()
+            )));
+        }
+        let available: Vec<usize> =
+            (0..n).filter(|&j| responses[j].is_some()).collect();
+        if available.len() < kc {
+            return Err(Error::Decode(format!(
+                "MDS moment decode needs {} survivors, got {} (Proposition 1 bound exceeded)",
+                kc,
+                available.len()
+            )));
+        }
+        let mut gradient = vec![0.0; k];
+        let mut vals: Vec<f64> = Vec::with_capacity(available.len());
+        for i in 0..self.enc.blocks {
+            vals.clear();
+            for &j in &available {
+                vals.push(responses[j].as_ref().unwrap()[i]);
+            }
+            let msg = self.code.decode_erasures(&available, &vals)?;
+            let lo = i * kc;
+            let hi = ((i + 1) * kc).min(k);
+            for p in 0..hi - lo {
+                gradient[lo + p] = msg[p] - self.b[lo + p];
+            }
+        }
+        Ok(DecodeOutput { gradient, unrecovered_coords: 0, decode_rounds: 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::mds::EvalPoints;
+    use crate::data::SynthConfig;
+    use crate::rng::Rng;
+
+    fn setup(k: usize) -> (RegressionProblem, MdsMomentScheme) {
+        let p = RegressionProblem::generate(&SynthConfig::dense(2 * k, k), 1);
+        let code = VandermondeCode::new(40, 20, EvalPoints::Chebyshev).unwrap();
+        let s = MdsMomentScheme::new(&p, code).unwrap();
+        (p, s)
+    }
+
+    fn respond(s: &MdsMomentScheme, theta: &[f64]) -> Vec<Option<Vec<f64>>> {
+        s.payloads()
+            .iter()
+            .map(|p| Some(p.compute(theta, &crate::runtime::NativeBackend).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn exact_gradient_in_paper_straggler_range() {
+        let (p, s) = setup(40);
+        let mut rng = Rng::new(2);
+        let theta = rng.gaussian_vec(40);
+        let want = p.gradient(&theta);
+        for s_count in [0usize, 5, 10] {
+            let mut responses = respond(&s, &theta);
+            for i in rng.choose_k(40, s_count) {
+                responses[i] = None;
+            }
+            let out = s.decode(&responses, 0).unwrap();
+            assert_eq!(out.unrecovered_coords, 0);
+            for (g, w) in out.gradient.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() < 1e-4 * (1.0 + w.abs()),
+                    "s={s_count}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn numerically_fragile_at_full_erasure_radius() {
+        // Proposition 1 holds over exact arithmetic, but at the full
+        // radius (s = n - k = 20) the surviving Vandermonde submatrix can
+        // be so ill-conditioned that f64 decoding is garbage — exactly
+        // the noise-stability pathology the paper cites (§1) as the
+        // motivation for LDPC codes. We assert only that *some* straggler
+        // pattern at the radius produces large error, documenting the
+        // fragility rather than sweeping it under the rug.
+        let (p, s) = setup(40);
+        let mut rng = Rng::new(2);
+        let theta = rng.gaussian_vec(40);
+        let want = p.gradient(&theta);
+        let mut worst_rel = 0.0f64;
+        for _ in 0..20 {
+            let mut responses = respond(&s, &theta);
+            for i in rng.choose_k(40, 20) {
+                responses[i] = None;
+            }
+            if let Ok(out) = s.decode(&responses, 0) {
+                let rel = crate::linalg::dist2(&out.gradient, &want)
+                    / crate::linalg::norm2(&want);
+                worst_rel = worst_rel.max(rel);
+            } else {
+                worst_rel = f64::INFINITY;
+            }
+        }
+        assert!(
+            worst_rel > 1e-4,
+            "expected numerical fragility at the erasure radius, worst rel err {worst_rel}"
+        );
+    }
+
+    #[test]
+    fn proposition1_bound_enforced() {
+        let (_, s) = setup(40);
+        let mut rng = Rng::new(3);
+        let theta = rng.gaussian_vec(40);
+        let mut responses = respond(&s, &theta);
+        // 21 stragglers > n - k = 20: decode must fail.
+        for i in rng.choose_k(40, 21) {
+            responses[i] = None;
+        }
+        assert!(s.decode(&responses, 0).is_err());
+    }
+
+    #[test]
+    fn matches_ldpc_scheme_payload_shape() {
+        let (_, s) = setup(60);
+        for p in s.payloads() {
+            match p {
+                WorkerPayload::Rows { rows } => assert_eq!(rows.shape(), (3, 60)),
+                _ => panic!("wrong payload"),
+            }
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Straggler-mitigation schemes: the paper's moment encoding and every
+//! baseline it is evaluated against (§4, §2.1).
+//!
+//! A scheme fixes (a) what each worker stores ([`WorkerPayload`]s, built
+//! once before the optimization loop) and (b) how the master turns the
+//! per-step responses of the *non-straggling* workers into a gradient
+//! estimate ([`GradientScheme::decode`]).
+
+pub mod gradcoding;
+pub mod ksdy;
+pub mod ldpc_moment;
+pub mod mds_moment;
+pub mod replication;
+pub mod uncoded;
+
+use crate::coordinator::protocol::WorkerPayload;
+use crate::error::Result;
+
+/// What a decode produced, plus the quality/effort statistics the paper
+/// tracks (number of erased gradient coordinates, decoding iterations).
+#[derive(Debug, Clone)]
+pub struct DecodeOutput {
+    /// The gradient estimate `g_t` (length `k`).
+    pub gradient: Vec<f64>,
+    /// Gradient coordinates left at zero because decoding could not
+    /// recover them (the set `U_t` of Scheme 2).
+    pub unrecovered_coords: usize,
+    /// Peeling rounds actually executed (0 for non-iterative schemes).
+    pub decode_rounds: usize,
+}
+
+/// A straggler-mitigation scheme.
+pub trait GradientScheme: Send + Sync {
+    /// Scheme name for reports (e.g. `"ldpc-moment"`).
+    fn name(&self) -> String;
+
+    /// Number of workers the scheme shards over.
+    fn workers(&self) -> usize;
+
+    /// Problem dimension `k`.
+    fn dimension(&self) -> usize;
+
+    /// The per-worker payloads (index = worker id).
+    fn payloads(&self) -> &[WorkerPayload];
+
+    /// Decode a gradient estimate from the responses; `responses[j]` is
+    /// `None` iff worker `j` straggled this step. `decode_iters` is the
+    /// paper's tuning parameter `D` (ignored by non-iterative schemes).
+    fn decode(&self, responses: &[Option<Vec<f64>>], decode_iters: usize)
+        -> Result<DecodeOutput>;
+
+    /// Scalars communicated per worker per step (cost accounting for the
+    /// §3 comparison table).
+    fn upload_scalars_per_worker(&self) -> usize {
+        self.payloads()
+            .iter()
+            .map(|p| p.response_len(self.dimension()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total worker flops per step.
+    fn total_flops_per_step(&self) -> usize {
+        self.payloads().iter().map(|p| p.flops()).sum()
+    }
+}
+
+/// Split `0..total` into `parts` contiguous ranges whose sizes differ by
+/// at most one (workload partitioning helper shared by the data-parallel
+/// schemes).
+pub fn partition_ranges(total: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(parts > 0);
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_everything() {
+        for (total, parts) in [(10, 3), (40, 40), (7, 10), (0, 2), (2048, 40)] {
+            let ranges = partition_ranges(total, parts);
+            assert_eq!(ranges.len(), parts);
+            let covered: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(covered, total);
+            // Contiguous and ordered.
+            let mut expect = 0;
+            for r in &ranges {
+                assert_eq!(r.start, expect);
+                expect = r.end;
+            }
+            // Balanced.
+            let max = ranges.iter().map(|r| r.len()).max().unwrap();
+            let min = ranges.iter().map(|r| r.len()).min().unwrap();
+            assert!(max - min <= 1);
+        }
+    }
+}

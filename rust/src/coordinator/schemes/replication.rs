@@ -1,0 +1,175 @@
+//! r-replication baseline ("2-replication" in §4).
+//!
+//! Samples are partitioned into `w/r` blocks; each block is handed to `r`
+//! workers. The master uses the first-arriving replica of every block and
+//! sums; a block contributes nothing only when *all* its replicas
+//! straggle.
+
+use super::{partition_ranges, DecodeOutput, GradientScheme};
+use crate::codes::replication::ReplicatedAssignment;
+use crate::coordinator::protocol::WorkerPayload;
+use crate::data::RegressionProblem;
+use crate::error::{Error, Result};
+
+/// Replication scheme with factor `r`.
+pub struct ReplicationScheme {
+    assignment: ReplicatedAssignment,
+    k: usize,
+    payloads: Vec<WorkerPayload>,
+}
+
+impl ReplicationScheme {
+    /// Partition samples into `workers/r` blocks replicated `r` times.
+    pub fn new(problem: &RegressionProblem, workers: usize, r: usize) -> Result<Self> {
+        let assignment = ReplicatedAssignment::block(workers, r)?;
+        let ranges = partition_ranges(problem.m(), assignment.num_parts());
+        let payloads = (0..workers)
+            .map(|w| {
+                let part = assignment.part_of(w);
+                let idx: Vec<usize> = ranges[part].clone().collect();
+                WorkerPayload::LocalGrad {
+                    x: problem.x.select_rows(&idx),
+                    y: idx.iter().map(|&i| problem.y[i]).collect(),
+                }
+            })
+            .collect();
+        Ok(ReplicationScheme { assignment, k: problem.k(), payloads })
+    }
+
+    /// Replication factor.
+    pub fn replication(&self) -> usize {
+        self.assignment.replication()
+    }
+}
+
+impl GradientScheme for ReplicationScheme {
+    fn name(&self) -> String {
+        format!("{}-replication", self.assignment.replication())
+    }
+
+    fn workers(&self) -> usize {
+        self.assignment.workers()
+    }
+
+    fn dimension(&self) -> usize {
+        self.k
+    }
+
+    fn payloads(&self) -> &[WorkerPayload] {
+        &self.payloads
+    }
+
+    fn decode(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        _decode_iters: usize,
+    ) -> Result<DecodeOutput> {
+        if responses.len() != self.assignment.workers() {
+            return Err(Error::Runtime("response count mismatch".into()));
+        }
+        let responded: Vec<usize> =
+            (0..responses.len()).filter(|&j| responses[j].is_some()).collect();
+        let per_part = self.assignment.resolve(&responded);
+        let mut gradient = vec![0.0; self.k];
+        let mut lost_parts = 0usize;
+        for got in &per_part {
+            match got {
+                Some(w) => {
+                    crate::linalg::axpy(1.0, responses[*w].as_ref().unwrap(), &mut gradient)
+                }
+                None => lost_parts += 1,
+            }
+        }
+        let unrecovered_coords = lost_parts * self.k / self.assignment.num_parts();
+        Ok(DecodeOutput { gradient, unrecovered_coords, decode_rounds: 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthConfig;
+    use crate::rng::Rng;
+
+    fn respond(s: &ReplicationScheme, theta: &[f64]) -> Vec<Option<Vec<f64>>> {
+        s.payloads()
+            .iter()
+            .map(|p| Some(p.compute(theta, &crate::runtime::NativeBackend).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn exact_gradient_with_all_responses() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(60, 8), 1);
+        let s = ReplicationScheme::new(&p, 8, 2).unwrap();
+        let mut rng = Rng::new(2);
+        let theta = rng.gaussian_vec(8);
+        let out = s.decode(&respond(&s, &theta), 0).unwrap();
+        let want = p.gradient(&theta);
+        for (g, w) in out.gradient.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn survives_one_replica_straggling() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(60, 8), 3);
+        let s = ReplicationScheme::new(&p, 8, 2).unwrap();
+        let mut rng = Rng::new(4);
+        let theta = rng.gaussian_vec(8);
+        let mut responses = respond(&s, &theta);
+        // Drop one replica of each pair: workers 0, 2, 4, 6.
+        for j in [0, 2, 4, 6] {
+            responses[j] = None;
+        }
+        let out = s.decode(&responses, 0).unwrap();
+        assert_eq!(out.unrecovered_coords, 0);
+        let want = p.gradient(&theta);
+        for (g, w) in out.gradient.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn loses_part_when_both_replicas_straggle() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(60, 8), 5);
+        let s = ReplicationScheme::new(&p, 8, 2).unwrap();
+        let mut rng = Rng::new(6);
+        let theta = rng.gaussian_vec(8);
+        let mut responses = respond(&s, &theta);
+        responses[0] = None;
+        responses[1] = None; // both replicas of part 0
+        let out = s.decode(&responses, 0).unwrap();
+        assert!(out.unrecovered_coords > 0);
+        // Must not equal the exact gradient.
+        let want = p.gradient(&theta);
+        let diff = crate::linalg::dist2(&out.gradient, &want);
+        assert!(diff > 1e-6);
+    }
+
+    #[test]
+    fn more_robust_than_uncoded_on_average() {
+        // With s=2 random stragglers of 8 workers, 2-replication loses a
+        // part only when both stragglers hit the same pair: prob 4/28 —
+        // uncoded always loses 2 blocks of 8.
+        let p = RegressionProblem::generate(&SynthConfig::dense(80, 6), 7);
+        let s = ReplicationScheme::new(&p, 8, 2).unwrap();
+        let mut rng = Rng::new(8);
+        let theta = rng.gaussian_vec(6);
+        let clean = respond(&s, &theta);
+        let trials = 2000;
+        let mut lost = 0usize;
+        for _ in 0..trials {
+            let mut r = clean.clone();
+            for i in rng.choose_k(8, 2) {
+                r[i] = None;
+            }
+            let out = s.decode(&r, 0).unwrap();
+            if out.unrecovered_coords > 0 {
+                lost += 1;
+            }
+        }
+        let frac = lost as f64 / trials as f64;
+        assert!((frac - 4.0 / 28.0).abs() < 0.03, "loss fraction {frac}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Uncoded distributed gradient descent — the "ignore the stragglers"
+//! baseline of §4.
+//!
+//! The samples are partitioned evenly over the workers; worker `j`
+//! returns its local gradient `X_jᵀ(X_jθ − y_j)` and the master simply
+//! sums whatever arrives before the deadline. Losing `s` of `w` blocks
+//! discards those samples' contribution for the step, so the expected
+//! update direction is `(1 − s/w)∇L` — the same geometric picture as
+//! Scheme 2's `(1 − q_D)` but with a *much larger* erased fraction
+//! (`s/w` versus the post-peeling residual).
+
+use super::{partition_ranges, DecodeOutput, GradientScheme};
+use crate::coordinator::protocol::WorkerPayload;
+use crate::data::RegressionProblem;
+use crate::error::{Error, Result};
+
+/// Uncoded data-parallel scheme.
+pub struct UncodedScheme {
+    workers: usize,
+    k: usize,
+    payloads: Vec<WorkerPayload>,
+}
+
+impl UncodedScheme {
+    /// Partition the problem's samples over `workers` workers.
+    pub fn new(problem: &RegressionProblem, workers: usize) -> Result<Self> {
+        if workers == 0 {
+            return Err(Error::Config("need at least one worker".into()));
+        }
+        let ranges = partition_ranges(problem.m(), workers);
+        let payloads = ranges
+            .iter()
+            .map(|r| {
+                let idx: Vec<usize> = r.clone().collect();
+                WorkerPayload::LocalGrad {
+                    x: problem.x.select_rows(&idx),
+                    y: idx.iter().map(|&i| problem.y[i]).collect(),
+                }
+            })
+            .collect();
+        Ok(UncodedScheme { workers, k: problem.k(), payloads })
+    }
+}
+
+impl GradientScheme for UncodedScheme {
+    fn name(&self) -> String {
+        "uncoded".into()
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn dimension(&self) -> usize {
+        self.k
+    }
+
+    fn payloads(&self) -> &[WorkerPayload] {
+        &self.payloads
+    }
+
+    fn decode(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        _decode_iters: usize,
+    ) -> Result<DecodeOutput> {
+        if responses.len() != self.workers {
+            return Err(Error::Runtime("response count mismatch".into()));
+        }
+        let mut gradient = vec![0.0; self.k];
+        let mut missing = 0usize;
+        for r in responses {
+            match r {
+                Some(v) => crate::linalg::axpy(1.0, v, &mut gradient),
+                None => missing += 1,
+            }
+        }
+        // "Unrecovered" here is the k coordinates scaled down by the lost
+        // sample mass; we report the number of lost *blocks* times k/w as
+        // an effective-coordinates figure so the metric is comparable.
+        let unrecovered_coords = missing * self.k / self.workers;
+        Ok(DecodeOutput { gradient, unrecovered_coords, decode_rounds: 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthConfig;
+    use crate::rng::Rng;
+
+    fn respond(s: &UncodedScheme, theta: &[f64]) -> Vec<Option<Vec<f64>>> {
+        s.payloads()
+            .iter()
+            .map(|p| Some(p.compute(theta, &crate::runtime::NativeBackend).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn full_responses_give_exact_gradient() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(100, 10), 1);
+        let s = UncodedScheme::new(&p, 8).unwrap();
+        let mut rng = Rng::new(2);
+        let theta = rng.gaussian_vec(10);
+        let out = s.decode(&respond(&s, &theta), 0).unwrap();
+        let want = p.gradient(&theta);
+        for (g, w) in out.gradient.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn stragglers_drop_their_samples() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(40, 5), 3);
+        let s = UncodedScheme::new(&p, 4).unwrap();
+        let mut rng = Rng::new(4);
+        let theta = rng.gaussian_vec(5);
+        let mut responses = respond(&s, &theta);
+        let dropped = responses[2].take().unwrap();
+        let out = s.decode(&responses, 0).unwrap();
+        // Full gradient minus the dropped block's contribution.
+        let want = {
+            let mut g = p.gradient(&theta);
+            for (gi, di) in g.iter_mut().zip(&dropped) {
+                *gi -= di;
+            }
+            g
+        };
+        for (g, w) in out.gradient.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn expected_direction_scales_with_survivors() {
+        // E[g] over uniform straggler draws = (1 - s/w) * grad.
+        let p = RegressionProblem::generate(&SynthConfig::dense(80, 6), 5);
+        let s = UncodedScheme::new(&p, 8).unwrap();
+        let mut rng = Rng::new(6);
+        let theta = rng.gaussian_vec(6);
+        let clean = respond(&s, &theta);
+        let want = p.gradient(&theta);
+        let trials = 4000;
+        let mut sum = vec![0.0; 6];
+        for _ in 0..trials {
+            let mut r = clean.clone();
+            for i in rng.choose_k(8, 2) {
+                r[i] = None;
+            }
+            let out = s.decode(&r, 0).unwrap();
+            crate::linalg::axpy(1.0 / trials as f64, &out.gradient, &mut sum);
+        }
+        let gnorm = crate::linalg::norm2(&want);
+        for i in 0..6 {
+            let expect = 0.75 * want[i];
+            assert!((sum[i] - expect).abs() < 0.05 * gnorm, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn payload_partition_covers_all_samples() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(101, 4), 7);
+        let s = UncodedScheme::new(&p, 7).unwrap();
+        let total: usize = s
+            .payloads()
+            .iter()
+            .map(|pl| match pl {
+                WorkerPayload::LocalGrad { x, .. } => x.rows(),
+                _ => panic!(),
+            })
+            .sum();
+        assert_eq!(total, 101);
+    }
+}

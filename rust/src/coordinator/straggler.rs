@@ -1,0 +1,199 @@
+//! Straggler injection models.
+//!
+//! The paper's experiments fix the number of stragglers per step (s ∈ {5,
+//! 10} of 40 workers — "we wait for either 30 or 35 workers"), while the
+//! convergence analysis (Assumption 1) uses i.i.d. Bernoulli straggling.
+//! The shifted-exponential latency model from the coded-computation
+//! literature is also provided for deadline-driven experiments.
+
+use crate::rng::Rng;
+
+/// Declarative straggler model (see [`StragglerSampler`] for the stateful
+/// per-run sampler).
+#[derive(Debug, Clone)]
+pub enum StragglerModel {
+    /// No stragglers.
+    None,
+    /// Exactly `s` uniformly random stragglers per step (§4's setup).
+    FixedCount { s: usize, seed: u64 },
+    /// Each worker independently straggles with probability `q0`
+    /// (Assumption 1; drives Theorem 1's `(1 − q_D)` factor).
+    Bernoulli { q0: f64, seed: u64 },
+    /// Worker completion times are `shift + Exp(rate)` (milliseconds);
+    /// the master waits for the fastest `wait_for` workers, the rest are
+    /// stragglers. Simulated time is returned alongside the set.
+    ShiftedExp { shift_ms: f64, rate: f64, wait_for: usize, seed: u64 },
+}
+
+impl StragglerModel {
+    /// Create the stateful sampler for a run.
+    pub fn sampler(&self) -> StragglerSampler {
+        StragglerSampler { model: self.clone(), rng: Rng::new(self.seed()), step: 0 }
+    }
+
+    fn seed(&self) -> u64 {
+        match *self {
+            StragglerModel::None => 0,
+            StragglerModel::FixedCount { seed, .. }
+            | StragglerModel::Bernoulli { seed, .. }
+            | StragglerModel::ShiftedExp { seed, .. } => seed,
+        }
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> String {
+        match *self {
+            StragglerModel::None => "none".into(),
+            StragglerModel::FixedCount { s, .. } => format!("fixed({s})"),
+            StragglerModel::Bernoulli { q0, .. } => format!("bernoulli({q0})"),
+            StragglerModel::ShiftedExp { wait_for, .. } => format!("shifted-exp(wait {wait_for})"),
+        }
+    }
+}
+
+/// The per-step straggler draw.
+#[derive(Debug, Clone)]
+pub struct StepStraggling {
+    /// Sorted straggler indices.
+    pub stragglers: Vec<usize>,
+    /// Simulated per-worker completion times in ms (latency models only).
+    pub latencies_ms: Option<Vec<f64>>,
+    /// Simulated time until the master can proceed (latency models only):
+    /// the slowest non-straggler.
+    pub collect_ms: Option<f64>,
+}
+
+/// Stateful sampler; one per run, advanced once per gradient step.
+#[derive(Debug, Clone)]
+pub struct StragglerSampler {
+    model: StragglerModel,
+    rng: Rng,
+    step: usize,
+}
+
+impl StragglerSampler {
+    /// Draw the straggler set for the next step over `w` workers.
+    pub fn next_step(&mut self, w: usize) -> StepStraggling {
+        self.step += 1;
+        match self.model {
+            StragglerModel::None => StepStraggling {
+                stragglers: Vec::new(),
+                latencies_ms: None,
+                collect_ms: None,
+            },
+            StragglerModel::FixedCount { s, .. } => {
+                let s = s.min(w);
+                StepStraggling {
+                    stragglers: self.rng.choose_k(w, s),
+                    latencies_ms: None,
+                    collect_ms: None,
+                }
+            }
+            StragglerModel::Bernoulli { q0, .. } => {
+                let stragglers: Vec<usize> =
+                    (0..w).filter(|_| self.rng.bernoulli(q0)).collect();
+                StepStraggling { stragglers, latencies_ms: None, collect_ms: None }
+            }
+            StragglerModel::ShiftedExp { shift_ms, rate, wait_for, .. } => {
+                let lat: Vec<f64> =
+                    (0..w).map(|_| self.rng.shifted_exponential(shift_ms, rate)).collect();
+                let wait_for = wait_for.min(w).max(1);
+                // Order statistics: the slowest w - wait_for are stragglers.
+                let mut order: Vec<usize> = (0..w).collect();
+                order.sort_by(|&a, &b| lat[a].partial_cmp(&lat[b]).unwrap());
+                let mut stragglers: Vec<usize> = order[wait_for..].to_vec();
+                stragglers.sort_unstable();
+                let collect = lat[order[wait_for - 1]];
+                StepStraggling {
+                    stragglers,
+                    latencies_ms: Some(lat),
+                    collect_ms: Some(collect),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_straggles() {
+        let mut s = StragglerModel::None.sampler();
+        for _ in 0..10 {
+            assert!(s.next_step(40).stragglers.is_empty());
+        }
+    }
+
+    #[test]
+    fn fixed_count_exact() {
+        let mut s = StragglerModel::FixedCount { s: 5, seed: 1 }.sampler();
+        for _ in 0..100 {
+            let st = s.next_step(40);
+            assert_eq!(st.stragglers.len(), 5);
+            assert!(st.stragglers.iter().all(|&i| i < 40));
+            assert!(st.stragglers.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn fixed_count_varies_across_steps() {
+        let mut s = StragglerModel::FixedCount { s: 5, seed: 2 }.sampler();
+        let a = s.next_step(40).stragglers;
+        let b = s.next_step(40).stragglers;
+        assert_ne!(a, b, "straggler sets should differ step to step (w.h.p.)");
+    }
+
+    #[test]
+    fn fixed_count_clamps_to_w() {
+        let mut s = StragglerModel::FixedCount { s: 100, seed: 3 }.sampler();
+        assert_eq!(s.next_step(10).stragglers.len(), 10);
+    }
+
+    #[test]
+    fn bernoulli_rate_about_q0() {
+        let mut s = StragglerModel::Bernoulli { q0: 0.25, seed: 4 }.sampler();
+        let mut total = 0usize;
+        let steps = 2000;
+        for _ in 0..steps {
+            total += s.next_step(40).stragglers.len();
+        }
+        let rate = total as f64 / (steps * 40) as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn shifted_exp_wait_for_semantics() {
+        let mut s = StragglerModel::ShiftedExp {
+            shift_ms: 10.0,
+            rate: 0.1,
+            wait_for: 30,
+            seed: 5,
+        }
+        .sampler();
+        for _ in 0..50 {
+            let st = s.next_step(40);
+            assert_eq!(st.stragglers.len(), 10);
+            let lat = st.latencies_ms.unwrap();
+            let collect = st.collect_ms.unwrap();
+            assert!(collect >= 10.0, "shift respected");
+            // Every straggler is slower than the collect time.
+            for &w in &st.stragglers {
+                assert!(lat[w] >= collect);
+            }
+            // Exactly `wait_for` workers at or below collect time.
+            let fast = lat.iter().filter(|&&l| l <= collect).count();
+            assert_eq!(fast, 30);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut a = StragglerModel::FixedCount { s: 7, seed: 9 }.sampler();
+        let mut b = StragglerModel::FixedCount { s: 7, seed: 9 }.sampler();
+        for _ in 0..20 {
+            assert_eq!(a.next_step(40).stragglers, b.next_step(40).stragglers);
+        }
+    }
+}

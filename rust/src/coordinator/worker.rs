@@ -1,0 +1,97 @@
+//! Worker thread: the paper's worker-server loop.
+//!
+//! Each worker owns its payload (encoded rows or a data block) and a
+//! shared compute backend. Per step it receives the broadcast iterate,
+//! runs its task, and sends the result with its compute time. Workers do
+//! not know whether they will be treated as stragglers — that decision is
+//! the master's (deadline) — so they always compute; the master masks.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::coordinator::protocol::{Request, Response, WorkerPayload};
+use crate::runtime::ComputeBackend;
+
+/// Per-thread CPU time in nanoseconds.
+///
+/// Worker compute is timed with `CLOCK_THREAD_CPUTIME_ID`, not wall
+/// clock: the simulation runs `w` worker threads on however many cores
+/// the host has, and a wall-clock span would include preemption by the
+/// *other* workers — systematically inflating exactly the schemes with
+/// the largest shards. CPU time measures what a dedicated cluster node
+/// would spend.
+pub fn thread_cpu_ns() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+/// Body of a worker thread. Runs until a [`Request::Shutdown`] or a
+/// closed channel.
+pub fn worker_loop(
+    id: usize,
+    payload: Arc<WorkerPayload>,
+    backend: Arc<dyn ComputeBackend>,
+    requests: Receiver<Request>,
+    responses: Sender<Response>,
+) {
+    while let Ok(req) = requests.recv() {
+        match req {
+            Request::Step { t, theta } => {
+                let start = thread_cpu_ns();
+                // Key the payload by worker id so backends (PJRT) can keep
+                // a device-resident copy of the constant shard.
+                let values = payload.compute_keyed(&theta, backend.as_ref(), Some(id as u64));
+                let compute_ns = thread_cpu_ns().saturating_sub(start);
+                // A send failure means the master hung up; exit quietly.
+                if responses.send(Response { worker: id, t, values, compute_ns }).is_err() {
+                    return;
+                }
+            }
+            Request::Shutdown => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::runtime::NativeBackend;
+    use std::sync::mpsc;
+
+    #[test]
+    fn worker_computes_and_responds() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let payload = Arc::new(WorkerPayload::Rows {
+            rows: Matrix::from_rows(&[vec![1.0, 1.0], vec![2.0, 0.0]]).unwrap(),
+        });
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let h = std::thread::spawn(move || {
+            worker_loop(3, payload, backend, req_rx, resp_tx)
+        });
+        req_tx
+            .send(Request::Step { t: 1, theta: Arc::new(vec![1.0, 2.0]) })
+            .unwrap();
+        let r = resp_rx.recv().unwrap();
+        assert_eq!(r.worker, 3);
+        assert_eq!(r.t, 1);
+        assert_eq!(r.values.unwrap(), vec![3.0, 2.0]);
+        req_tx.send(Request::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn worker_exits_on_channel_close() {
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, _resp_rx) = mpsc::channel();
+        let payload = Arc::new(WorkerPayload::Idle);
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let h =
+            std::thread::spawn(move || worker_loop(0, payload, backend, req_rx, resp_tx));
+        drop(req_tx);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,5 @@
+//! Synthetic workload generation (§4's experimental setups).
+
+pub mod synth;
+
+pub use synth::{RegressionProblem, SynthConfig};

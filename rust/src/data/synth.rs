@@ -1,0 +1,236 @@
+//! Synthetic regression instances matching the paper's §4 setups.
+//!
+//! * Least squares (Fig. 1): `X ∈ ℝ^{2048 x k}`, i.i.d. `N(0,1)`,
+//!   `θ* ~ N(0, I)`, `y = Xθ*`.
+//! * Sparse recovery, overdetermined (Fig. 2): same but `θ*` is
+//!   `u = k·f`-sparse.
+//! * Sparse recovery, underdetermined (Fig. 3): `X ∈ ℝ^{1024 x 2000}`,
+//!   `u ∈ {100, 200}`.
+
+use crate::linalg::{lambda_max, Matrix};
+use crate::rng::Rng;
+
+/// Configuration for synthetic regression data.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    /// Number of samples `m`.
+    pub m: usize,
+    /// Dimension `k`.
+    pub k: usize,
+    /// Number of nonzeros in `θ*` (`None` = dense).
+    pub sparsity: Option<usize>,
+    /// Standard deviation of additive label noise `ε` (0 = noiseless, as
+    /// in the paper's experiments).
+    pub noise_std: f64,
+}
+
+impl SynthConfig {
+    /// Dense least-squares instance (Fig. 1).
+    pub fn dense(m: usize, k: usize) -> Self {
+        SynthConfig { m, k, sparsity: None, noise_std: 0.0 }
+    }
+
+    /// Sparse instance with `u` nonzeros (Figs. 2–3).
+    pub fn sparse(m: usize, k: usize, u: usize) -> Self {
+        SynthConfig { m, k, sparsity: Some(u), noise_std: 0.0 }
+    }
+
+    /// Add label noise.
+    pub fn with_noise(mut self, std: f64) -> Self {
+        self.noise_std = std;
+        self
+    }
+}
+
+/// A realized regression instance together with its precomputed moments.
+///
+/// The moments are what the paper's scheme encodes: `M = XᵀX` (encoded
+/// once, before the optimization loop) and `b = Xᵀy` (computed once; the
+/// master masks it with the per-step unrecovered set, cf. Scheme 2).
+#[derive(Debug, Clone)]
+pub struct RegressionProblem {
+    /// Data matrix `X` (`m x k`).
+    pub x: Matrix,
+    /// Labels `y` (`m`).
+    pub y: Vec<f64>,
+    /// Ground-truth parameter `θ*` (`k`).
+    pub theta_star: Vec<f64>,
+    /// Second moment `M = XᵀX` (`k x k`).
+    pub moment: Matrix,
+    /// Moment-label product `b = Xᵀy` (`k`).
+    pub b: Vec<f64>,
+    /// The generating configuration.
+    pub config: SynthConfig,
+}
+
+impl RegressionProblem {
+    /// Generate an instance from the configuration, deterministically in
+    /// `seed`.
+    pub fn generate(cfg: &SynthConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::gaussian(cfg.m, cfg.k, &mut rng);
+        let theta_star = match cfg.sparsity {
+            None => rng.gaussian_vec(cfg.k),
+            Some(u) => {
+                assert!(u <= cfg.k, "sparsity {u} > dimension {}", cfg.k);
+                let mut t = vec![0.0; cfg.k];
+                for i in rng.choose_k(cfg.k, u) {
+                    t[i] = rng.gaussian();
+                }
+                t
+            }
+        };
+        let mut y = x.matvec(&theta_star);
+        if cfg.noise_std > 0.0 {
+            for yi in y.iter_mut() {
+                *yi += rng.normal(0.0, cfg.noise_std);
+            }
+        }
+        let moment = x.gram();
+        let b = x.matvec_t(&y);
+        RegressionProblem { x, y, theta_star, moment, b, config: cfg.clone() }
+    }
+
+    /// Number of samples.
+    pub fn m(&self) -> usize {
+        self.config.m
+    }
+
+    /// Dimension.
+    pub fn k(&self) -> usize {
+        self.config.k
+    }
+
+    /// Empirical loss `½‖y − Xθ‖²`.
+    pub fn loss(&self, theta: &[f64]) -> f64 {
+        let pred = self.x.matvec(theta);
+        0.5 * self
+            .y
+            .iter()
+            .zip(&pred)
+            .map(|(yi, pi)| (yi - pi) * (yi - pi))
+            .sum::<f64>()
+    }
+
+    /// Exact gradient `∇L(θ) = Mθ − b`.
+    pub fn gradient(&self, theta: &[f64]) -> Vec<f64> {
+        let mut g = self.moment.matvec(theta);
+        for (gi, bi) in g.iter_mut().zip(&self.b) {
+            *gi -= bi;
+        }
+        g
+    }
+
+    /// Spectral step size `1/λ_max(M)` (power iteration).
+    pub fn spectral_step_size(&self) -> f64 {
+        let l = lambda_max(&self.moment, 100, 0x5EED);
+        if l <= 0.0 {
+            1.0
+        } else {
+            1.0 / l
+        }
+    }
+
+    /// Relative parameter error `‖θ − θ*‖ / max(‖θ*‖, 1)`.
+    pub fn relative_error(&self, theta: &[f64]) -> f64 {
+        let d = crate::linalg::dist2(theta, &self.theta_star);
+        let n = crate::linalg::norm2(&self.theta_star);
+        d / n.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_generation_shapes() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(64, 16), 1);
+        assert_eq!(p.x.shape(), (64, 16));
+        assert_eq!(p.y.len(), 64);
+        assert_eq!(p.moment.shape(), (16, 16));
+        assert_eq!(p.b.len(), 16);
+        assert!(p.theta_star.iter().filter(|&&v| v != 0.0).count() > 10);
+    }
+
+    #[test]
+    fn sparse_generation_sparsity() {
+        let p = RegressionProblem::generate(&SynthConfig::sparse(64, 32, 5), 2);
+        let nnz = p.theta_star.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, 5);
+    }
+
+    #[test]
+    fn noiseless_labels_consistent() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(32, 8), 3);
+        let pred = p.x.matvec(&p.theta_star);
+        for (a, b) in pred.iter().zip(&p.y) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        assert!(p.loss(&p.theta_star) < 1e-12);
+    }
+
+    #[test]
+    fn gradient_zero_at_optimum_overdetermined() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(40, 10), 4);
+        let g = p.gradient(&p.theta_star);
+        assert!(crate::linalg::norm2(&g) < 1e-8);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(20, 5), 5);
+        let mut rng = Rng::new(6);
+        let theta = rng.gaussian_vec(5);
+        let g = p.gradient(&theta);
+        let eps = 1e-6;
+        for i in 0..5 {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let mut tm = theta.clone();
+            tm[i] -= eps;
+            let fd = (p.loss(&tp) - p.loss(&tm)) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 1e-3 * (1.0 + fd.abs()), "coord {i}: {fd} vs {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn moments_match_definitions() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(16, 6), 7);
+        let m2 = p.x.transpose().matmul(&p.x).unwrap();
+        for (a, b) in p.moment.as_slice().iter().zip(m2.as_slice()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        let b2 = p.x.transpose().matvec(&p.y);
+        for (a, b) in p.b.iter().zip(&b2) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = RegressionProblem::generate(&SynthConfig::dense(16, 4), 9);
+        let b = RegressionProblem::generate(&SynthConfig::dense(16, 4), 9);
+        assert_eq!(a.x.as_slice(), b.x.as_slice());
+        assert_eq!(a.theta_star, b.theta_star);
+    }
+
+    #[test]
+    fn spectral_step_size_positive_and_small() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(128, 32), 10);
+        let eta = p.spectral_step_size();
+        assert!(eta > 0.0 && eta < 1.0, "eta {eta}");
+        // Gradient descent with this step size must contract on a convex
+        // quadratic: one step from 0 decreases the loss.
+        let theta0 = vec![0.0; 32];
+        let g = p.gradient(&theta0);
+        let theta1: Vec<f64> = theta0.iter().zip(&g).map(|(t, gi)| t - eta * gi).collect();
+        assert!(p.loss(&theta1) < p.loss(&theta0));
+    }
+
+    #[test]
+    fn noise_increases_loss_at_truth() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(64, 8).with_noise(0.5), 11);
+        assert!(p.loss(&p.theta_star) > 0.1);
+    }
+}

@@ -1,0 +1,58 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Result alias used throughout the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors surfaced by the moment-ldpc library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Invalid configuration or parameters (dimension mismatch, bad code
+    /// parameters, ...).
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// A linear-algebra routine failed (singular matrix, non-convergence).
+    #[error("linear algebra error: {0}")]
+    Linalg(String),
+
+    /// Code construction failed (e.g. could not build a simple regular
+    /// bipartite graph, or no invertible parity submatrix was found).
+    #[error("code construction error: {0}")]
+    Code(String),
+
+    /// Erasure decoding failed (too many erasures for an exact decoder).
+    #[error("decode error: {0}")]
+    Decode(String),
+
+    /// The distributed runtime failed (a worker panicked or a channel was
+    /// closed unexpectedly).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// A PJRT artifact was missing or failed to load/compile/execute.
+    #[error("pjrt error: {0}")]
+    Pjrt(String),
+
+    /// I/O error (reading artifacts, writing reports).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Error from the underlying `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl Error {
+    /// Shorthand constructor for configuration errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,255 @@
+//! Experiment specification and trial aggregation.
+//!
+//! A *trial* re-runs the same (problem, scheme, config) with a fresh
+//! straggler realization — matching the paper's "results averaged over
+//! 100 trials". The scheme (and its one-time encoding) and the worker
+//! cluster are built once and reused across trials.
+
+use std::sync::Arc;
+
+use crate::codes::ldpc::LdpcCode;
+use crate::codes::mds::{EvalPoints, VandermondeCode};
+use crate::config::RunConfig;
+use crate::coordinator::cluster::Cluster;
+use crate::coordinator::run_with_cluster;
+use crate::coordinator::schemes::gradcoding::GradCodingScheme;
+use crate::coordinator::schemes::ksdy::{KsdyScheme, SketchKind};
+use crate::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use crate::coordinator::schemes::mds_moment::MdsMomentScheme;
+use crate::coordinator::schemes::replication::ReplicationScheme;
+use crate::coordinator::schemes::uncoded::UncodedScheme;
+use crate::coordinator::schemes::GradientScheme;
+use crate::coordinator::straggler::StragglerModel;
+use crate::data::RegressionProblem;
+use crate::error::Result;
+
+/// Declarative scheme choice (factory).
+#[derive(Debug, Clone)]
+pub enum SchemeSpec {
+    /// Scheme 2: `(n, k)` LDPC with `(l, r)`-regular ensemble.
+    Ldpc { code_k: usize, l: usize, r: usize, seed: u64 },
+    /// Scheme 1: `(n, k)` systematic Vandermonde MDS.
+    Mds { code_k: usize },
+    /// Uncoded data-parallel.
+    Uncoded,
+    /// r-replication.
+    Replication { r: usize },
+    /// KSDY17 data encoding.
+    Ksdy { kind: SketchKind, beta: f64, seed: u64 },
+    /// Gradient coding with tolerance `s`.
+    GradCoding { s: usize, seed: u64 },
+}
+
+impl SchemeSpec {
+    /// Short label for tables.
+    pub fn label(&self) -> String {
+        match self {
+            SchemeSpec::Ldpc { .. } => "ldpc-moment".into(),
+            SchemeSpec::Mds { .. } => "mds-moment".into(),
+            SchemeSpec::Uncoded => "uncoded".into(),
+            SchemeSpec::Replication { r } => format!("{r}-replication"),
+            SchemeSpec::Ksdy { kind: SketchKind::Hadamard, .. } => "ksdy17-hadamard".into(),
+            SchemeSpec::Ksdy { kind: SketchKind::Gaussian, .. } => "ksdy17-gaussian".into(),
+            SchemeSpec::GradCoding { .. } => "gradient-coding".into(),
+        }
+    }
+
+    /// Build the scheme for a problem over `workers` workers.
+    pub fn build(
+        &self,
+        problem: &RegressionProblem,
+        workers: usize,
+    ) -> Result<Box<dyn GradientScheme>> {
+        Ok(match *self {
+            SchemeSpec::Ldpc { code_k, l, r, seed } => {
+                let code = LdpcCode::gallager(workers, code_k, l, r, seed)?;
+                Box::new(LdpcMomentScheme::new(problem, code)?)
+            }
+            SchemeSpec::Mds { code_k } => {
+                let code = VandermondeCode::new(workers, code_k, EvalPoints::Chebyshev)?;
+                Box::new(MdsMomentScheme::new(problem, code)?)
+            }
+            SchemeSpec::Uncoded => Box::new(UncodedScheme::new(problem, workers)?),
+            SchemeSpec::Replication { r } => {
+                Box::new(ReplicationScheme::new(problem, workers, r)?)
+            }
+            SchemeSpec::Ksdy { kind, beta, seed } => {
+                Box::new(KsdyScheme::new(problem, workers, kind, beta, seed)?)
+            }
+            SchemeSpec::GradCoding { s, seed } => {
+                Box::new(GradCodingScheme::new(problem, workers, s, seed)?)
+            }
+        })
+    }
+
+    /// The §4 line-up: the paper's scheme plus its four baselines.
+    pub fn paper_lineup(workers: usize) -> Vec<SchemeSpec> {
+        vec![
+            SchemeSpec::Ldpc { code_k: workers / 2, l: 3, r: 6, seed: 7 },
+            SchemeSpec::Ksdy { kind: SketchKind::Hadamard, beta: 2.0, seed: 11 },
+            SchemeSpec::Ksdy { kind: SketchKind::Gaussian, beta: 2.0, seed: 13 },
+            SchemeSpec::Uncoded,
+            SchemeSpec::Replication { r: 2 },
+        ]
+    }
+}
+
+/// A full experiment: one problem, one scheme, `trials` straggler draws.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Run configuration template; the straggler seed is varied per trial.
+    pub config: RunConfig,
+    /// Number of trials.
+    pub trials: usize,
+    /// Base straggler seed (trial `i` uses `base + i`).
+    pub straggler_seed_base: u64,
+}
+
+/// Aggregated trial statistics.
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    /// Scheme label.
+    pub scheme: String,
+    /// Trials run.
+    pub trials: usize,
+    /// Fraction of trials that converged.
+    pub convergence_rate: f64,
+    /// Mean steps-to-convergence (converged trials only).
+    pub mean_steps: f64,
+    /// Std-dev of steps.
+    pub std_steps: f64,
+    /// Mean simulated computation time (ms).
+    pub mean_sim_ms: f64,
+    /// Std-dev of simulated time.
+    pub std_sim_ms: f64,
+    /// Mean wall time (ms).
+    pub mean_wall_ms: f64,
+    /// Mean unrecovered coordinates per step.
+    pub mean_unrecovered: f64,
+    /// Mean decode rounds per step.
+    pub mean_decode_rounds: f64,
+}
+
+fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (m, v.sqrt())
+}
+
+/// Re-seed the straggler model for a trial.
+fn reseed(model: &StragglerModel, seed: u64) -> StragglerModel {
+    match *model {
+        StragglerModel::None => StragglerModel::None,
+        StragglerModel::FixedCount { s, .. } => StragglerModel::FixedCount { s, seed },
+        StragglerModel::Bernoulli { q0, .. } => StragglerModel::Bernoulli { q0, seed },
+        StragglerModel::ShiftedExp { shift_ms, rate, wait_for, .. } => {
+            StragglerModel::ShiftedExp { shift_ms, rate, wait_for, seed }
+        }
+    }
+}
+
+/// Run `spec.trials` trials of a scheme on a problem, reusing the scheme
+/// encoding and worker cluster across trials.
+pub fn run_trials(
+    scheme_spec: &SchemeSpec,
+    problem: &RegressionProblem,
+    spec: &ExperimentSpec,
+) -> Result<Aggregate> {
+    let scheme = scheme_spec.build(problem, spec.config.workers)?;
+    let backend = crate::coordinator::make_backend(&spec.config)?;
+    let cluster = Cluster::spawn(scheme.payloads(), Arc::clone(&backend));
+
+    let mut steps = Vec::with_capacity(spec.trials);
+    let mut sim_ms = Vec::with_capacity(spec.trials);
+    let mut wall_ms = Vec::with_capacity(spec.trials);
+    let mut unrec = Vec::with_capacity(spec.trials);
+    let mut rounds = Vec::with_capacity(spec.trials);
+    let mut converged = 0usize;
+
+    for trial in 0..spec.trials {
+        let mut cfg = spec.config.clone();
+        cfg.straggler =
+            reseed(&spec.config.straggler, spec.straggler_seed_base + trial as u64);
+        let report = run_with_cluster(scheme.as_ref(), &cluster, problem, &cfg)?;
+        if report.converged {
+            converged += 1;
+            steps.push(report.steps as f64);
+            sim_ms.push(report.sim_time_ms());
+            wall_ms.push(report.wall_ms);
+        }
+        unrec.push(report.totals.mean_unrecovered());
+        rounds.push(report.totals.mean_decode_rounds());
+    }
+    cluster.shutdown();
+
+    let (mean_steps, std_steps) = mean_std(&steps);
+    let (mean_sim_ms, std_sim_ms) = mean_std(&sim_ms);
+    let (mean_wall_ms, _) = mean_std(&wall_ms);
+    let (mean_unrecovered, _) = mean_std(&unrec);
+    let (mean_decode_rounds, _) = mean_std(&rounds);
+    Ok(Aggregate {
+        scheme: scheme.name(),
+        trials: spec.trials,
+        convergence_rate: converged as f64 / spec.trials.max(1) as f64,
+        mean_steps,
+        std_steps,
+        mean_sim_ms,
+        std_sim_ms,
+        mean_wall_ms,
+        mean_unrecovered,
+        mean_decode_rounds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthConfig;
+
+    #[test]
+    fn trials_aggregate_and_reuse_cluster() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), 1);
+        let spec = ExperimentSpec {
+            config: RunConfig {
+                straggler: StragglerModel::FixedCount { s: 5, seed: 0 },
+                rel_tol: 1e-4,
+                max_steps: 3000,
+                ..Default::default()
+            },
+            trials: 3,
+            straggler_seed_base: 100,
+        };
+        let agg = run_trials(
+            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
+            &p,
+            &spec,
+        )
+        .unwrap();
+        assert_eq!(agg.trials, 3);
+        assert!(agg.convergence_rate > 0.99, "{agg:?}");
+        assert!(agg.mean_steps > 0.0);
+        assert!(agg.mean_sim_ms > 0.0);
+    }
+
+    #[test]
+    fn lineup_builds_all_schemes() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(64, 16), 2);
+        for spec in SchemeSpec::paper_lineup(8) {
+            // scale code_k to the worker count in the line-up helper
+            let s = spec.build(&p, 8).unwrap();
+            assert_eq!(s.workers(), 8, "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0]);
+        assert!((m - 3.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m, _) = mean_std(&[]);
+        assert!(m.is_nan());
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness: scheme factories, trial aggregation, sweeps, and
+//! table/CSV reporting. Every figure bench (`rust/benches/fig*.rs`) and
+//! the CLI drive experiments through this module.
+
+pub mod experiment;
+pub mod figures;
+pub mod report;
+
+pub use experiment::{run_trials, Aggregate, ExperimentSpec, SchemeSpec};
+pub use report::{write_csv, Table};

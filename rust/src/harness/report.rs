@@ -1,0 +1,166 @@
+//! Table formatting and CSV output for experiment results.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// A simple column-aligned text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Is the table empty?
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<width$}", cells[i], width = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write a table's CSV to `path`, creating parent directories.
+pub fn write_csv(table: &Table, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(table.to_csv().as_bytes())?;
+    Ok(())
+}
+
+/// Format a mean ± std pair.
+pub fn pm(mean: f64, std: f64) -> String {
+    if mean.is_nan() {
+        "n/a".into()
+    } else {
+        format!("{mean:.1}±{std:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("demo", &["scheme", "steps"]);
+        t.row(vec!["ldpc".into(), "123".into()]);
+        t.row(vec!["uncoded-longer".into(), "4".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("scheme"));
+        let lines: Vec<&str> = r.lines().collect();
+        // Data rows start at the same column for field 2.
+        let pos1 = lines[3].find("123").unwrap();
+        let pos2 = lines[4].find('4').unwrap();
+        assert_eq!(pos1, pos2);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["has,comma".into(), "has\"quote".into()]);
+        let c = t.to_csv();
+        assert!(c.contains("\"has,comma\""));
+        assert!(c.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn csv_roundtrip_to_file() {
+        let dir = crate::testing::TempDir::new("t").unwrap();
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into()]);
+        let p = dir.path().join("sub/out.csv");
+        write_csv(&t, &p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "a\n1\n");
+    }
+
+    #[test]
+    fn pm_formats() {
+        assert_eq!(pm(12.34, 1.26), "12.3±1.3");
+        assert_eq!(pm(f64::NAN, 0.0), "n/a");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,87 @@
+//! # moment-ldpc
+//!
+//! A production-quality reproduction of *Robust Gradient Descent via Moment
+//! Encoding with LDPC Codes* (Maity, Rawat, Mazumdar; stat.ML 2018).
+//!
+//! The library implements a straggler-tolerant distributed projected
+//! gradient descent runtime in which the second moment of the data,
+//! `M = XᵀX`, is encoded with a real-valued LDPC code and sharded across
+//! workers. The master reconstructs an (approximate) gradient from the
+//! non-straggling workers with an iterative peeling erasure decoder,
+//! yielding a stochastic-gradient-style update whose quality is tunable
+//! through the number of decoding iterations `D` (Scheme 2 of the paper).
+//!
+//! ## Architecture (three layers, Python never on the request path)
+//!
+//! * **L3 — Rust coordinator** (this crate): encoding, master/worker
+//!   message loop, straggler injection, peeling decode, optimizer loop,
+//!   all baselines (uncoded, replication, KSDY17 sketching, MDS moment
+//!   encoding, gradient coding), metrics, CLI, benches.
+//! * **L2 — JAX model** (`python/compile/model.py`): the worker compute
+//!   graph (encoded shard mat-vec, KSDY local gradient) lowered once to
+//!   HLO text by `python/compile/aot.py`.
+//! * **L1 — Pallas kernel** (`python/compile/kernels/coded_matvec.py`):
+//!   the tiled mat-vec hot-spot, `interpret=True`, validated against a
+//!   pure-jnp oracle.
+//!
+//! The Rust runtime (`runtime::pjrt`) loads `artifacts/*.hlo.txt` through
+//! the `xla` crate's PJRT CPU client; a native backend
+//! (`runtime::backend`) provides the same operations without artifacts.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use moment_ldpc::prelude::*;
+//!
+//! // 1. A synthetic least-squares instance: y = X * theta_star.
+//! let data = RegressionProblem::generate(&SynthConfig::dense(2048, 200), 7);
+//! // 2. A (40, 20) rate-1/2 regular LDPC code over the reals.
+//! let code = LdpcCode::gallager(40, 20, 3, 6, 11).unwrap();
+//! // 3. The moment-encoded distributed PGD runtime: 40 workers, 5
+//! //    stragglers per step, 10 peeling iterations.
+//! let cfg = RunConfig {
+//!     workers: 40,
+//!     straggler: StragglerModel::FixedCount { s: 5, seed: 3 },
+//!     decode_iters: 10,
+//!     ..RunConfig::default()
+//! };
+//! let scheme = LdpcMomentScheme::new(&data, code).unwrap();
+//! let report = run_distributed(Box::new(scheme), &data, &cfg).unwrap();
+//! println!("converged in {} steps", report.steps);
+//! ```
+
+pub mod cli;
+pub mod codes;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod harness;
+pub mod linalg;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::codes::ldpc::LdpcCode;
+    pub use crate::codes::mds::VandermondeCode;
+    pub use crate::codes::peeling::{PeelSchedule, PeelingDecoder};
+    pub use crate::config::RunConfig;
+    pub use crate::coordinator::run_distributed;
+    pub use crate::coordinator::schemes::ksdy::{KsdyScheme, SketchKind};
+    pub use crate::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+    pub use crate::coordinator::schemes::mds_moment::MdsMomentScheme;
+    pub use crate::coordinator::schemes::replication::ReplicationScheme;
+    pub use crate::coordinator::schemes::uncoded::UncodedScheme;
+    pub use crate::coordinator::schemes::GradientScheme;
+    pub use crate::coordinator::straggler::StragglerModel;
+    pub use crate::data::{RegressionProblem, SynthConfig};
+    pub use crate::error::{Error, Result};
+    pub use crate::linalg::Matrix;
+    pub use crate::optim::projections::Projection;
+    pub use crate::rng::Rng;
+}

@@ -1,0 +1,14 @@
+//! Dense real linear-algebra substrate.
+//!
+//! The coordinator, codes, and optimizers need matrices over `f64`:
+//! Gram matrices, mat-vecs, Gaussian elimination (for systematic LDPC
+//! generators and MDS erasure decoding), power iteration (for spectral
+//! learning-rate selection), and a handful of vector helpers. This module
+//! keeps everything row-major and allocation-explicit so the hot path can
+//! reuse buffers.
+
+pub mod matrix;
+pub mod ops;
+
+pub use matrix::Matrix;
+pub use ops::*;

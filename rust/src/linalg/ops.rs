@@ -1,0 +1,392 @@
+//! Vector helpers, dense solves, and spectral estimation.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+
+/// Dot product. The 4-way unrolled accumulation lets LLVM vectorize and
+/// keeps floating-point summation order deterministic.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `‖a - b‖₂`.
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+/// `out = a - b`.
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Scale in place.
+pub fn scale(x: &mut [f64], alpha: f64) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Solve `A x = b` by Gaussian elimination with partial pivoting.
+/// `A` is consumed as a copy; suitable for the small systems that arise in
+/// systematic-generator construction and MDS erasure decoding.
+pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    let n = a.rows();
+    if a.cols() != n || b.len() != n {
+        return Err(Error::Linalg("solve: non-square system".into()));
+    }
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // Partial pivot.
+        let mut piv = col;
+        let mut best = m[(col, col)].abs();
+        for r in col + 1..n {
+            let v = m[(r, col)].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return Err(Error::Linalg(format!("solve: singular at column {col}")));
+        }
+        if piv != col {
+            // Swap rows piv <-> col.
+            for j in 0..n {
+                let t = m[(col, j)];
+                m[(col, j)] = m[(piv, j)];
+                m[(piv, j)] = t;
+            }
+            x.swap(col, piv);
+        }
+        let d = m[(col, col)];
+        for r in col + 1..n {
+            let f = m[(r, col)] / d;
+            if f == 0.0 {
+                continue;
+            }
+            m[(r, col)] = 0.0;
+            for j in col + 1..n {
+                let v = m[(col, j)];
+                m[(r, j)] -= f * v;
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // Back substitution.
+    for col in (0..n).rev() {
+        let mut s = x[col];
+        for j in col + 1..n {
+            s -= m[(col, j)] * x[j];
+        }
+        x[col] = s / m[(col, col)];
+    }
+    Ok(x)
+}
+
+/// Matrix inverse via Gauss–Jordan with partial pivoting.
+pub fn invert(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Linalg("invert: non-square".into()));
+    }
+    let mut m = a.clone();
+    let mut inv = Matrix::identity(n);
+    for col in 0..n {
+        let mut piv = col;
+        let mut best = m[(col, col)].abs();
+        for r in col + 1..n {
+            let v = m[(r, col)].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return Err(Error::Linalg(format!("invert: singular at column {col}")));
+        }
+        if piv != col {
+            for j in 0..n {
+                let t = m[(col, j)];
+                m[(col, j)] = m[(piv, j)];
+                m[(piv, j)] = t;
+                let t = inv[(col, j)];
+                inv[(col, j)] = inv[(piv, j)];
+                inv[(piv, j)] = t;
+            }
+        }
+        let d = m[(col, col)];
+        for j in 0..n {
+            m[(col, j)] /= d;
+            inv[(col, j)] /= d;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = m[(r, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let mv = m[(col, j)];
+                m[(r, j)] -= f * mv;
+                let iv = inv[(col, j)];
+                inv[(r, j)] -= f * iv;
+            }
+        }
+    }
+    Ok(inv)
+}
+
+/// Rank of a matrix via row echelon reduction with partial pivoting.
+pub fn rank(a: &Matrix, tol: f64) -> usize {
+    let (rows, cols) = a.shape();
+    let mut m = a.clone();
+    let mut rank = 0;
+    let mut row = 0;
+    for col in 0..cols {
+        if row >= rows {
+            break;
+        }
+        let mut piv = row;
+        let mut best = m[(row, col)].abs();
+        for r in row + 1..rows {
+            let v = m[(r, col)].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best <= tol {
+            continue;
+        }
+        if piv != row {
+            for j in 0..cols {
+                let t = m[(row, j)];
+                m[(row, j)] = m[(piv, j)];
+                m[(piv, j)] = t;
+            }
+        }
+        let d = m[(row, col)];
+        for r in row + 1..rows {
+            let f = m[(r, col)] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..cols {
+                let v = m[(row, j)];
+                m[(r, j)] -= f * v;
+            }
+        }
+        rank += 1;
+        row += 1;
+    }
+    rank
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix via power iteration.
+/// Used to pick the spectral step size `η = 1/λ_max(XᵀX)`.
+pub fn lambda_max(m: &Matrix, iters: usize, seed: u64) -> f64 {
+    let n = m.rows();
+    debug_assert_eq!(m.cols(), n);
+    let mut rng = Rng::new(seed);
+    let mut v = rng.gaussian_vec(n);
+    let mut w = vec![0.0; n];
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        m.matvec_into(&v, &mut w);
+        let nrm = norm2(&w);
+        if nrm == 0.0 {
+            return 0.0;
+        }
+        for (vi, &wi) in v.iter_mut().zip(&w) {
+            *vi = wi / nrm;
+        }
+        lambda = nrm;
+    }
+    // Final Rayleigh quotient for accuracy.
+    m.matvec_into(&v, &mut w);
+    let rq = dot(&v, &w) / dot(&v, &v);
+    if rq.is_finite() {
+        rq
+    } else {
+        lambda
+    }
+}
+
+/// 2-norm condition number estimate of a square matrix: power iteration on
+/// `AᵀA` for `σ_max` and inverse iteration (via [`solve`] on `AᵀA`) for
+/// `σ_min`. Used to demonstrate the Vandermonde conditioning pathology the
+/// paper cites as a motivation for LDPC codes. A numerically singular
+/// matrix reports `f64::INFINITY` rather than an error.
+pub fn condition_number(a: &Matrix, iters: usize, seed: u64) -> Result<f64> {
+    let ata = a.transpose().matmul(a)?;
+    let smax2 = lambda_max(&ata, iters, seed);
+    // Inverse power iteration: v <- (AᵀA)^{-1} v normalized.
+    let n = ata.rows();
+    let mut rng = Rng::new(seed ^ 0xDEAD_BEEF);
+    let mut v = rng.gaussian_vec(n);
+    let nrm0 = norm2(&v);
+    scale(&mut v, 1.0 / nrm0);
+    let mut mu = 0.0;
+    for _ in 0..iters {
+        let w = match solve(&ata, &v) {
+            Ok(w) => w,
+            // Pivot below tolerance: AᵀA is numerically singular.
+            Err(_) => return Ok(f64::INFINITY),
+        };
+        let nrm = norm2(&w);
+        if !nrm.is_finite() || nrm == 0.0 {
+            return Ok(f64::INFINITY);
+        }
+        for (vi, &wi) in v.iter_mut().zip(&w) {
+            *vi = wi / nrm;
+        }
+        mu = nrm; // ≈ 1/λ_min
+    }
+    let smin2 = 1.0 / mu;
+    Ok((smax2 / smin2).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(4);
+        for n in [0, 1, 3, 4, 7, 64, 100] {
+            let a = rng.gaussian_vec(n);
+            let b = rng.gaussian_vec(n);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let mut rng = Rng::new(5);
+        for n in [1, 2, 5, 20] {
+            let a = Matrix::gaussian(n, n, &mut rng);
+            let x_true = rng.gaussian_vec(n);
+            let b = a.matvec(&x_true);
+            let x = solve(&a, &b).unwrap();
+            for (g, w) in x.iter().zip(&x_true) {
+                assert!((g - w).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_singular_errors() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]).unwrap();
+        assert!(solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::gaussian(8, 8, &mut rng);
+        let inv = invert(&a).unwrap();
+        let prod = a.matmul(&inv).unwrap();
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_detects_deficiency() {
+        let full = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]).unwrap();
+        assert_eq!(rank(&full, 1e-10), 2);
+        let def = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]).unwrap();
+        assert_eq!(rank(&def, 1e-10), 1);
+        let wide = Matrix::from_rows(&[vec![1.0, 0.0, 1.0], vec![0.0, 1.0, 1.0]]).unwrap();
+        assert_eq!(rank(&wide, 1e-10), 2);
+    }
+
+    #[test]
+    fn lambda_max_diagonal() {
+        let m = Matrix::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 7.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ])
+        .unwrap();
+        let l = lambda_max(&m, 200, 1);
+        assert!((l - 7.0).abs() < 1e-6, "lambda {l}");
+    }
+
+    #[test]
+    fn lambda_max_gram_bounds() {
+        // For an m x k standard Gaussian X, lambda_max(X^T X) concentrates
+        // near (sqrt(m)+sqrt(k))^2.
+        let mut rng = Rng::new(8);
+        let x = Matrix::gaussian(200, 50, &mut rng);
+        let g = x.gram();
+        let l = lambda_max(&g, 300, 2);
+        let expect = (200f64.sqrt() + 50f64.sqrt()).powi(2);
+        assert!(l > 0.5 * expect && l < 1.5 * expect, "lambda {l} vs {expect}");
+    }
+
+    #[test]
+    fn condition_number_identity() {
+        let i = Matrix::identity(6);
+        let c = condition_number(&i, 100, 3).unwrap();
+        assert!((c - 1.0).abs() < 1e-6, "cond {c}");
+    }
+
+    #[test]
+    fn condition_number_scaled_diag() {
+        let m = Matrix::from_rows(&[vec![10.0, 0.0], vec![0.0, 0.1]]).unwrap();
+        let c = condition_number(&m, 200, 4).unwrap();
+        assert!((c - 100.0).abs() / 100.0 < 0.01, "cond {c}");
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![6.0, 12.0]);
+    }
+}

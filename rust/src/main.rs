@@ -1,0 +1,228 @@
+//! `moment-ldpc` CLI — the launcher for the distributed runtime and the
+//! figure-reproduction drivers.
+
+use moment_ldpc::cli::{Args, USAGE};
+use moment_ldpc::codes::density::DensityEvolution;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::schemes::ksdy::SketchKind;
+use moment_ldpc::coordinator::straggler::StragglerModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::error::{Error, Result};
+use moment_ldpc::harness::experiment::{run_trials, ExperimentSpec, SchemeSpec};
+use moment_ldpc::harness::figures::{fig1, fig2, fig3, FigureScale};
+use moment_ldpc::harness::report::{write_csv, Table};
+use moment_ldpc::optim::projections::Projection;
+use moment_ldpc::runtime::artifact::{ArtifactRegistry, Kernel};
+use moment_ldpc::runtime::BackendChoice;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "run" => cmd_run(args),
+        "fig1" => cmd_fig(args, 1),
+        "fig2" => cmd_fig(args, 2),
+        "fig3" => cmd_fig(args, 3),
+        "density" => cmd_density(args),
+        "artifacts" => cmd_artifacts(args),
+        other => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),
+    }
+}
+
+fn scheme_spec_from(name: &str, args: &Args, workers: usize) -> Result<SchemeSpec> {
+    let seed = args.get::<u64>("code-seed", 7)?;
+    Ok(match name {
+        "ldpc" => SchemeSpec::Ldpc {
+            code_k: args.get::<usize>("code-k", workers / 2)?,
+            l: args.get::<usize>("ldpc-l", 3)?,
+            r: args.get::<usize>("ldpc-r", 6)?,
+            seed,
+        },
+        "mds" => SchemeSpec::Mds { code_k: args.get::<usize>("code-k", workers / 2)? },
+        "uncoded" => SchemeSpec::Uncoded,
+        "replication" => SchemeSpec::Replication { r: args.get::<usize>("repl", 2)? },
+        "ksdy-hadamard" => SchemeSpec::Ksdy {
+            kind: SketchKind::Hadamard,
+            beta: args.get::<f64>("beta", 2.0)?,
+            seed,
+        },
+        "ksdy-gaussian" => SchemeSpec::Ksdy {
+            kind: SketchKind::Gaussian,
+            beta: args.get::<f64>("beta", 2.0)?,
+            seed,
+        },
+        "gradcoding" => SchemeSpec::GradCoding {
+            s: args.get::<usize>("stragglers", 5)?,
+            seed,
+        },
+        other => return Err(Error::Config(format!("unknown scheme '{other}'"))),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let m = args.get::<usize>("m", 2048)?;
+    let k = args.get::<usize>("k", 400)?;
+    let workers = args.get::<usize>("workers", 40)?;
+    let s = args.get::<usize>("stragglers", 5)?;
+    let sparsity = args.get_opt::<usize>("sparsity")?;
+    let trials = args.get::<usize>("trials", 1)?;
+    let backend: BackendChoice = args
+        .get_str("backend", "native")
+        .parse()
+        .map_err(Error::Config)?;
+
+    let synth = match sparsity {
+        Some(u) => SynthConfig::sparse(m, k, u),
+        None => SynthConfig::dense(m, k),
+    };
+    let problem = RegressionProblem::generate(&synth, args.get::<u64>("data-seed", 1)?);
+    let projection = match sparsity {
+        Some(u) => Projection::HardThreshold(u),
+        None => Projection::None,
+    };
+    let spec = ExperimentSpec {
+        config: RunConfig {
+            workers,
+            straggler: if s == 0 {
+                StragglerModel::None
+            } else {
+                StragglerModel::FixedCount { s, seed: 0 }
+            },
+            decode_iters: args.get::<usize>("decode-iters", 20)?,
+            step_size: args.get_opt::<f64>("step")?,
+            projection,
+            rel_tol: args.get::<f64>("rel-tol", 1e-3)?,
+            max_steps: args.get::<usize>("max-steps", 4000)?,
+            backend,
+            record_trace: args.has("trace"),
+            ..Default::default()
+        },
+        trials,
+        straggler_seed_base: args.get::<u64>("straggler-seed", 1000)?,
+    };
+    let scheme = scheme_spec_from(&args.get_str("scheme", "ldpc"), args, workers)?;
+    let agg = run_trials(&scheme, &problem, &spec)?;
+    if args.has("json") {
+        println!(
+            "{{\"scheme\":\"{}\",\"trials\":{},\"convergence_rate\":{:.3},\
+             \"mean_steps\":{:.2},\"std_steps\":{:.2},\"mean_sim_ms\":{:.3},\
+             \"mean_unrecovered\":{:.3},\"mean_decode_rounds\":{:.3}}}",
+            agg.scheme,
+            agg.trials,
+            agg.convergence_rate,
+            agg.mean_steps,
+            agg.std_steps,
+            agg.mean_sim_ms,
+            agg.mean_unrecovered,
+            agg.mean_decode_rounds
+        );
+    } else {
+        println!(
+            "scheme={} trials={} converged={:.0}% steps={:.1}±{:.1} sim_ms={:.2}±{:.2} \
+             unrec/step={:.2} rounds/step={:.2}",
+            agg.scheme,
+            agg.trials,
+            100.0 * agg.convergence_rate,
+            agg.mean_steps,
+            agg.std_steps,
+            agg.mean_sim_ms,
+            agg.std_sim_ms,
+            agg.mean_unrecovered,
+            agg.mean_decode_rounds
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig(args: &Args, which: usize) -> Result<()> {
+    let scale = if args.has("quick") {
+        FigureScale::quick()
+    } else {
+        FigureScale::full(args.get::<usize>("trials", 10)?)
+    };
+    let out_dir = std::path::PathBuf::from(args.get_str("out", "bench_out"));
+    match which {
+        1 => {
+            let (_, steps, time) = fig1(&scale)?;
+            print!("{}", steps.render());
+            print!("{}", time.render());
+            write_csv(&steps, &out_dir.join("fig1_steps.csv"))?;
+            write_csv(&time, &out_dir.join("fig1_time.csv"))?;
+        }
+        2 => {
+            let (_, steps) = fig2(&scale)?;
+            print!("{}", steps.render());
+            write_csv(&steps, &out_dir.join("fig2_steps.csv"))?;
+        }
+        3 => {
+            let (_, steps, time) = fig3(&scale)?;
+            print!("{}", steps.render());
+            print!("{}", time.render());
+            write_csv(&steps, &out_dir.join("fig3_steps.csv"))?;
+            write_csv(&time, &out_dir.join("fig3_time.csv"))?;
+        }
+        _ => unreachable!(),
+    }
+    Ok(())
+}
+
+fn cmd_density(args: &Args) -> Result<()> {
+    let l = args.get::<usize>("l", 3)?;
+    let r = args.get::<usize>("r", 6)?;
+    let de = DensityEvolution::new(l, r);
+    println!("({l},{r})-regular ensemble: threshold q* = {:.4}", de.threshold());
+    let mut t = Table::new(
+        format!("density evolution q_d, ({l},{r})-regular"),
+        &["q0", "d=1", "d=2", "d=5", "d=10", "d=20", "iters to 1e-6"],
+    );
+    for q0 in [0.05, 0.1, 0.125, 0.2, 0.25, 0.3, 0.4, 0.42, 0.45, 0.5] {
+        let qs = de.evolve(q0, 20);
+        let iters = de
+            .iterations_to(q0, 1e-6, 100_000)
+            .map(|d| d.to_string())
+            .unwrap_or_else(|| "stalls".into());
+        t.row(vec![
+            format!("{q0:.3}"),
+            format!("{:.4}", qs[1]),
+            format!("{:.4}", qs[2]),
+            format!("{:.4}", qs[5]),
+            format!("{:.4}", qs[10]),
+            format!("{:.4}", qs[20]),
+            iters,
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_str("dir", "artifacts"));
+    let reg = ArtifactRegistry::scan(&dir)?;
+    println!("artifacts in {}: {}", dir.display(), reg.len());
+    for kernel in [Kernel::ShardMatvec, Kernel::LocalGrad] {
+        for a in reg.all(kernel) {
+            println!("  {:<14} {:>6} x {:<6} {}", kernel.prefix(), a.rows, a.cols, a.path.display());
+        }
+    }
+    Ok(())
+}

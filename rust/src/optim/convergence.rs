@@ -1,0 +1,97 @@
+//! Stopping rules for the optimization loops.
+//!
+//! The paper's §4 metric is "the number of steps until the Euclidean
+//! distance of the evaluated parameter from the actual parameter vector
+//! θ* is within a small threshold"; [`ConvergenceRule::DistanceToTruth`]
+//! implements exactly that. The other rules support the unconstrained
+//! library use cases where θ* is unknown.
+
+/// Why an optimization loop stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The convergence rule fired at this step.
+    Converged,
+    /// The step budget was exhausted.
+    MaxSteps,
+    /// The iterate diverged (non-finite values).
+    Diverged,
+}
+
+/// A stopping rule evaluated once per optimization step.
+#[derive(Debug, Clone)]
+pub enum ConvergenceRule {
+    /// `‖θ_t − θ*‖₂ ≤ tol` (the paper's criterion).
+    DistanceToTruth { theta_star: Vec<f64>, tol: f64 },
+    /// `‖θ_t − θ*‖₂ / max(‖θ*‖, 1) ≤ tol`.
+    RelativeDistance { theta_star: Vec<f64>, tol: f64 },
+    /// `‖∇L(θ_t)‖₂ ≤ tol` (needs the caller to pass the gradient).
+    GradientNorm { tol: f64 },
+    /// Never stop early (run exactly `max_steps`).
+    Never,
+}
+
+impl ConvergenceRule {
+    /// Evaluate the rule. `grad` may be `None` for rules that do not need
+    /// it (GradientNorm returns `false` in that case).
+    pub fn is_converged(&self, theta: &[f64], grad: Option<&[f64]>) -> bool {
+        match self {
+            ConvergenceRule::DistanceToTruth { theta_star, tol } => {
+                crate::linalg::dist2(theta, theta_star) <= *tol
+            }
+            ConvergenceRule::RelativeDistance { theta_star, tol } => {
+                let d = crate::linalg::dist2(theta, theta_star);
+                let n = crate::linalg::norm2(theta_star).max(1.0);
+                d / n <= *tol
+            }
+            ConvergenceRule::GradientNorm { tol } => {
+                grad.map(|g| crate::linalg::norm2(g) <= *tol).unwrap_or(false)
+            }
+            ConvergenceRule::Never => false,
+        }
+    }
+
+    /// Detect divergence: any non-finite coordinate.
+    pub fn is_diverged(theta: &[f64]) -> bool {
+        theta.iter().any(|v| !v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_rule() {
+        let rule = ConvergenceRule::DistanceToTruth { theta_star: vec![1.0, 1.0], tol: 0.1 };
+        assert!(rule.is_converged(&[1.0, 1.05], None));
+        assert!(!rule.is_converged(&[0.0, 0.0], None));
+    }
+
+    #[test]
+    fn relative_rule_scales() {
+        let rule =
+            ConvergenceRule::RelativeDistance { theta_star: vec![10.0, 0.0], tol: 0.01 };
+        assert!(rule.is_converged(&[10.05, 0.0], None));
+        assert!(!rule.is_converged(&[9.0, 0.0], None));
+    }
+
+    #[test]
+    fn gradient_rule_requires_grad() {
+        let rule = ConvergenceRule::GradientNorm { tol: 0.1 };
+        assert!(!rule.is_converged(&[0.0], None));
+        assert!(rule.is_converged(&[0.0], Some(&[0.05])));
+        assert!(!rule.is_converged(&[0.0], Some(&[0.5])));
+    }
+
+    #[test]
+    fn never_never_stops() {
+        assert!(!ConvergenceRule::Never.is_converged(&[0.0], Some(&[0.0])));
+    }
+
+    #[test]
+    fn divergence_detection() {
+        assert!(ConvergenceRule::is_diverged(&[1.0, f64::NAN]));
+        assert!(ConvergenceRule::is_diverged(&[f64::INFINITY]));
+        assert!(!ConvergenceRule::is_diverged(&[1.0, -2.0]));
+    }
+}

@@ -1,0 +1,11 @@
+//! Optimization substrate: projections, PGD, PSGD, convergence rules.
+
+pub mod convergence;
+pub mod pgd;
+pub mod projections;
+pub mod psgd;
+
+pub use convergence::{ConvergenceRule, StopReason};
+pub use pgd::{pgd, PgdOptions, Trace};
+pub use projections::Projection;
+pub use psgd::{psgd, PsgdOptions};

@@ -1,0 +1,287 @@
+//! Projection operators `P_Θ` (eq. 4) for the structured constraint sets
+//! the paper considers.
+//!
+//! * `None` — unconstrained least squares (Fig. 1).
+//! * `HardThreshold(u)` — the `H_u` operator of Garg–Khandekar IHT used
+//!   for sparse recovery (Figs. 2–3): keep the `u` largest-magnitude
+//!   coordinates, zero the rest.
+//! * `L2Ball(R)` — `{θ : ‖θ‖₂ ≤ R}` (Theorem 1's setting).
+//! * `L1Ball(R)` — `{θ : ‖θ‖₁ ≤ R}` via the Duchi et al. (2008) simplex
+//!   algorithm; the decomposable-regularizer example from Remark 1.
+//!
+//! Every operator is non-expansive onto its (convex) set; `HardThreshold`
+//! is the one non-convex member and satisfies the weaker "best u-term
+//! approximation" property instead. Property tests cover both.
+
+/// A projection operator onto a constraint set `Θ`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Projection {
+    /// Identity (unconstrained problem).
+    None,
+    /// Keep the `u` largest-magnitude coordinates (IHT's `H_u`).
+    HardThreshold(usize),
+    /// Euclidean ball of radius `r`.
+    L2Ball(f64),
+    /// ℓ1 ball of radius `r`.
+    L1Ball(f64),
+}
+
+impl Projection {
+    /// Apply in place.
+    pub fn apply(&self, theta: &mut [f64]) {
+        match *self {
+            Projection::None => {}
+            Projection::HardThreshold(u) => hard_threshold(theta, u),
+            Projection::L2Ball(r) => project_l2_ball(theta, r),
+            Projection::L1Ball(r) => project_l1_ball(theta, r),
+        }
+    }
+
+    /// Does `theta` (approximately) satisfy the constraint?
+    pub fn contains(&self, theta: &[f64], tol: f64) -> bool {
+        match *self {
+            Projection::None => true,
+            Projection::HardThreshold(u) => {
+                theta.iter().filter(|&&v| v != 0.0).count() <= u
+            }
+            Projection::L2Ball(r) => crate::linalg::norm2(theta) <= r + tol,
+            Projection::L1Ball(r) => theta.iter().map(|v| v.abs()).sum::<f64>() <= r + tol,
+        }
+    }
+}
+
+/// `H_u`: zero all but the `u` largest-magnitude coordinates.
+/// O(k) selection via quickselect on a scratch copy; ties broken toward
+/// lower indices (deterministic).
+pub fn hard_threshold(theta: &mut [f64], u: usize) {
+    let k = theta.len();
+    if u >= k {
+        return;
+    }
+    if u == 0 {
+        theta.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    // Find the magnitude of the u-th largest entry.
+    let mut mags: Vec<f64> = theta.iter().map(|v| v.abs()).collect();
+    let thresh = {
+        let idx = u - 1;
+        // select_nth_unstable sorts descending around the pivot.
+        let (_, t, _) = mags.select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
+        *t
+    };
+    // Keep entries strictly above the threshold, then fill remaining
+    // capacity with ties (scanning left to right for determinism).
+    let mut kept = theta.iter().filter(|v| v.abs() > thresh).count();
+    for v in theta.iter_mut() {
+        let m = v.abs();
+        if m > thresh {
+            continue;
+        }
+        if m == thresh && kept < u {
+            kept += 1;
+            continue;
+        }
+        *v = 0.0;
+    }
+}
+
+/// Project onto `{θ : ‖θ‖₂ ≤ r}` (rescale if outside).
+pub fn project_l2_ball(theta: &mut [f64], r: f64) {
+    let n = crate::linalg::norm2(theta);
+    if n > r {
+        let s = r / n;
+        for v in theta.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// Project onto `{θ : ‖θ‖₁ ≤ r}` — Duchi et al. (ICML 2008).
+pub fn project_l1_ball(theta: &mut [f64], r: f64) {
+    let l1: f64 = theta.iter().map(|v| v.abs()).sum();
+    if l1 <= r {
+        return;
+    }
+    // Find the soft threshold tau via the sorted-magnitudes formula.
+    let mut mags: Vec<f64> = theta.iter().map(|v| v.abs()).collect();
+    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cumsum = 0.0;
+    let mut rho = 0;
+    let mut tau = 0.0;
+    for (j, &m) in mags.iter().enumerate() {
+        cumsum += m;
+        let t = (cumsum - r) / (j + 1) as f64;
+        if m > t {
+            rho = j + 1;
+            tau = t;
+        } else {
+            break;
+        }
+    }
+    debug_assert!(rho > 0);
+    for v in theta.iter_mut() {
+        let m = v.abs() - tau;
+        *v = if m > 0.0 { v.signum() * m } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn none_is_identity() {
+        let mut v = vec![1.0, -2.0, 3.0];
+        Projection::None.apply(&mut v);
+        assert_eq!(v, vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn hard_threshold_keeps_largest() {
+        let mut v = vec![3.0, -1.0, 4.0, -1.5, 0.5];
+        hard_threshold(&mut v, 2);
+        assert_eq!(v, vec![3.0, 0.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn hard_threshold_u_zero_and_u_ge_k() {
+        let mut v = vec![1.0, 2.0];
+        hard_threshold(&mut v, 0);
+        assert_eq!(v, vec![0.0, 0.0]);
+        let mut w = vec![1.0, 2.0];
+        hard_threshold(&mut w, 5);
+        assert_eq!(w, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn hard_threshold_exact_count_with_ties() {
+        let mut v = vec![1.0, -1.0, 1.0, 1.0];
+        hard_threshold(&mut v, 2);
+        let nnz = v.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nnz, 2);
+        // Ties broken toward lower indices.
+        assert_eq!(v, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn hard_threshold_is_best_u_term_approx() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let k = 2 + rng.below(20);
+            let u = rng.below(k + 1);
+            let orig = rng.gaussian_vec(k);
+            let mut ht = orig.clone();
+            hard_threshold(&mut ht, u);
+            // Error of H_u equals the sum of squares of the k-u smallest
+            // magnitudes — no u-sparse vector does better.
+            let err: f64 = orig.iter().zip(&ht).map(|(a, b)| (a - b) * (a - b)).sum();
+            let mut mags: Vec<f64> = orig.iter().map(|v| v * v).collect();
+            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let best: f64 = mags.iter().skip(u).sum();
+            assert!((err - best).abs() < 1e-10, "err {err} vs best {best}");
+        }
+    }
+
+    #[test]
+    fn l2_ball_projection() {
+        let mut v = vec![3.0, 4.0];
+        project_l2_ball(&mut v, 1.0);
+        assert!((crate::linalg::norm2(&v) - 1.0).abs() < 1e-12);
+        assert!((v[0] - 0.6).abs() < 1e-12 && (v[1] - 0.8).abs() < 1e-12);
+        // Inside: untouched.
+        let mut w = vec![0.1, 0.1];
+        project_l2_ball(&mut w, 1.0);
+        assert_eq!(w, vec![0.1, 0.1]);
+    }
+
+    #[test]
+    fn l1_ball_known_case() {
+        let mut v = vec![2.0, 1.0];
+        project_l1_ball(&mut v, 1.0);
+        // Solution: soft threshold tau = 1: (1, 0).
+        assert!((v[0] - 1.0).abs() < 1e-12, "{v:?}");
+        assert!(v[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn l1_ball_feasible_and_optimal() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let k = 2 + rng.below(10);
+            let r = 0.1 + rng.uniform() * 3.0;
+            let orig = rng.gaussian_vec(k);
+            let mut proj = orig.clone();
+            project_l1_ball(&mut proj, r);
+            let l1: f64 = proj.iter().map(|v| v.abs()).sum();
+            assert!(l1 <= r + 1e-9, "l1 {l1} > r {r}");
+            // Optimality spot-check: projection no farther than any of a
+            // few random feasible points.
+            let d_proj = crate::linalg::dist2(&orig, &proj);
+            for _ in 0..10 {
+                let mut cand = rng.gaussian_vec(k);
+                project_l1_ball(&mut cand, r);
+                let d_cand = crate::linalg::dist2(&orig, &cand);
+                assert!(d_proj <= d_cand + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn projections_are_non_expansive() {
+        // ‖P(a) − P(b)‖ ≤ ‖a − b‖ for the convex projections (Thm 1's
+        // key property).
+        let mut rng = Rng::new(3);
+        for proj in [Projection::L2Ball(1.3), Projection::L1Ball(2.0)] {
+            for _ in 0..100 {
+                let k = 2 + rng.below(8);
+                let a = rng.gaussian_vec(k);
+                let b = rng.gaussian_vec(k);
+                let mut pa = a.clone();
+                let mut pb = b.clone();
+                proj.apply(&mut pa);
+                proj.apply(&mut pb);
+                let before = crate::linalg::dist2(&a, &b);
+                let after = crate::linalg::dist2(&pa, &pb);
+                assert!(after <= before + 1e-9, "{proj:?}: {after} > {before}");
+            }
+        }
+    }
+
+    #[test]
+    fn idempotence() {
+        let mut rng = Rng::new(4);
+        for proj in [
+            Projection::HardThreshold(3),
+            Projection::L2Ball(1.0),
+            Projection::L1Ball(1.5),
+        ] {
+            for _ in 0..50 {
+                let mut v = rng.gaussian_vec(8);
+                proj.apply(&mut v);
+                let once = v.clone();
+                proj.apply(&mut v);
+                for (a, b) in v.iter().zip(&once) {
+                    assert!((a - b).abs() < 1e-10, "{proj:?} not idempotent");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn contains_agrees_with_apply() {
+        let mut rng = Rng::new(5);
+        for proj in [
+            Projection::HardThreshold(3),
+            Projection::L2Ball(1.0),
+            Projection::L1Ball(1.5),
+        ] {
+            for _ in 0..50 {
+                let mut v = rng.gaussian_vec(8);
+                proj.apply(&mut v);
+                assert!(proj.contains(&v, 1e-9), "{proj:?}");
+            }
+        }
+    }
+}

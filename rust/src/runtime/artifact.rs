@@ -1,0 +1,186 @@
+//! AOT artifact registry.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX model (which calls the L1
+//! Pallas kernel) to HLO **text** once per (kernel, shape) pair:
+//!
+//! * `shard_matvec_{R}x{C}.hlo.txt` — `(rows f32[R,C], theta f32[C]) ->
+//!   f32[R]`, the Scheme 1/2 worker task;
+//! * `local_grad_{R}x{C}.hlo.txt` — `(x f32[R,C], y f32[R], theta
+//!   f32[C]) -> f32[C]`, the KSDY17/uncoded worker task.
+//!
+//! Shapes are fixed at AOT time, so the registry picks, for a runtime
+//! shard of shape `(r, c)`, the smallest artifact with `R ≥ r` and
+//! `C ≥ c`; inputs are zero-padded (zero rows/columns contribute nothing
+//! to either kernel, so padding is exact).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Which AOT kernel an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Kernel {
+    /// `rows · θ`.
+    ShardMatvec,
+    /// `Xᵀ(Xθ − y)`.
+    LocalGrad,
+}
+
+impl Kernel {
+    /// File-name prefix.
+    pub fn prefix(self) -> &'static str {
+        match self {
+            Kernel::ShardMatvec => "shard_matvec",
+            Kernel::LocalGrad => "local_grad",
+        }
+    }
+}
+
+/// A discovered artifact file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    /// Kernel kind.
+    pub kernel: Kernel,
+    /// Compiled row count `R`.
+    pub rows: usize,
+    /// Compiled column count `C`.
+    pub cols: usize,
+    /// File path.
+    pub path: PathBuf,
+}
+
+/// Registry of artifacts found in a directory.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactRegistry {
+    by_kernel: BTreeMap<Kernel, Vec<Artifact>>,
+}
+
+/// Parse `prefix_{R}x{C}.hlo.txt`.
+fn parse_name(name: &str) -> Option<(Kernel, usize, usize)> {
+    let stem = name.strip_suffix(".hlo.txt")?;
+    for kernel in [Kernel::ShardMatvec, Kernel::LocalGrad] {
+        if let Some(shape) = stem.strip_prefix(kernel.prefix()) {
+            let shape = shape.strip_prefix('_')?;
+            let (r, c) = shape.split_once('x')?;
+            return Some((kernel, r.parse().ok()?, c.parse().ok()?));
+        }
+    }
+    None
+}
+
+impl ArtifactRegistry {
+    /// Scan a directory for artifacts. An empty registry is returned for
+    /// an empty/missing directory (callers decide whether that is fatal).
+    pub fn scan(dir: &Path) -> Result<Self> {
+        let mut by_kernel: BTreeMap<Kernel, Vec<Artifact>> = BTreeMap::new();
+        if !dir.exists() {
+            return Ok(ArtifactRegistry { by_kernel });
+        }
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some((kernel, rows, cols)) = parse_name(&name) {
+                by_kernel.entry(kernel).or_default().push(Artifact {
+                    kernel,
+                    rows,
+                    cols,
+                    path: entry.path(),
+                });
+            }
+        }
+        // Sort by padded area so `find` takes the first (smallest) fit.
+        for v in by_kernel.values_mut() {
+            v.sort_by_key(|a| (a.rows * a.cols, a.rows, a.cols));
+        }
+        Ok(ArtifactRegistry { by_kernel })
+    }
+
+    /// Total artifacts known.
+    pub fn len(&self) -> usize {
+        self.by_kernel.values().map(|v| v.len()).sum()
+    }
+
+    /// Is the registry empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All artifacts of a kernel (sorted by area).
+    pub fn all(&self, kernel: Kernel) -> &[Artifact] {
+        self.by_kernel.get(&kernel).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Smallest artifact covering shape `(rows, cols)`.
+    pub fn find(&self, kernel: Kernel, rows: usize, cols: usize) -> Result<&Artifact> {
+        self.all(kernel)
+            .iter()
+            .find(|a| a.rows >= rows && a.cols >= cols)
+            .ok_or_else(|| {
+                Error::Pjrt(format!(
+                    "no {} artifact covers shape ({rows}, {cols}); run `make artifacts` \
+                     (available: {:?})",
+                    kernel.prefix(),
+                    self.all(kernel)
+                        .iter()
+                        .map(|a| (a.rows, a.cols))
+                        .collect::<Vec<_>>()
+                ))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_parsing() {
+        assert_eq!(
+            parse_name("shard_matvec_64x1024.hlo.txt"),
+            Some((Kernel::ShardMatvec, 64, 1024))
+        );
+        assert_eq!(
+            parse_name("local_grad_128x256.hlo.txt"),
+            Some((Kernel::LocalGrad, 128, 256))
+        );
+        assert_eq!(parse_name("other_64x64.hlo.txt"), None);
+        assert_eq!(parse_name("shard_matvec_64.hlo.txt"), None);
+        assert_eq!(parse_name("shard_matvec_64x64.txt"), None);
+    }
+
+    #[test]
+    fn scan_and_find() {
+        let dir = crate::testing::TempDir::new("t").unwrap();
+        for name in [
+            "shard_matvec_16x32.hlo.txt",
+            "shard_matvec_64x128.hlo.txt",
+            "shard_matvec_256x512.hlo.txt",
+            "local_grad_64x64.hlo.txt",
+            "README.md",
+        ] {
+            std::fs::write(dir.path().join(name), "dummy").unwrap();
+        }
+        let reg = ArtifactRegistry::scan(dir.path()).unwrap();
+        assert_eq!(reg.len(), 4);
+        // Exact fit.
+        let a = reg.find(Kernel::ShardMatvec, 16, 32).unwrap();
+        assert_eq!((a.rows, a.cols), (16, 32));
+        // Smallest cover.
+        let a = reg.find(Kernel::ShardMatvec, 17, 32).unwrap();
+        assert_eq!((a.rows, a.cols), (64, 128));
+        let a = reg.find(Kernel::ShardMatvec, 65, 500).unwrap();
+        assert_eq!((a.rows, a.cols), (256, 512));
+        // Too big.
+        assert!(reg.find(Kernel::ShardMatvec, 1000, 1).is_err());
+        // Kernel separation.
+        assert!(reg.find(Kernel::LocalGrad, 64, 65).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_empty() {
+        let reg = ArtifactRegistry::scan(Path::new("/nonexistent/path/xyz")).unwrap();
+        assert!(reg.is_empty());
+    }
+}

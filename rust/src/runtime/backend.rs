@@ -1,0 +1,122 @@
+//! The worker-compute abstraction and its native implementation.
+
+use crate::error::Result;
+use crate::linalg::Matrix;
+
+/// Which backend to instantiate (CLI / config selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Pure-Rust loops; always available.
+    Native,
+    /// AOT-compiled XLA executables via PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+impl std::str::FromStr for BackendChoice {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "native" => Ok(BackendChoice::Native),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            other => Err(format!("unknown backend '{other}' (expected native|pjrt)")),
+        }
+    }
+}
+
+/// Worker-side compute kernels.
+///
+/// Implementations must be shareable across worker threads.
+pub trait ComputeBackend: Send + Sync {
+    /// Dense mat-vec `rows · θ` — the Scheme 1/2 worker task.
+    fn matvec(&self, rows: &Matrix, theta: &[f64]) -> Result<Vec<f64>>;
+
+    /// Local least-squares gradient `Xᵀ(Xθ − y)` — the KSDY17 / uncoded /
+    /// replication worker task.
+    fn local_grad(&self, x: &Matrix, y: &[f64], theta: &[f64]) -> Result<Vec<f64>> {
+        let mut r = self.matvec(x, theta)?;
+        for (ri, yi) in r.iter_mut().zip(y) {
+            *ri -= yi;
+        }
+        Ok(x.matvec_t(&r))
+    }
+
+    /// Keyed variant of [`ComputeBackend::matvec`]: `key` identifies a
+    /// matrix that is *constant across calls* (a worker's encoded shard),
+    /// letting backends cache device-resident copies. The default ignores
+    /// the key.
+    fn matvec_keyed(&self, _key: Option<u64>, rows: &Matrix, theta: &[f64]) -> Result<Vec<f64>> {
+        self.matvec(rows, theta)
+    }
+
+    /// Keyed variant of [`ComputeBackend::local_grad`] (same contract:
+    /// `x` and `y` are constant for a given key).
+    fn local_grad_keyed(
+        &self,
+        _key: Option<u64>,
+        x: &Matrix,
+        y: &[f64],
+        theta: &[f64],
+    ) -> Result<Vec<f64>> {
+        self.local_grad(x, y, theta)
+    }
+
+    /// Human-readable backend name (metrics / logs).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl ComputeBackend for NativeBackend {
+    fn matvec(&self, rows: &Matrix, theta: &[f64]) -> Result<Vec<f64>> {
+        Ok(rows.matvec(theta))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn native_matvec() {
+        let b = NativeBackend;
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(b.matvec(&m, &[1.0, 1.0]).unwrap(), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn default_local_grad_matches_formula() {
+        let b = NativeBackend;
+        let mut rng = Rng::new(1);
+        let x = Matrix::gaussian(12, 5, &mut rng);
+        let y = rng.gaussian_vec(12);
+        let theta = rng.gaussian_vec(5);
+        let got = b.local_grad(&x, &y, &theta).unwrap();
+        // Explicit: Xᵀ X θ − Xᵀ y.
+        let want = {
+            let mut g = x.gram().matvec(&theta);
+            let xty = x.matvec_t(&y);
+            for (gi, bi) in g.iter_mut().zip(&xty) {
+                *gi -= bi;
+            }
+            g
+        };
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn backend_choice_parses() {
+        use std::str::FromStr;
+        assert_eq!(BackendChoice::from_str("native").unwrap(), BackendChoice::Native);
+        assert_eq!(BackendChoice::from_str("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert!(BackendChoice::from_str("gpu").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Execution backends for worker compute.
+//!
+//! Workers evaluate one of two kernels per step — an encoded-shard
+//! mat-vec (`rows · θ`) or a local least-squares gradient
+//! (`Xᵀ(Xθ − y)`). The [`backend::ComputeBackend`] trait abstracts over:
+//!
+//! * [`backend::NativeBackend`] — straight Rust loops (no artifacts
+//!   required; the default for tests and CI).
+//! * [`pjrt::PjrtBackend`] — the three-layer path: loads the HLO-text
+//!   artifacts AOT-compiled from the JAX/Pallas model
+//!   (`python/compile/aot.py`), compiles them on the PJRT CPU client via
+//!   the `xla` crate, and executes them on the worker hot path. Python is
+//!   never invoked at runtime.
+
+pub mod artifact;
+pub mod backend;
+pub mod pjrt;
+
+pub use backend::{BackendChoice, ComputeBackend, NativeBackend};

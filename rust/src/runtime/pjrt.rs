@@ -1,0 +1,361 @@
+//! PJRT execution backend — the L3 end of the three-layer architecture.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (L2 JAX model wrapping the L1 Pallas kernel), compiles each once on
+//! the PJRT CPU client (`xla` crate), and serves worker compute requests
+//! from the compiled executables. HLO *text* is the interchange format:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+//!
+//! ## Threading
+//!
+//! The `xla` crate's wrapper types hold raw pointers and are neither
+//! `Send` nor `Sync`. PJRT CPU execution is internally thread-safe and
+//! runs its own intra-op thread pool, so we serialize *dispatch* behind
+//! one mutex and mark the guarded state `Send`. Worker threads therefore
+//! queue on the lock; the XLA runtime still parallelizes each kernel.
+//! (Per-worker `compute_ns` then includes lock wait — acceptable for the
+//! simulated-time metric, and called out in EXPERIMENTS.md §Perf.)
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+use super::artifact::{ArtifactRegistry, Kernel};
+use super::backend::ComputeBackend;
+
+/// A device-resident copy of a worker's constant payload data, padded to
+/// the artifact shape it is executed with.
+enum CachedPayload {
+    /// Shard matrix buffer (padded `R x C`).
+    Mat { rows: usize, cols: usize, buf: xla::PjRtBuffer },
+    /// Data-block buffers: `x` (padded `R x C`) and `y` (padded `R`).
+    Xy { rows: usize, cols: usize, x: xla::PjRtBuffer, y: xla::PjRtBuffer },
+}
+
+/// Everything that lives behind the dispatch lock.
+struct PjrtInner {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    /// Compiled executables, keyed by (kernel, R, C).
+    executables: HashMap<(Kernel, usize, usize), xla::PjRtLoadedExecutable>,
+    /// Device-resident payload copies, keyed by the caller-supplied
+    /// payload identity (worker id). §Perf: uploading the shard once
+    /// instead of per step removes the dominant per-call cost.
+    payload_cache: HashMap<(Kernel, u64), CachedPayload>,
+    /// Scratch buffers for padding (reused across calls).
+    mat_scratch: Vec<f32>,
+    vec_scratch: Vec<f32>,
+    aux_scratch: Vec<f32>,
+}
+
+// SAFETY: `PjrtInner` is only ever accessed through the `Mutex` in
+// `PjrtBackend`, i.e. by at most one thread at a time; the underlying
+// PJRT CPU client additionally documents thread-safe execution. Moving
+// the raw-pointer wrappers between threads under that discipline is
+// sound.
+unsafe impl Send for PjrtInner {}
+
+/// The PJRT compute backend.
+pub struct PjrtBackend {
+    inner: Mutex<PjrtInner>,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client and scan `dir` for artifacts. Fails if no
+    /// artifacts are present (run `make artifacts`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let registry = ArtifactRegistry::scan(dir)?;
+        if registry.is_empty() {
+            return Err(Error::Pjrt(format!(
+                "no artifacts found in {} — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtBackend {
+            inner: Mutex::new(PjrtInner {
+                client,
+                registry,
+                executables: HashMap::new(),
+                payload_cache: HashMap::new(),
+                mat_scratch: Vec::new(),
+                vec_scratch: Vec::new(),
+                aux_scratch: Vec::new(),
+            }),
+        })
+    }
+
+    /// Artifact count (diagnostics).
+    pub fn artifact_count(&self) -> usize {
+        self.inner.lock().unwrap().registry.len()
+    }
+}
+
+impl PjrtInner {
+    /// Get or compile the executable for (kernel, R, C); returns the key.
+    fn ensure_compiled(
+        &mut self,
+        kernel: Kernel,
+        rows: usize,
+        cols: usize,
+    ) -> Result<(Kernel, usize, usize)> {
+        let art = self.registry.find(kernel, rows, cols)?;
+        let key = (kernel, art.rows, art.cols);
+        if !self.executables.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(
+                art.path
+                    .to_str()
+                    .ok_or_else(|| Error::Pjrt("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.executables.insert(key, exe);
+        }
+        Ok(key)
+    }
+
+    /// Zero-pad `mat` (row-major f64, shape r x c) into the f32 scratch at
+    /// shape R x C.
+    fn pad_matrix(&mut self, mat: &Matrix, big_r: usize, big_c: usize) {
+        let (r, c) = mat.shape();
+        self.mat_scratch.clear();
+        self.mat_scratch.resize(big_r * big_c, 0.0);
+        for i in 0..r {
+            let src = mat.row(i);
+            let dst = &mut self.mat_scratch[i * big_c..i * big_c + c];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = s as f32;
+            }
+        }
+    }
+
+    fn run(
+        &mut self,
+        key: (Kernel, usize, usize),
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let exe = self.executables.get(&key).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Pad `theta` and upload as a device buffer.
+    fn theta_buffer(&mut self, theta: &[f64], big_c: usize) -> Result<xla::PjRtBuffer> {
+        self.vec_scratch.clear();
+        self.vec_scratch.resize(big_c, 0.0);
+        for (d, &s) in self.vec_scratch.iter_mut().zip(theta) {
+            *d = s as f32;
+        }
+        Ok(self.client.buffer_from_host_buffer::<f32>(&self.vec_scratch, &[big_c], None)?)
+    }
+
+    /// Get or upload the cached shard-matrix buffer for `key`.
+    fn cached_mat(
+        &mut self,
+        cache_key: u64,
+        mat: &Matrix,
+        big_r: usize,
+        big_c: usize,
+    ) -> Result<()> {
+        let full_key = (Kernel::ShardMatvec, cache_key);
+        let hit = matches!(
+            self.payload_cache.get(&full_key),
+            Some(CachedPayload::Mat { rows, cols, .. }) if *rows == big_r && *cols == big_c
+        );
+        if !hit {
+            self.pad_matrix(mat, big_r, big_c);
+            let buf = self.client.buffer_from_host_buffer::<f32>(
+                &self.mat_scratch,
+                &[big_r, big_c],
+                None,
+            )?;
+            self.payload_cache
+                .insert(full_key, CachedPayload::Mat { rows: big_r, cols: big_c, buf });
+        }
+        Ok(())
+    }
+
+    /// Get or upload the cached (x, y) buffers for `key`.
+    fn cached_xy(
+        &mut self,
+        cache_key: u64,
+        x: &Matrix,
+        y: &[f64],
+        big_r: usize,
+        big_c: usize,
+    ) -> Result<()> {
+        let full_key = (Kernel::LocalGrad, cache_key);
+        let hit = matches!(
+            self.payload_cache.get(&full_key),
+            Some(CachedPayload::Xy { rows, cols, .. }) if *rows == big_r && *cols == big_c
+        );
+        if !hit {
+            self.pad_matrix(x, big_r, big_c);
+            let xb = self.client.buffer_from_host_buffer::<f32>(
+                &self.mat_scratch,
+                &[big_r, big_c],
+                None,
+            )?;
+            self.aux_scratch.clear();
+            self.aux_scratch.resize(big_r, 0.0);
+            for (d, &s) in self.aux_scratch.iter_mut().zip(y) {
+                *d = s as f32;
+            }
+            let yb = self.client.buffer_from_host_buffer::<f32>(
+                &self.aux_scratch,
+                &[big_r],
+                None,
+            )?;
+            self.payload_cache.insert(
+                full_key,
+                CachedPayload::Xy { rows: big_r, cols: big_c, x: xb, y: yb },
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Buffer-argument execution (cached-payload fast path).
+fn run_exe_b(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[&xla::PjRtBuffer],
+) -> Result<Vec<f32>> {
+    let result = exe.execute_b::<&xla::PjRtBuffer>(inputs)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = result.to_tuple1()?;
+    Ok(out.to_vec::<f32>()?)
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn matvec(&self, rows: &Matrix, theta: &[f64]) -> Result<Vec<f64>> {
+        let (r, c) = rows.shape();
+        if theta.len() != c {
+            return Err(Error::Pjrt("matvec: theta length mismatch".into()));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let key = inner.ensure_compiled(Kernel::ShardMatvec, r, c)?;
+        let (_, big_r, big_c) = key;
+        inner.pad_matrix(rows, big_r, big_c);
+        inner.vec_scratch.clear();
+        inner.vec_scratch.resize(big_c, 0.0);
+        for (d, &s) in inner.vec_scratch.iter_mut().zip(theta) {
+            *d = s as f32;
+        }
+        let mat_lit = xla::Literal::vec1(&inner.mat_scratch)
+            .reshape(&[big_r as i64, big_c as i64])?;
+        let vec_lit = xla::Literal::vec1(&inner.vec_scratch);
+        let out = inner.run(key, &[mat_lit, vec_lit])?;
+        Ok(out[..r].iter().map(|&v| v as f64).collect())
+    }
+
+    fn matvec_keyed(&self, key: Option<u64>, rows: &Matrix, theta: &[f64]) -> Result<Vec<f64>> {
+        let Some(cache_key) = key else { return self.matvec(rows, theta) };
+        let (r, c) = rows.shape();
+        if theta.len() != c {
+            return Err(Error::Pjrt("matvec: theta length mismatch".into()));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let exe_key = inner.ensure_compiled(Kernel::ShardMatvec, r, c)?;
+        let (_, big_r, big_c) = exe_key;
+        inner.cached_mat(cache_key, rows, big_r, big_c)?;
+        let theta_buf = inner.theta_buffer(theta, big_c)?;
+        // Immutable phase: fetch executable + cached shard, execute.
+        let inner = &*inner;
+        let exe = inner.executables.get(&exe_key).expect("compiled above");
+        let mat_buf = match inner.payload_cache.get(&(Kernel::ShardMatvec, cache_key)) {
+            Some(CachedPayload::Mat { buf, .. }) => buf,
+            _ => unreachable!("cached above"),
+        };
+        let out = run_exe_b(exe, &[mat_buf, &theta_buf])?;
+        Ok(out[..r].iter().map(|&v| v as f64).collect())
+    }
+
+    fn local_grad_keyed(
+        &self,
+        key: Option<u64>,
+        x: &Matrix,
+        y: &[f64],
+        theta: &[f64],
+    ) -> Result<Vec<f64>> {
+        let Some(cache_key) = key else { return self.local_grad(x, y, theta) };
+        let (r, c) = x.shape();
+        if y.len() != r || theta.len() != c {
+            return Err(Error::Pjrt("local_grad: shape mismatch".into()));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let exe_key = inner.ensure_compiled(Kernel::LocalGrad, r, c)?;
+        let (_, big_r, big_c) = exe_key;
+        inner.cached_xy(cache_key, x, y, big_r, big_c)?;
+        let theta_buf = inner.theta_buffer(theta, big_c)?;
+        let inner = &*inner;
+        let exe = inner.executables.get(&exe_key).expect("compiled above");
+        let (x_buf, y_buf) = match inner.payload_cache.get(&(Kernel::LocalGrad, cache_key)) {
+            Some(CachedPayload::Xy { x, y, .. }) => (x, y),
+            _ => unreachable!("cached above"),
+        };
+        let out = run_exe_b(exe, &[x_buf, y_buf, &theta_buf])?;
+        Ok(out[..c].iter().map(|&v| v as f64).collect())
+    }
+
+    fn local_grad(&self, x: &Matrix, y: &[f64], theta: &[f64]) -> Result<Vec<f64>> {
+        let (r, c) = x.shape();
+        if y.len() != r || theta.len() != c {
+            return Err(Error::Pjrt("local_grad: shape mismatch".into()));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let key = inner.ensure_compiled(Kernel::LocalGrad, r, c)?;
+        let (_, big_r, big_c) = key;
+        inner.pad_matrix(x, big_r, big_c);
+        inner.vec_scratch.clear();
+        inner.vec_scratch.resize(big_c, 0.0);
+        for (d, &s) in inner.vec_scratch.iter_mut().zip(theta) {
+            *d = s as f32;
+        }
+        inner.aux_scratch.clear();
+        inner.aux_scratch.resize(big_r, 0.0);
+        for (d, &s) in inner.aux_scratch.iter_mut().zip(y) {
+            *d = s as f32;
+        }
+        let x_lit = xla::Literal::vec1(&inner.mat_scratch)
+            .reshape(&[big_r as i64, big_c as i64])?;
+        let y_lit = xla::Literal::vec1(&inner.aux_scratch);
+        let t_lit = xla::Literal::vec1(&inner.vec_scratch);
+        let out = inner.run(key, &[x_lit, y_lit, t_lit])?;
+        Ok(out[..c].iter().map(|&v| v as f64).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Execution tests live in rust/tests/integration_pjrt.rs (they need
+    // `make artifacts` first). Here we only test failure handling.
+
+    #[test]
+    fn missing_artifacts_dir_fails_loud() {
+        let err = match PjrtBackend::load(Path::new("/nonexistent/zzz")) {
+            Ok(_) => panic!("expected failure"),
+            Err(e) => e,
+        };
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn empty_dir_fails_loud() {
+        let dir = crate::testing::TempDir::new("t").unwrap();
+        assert!(PjrtBackend::load(dir.path()).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Lightweight property-testing helper.
+//!
+//! The offline crate set has no `proptest`, so this module provides the
+//! subset the test-suite needs: run a predicate over many seeded random
+//! cases and, on failure, report the exact case seed so the failure is
+//! reproducible with `PropCase::new(seed)`.
+
+use crate::rng::Rng;
+
+/// A self-deleting temporary directory (the offline crate set has no
+/// `tempfile`).
+#[derive(Debug)]
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh directory under the system temp dir.
+    pub fn new(label: &str) -> std::io::Result<Self> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "moment-ldpc-{label}-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// One reproducible random test case.
+pub struct PropCase {
+    /// Case index.
+    pub index: usize,
+    /// Seed that regenerates this case.
+    pub seed: u64,
+    /// RNG for the case.
+    pub rng: Rng,
+}
+
+impl PropCase {
+    /// Recreate a case from its reported seed.
+    pub fn new(seed: u64) -> Self {
+        PropCase { index: 0, seed, rng: Rng::new(seed) }
+    }
+}
+
+/// Run `cases` random cases of a property. The closure returns
+/// `Err(message)` to fail. Panics (like an assert) with the case seed on
+/// the first failure.
+pub fn prop_check<F>(name: &str, cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut PropCase) -> Result<(), String>,
+{
+    let mut meta = Rng::new(seed);
+    for index in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut case = PropCase { index, seed: case_seed, rng: Rng::new(case_seed) };
+        if let Err(msg) = prop(&mut case) {
+            panic!(
+                "property '{name}' failed at case {index} (reproduce with \
+                 PropCase::new({case_seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two float slices are element-wise close.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_good_property() {
+        prop_check("sum-commutes", 100, 1, |case| {
+            let a = case.rng.uniform();
+            let b = case.rng.uniform();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn prop_check_panics_with_seed() {
+        prop_check("always-fails", 10, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_behaviour() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-9).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+    }
+}

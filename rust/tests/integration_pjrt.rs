@@ -1,0 +1,183 @@
+//! End-to-end three-layer integration: JAX/Pallas AOT artifacts executed
+//! from Rust via PJRT, validated against the native backend, and driven
+//! through the full distributed coordinator.
+//!
+//! Requires `make artifacts` (the Makefile's `test-rust` target depends
+//! on it). Tests are skipped gracefully if artifacts are missing so that
+//! `cargo test` in a fresh checkout still passes.
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::run_distributed;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::straggler::StragglerModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::linalg::Matrix;
+use moment_ldpc::rng::Rng;
+use moment_ldpc::runtime::pjrt::PjrtBackend;
+use moment_ldpc::runtime::{BackendChoice, ComputeBackend, NativeBackend};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_backend() -> Option<PjrtBackend> {
+    match PjrtBackend::load(&artifacts_dir()) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("skipping PJRT test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_matvec_matches_native() {
+    let Some(backend) = load_backend() else { return };
+    let mut rng = Rng::new(1);
+    // Exact artifact shape and padded shapes.
+    for (r, c) in [(10usize, 200usize), (7, 150), (50, 1000), (33, 777)] {
+        let rows = Matrix::gaussian(r, c, &mut rng);
+        let theta = rng.gaussian_vec(c);
+        let got = backend.matvec(&rows, &theta).unwrap();
+        let want = NativeBackend.matvec(&rows, &theta).unwrap();
+        assert_eq!(got.len(), r);
+        for (g, w) in got.iter().zip(&want) {
+            // f32 artifact vs f64 native: tolerance scales with the
+            // inner-product magnitude.
+            let tol = 1e-4 * (1.0 + w.abs());
+            assert!((g - w).abs() < tol, "shape ({r},{c}): {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_local_grad_matches_native() {
+    let Some(backend) = load_backend() else { return };
+    let mut rng = Rng::new(2);
+    for (r, c) in [(52usize, 200usize), (40, 180), (103, 1000)] {
+        let x = Matrix::gaussian(r, c, &mut rng);
+        let y = rng.gaussian_vec(r);
+        let theta = rng.gaussian_vec(c);
+        let got = backend.local_grad(&x, &y, &theta).unwrap();
+        let want = NativeBackend.local_grad(&x, &y, &theta).unwrap();
+        assert_eq!(got.len(), c);
+        for (g, w) in got.iter().zip(&want) {
+            let tol = 2e-3 * (1.0 + w.abs());
+            assert!((g - w).abs() < tol, "shape ({r},{c}): {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_backend_shared_across_threads() {
+    // The worker pool shares one backend behind the dispatch mutex; this
+    // must be sound under concurrent calls.
+    let Some(backend) = load_backend() else { return };
+    let backend = std::sync::Arc::new(backend);
+    let mut rng = Rng::new(3);
+    let rows = std::sync::Arc::new(Matrix::gaussian(10, 200, &mut rng));
+    let theta = std::sync::Arc::new(rng.gaussian_vec(200));
+    let want = NativeBackend.matvec(&rows, &theta).unwrap();
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let b = std::sync::Arc::clone(&backend);
+        let r = std::sync::Arc::clone(&rows);
+        let t = std::sync::Arc::clone(&theta);
+        let w = want.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..5 {
+                let got = b.matvec(&r, &t).unwrap();
+                for (g, ww) in got.iter().zip(&w) {
+                    assert!((g - ww).abs() < 1e-4 * (1.0 + ww.abs()));
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn full_distributed_run_on_pjrt_backend() {
+    // The headline integration: Scheme 2 end-to-end with worker compute
+    // going through the AOT-compiled XLA executables.
+    if load_backend().is_none() {
+        return;
+    }
+    let problem = RegressionProblem::generate(&SynthConfig::dense(512, 200), 7);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 9).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        straggler: StragglerModel::FixedCount { s: 5, seed: 11 },
+        backend: BackendChoice::Pjrt,
+        artifacts_dir: artifacts_dir(),
+        rel_tol: 1e-3,
+        max_steps: 3000,
+        ..Default::default()
+    };
+    let report = run_distributed(Box::new(scheme), &problem, &cfg).unwrap();
+    assert!(report.converged, "{}", report.summary());
+    assert!(report.final_rel_error <= 1e-3);
+}
+
+#[test]
+fn pjrt_and_native_agree_on_gradient_decode() {
+    // Same run, both backends: trajectories must agree to f32 tolerance
+    // after one step.
+    let Some(backend) = load_backend() else { return };
+    let problem = RegressionProblem::generate(&SynthConfig::dense(256, 200), 13);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 15).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    use moment_ldpc::coordinator::schemes::GradientScheme;
+    let mut rng = Rng::new(17);
+    let theta = rng.gaussian_vec(200);
+
+    let respond = |b: &dyn ComputeBackend| -> Vec<Option<Vec<f64>>> {
+        scheme
+            .payloads()
+            .iter()
+            .map(|p| Some(p.compute(&theta, b).unwrap()))
+            .collect()
+    };
+    let native = scheme.decode(&respond(&NativeBackend), 20).unwrap();
+    let pjrt = scheme.decode(&respond(&backend), 20).unwrap();
+    let gnorm = moment_ldpc::linalg::norm2(&native.gradient);
+    let diff = moment_ldpc::linalg::dist2(&native.gradient, &pjrt.gradient);
+    assert!(diff / gnorm < 1e-4, "relative gradient divergence {}", diff / gnorm);
+}
+
+#[test]
+fn keyed_cache_matches_unkeyed_and_is_stable() {
+    // The §Perf fast path: cached device buffers must give the same
+    // numbers as the literal path, repeatedly (no buffer donation bugs),
+    // and must not confuse distinct keys.
+    let Some(backend) = load_backend() else { return };
+    let mut rng = Rng::new(21);
+    let a = Matrix::gaussian(10, 200, &mut rng);
+    let b = Matrix::gaussian(10, 200, &mut rng);
+    let theta = rng.gaussian_vec(200);
+    let want_a = backend.matvec(&a, &theta).unwrap();
+    let want_b = backend.matvec(&b, &theta).unwrap();
+    for _ in 0..5 {
+        let got_a = backend.matvec_keyed(Some(1), &a, &theta).unwrap();
+        let got_b = backend.matvec_keyed(Some(2), &b, &theta).unwrap();
+        for (g, w) in got_a.iter().zip(&want_a) {
+            assert!((g - w).abs() < 1e-6 * (1.0 + w.abs()));
+        }
+        for (g, w) in got_b.iter().zip(&want_b) {
+            assert!((g - w).abs() < 1e-6 * (1.0 + w.abs()));
+        }
+    }
+    // Keyed local_grad too.
+    let x = Matrix::gaussian(52, 200, &mut rng);
+    let y = rng.gaussian_vec(52);
+    let want = backend.local_grad(&x, &y, &theta).unwrap();
+    for _ in 0..3 {
+        let got = backend.local_grad_keyed(Some(3), &x, &y, &theta).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Runtime-level integration: failure injection, the latency straggler
+//! model, trace semantics, and cluster lifecycle.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::cluster::Cluster;
+use moment_ldpc::coordinator::protocol::WorkerPayload;
+use moment_ldpc::coordinator::run_distributed;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::uncoded::UncodedScheme;
+use moment_ldpc::coordinator::straggler::StragglerModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::error::{Error, Result};
+use moment_ldpc::linalg::Matrix;
+use moment_ldpc::runtime::{ComputeBackend, NativeBackend};
+
+/// A backend that fails after N successful calls — worker-failure
+/// injection.
+struct FailingBackend {
+    after: usize,
+    calls: AtomicUsize,
+}
+
+impl ComputeBackend for FailingBackend {
+    fn matvec(&self, rows: &Matrix, theta: &[f64]) -> Result<Vec<f64>> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if n >= self.after {
+            return Err(Error::Runtime("injected backend failure".into()));
+        }
+        NativeBackend.matvec(rows, theta)
+    }
+
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+}
+
+#[test]
+fn worker_failure_surfaces_as_error_not_hang() {
+    let payloads: Vec<WorkerPayload> = (0..4)
+        .map(|_| WorkerPayload::Rows { rows: Matrix::identity(3) })
+        .collect();
+    let backend = Arc::new(FailingBackend { after: 6, calls: AtomicUsize::new(0) });
+    let cluster = Cluster::spawn(&payloads, backend);
+    // First step: 4 calls, all fine.
+    cluster.broadcast(1, Arc::new(vec![1.0, 2.0, 3.0])).unwrap();
+    let r1 = cluster.collect(1).unwrap();
+    assert!(r1.iter().all(|r| r.values.is_ok()));
+    // Second step: calls 5..8, two fail.
+    cluster.broadcast(2, Arc::new(vec![1.0, 2.0, 3.0])).unwrap();
+    let r2 = cluster.collect(2).unwrap();
+    let failures = r2.iter().filter(|r| r.values.is_err()).count();
+    assert_eq!(failures, 2);
+    cluster.shutdown();
+}
+
+#[test]
+fn run_distributed_propagates_worker_failure() {
+    let p = RegressionProblem::generate(&SynthConfig::dense(64, 16), 1);
+    let scheme = UncodedScheme::new(&p, 4).unwrap();
+    // The public entry builds its own backend, so drive the failure from
+    // a PJRT config with an empty artifacts dir instead.
+    let cfg = RunConfig {
+        workers: 4,
+        backend: moment_ldpc::runtime::BackendChoice::Pjrt,
+        artifacts_dir: std::path::PathBuf::from("/nonexistent/empty"),
+        max_steps: 5,
+        ..Default::default()
+    };
+    let err = run_distributed(Box::new(scheme), &p, &cfg).unwrap_err();
+    assert!(format!("{err}").contains("artifacts"), "{err}");
+}
+
+#[test]
+fn shifted_exp_latency_model_end_to_end() {
+    let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), 2);
+    let code = moment_ldpc::codes::ldpc::LdpcCode::gallager(40, 20, 3, 6, 3).unwrap();
+    let scheme = LdpcMomentScheme::new(&p, code).unwrap();
+    let cfg = RunConfig {
+        straggler: StragglerModel::ShiftedExp {
+            shift_ms: 5.0,
+            rate: 0.5,
+            wait_for: 35,
+            seed: 4,
+        },
+        rel_tol: 1e-3,
+        max_steps: 3000,
+        record_trace: true,
+        ..Default::default()
+    };
+    let report = run_distributed(Box::new(scheme), &p, &cfg).unwrap();
+    assert!(report.converged, "{}", report.summary());
+    // Every step drops exactly 5 (slowest) workers and accrues simulated
+    // collection latency >= shift.
+    for m in &report.trace {
+        assert_eq!(m.stragglers, 5);
+        assert!(m.collect_ms.unwrap() >= 5.0);
+    }
+    // Simulated time must dominate the wall-derived compute (latency
+    // model injects milliseconds per step).
+    assert!(report.sim_time_ms() >= 5.0 * report.steps as f64);
+}
+
+#[test]
+fn trace_error_matches_final_error() {
+    let p = RegressionProblem::generate(&SynthConfig::dense(128, 40), 5);
+    let code = moment_ldpc::codes::ldpc::LdpcCode::gallager(40, 20, 3, 6, 6).unwrap();
+    let scheme = LdpcMomentScheme::new(&p, code).unwrap();
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 2000,
+        record_trace: true,
+        ..Default::default()
+    };
+    let report = run_distributed(Box::new(scheme), &p, &cfg).unwrap();
+    let last = report.trace.last().unwrap();
+    assert!((last.error - report.final_error).abs() < 1e-12);
+    assert_eq!(report.trace.len(), report.steps);
+}
+
+#[test]
+fn zero_straggler_fixed_count_equals_none() {
+    let p = RegressionProblem::generate(&SynthConfig::dense(128, 40), 7);
+    let mk = || {
+        let code = moment_ldpc::codes::ldpc::LdpcCode::gallager(40, 20, 3, 6, 8).unwrap();
+        LdpcMomentScheme::new(&p, code).unwrap()
+    };
+    let base = RunConfig { rel_tol: 1e-4, max_steps: 2000, ..Default::default() };
+    let a = run_distributed(
+        Box::new(mk()),
+        &p,
+        &RunConfig { straggler: StragglerModel::None, ..base.clone() },
+    )
+    .unwrap();
+    let b = run_distributed(
+        Box::new(mk()),
+        &p,
+        &RunConfig {
+            straggler: StragglerModel::FixedCount { s: 0, seed: 9 },
+            ..base
+        },
+    )
+    .unwrap();
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.theta, b.theta, "identical trajectories");
+}
+
+#[test]
+fn repeated_runs_reuse_problem_deterministically() {
+    let p = RegressionProblem::generate(&SynthConfig::dense(128, 40), 10);
+    let cfg = RunConfig {
+        straggler: StragglerModel::FixedCount { s: 5, seed: 77 },
+        rel_tol: 1e-4,
+        max_steps: 2000,
+        ..Default::default()
+    };
+    let mk = || {
+        let code = moment_ldpc::codes::ldpc::LdpcCode::gallager(40, 20, 3, 6, 11).unwrap();
+        LdpcMomentScheme::new(&p, code).unwrap()
+    };
+    let a = run_distributed(Box::new(mk()), &p, &cfg).unwrap();
+    let b = run_distributed(Box::new(mk()), &p, &cfg).unwrap();
+    assert_eq!(a.steps, b.steps, "same straggler seed => same trajectory");
+    assert_eq!(a.theta, b.theta);
+}

@@ -1,0 +1,177 @@
+//! Cross-scheme integration tests: every scheme in the line-up runs
+//! end-to-end through the distributed coordinator and converges on the
+//! paper's workload shapes (scaled down for CI), and the schemes order
+//! the way the paper's figures claim.
+
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::straggler::StragglerModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::experiment::{run_trials, ExperimentSpec, SchemeSpec};
+use moment_ldpc::harness::figures::{fig1, fig2, fig3, FigureScale};
+use moment_ldpc::optim::projections::Projection;
+
+fn spec(s: usize, projection: Projection, max_steps: usize) -> ExperimentSpec {
+    ExperimentSpec {
+        config: RunConfig {
+            straggler: StragglerModel::FixedCount { s, seed: 0 },
+            projection,
+            rel_tol: 1e-3,
+            max_steps,
+            ..Default::default()
+        },
+        trials: 2,
+        straggler_seed_base: 50,
+    }
+}
+
+#[test]
+fn all_lineup_schemes_converge_least_squares() {
+    let p = RegressionProblem::generate(&SynthConfig::dense(256, 80), 1);
+    for scheme in SchemeSpec::paper_lineup(40) {
+        let agg = run_trials(&scheme, &p, &spec(5, Projection::None, 6000)).unwrap();
+        assert!(
+            agg.convergence_rate > 0.99,
+            "{} did not converge: {agg:?}",
+            scheme.label()
+        );
+    }
+}
+
+#[test]
+fn all_lineup_schemes_converge_sparse_recovery() {
+    let u = 8;
+    let p = RegressionProblem::generate(&SynthConfig::sparse(256, 80, u), 2);
+    for scheme in SchemeSpec::paper_lineup(40) {
+        let agg =
+            run_trials(&scheme, &p, &spec(5, Projection::HardThreshold(u), 6000)).unwrap();
+        assert!(
+            agg.convergence_rate > 0.99,
+            "{} did not converge: {agg:?}",
+            scheme.label()
+        );
+    }
+}
+
+#[test]
+fn mds_and_gradcoding_also_converge() {
+    let p = RegressionProblem::generate(&SynthConfig::dense(256, 80), 3);
+    for scheme in [
+        SchemeSpec::Mds { code_k: 20 },
+        SchemeSpec::GradCoding { s: 5, seed: 3 },
+    ] {
+        let agg = run_trials(&scheme, &p, &spec(5, Projection::None, 6000)).unwrap();
+        assert!(agg.convergence_rate > 0.99, "{}: {agg:?}", scheme.label());
+    }
+}
+
+#[test]
+fn paper_ordering_ldpc_beats_uncoded_at_high_straggling() {
+    // The Fig-1 shape: with s=10 of 40 stragglers, the LDPC scheme needs
+    // noticeably fewer steps than uncoded (which loses 25% of the
+    // gradient every step).
+    let p = RegressionProblem::generate(&SynthConfig::dense(320, 80), 4);
+    let sp = spec(10, Projection::None, 10_000);
+    let ldpc = run_trials(
+        &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 },
+        &p,
+        &sp,
+    )
+    .unwrap();
+    let unc = run_trials(&SchemeSpec::Uncoded, &p, &sp).unwrap();
+    assert!(
+        ldpc.mean_steps < unc.mean_steps,
+        "ldpc {} !< uncoded {}",
+        ldpc.mean_steps,
+        unc.mean_steps
+    );
+}
+
+#[test]
+fn exact_schemes_match_centralized_pgd_steps() {
+    // With s below both schemes' exactness thresholds and enough decode
+    // iterations, LDPC/MDS moment encoding must follow the centralized
+    // PGD trajectory step for step (same step count).
+    let p = RegressionProblem::generate(&SynthConfig::dense(256, 80), 5);
+    let central = moment_ldpc::optim::pgd::pgd(
+        &p,
+        &moment_ldpc::optim::pgd::PgdOptions {
+            rule: moment_ldpc::optim::convergence::ConvergenceRule::RelativeDistance {
+                theta_star: p.theta_star.clone(),
+                tol: 1e-3,
+            },
+            max_steps: 6000,
+            ..Default::default()
+        },
+    );
+    let sp = ExperimentSpec {
+        config: RunConfig {
+            straggler: StragglerModel::FixedCount { s: 3, seed: 0 },
+            decode_iters: 40,
+            rel_tol: 1e-3,
+            max_steps: 6000,
+            ..Default::default()
+        },
+        trials: 1,
+        straggler_seed_base: 60,
+    };
+    let mds = run_trials(&SchemeSpec::Mds { code_k: 20 }, &p, &sp).unwrap();
+    assert_eq!(
+        mds.mean_steps as usize, central.steps,
+        "MDS (exact) must replicate the centralized trajectory"
+    );
+    // LDPC with 3 stragglers at D=40 nearly always decodes fully.
+    let ldpc =
+        run_trials(&SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 }, &p, &sp).unwrap();
+    assert!(
+        (ldpc.mean_steps - central.steps as f64).abs() <= 2.0,
+        "ldpc {} vs centralized {}",
+        ldpc.mean_steps,
+        central.steps
+    );
+}
+
+#[test]
+fn figure_drivers_smoke() {
+    // The exact code paths behind `cargo bench --bench fig{1,2,3}`, at
+    // smoke scale.
+    let scale = FigureScale { m_div: 16, k_div: 20, trials: 1, max_steps: 4000 };
+    let (c1, s1, t1) = fig1(&scale).unwrap();
+    assert_eq!(c1.len(), 8);
+    assert_eq!(s1.len(), 8);
+    assert_eq!(t1.len(), 8);
+    let (c2, s2) = fig2(&scale).unwrap();
+    assert_eq!(c2.len(), 20, "2 dims x 5 sparsities x 2 straggler counts");
+    assert_eq!(s2.len(), 20);
+    let (c3, _, _) = fig3(&scale).unwrap();
+    assert_eq!(c3.len(), 4);
+}
+
+#[test]
+fn bernoulli_straggling_converges_theorem1_regime() {
+    // Assumption 1's model end-to-end: Bernoulli(q0) with q0 below the
+    // (3,6) threshold; Scheme 2 converges and its per-step erased
+    // fraction is near the density-evolution prediction.
+    let p = RegressionProblem::generate(&SynthConfig::dense(256, 80), 6);
+    let q0 = 0.2;
+    let sp = ExperimentSpec {
+        config: RunConfig {
+            straggler: StragglerModel::Bernoulli { q0, seed: 0 },
+            decode_iters: 20,
+            rel_tol: 1e-3,
+            max_steps: 10_000,
+            ..Default::default()
+        },
+        trials: 3,
+        straggler_seed_base: 70,
+    };
+    let agg =
+        run_trials(&SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 }, &p, &sp).unwrap();
+    assert!(agg.convergence_rate > 0.99, "{agg:?}");
+    // Analytic q_D for a length-40 code is only asymptotic, but the
+    // measured erased fraction should be well below q0 after peeling.
+    let erased_frac = agg.mean_unrecovered / 80.0;
+    assert!(
+        erased_frac < q0 / 2.0,
+        "peeling should recover most coordinates: {erased_frac} vs q0 {q0}"
+    );
+}
