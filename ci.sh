@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 gate in one command: format, lint, test.
+#
+#   ./ci.sh            # runs cargo fmt --check, clippy -D warnings, test -q
+#
+# The heavier release build (`cargo build --release`) is what the repo's
+# tier-1 definition in ROADMAP.md adds on top; CI environments should run
+# `./ci.sh && (cd rust && cargo build --release)`.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found on PATH — cannot run the tier-1 gate here." >&2
+    exit 2
+fi
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "ci.sh: all gates passed"

@@ -1,25 +1,33 @@
 //! Perf harness for the hot paths (§Perf of EXPERIMENTS.md).
 //!
 //! Micro-benchmarks every stage of a gradient step in isolation:
-//!   encode (one-time)   — G·M blockwise moment encoding
-//!   worker matvec       — native vs PJRT (if artifacts exist)
-//!   peel schedule/apply — master decode at several straggler counts
+//!   encode (one-time)   — G·M blockwise moment encoding (one stacked
+//!                         GEMM through the band-parallel matmul)
+//!   worker matvec       — native (allocating and `_into`) vs PJRT
+//!   peel schedule/apply — fresh vs cached schedules at several
+//!                         straggler counts
+//!   master decode       — allocating `decode` vs arena `decode_into`
 //!   update + project    — master-side O(k) tail
 //!   end-to-end step     — the full distributed loop (40 threads)
+//!
+//! Output: a human table on stdout, `bench_out/perf_hotpath.csv`, and
+//! the machine-readable `bench_out/BENCH_hotpath.json` (stage → µs) that
+//! tracks the perf trajectory across PRs (commit it as
+//! `BENCH_hotpath.json` at the repo root when refreshing the baseline).
 //!
 //! `cargo bench --offline --bench perf_hotpath`
 
 use std::time::Instant;
 
 use moment_ldpc::codes::ldpc::LdpcCode;
-use moment_ldpc::codes::peeling::PeelingDecoder;
+use moment_ldpc::codes::peeling::{PeelScheduleCache, PeelingDecoder};
 use moment_ldpc::config::RunConfig;
 use moment_ldpc::coordinator::run_distributed;
 use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
-use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::schemes::{DecodeScratch, GradientScheme};
 use moment_ldpc::coordinator::straggler::StragglerModel;
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
-use moment_ldpc::harness::report::{write_csv, Table};
+use moment_ldpc::harness::report::{write_csv, write_json_kv, Table};
 use moment_ldpc::rng::Rng;
 use moment_ldpc::runtime::{ComputeBackend, NativeBackend};
 
@@ -43,16 +51,20 @@ fn main() {
         format!("hot-path microbenchmarks (m={m}, k={k}, w=40, K=20)"),
         &["stage", "time", "notes"],
     );
+    // stage -> µs, written to BENCH_hotpath.json.
+    let mut json: Vec<(String, f64)> = Vec::new();
 
     // -- one-time encode --
     let code = LdpcCode::gallager(40, 20, 3, 6, 7).unwrap();
     let t0 = Instant::now();
     let scheme = LdpcMomentScheme::new(&problem, code.clone()).unwrap();
+    let encode_us = t0.elapsed().as_secs_f64() * 1e6;
     table.row(vec![
         "encode C=GM (one-time)".into(),
-        format!("{:.1} ms", t0.elapsed().as_secs_f64() * 1e3),
-        format!("{} blocks x (40x20)x(20x{k}) GEMMs", k / 20),
+        format!("{:.1} ms", encode_us / 1e3),
+        format!("one (40x20)x(20x{}) stacked GEMM, band-parallel", (k / 20) * k),
     ]);
+    json.push(("encode_c_gm_us".into(), encode_us));
 
     // -- worker matvec: native --
     let shard = match &scheme.payloads()[0] {
@@ -65,8 +77,23 @@ fn main() {
     table.row(vec![
         "worker matvec (native)".into(),
         format!("{us:.1} us"),
-        format!("{}x{} f64", shard.rows(), shard.cols()),
+        format!("{}x{} f64, allocating", shard.rows(), shard.cols()),
     ]);
+    json.push(("worker_matvec_native_us".into(), us));
+
+    let mut resp_buf: Vec<f64> = Vec::new();
+    let us = time_us(200, || {
+        NativeBackend
+            .matvec_keyed_into(Some(0), &shard, &theta, &mut resp_buf)
+            .unwrap();
+        std::hint::black_box(&resp_buf);
+    });
+    table.row(vec![
+        "worker matvec (native, into)".into(),
+        format!("{us:.1} us"),
+        "recycled response buffer — the zero-alloc worker path".into(),
+    ]);
+    json.push(("worker_matvec_into_us".into(), us));
 
     // -- worker matvec: pjrt (optional) --
     let artifacts = std::path::PathBuf::from("artifacts");
@@ -79,6 +106,7 @@ fn main() {
             format!("{us:.1} us"),
             "AOT XLA executable, f32, pad+literal every call".into(),
         ]);
+        json.push(("worker_matvec_pjrt_uncached_us".into(), us));
         // §Perf optimization: device-resident shard buffer (keyed path).
         let us = time_us(200, || {
             std::hint::black_box(backend.matvec_keyed(Some(0), &shard, &theta).unwrap());
@@ -88,6 +116,7 @@ fn main() {
             format!("{us:.1} us"),
             "shard uploaded once; theta-only transfer per step".into(),
         ]);
+        json.push(("worker_matvec_pjrt_cached_us".into(), us));
     } else {
         table.row(vec![
             "worker matvec (pjrt)".into(),
@@ -96,12 +125,16 @@ fn main() {
         ]);
     }
 
-    // -- peeling: schedule + apply --
+    // -- peeling: schedule (fresh vs cached) + apply --
     let dec = PeelingDecoder::new(&code);
     for s in [5usize, 10] {
         let erased = Rng::new(s as u64).choose_k(40, s);
-        let us_sched = time_us(2000, || {
+        let us_fresh = time_us(2000, || {
             std::hint::black_box(dec.schedule(&erased, 40));
+        });
+        let mut cache = PeelScheduleCache::new();
+        let us_cached = time_us(2000, || {
+            std::hint::black_box(dec.schedule_cached(&mut cache, &erased, 40));
         });
         let sched = dec.schedule(&erased, 40);
         let mut cw = rng.gaussian_vec(40);
@@ -109,15 +142,23 @@ fn main() {
             std::hint::black_box(sched.apply(&mut cw));
         });
         table.row(vec![
-            format!("peel schedule (s={s})"),
-            format!("{us_sched:.2} us"),
-            "positions only, reused across k/K blocks".into(),
+            format!("peel schedule fresh (s={s})"),
+            format!("{us_fresh:.2} us"),
+            "rebuilt from the Tanner graph every call".into(),
+        ]);
+        table.row(vec![
+            format!("peel schedule cached (s={s})"),
+            format!("{us_cached:.2} us"),
+            format!("{:.0}x via pattern-keyed memo", us_fresh / us_cached.max(1e-3)),
         ]);
         table.row(vec![
             format!("peel apply x{} blocks (s={s})", k / 20),
             format!("{:.2} us", us_apply * (k / 20) as f64),
-            format!("{:.3} us/block", us_apply),
+            format!("{us_apply:.3} us/block"),
         ]);
+        json.push((format!("peel_schedule_fresh_s{s}_us"), us_fresh));
+        json.push((format!("peel_schedule_cached_s{s}_us"), us_cached));
+        json.push((format!("peel_apply_per_block_s{s}_us"), us_apply));
     }
 
     // -- full master decode --
@@ -136,8 +177,20 @@ fn main() {
     table.row(vec![
         "master decode (s=5)".into(),
         format!("{us:.1} us"),
-        format!("schedule + {} block applies + b-mask", k / 20),
+        format!("cached schedule + {} block applies + b-mask", k / 20),
     ]);
+    json.push(("master_decode_s5_us".into(), us));
+
+    let mut scratch = DecodeScratch::default();
+    let us = time_us(500, || {
+        std::hint::black_box(scheme.decode_into(&masked, 40, &mut scratch).unwrap());
+    });
+    table.row(vec![
+        "master decode_into (s=5)".into(),
+        format!("{us:.1} us"),
+        "persistent arena — the loop's zero-alloc path".into(),
+    ]);
+    json.push(("master_decode_into_s5_us".into(), us));
 
     // -- update + project --
     let grad = rng.gaussian_vec(k);
@@ -153,6 +206,7 @@ fn main() {
         format!("{us:.1} us"),
         "O(k) + quickselect".into(),
     ]);
+    json.push(("update_project_us".into(), us));
 
     // -- end-to-end step loop --
     let cfg = RunConfig {
@@ -165,6 +219,7 @@ fn main() {
     let t0 = Instant::now();
     let report = run_distributed(Box::new(scheme2), &problem, &cfg).unwrap();
     let wall_per_step = t0.elapsed().as_secs_f64() * 1e6 / report.steps as f64;
+    let sim_per_step = report.sim_time_ms() * 1e3 / report.steps as f64;
     table.row(vec![
         "end-to-end step (wall)".into(),
         format!("{wall_per_step:.1} us"),
@@ -172,9 +227,11 @@ fn main() {
     ]);
     table.row(vec![
         "end-to-end step (sim)".into(),
-        format!("{:.1} us", report.sim_time_ms() * 1e3 / report.steps as f64),
+        format!("{sim_per_step:.1} us"),
         "max worker + decode + update (the paper's metric)".into(),
     ]);
+    json.push(("step_wall_us".into(), wall_per_step));
+    json.push(("step_sim_us".into(), sim_per_step));
 
     // Roofline context: the shard matvec moves R*C*8 bytes.
     let bytes = shard.rows() * shard.cols() * 8;
@@ -186,5 +243,8 @@ fn main() {
 
     print!("{}", table.render());
     write_csv(&table, std::path::Path::new("bench_out/perf_hotpath.csv")).unwrap();
-    eprintln!("perf_hotpath done -> bench_out/perf_hotpath.csv");
+    write_json_kv(std::path::Path::new("bench_out/BENCH_hotpath.json"), &json).unwrap();
+    eprintln!(
+        "perf_hotpath done -> bench_out/perf_hotpath.csv, bench_out/BENCH_hotpath.json"
+    );
 }

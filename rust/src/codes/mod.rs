@@ -30,7 +30,7 @@ pub mod systematic;
 
 pub use ldpc::LdpcCode;
 pub use mds::VandermondeCode;
-pub use peeling::{PeelSchedule, PeelingDecoder};
+pub use peeling::{PeelSchedule, PeelScheduleCache, PeelingDecoder};
 
 /// A sparse matrix in row-list + column-list form, used for parity-check
 /// matrices. Entries are real (±1 for the standard ensemble).

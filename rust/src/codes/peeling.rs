@@ -12,6 +12,9 @@
 //! construction** (positions only, done once per step) from **value
 //! application** (replayed per block codeword in `O(edges touched)`).
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use super::ldpc::LdpcCode;
 
 /// One resolved coordinate: `values[target] = -inv_coeff * Σ terms`.
@@ -57,6 +60,91 @@ impl PeelSchedule {
             }
             values[op.target] = -op.inv_coeff * s;
         }
+    }
+}
+
+/// Canonical identity of an erasure pattern: a bitmask for codes with
+/// `n ≤ 64` (one shift+or per erasure, no allocation), the sorted
+/// deduplicated index list otherwise (hashed as a `Vec<usize>`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum PatternKey {
+    Mask(u64),
+    List(Vec<usize>),
+}
+
+impl PatternKey {
+    fn build(n: usize, erased: &[usize]) -> PatternKey {
+        if n <= 64 {
+            let mut mask = 0u64;
+            for &e in erased {
+                debug_assert!(e < n);
+                mask |= 1u64 << e;
+            }
+            PatternKey::Mask(mask)
+        } else {
+            let mut v = erased.to_vec();
+            v.sort_unstable();
+            v.dedup();
+            PatternKey::List(v)
+        }
+    }
+}
+
+/// Schedules are invalidated wholesale past this many distinct
+/// `(pattern, D)` entries — a backstop against adversarial straggler
+/// streams that never repeat; realistic runs revisit a small set of
+/// patterns and never come near it.
+const PEEL_CACHE_CAP: usize = 1024;
+
+/// Memo of peel schedules keyed by erasure pattern (and the iteration
+/// budget `D`, which changes the schedule).
+///
+/// Straggler sets repeat across gradient steps — a fixed deadline
+/// erases the same worker subset for many consecutive steps — yet the
+/// seed decoder rebuilt the schedule every step. One cache entry
+/// replaces the whole `O(iters · checks)` schedule construction with a
+/// hash lookup; the schedule is shared as an [`Arc`] so a cache hit
+/// allocates nothing.
+///
+/// A cache is bound to one code: callers must not share it across
+/// decoders for different codes (the pattern key does not encode the
+/// graph).
+#[derive(Debug, Clone, Default)]
+pub struct PeelScheduleCache {
+    map: HashMap<(PatternKey, usize), Arc<PeelSchedule>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PeelScheduleCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        PeelScheduleCache::default()
+    }
+
+    /// Number of distinct `(pattern, D)` schedules held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that had to build a schedule.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Drop all entries (counters are kept).
+    pub fn clear(&mut self) {
+        self.map.clear();
     }
 }
 
@@ -144,6 +232,34 @@ impl<'a> PeelingDecoder<'a> {
         let unrecovered: Vec<usize> =
             (0..n).filter(|&v| is_erased[v]).collect();
         PeelSchedule { ops, round_offsets, unrecovered, rounds }
+    }
+
+    /// [`PeelingDecoder::schedule`] with memoization: returns the cached
+    /// schedule when this `(erasure pattern, max_iters)` has been seen,
+    /// building and inserting it otherwise. A hit costs one hash lookup
+    /// and an `Arc` clone — the per-step decode win when straggler sets
+    /// repeat across gradient steps.
+    ///
+    /// The cache must be dedicated to this decoder's code.
+    pub fn schedule_cached(
+        &self,
+        cache: &mut PeelScheduleCache,
+        erased: &[usize],
+        max_iters: usize,
+    ) -> Arc<PeelSchedule> {
+        let n = self.code.parity_check().cols();
+        let key = (PatternKey::build(n, erased), max_iters);
+        if let Some(sched) = cache.map.get(&key) {
+            cache.hits += 1;
+            return Arc::clone(sched);
+        }
+        cache.misses += 1;
+        if cache.map.len() >= PEEL_CACHE_CAP {
+            cache.map.clear();
+        }
+        let sched = Arc::new(self.schedule(erased, max_iters));
+        cache.map.insert(key, Arc::clone(&sched));
+        sched
     }
 
     /// Convenience: schedule + apply in one call. `values[e]` for erased
@@ -317,6 +433,100 @@ mod tests {
             want.sort_unstable();
             assert_eq!(all, want);
         }
+    }
+
+    #[test]
+    fn cached_schedule_equals_fresh_for_random_patterns() {
+        // Property: over 100+ random erasure patterns — including
+        // repeated patterns and the none-erased / all-erased edges —
+        // `schedule_cached` recovers exactly the same positions and,
+        // after `apply`, exactly the same values as a fresh `schedule`.
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let mut rng = Rng::new(23);
+        let x = rng.gaussian_vec(20);
+        let truth = c.encode(&x);
+
+        let mut patterns: Vec<Vec<usize>> = vec![Vec::new(), (0..40).collect()];
+        for _ in 0..100 {
+            let s = 1 + rng.below(20);
+            patterns.push(rng.choose_k(40, s));
+        }
+        // Replay a third of the patterns to exercise the hit path.
+        let repeats: Vec<Vec<usize>> = patterns.iter().step_by(3).cloned().collect();
+        let n_repeats = repeats.len();
+        patterns.extend(repeats);
+
+        for erased in &patterns {
+            let fresh = dec.schedule(erased, 40);
+            let cached = dec.schedule_cached(&mut cache, erased, 40);
+            // Same positions...
+            assert_eq!(cached.unrecovered, fresh.unrecovered);
+            assert_eq!(cached.rounds, fresh.rounds);
+            assert_eq!(cached.round_offsets, fresh.round_offsets);
+            let ft: Vec<usize> = fresh.ops.iter().map(|o| o.target).collect();
+            let ct: Vec<usize> = cached.ops.iter().map(|o| o.target).collect();
+            assert_eq!(ct, ft);
+            // ...and bit-identical values after apply.
+            let corrupt = |sched: &PeelSchedule| -> Vec<f64> {
+                let mut v = truth.clone();
+                for &e in erased {
+                    v[e] = 0.0;
+                }
+                sched.apply(&mut v);
+                v
+            };
+            assert_eq!(corrupt(&cached), corrupt(&fresh));
+        }
+        assert!(
+            cache.hits() >= n_repeats as u64,
+            "repeated patterns must hit: {} hits for {} repeats",
+            cache.hits(),
+            n_repeats
+        );
+        assert_eq!(cache.hits() + cache.misses(), patterns.len() as u64);
+    }
+
+    #[test]
+    fn cache_distinguishes_iteration_budgets() {
+        // D is part of the key: a D=0 schedule must not be served for a
+        // D=40 request on the same pattern.
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let erased = Rng::new(31).choose_k(40, 6);
+        let none = dec.schedule_cached(&mut cache, &erased, 0);
+        let full = dec.schedule_cached(&mut cache, &erased, 40);
+        assert_eq!(none.ops.len(), 0);
+        assert!(!full.ops.is_empty());
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_tolerates_duplicate_erasure_indices() {
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let a = dec.schedule_cached(&mut cache, &[3, 7, 3, 7, 11], 40);
+        let b = dec.schedule_cached(&mut cache, &[3, 7, 11], 40);
+        // Same pattern → same entry (the mask canonicalizes duplicates).
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn cache_size_is_bounded() {
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let erased = Rng::new(37).choose_k(40, 8);
+        // Distinct D values force distinct entries past the cap.
+        for d in 0..2500usize {
+            dec.schedule_cached(&mut cache, &erased, d);
+        }
+        assert!(cache.len() <= 1024, "cache grew to {}", cache.len());
+        assert!(!cache.is_empty());
     }
 
     #[test]

@@ -49,8 +49,20 @@ impl Cluster {
 
     /// Broadcast the step-`t` iterate to every worker.
     pub fn broadcast(&self, t: usize, theta: Arc<Vec<f64>>) -> Result<()> {
-        for s in &self.senders {
-            s.send(Request::Step { t, theta: Arc::clone(&theta) })
+        self.broadcast_with(t, &theta, |_| None)
+    }
+
+    /// Broadcast the step-`t` iterate, handing worker `j` the buffer
+    /// `recycle(j)` to compute into (spent response buffers from an
+    /// earlier step — the master side of the zero-allocation loop).
+    pub fn broadcast_with(
+        &self,
+        t: usize,
+        theta: &Arc<Vec<f64>>,
+        mut recycle: impl FnMut(usize) -> Option<Vec<f64>>,
+    ) -> Result<()> {
+        for (j, s) in self.senders.iter().enumerate() {
+            s.send(Request::Step { t, theta: Arc::clone(theta), recycle: recycle(j) })
                 .map_err(|_| Error::Runtime("worker channel closed".into()))?;
         }
         Ok(())
@@ -60,7 +72,17 @@ impl Cluster {
     /// indexed by worker id. (All workers always respond; straggler
     /// masking is the master's business.)
     pub fn collect(&self, t: usize) -> Result<Vec<Response>> {
-        let mut slots: Vec<Option<Response>> = (0..self.workers).map(|_| None).collect();
+        let mut slots = Vec::new();
+        self.collect_into(t, &mut slots)?;
+        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+    }
+
+    /// [`Cluster::collect`] into a caller-owned slot arena (index =
+    /// worker id; every slot is `Some` on success). Reusing the arena
+    /// across steps keeps collection allocation-free.
+    pub fn collect_into(&self, t: usize, slots: &mut Vec<Option<Response>>) -> Result<()> {
+        slots.clear();
+        slots.resize_with(self.workers, || None);
         let mut got = 0;
         while got < self.workers {
             let r = self
@@ -80,7 +102,7 @@ impl Cluster {
             slots[w] = Some(r);
             got += 1;
         }
-        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+        Ok(())
     }
 
     /// Shut the cluster down and join all threads.

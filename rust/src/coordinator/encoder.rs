@@ -34,7 +34,17 @@ pub struct BlockMomentEncoding {
 
 impl BlockMomentEncoding {
     /// Encode the moment matrix with a columnwise encoder
-    /// `encode(M_block: K x k) -> N x k`.
+    /// `encode(M_msg: K x d) -> N x d`.
+    ///
+    /// All `⌈k/K⌉` row blocks are stacked side by side into one
+    /// `K x (blocks·k)` message matrix and encoded with a *single*
+    /// call — one large GEMM that the band-parallel matmul kernel
+    /// spreads across cores — instead of `blocks` small sequential
+    /// ones. A columnwise encoder treats every column independently,
+    /// so the coded values are bit-identical to per-block encoding.
+    /// Tradeoff: the stacked message and the full coded matrix are
+    /// transiently live alongside the shards, roughly doubling the
+    /// one-time encode's peak memory versus per-block encoding.
     pub fn new<F>(moment: &Matrix, n: usize, code_k: usize, mut encode: F) -> Result<Self>
     where
         F: FnMut(&Matrix) -> Result<Matrix>,
@@ -47,26 +57,34 @@ impl BlockMomentEncoding {
             return Err(Error::Config("code dimension must be positive".into()));
         }
         let blocks = k.div_ceil(code_k);
-        let mut shards = vec![Matrix::zeros(blocks, k); n];
+        let stacked_cols = blocks
+            .checked_mul(k)
+            .ok_or_else(|| Error::Config(format!("encoding shape {blocks}x{k} overflows")))?;
+        // Column range i*k..(i+1)*k holds block i: its K message rows
+        // are rows lo..hi of M, zero-padded below when K ∤ k.
+        let mut stacked = Matrix::try_zeros(code_k, stacked_cols)
+            .map_err(|e| Error::Config(format!("moment encoding too large: {e}")))?;
         for i in 0..blocks {
             let lo = i * code_k;
             let hi = ((i + 1) * code_k).min(k);
-            // Block of K rows, zero-padded at the tail if K does not
-            // divide k.
-            let mut block = Matrix::zeros(code_k, k);
             for (bi, r) in (lo..hi).enumerate() {
-                block.row_mut(bi).copy_from_slice(moment.row(r));
+                stacked.row_mut(bi)[i * k..(i + 1) * k].copy_from_slice(moment.row(r));
             }
-            let coded = encode(&block)?;
-            if coded.shape() != (n, k) {
-                return Err(Error::Config(format!(
-                    "encoder returned {:?}, expected ({n}, {k})",
-                    coded.shape()
-                )));
-            }
-            for (j, shard) in shards.iter_mut().enumerate() {
-                shard.row_mut(i).copy_from_slice(coded.row(j));
-            }
+        }
+        let coded = encode(&stacked)?;
+        if coded.shape() != (n, stacked_cols) {
+            return Err(Error::Config(format!(
+                "encoder returned {:?}, expected ({n}, {stacked_cols})",
+                coded.shape()
+            )));
+        }
+        // Codeword position j's shard is row j of the coded matrix,
+        // reinterpreted as `blocks x k` row-major — a straight memcpy.
+        let mut shards = Vec::with_capacity(n);
+        for j in 0..n {
+            let mut shard = Matrix::try_zeros(blocks, k)?;
+            shard.as_mut_slice().copy_from_slice(coded.row(j));
+            shards.push(shard);
         }
         Ok(BlockMomentEncoding { k, n, code_k, blocks, shards })
     }

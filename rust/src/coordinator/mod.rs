@@ -34,7 +34,8 @@ use crate::runtime::{BackendChoice, ComputeBackend, NativeBackend};
 
 use cluster::Cluster;
 use metrics::{MetricTotals, RunReport, StepMetrics};
-use schemes::GradientScheme;
+use protocol::Response;
+use schemes::{DecodeScratch, GradientScheme};
 
 /// Instantiate the configured compute backend.
 pub fn make_backend(cfg: &RunConfig) -> Result<Arc<dyn ComputeBackend>> {
@@ -94,29 +95,61 @@ pub fn run_with_cluster(
     let mut converged = false;
     let mut steps = 0;
 
+    // Steady-state arenas: after the first couple of laps the loop
+    // performs no per-step heap allocation (the zero-allocation
+    // invariant — see rust/README.md).
+    //
+    // * `bcast` — double-buffered broadcast iterates. Workers release
+    //   the step-`t` Arc before answering step `t+1`, so by step `t+2`
+    //   the buffer is unique again and is rewritten in place.
+    // * `slots` / `masked` — response collection and straggler-masked
+    //   views, reused every step.
+    // * `spares` — buffers of masked responses, handed back to workers
+    //   on the next broadcast so they compute in place.
+    let mut bcast: [Arc<Vec<f64>>; 2] = [Arc::new(vec![0.0; k]), Arc::new(vec![0.0; k])];
+    let mut slots: Vec<Option<Response>> = Vec::new();
+    let mut masked: Vec<Option<Vec<f64>>> = (0..w).map(|_| None).collect();
+    let mut spares: Vec<Vec<f64>> = Vec::new();
+    let mut scratch = DecodeScratch::default();
+
     for t in 1..=cfg.max_steps {
         steps = t;
         let straggling = sampler.next_step(w);
 
-        cluster.broadcast(t, Arc::new(theta.clone()))?;
-        let responses = cluster.collect(t)?;
+        let buf = &mut bcast[t % 2];
+        if let Some(v) = Arc::get_mut(buf) {
+            v.copy_from_slice(&theta);
+        } else {
+            // A worker still holds the two-steps-ago Arc (cold start or
+            // a lagging thread): fall back to a fresh allocation.
+            *buf = Arc::new(theta.clone());
+        }
+        let theta_arc = &bcast[t % 2];
+        cluster.broadcast_with(t, theta_arc, |j| {
+            masked[j].take().or_else(|| spares.pop())
+        })?;
+        cluster.collect_into(t, &mut slots)?;
 
-        // Deadline semantics: drop the stragglers' responses.
-        let mut masked: Vec<Option<Vec<f64>>> = Vec::with_capacity(w);
+        // Deadline semantics: drop the stragglers' responses (their
+        // buffers go to the spare pool for recycling).
         let mut worker_ns = 0u64;
         {
             let mut strag_iter = straggling.stragglers.iter().peekable();
-            for (j, r) in responses.into_iter().enumerate() {
+            for (j, slot) in slots.iter_mut().enumerate() {
+                let r = slot.take().expect("collect_into fills every slot");
                 let is_straggler = matches!(strag_iter.peek(), Some(&&s) if s == j);
                 if is_straggler {
                     strag_iter.next();
-                    masked.push(None);
+                    masked[j] = None;
+                    if let Ok(v) = r.values {
+                        spares.push(v);
+                    }
                 } else {
                     let values = r
                         .values
                         .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
                     worker_ns = worker_ns.max(r.compute_ns);
-                    masked.push(Some(values));
+                    masked[j] = Some(values);
                 }
             }
         }
@@ -137,11 +170,11 @@ pub fn run_with_cluster(
         };
 
         let decode_start = Instant::now();
-        let out = scheme.decode(&masked, cfg.decode_iters)?;
+        let stats = scheme.decode_into(&masked, cfg.decode_iters, &mut scratch)?;
         let decode_ns = decode_start.elapsed().as_nanos() as u64;
 
         let update_start = Instant::now();
-        for (th, g) in theta.iter_mut().zip(&out.gradient) {
+        for (th, g) in theta.iter_mut().zip(&scratch.gradient) {
             *th -= eta * g;
         }
         cfg.projection.apply(&mut theta);
@@ -157,8 +190,8 @@ pub fn run_with_cluster(
         let sm = StepMetrics {
             t,
             stragglers: straggling.stragglers.len(),
-            unrecovered: out.unrecovered_coords,
-            decode_rounds: out.decode_rounds,
+            unrecovered: stats.unrecovered_coords,
+            decode_rounds: stats.decode_rounds,
             worker_ns,
             decode_ns,
             update_ns,
@@ -171,7 +204,7 @@ pub fn run_with_cluster(
             trace.push(sm);
         }
 
-        if rule.is_converged(&theta, Some(&out.gradient)) {
+        if rule.is_converged(&theta, Some(&scratch.gradient)) {
             converged = true;
             break;
         }

@@ -72,6 +72,34 @@ impl WorkerPayload {
         }
     }
 
+    /// Buffer-reusing variant of [`WorkerPayload::compute_keyed`]: the
+    /// response is written into `out`, which is typically a buffer the
+    /// master recycled from a previous step (see [`Request::Step`]).
+    /// With the native backend the moment-scheme hot path then runs
+    /// allocation-free end to end.
+    pub fn compute_into(
+        &self,
+        theta: &[f64],
+        backend: &dyn ComputeBackend,
+        key: Option<u64>,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        match self {
+            WorkerPayload::Rows { rows } => backend.matvec_keyed_into(key, rows, theta, out),
+            WorkerPayload::LocalGrad { x, y } => {
+                backend.local_grad_keyed_into(key, x, y, theta, out)
+            }
+            WorkerPayload::CodedGrad { .. } => {
+                *out = self.compute_keyed(theta, backend, key)?;
+                Ok(())
+            }
+            WorkerPayload::Idle => {
+                out.clear();
+                Ok(())
+            }
+        }
+    }
+
     /// Length of the per-step response vector.
     pub fn response_len(&self, k: usize) -> usize {
         match self {
@@ -111,8 +139,18 @@ impl WorkerPayload {
 
 /// Master → worker message.
 pub enum Request {
-    /// Compute for step `t` with the broadcast iterate.
-    Step { t: usize, theta: Arc<Vec<f64>> },
+    /// Compute for step `t` with the broadcast iterate. `recycle` is a
+    /// spent response buffer the master hands back so the worker can
+    /// compute into it instead of allocating (None on the first steps,
+    /// before buffers circulate).
+    Step {
+        /// Step index.
+        t: usize,
+        /// The broadcast iterate `θ_{t-1}`.
+        theta: Arc<Vec<f64>>,
+        /// Response buffer returned for reuse.
+        recycle: Option<Vec<f64>>,
+    },
     /// Terminate the worker thread.
     Shutdown,
 }
@@ -177,6 +215,29 @@ mod tests {
         let g2 = NativeBackend.local_grad(&x2, &y2, &theta).unwrap();
         for i in 0..3 {
             assert!((got[i] - (2.0 * g1[i] - g2[i])).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn compute_into_matches_compute_for_all_payloads() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::gaussian(6, 3, &mut rng);
+        let y = rng.gaussian_vec(6);
+        let theta = rng.gaussian_vec(3);
+        let payloads = [
+            WorkerPayload::Rows { rows: Matrix::gaussian(4, 3, &mut rng) },
+            WorkerPayload::LocalGrad { x: x.clone(), y: y.clone() },
+            WorkerPayload::CodedGrad {
+                blocks: vec![CodedBlock { coeff: 1.5, x, y }],
+            },
+            WorkerPayload::Idle,
+        ];
+        for p in &payloads {
+            let want = p.compute(&theta, &NativeBackend).unwrap();
+            // Recycled buffer with stale garbage of the wrong length.
+            let mut out = vec![f64::NAN; 17];
+            p.compute_into(&theta, &NativeBackend, None, &mut out).unwrap();
+            assert_eq!(out, want);
         }
     }
 

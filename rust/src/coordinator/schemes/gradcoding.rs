@@ -6,7 +6,7 @@
 //! vectors into the *exact* gradient whenever at most `s` workers
 //! straggle.
 
-use super::{partition_ranges, DecodeOutput, GradientScheme};
+use super::{partition_ranges, DecodeOutput, DecodeScratch, DecodeStats, GradientScheme};
 use crate::codes::gradcode::GradientCode;
 use crate::coordinator::protocol::{CodedBlock, WorkerPayload};
 use crate::data::RegressionProblem;
@@ -71,21 +71,34 @@ impl GradientScheme for GradCodingScheme {
     fn decode(
         &self,
         responses: &[Option<Vec<f64>>],
-        _decode_iters: usize,
+        decode_iters: usize,
     ) -> Result<DecodeOutput> {
+        super::decode_via_scratch(self, responses, decode_iters)
+    }
+
+    fn decode_into(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        _decode_iters: usize,
+        out: &mut DecodeScratch,
+    ) -> Result<DecodeStats> {
         if responses.len() != self.code.workers() {
             return Err(Error::Runtime("response count mismatch".into()));
         }
-        let responders: Vec<usize> =
-            (0..responses.len()).filter(|&j| responses[j].is_some()).collect();
-        let a = self.code.recombine(&responders)?;
-        let mut gradient = vec![0.0; self.k];
-        for (ai, &j) in a.iter().zip(&responders) {
+        let responders = &mut out.indices;
+        responders.clear();
+        responders.extend((0..responses.len()).filter(|&j| responses[j].is_some()));
+        // The recombination solve owns its workspace; the arena covers
+        // the gradient and index buffers.
+        let a = self.code.recombine(responders)?;
+        out.gradient.clear();
+        out.gradient.resize(self.k, 0.0);
+        for (ai, &j) in a.iter().zip(responders.iter()) {
             if *ai != 0.0 {
-                crate::linalg::axpy(*ai, responses[j].as_ref().unwrap(), &mut gradient);
+                crate::linalg::axpy(*ai, responses[j].as_ref().unwrap(), &mut out.gradient);
             }
         }
-        Ok(DecodeOutput { gradient, unrecovered_coords: 0, decode_rounds: 0 })
+        Ok(DecodeStats { unrecovered_coords: 0, decode_rounds: 0 })
     }
 }
 

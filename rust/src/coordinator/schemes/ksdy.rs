@@ -9,7 +9,7 @@
 //! on `½‖S_A(y − Xθ)‖²` for the surviving row set `A`, which concentrates
 //! around the true objective because `SᵀS ≈ I`.
 
-use super::{partition_ranges, DecodeOutput, GradientScheme};
+use super::{partition_ranges, DecodeOutput, DecodeScratch, DecodeStats, GradientScheme};
 use crate::codes::sketch::{Sketch, SketchMatrix};
 use crate::coordinator::protocol::WorkerPayload;
 use crate::data::RegressionProblem;
@@ -114,16 +114,26 @@ impl GradientScheme for KsdyScheme {
     fn decode(
         &self,
         responses: &[Option<Vec<f64>>],
-        _decode_iters: usize,
+        decode_iters: usize,
     ) -> Result<DecodeOutput> {
+        super::decode_via_scratch(self, responses, decode_iters)
+    }
+
+    fn decode_into(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        _decode_iters: usize,
+        out: &mut DecodeScratch,
+    ) -> Result<DecodeStats> {
         if responses.len() != self.workers {
             return Err(Error::Runtime("response count mismatch".into()));
         }
-        let mut gradient = vec![0.0; self.k];
+        out.gradient.clear();
+        out.gradient.resize(self.k, 0.0);
         let mut missing = 0usize;
         for r in responses {
             match r {
-                Some(v) => crate::linalg::axpy(1.0, v, &mut gradient),
+                Some(v) => crate::linalg::axpy(1.0, v, &mut out.gradient),
                 None => missing += 1,
             }
         }
@@ -132,7 +142,7 @@ impl GradientScheme for KsdyScheme {
         // any; report the effective-coordinate equivalent for parity with
         // the other schemes' metric.
         let unrecovered_coords = missing * self.k / self.workers;
-        Ok(DecodeOutput { gradient, unrecovered_coords, decode_rounds: 0 })
+        Ok(DecodeStats { unrecovered_coords, decode_rounds: 0 })
     }
 }
 

@@ -16,9 +16,11 @@
 //! `E[g_t] = (1 − q_D) ∇L(θ_{t-1})` (Lemma 1), which the
 //! `lemma1_unbiasedness` test validates empirically.
 
-use super::{DecodeOutput, GradientScheme};
+use std::sync::Mutex;
+
+use super::{DecodeOutput, DecodeScratch, DecodeStats, GradientScheme};
 use crate::codes::ldpc::LdpcCode;
-use crate::codes::peeling::PeelingDecoder;
+use crate::codes::peeling::{PeelScheduleCache, PeelingDecoder};
 use crate::coordinator::encoder::BlockMomentEncoding;
 use crate::coordinator::protocol::WorkerPayload;
 use crate::data::RegressionProblem;
@@ -40,6 +42,11 @@ pub struct LdpcMomentScheme {
     pos_worker: Vec<usize>,
     /// position -> slot within the owner's per-block group.
     pos_slot: Vec<usize>,
+    /// Peel schedules memoized by straggler pattern: a step whose
+    /// pattern repeats skips schedule construction entirely. Behind a
+    /// `Mutex` only because decoding takes `&self`; the master decodes
+    /// single-threaded, so the lock is uncontended.
+    sched_cache: Mutex<PeelScheduleCache>,
 }
 
 impl LdpcMomentScheme {
@@ -103,6 +110,7 @@ impl LdpcMomentScheme {
             ppw,
             pos_worker,
             pos_slot,
+            sched_cache: Mutex::new(PeelScheduleCache::new()),
         })
     }
 
@@ -120,6 +128,13 @@ impl LdpcMomentScheme {
     /// `N = w` deployment).
     pub fn positions_per_worker(&self) -> usize {
         self.ppw
+    }
+
+    /// Peel-schedule cache statistics `(hits, misses)` — diagnostics for
+    /// tests and the perf harness.
+    pub fn schedule_cache_stats(&self) -> (u64, u64) {
+        let cache = self.sched_cache.lock().unwrap();
+        (cache.hits(), cache.misses())
     }
 }
 
@@ -149,6 +164,15 @@ impl GradientScheme for LdpcMomentScheme {
         responses: &[Option<Vec<f64>>],
         decode_iters: usize,
     ) -> Result<DecodeOutput> {
+        super::decode_via_scratch(self, responses, decode_iters)
+    }
+
+    fn decode_into(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        decode_iters: usize,
+        out: &mut DecodeScratch,
+    ) -> Result<DecodeStats> {
         let n = self.code.n();
         let kc = self.code.k();
         let k = self.enc.k;
@@ -162,34 +186,41 @@ impl GradientScheme for LdpcMomentScheme {
         // Erasure pattern: every position owned by a straggler (a burst
         // of `ppw` per straggler when N > w); one schedule for all
         // blocks (the LDPC efficiency the paper leans on).
-        let erased: Vec<usize> = (0..n)
-            .filter(|&p| responses[self.pos_worker[p]].is_none())
-            .collect();
+        let erased = &mut out.indices;
+        erased.clear();
+        erased.extend((0..n).filter(|&p| responses[self.pos_worker[p]].is_none()));
         let decoder = PeelingDecoder::new(&self.code);
-        let sched = decoder.schedule(&erased, decode_iters);
+        let sched = {
+            let mut cache = self.sched_cache.lock().unwrap();
+            decoder.schedule_cached(&mut cache, erased, decode_iters)
+        };
 
         // Systematic positions that stay erased => the set U_t.
-        let unrec_sys: Vec<usize> =
-            sched.unrecovered.iter().copied().filter(|&p| p < kc).collect();
+        let unrec_sys = &mut out.indices2;
+        unrec_sys.clear();
+        unrec_sys.extend(sched.unrecovered.iter().copied().filter(|&p| p < kc));
 
-        let mut gradient = vec![0.0; k];
-        let mut cw: Vec<f64> = vec![0.0; n];
+        out.gradient.resize(k, 0.0);
+        out.codeword.resize(n, 0.0);
+        let gradient = &mut out.gradient[..];
+        let cw = &mut out.codeword[..];
         for i in 0..self.enc.blocks {
-            // Assemble the block-i codeword from the position map.
-            for p in 0..n {
-                cw[p] = match &responses[self.pos_worker[p]] {
+            // Assemble the block-i codeword from the position map; every
+            // entry is overwritten, so stale scratch contents are fine.
+            for (p, c) in cw.iter_mut().enumerate() {
+                *c = match &responses[self.pos_worker[p]] {
                     Some(v) => v[i * self.ppw + self.pos_slot[p]],
                     None => 0.0,
                 };
             }
-            sched.apply(&mut cw);
+            sched.apply(cw);
             let lo = i * kc;
             let hi = ((i + 1) * kc).min(k);
             // g = ĉ_sys − b̂ (b̂ zeroed on U_t, handled by skipping).
             for p in 0..hi - lo {
                 gradient[lo + p] = cw[p] - self.b[lo + p];
             }
-            for &p in &unrec_sys {
+            for &p in unrec_sys.iter() {
                 if lo + p < hi {
                     gradient[lo + p] = 0.0;
                 }
@@ -203,7 +234,7 @@ impl GradientScheme for LdpcMomentScheme {
             unrecovered_coords +=
                 unrec_sys.iter().filter(|&&p| lo + p < hi).count();
         }
-        Ok(DecodeOutput { gradient, unrecovered_coords, decode_rounds: sched.rounds })
+        Ok(DecodeStats { unrecovered_coords, decode_rounds: sched.rounds })
     }
 }
 
@@ -340,6 +371,43 @@ mod tests {
                 (avg - expect).abs() < 0.05 * gnorm,
                 "coord {i}: {avg} vs {expect}"
             );
+        }
+    }
+
+    #[test]
+    fn repeated_straggler_pattern_hits_schedule_cache() {
+        let (_, s) = setup(40);
+        let mut rng = Rng::new(8);
+        let theta = rng.gaussian_vec(40);
+        let mut responses = respond(&s, &theta);
+        for i in rng.choose_k(40, 5) {
+            responses[i] = None;
+        }
+        let a = s.decode(&responses, 20).unwrap();
+        let b = s.decode(&responses, 20).unwrap();
+        assert_eq!(a.gradient, b.gradient, "cached decode must be bit-identical");
+        let (hits, misses) = s.schedule_cache_stats();
+        assert_eq!(misses, 1, "one schedule build for one pattern");
+        assert_eq!(hits, 1, "second decode must hit the cache");
+    }
+
+    #[test]
+    fn decode_into_reuses_scratch_and_matches_decode() {
+        let (_, s) = setup(60);
+        let mut rng = Rng::new(9);
+        let theta = rng.gaussian_vec(60);
+        let clean = respond(&s, &theta);
+        let mut scratch = DecodeScratch::default();
+        for trial in 0..6 {
+            let mut responses = clean.clone();
+            for i in rng.choose_k(40, trial * 3) {
+                responses[i] = None;
+            }
+            let want = s.decode(&responses, 20).unwrap();
+            let stats = s.decode_into(&responses, 20, &mut scratch).unwrap();
+            assert_eq!(scratch.gradient, want.gradient, "trial {trial}");
+            assert_eq!(stats.unrecovered_coords, want.unrecovered_coords);
+            assert_eq!(stats.decode_rounds, want.decode_rounds);
         }
     }
 

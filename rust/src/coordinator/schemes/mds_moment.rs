@@ -7,7 +7,7 @@
 //! `O(K³)` solve with an ill-conditioned Vandermonde submatrix, versus
 //! peeling's `O(edges)` with ±1 arithmetic.
 
-use super::{DecodeOutput, GradientScheme};
+use super::{DecodeOutput, DecodeScratch, DecodeStats, GradientScheme};
 use crate::codes::mds::VandermondeCode;
 use crate::coordinator::encoder::BlockMomentEncoding;
 use crate::coordinator::protocol::WorkerPayload;
@@ -63,8 +63,17 @@ impl GradientScheme for MdsMomentScheme {
     fn decode(
         &self,
         responses: &[Option<Vec<f64>>],
-        _decode_iters: usize,
+        decode_iters: usize,
     ) -> Result<DecodeOutput> {
+        super::decode_via_scratch(self, responses, decode_iters)
+    }
+
+    fn decode_into(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        _decode_iters: usize,
+        out: &mut DecodeScratch,
+    ) -> Result<DecodeStats> {
         let n = self.code.n();
         let kc = self.code.k();
         let k = self.enc.k;
@@ -74,8 +83,9 @@ impl GradientScheme for MdsMomentScheme {
                 responses.len()
             )));
         }
-        let available: Vec<usize> =
-            (0..n).filter(|&j| responses[j].is_some()).collect();
+        let available = &mut out.indices;
+        available.clear();
+        available.extend((0..n).filter(|&j| responses[j].is_some()));
         if available.len() < kc {
             return Err(Error::Decode(format!(
                 "MDS moment decode needs {} survivors, got {} (Proposition 1 bound exceeded)",
@@ -83,21 +93,23 @@ impl GradientScheme for MdsMomentScheme {
                 available.len()
             )));
         }
-        let mut gradient = vec![0.0; k];
-        let mut vals: Vec<f64> = Vec::with_capacity(available.len());
+        out.gradient.resize(k, 0.0);
+        let vals = &mut out.values;
         for i in 0..self.enc.blocks {
             vals.clear();
-            for &j in &available {
+            for &j in available.iter() {
                 vals.push(responses[j].as_ref().unwrap()[i]);
             }
-            let msg = self.code.decode_erasures(&available, &vals)?;
+            // The dense solve inside `decode_erasures` owns its own
+            // workspace; the per-step arena covers everything else.
+            let msg = self.code.decode_erasures(available, vals)?;
             let lo = i * kc;
             let hi = ((i + 1) * kc).min(k);
             for p in 0..hi - lo {
-                gradient[lo + p] = msg[p] - self.b[lo + p];
+                out.gradient[lo + p] = msg[p] - self.b[lo + p];
             }
         }
-        Ok(DecodeOutput { gradient, unrecovered_coords: 0, decode_rounds: 0 })
+        Ok(DecodeStats { unrecovered_coords: 0, decode_rounds: 0 })
     }
 }
 

@@ -29,6 +29,56 @@ pub struct DecodeOutput {
     pub decode_rounds: usize,
 }
 
+/// Statistics of a buffer-reusing decode ([`GradientScheme::decode_into`]);
+/// the gradient itself lives in the caller's [`DecodeScratch`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecodeStats {
+    /// Gradient coordinates left at zero (the set `U_t`).
+    pub unrecovered_coords: usize,
+    /// Peeling rounds actually executed.
+    pub decode_rounds: usize,
+}
+
+/// Reusable decode workspace. The master allocates one per run and hands
+/// it to [`GradientScheme::decode_into`] every step; at steady state a
+/// decode then performs no heap allocation (the zero-allocation invariant
+/// of the step loop — see `rust/README.md`).
+///
+/// Buffers are scheme-agnostic scratch: schemes may use any subset and
+/// must not assume anything about their contents on entry.
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    /// The decoded gradient (length `k` after a successful decode).
+    pub gradient: Vec<f64>,
+    /// Codeword assembly buffer (moment schemes; length `N`).
+    pub codeword: Vec<f64>,
+    /// Survivor-value buffer (MDS erasure decoding).
+    pub values: Vec<f64>,
+    /// Index scratch: erasure positions / survivor ids / responder ids.
+    pub indices: Vec<usize>,
+    /// Second index scratch (e.g. unrecovered systematic positions).
+    pub indices2: Vec<usize>,
+}
+
+/// Run a scheme's buffer-reusing decode with a throwaway scratch and
+/// package the result as a [`DecodeOutput`]. This is what the schemes'
+/// [`GradientScheme::decode`] impls delegate to — only call it on a
+/// scheme that overrides `decode_into` (the trait's *default*
+/// `decode_into` delegates the other way, to `decode`).
+pub fn decode_via_scratch<S: GradientScheme + ?Sized>(
+    scheme: &S,
+    responses: &[Option<Vec<f64>>],
+    decode_iters: usize,
+) -> Result<DecodeOutput> {
+    let mut scratch = DecodeScratch::default();
+    let stats = scheme.decode_into(responses, decode_iters, &mut scratch)?;
+    Ok(DecodeOutput {
+        gradient: std::mem::take(&mut scratch.gradient),
+        unrecovered_coords: stats.unrecovered_coords,
+        decode_rounds: stats.decode_rounds,
+    })
+}
+
 /// A straggler-mitigation scheme.
 pub trait GradientScheme: Send + Sync {
     /// Scheme name for reports (e.g. `"ldpc-moment"`).
@@ -48,6 +98,28 @@ pub trait GradientScheme: Send + Sync {
     /// paper's tuning parameter `D` (ignored by non-iterative schemes).
     fn decode(&self, responses: &[Option<Vec<f64>>], decode_iters: usize)
         -> Result<DecodeOutput>;
+
+    /// Buffer-reusing decode: identical semantics to
+    /// [`GradientScheme::decode`], but the gradient is written into
+    /// `out.gradient` and all working storage comes from `out`, so a
+    /// caller that reuses one [`DecodeScratch`] across steps pays no
+    /// per-step allocation. The default delegates to `decode` (one
+    /// allocation per call); every in-tree scheme overrides it with a
+    /// native allocation-free implementation.
+    fn decode_into(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        decode_iters: usize,
+        out: &mut DecodeScratch,
+    ) -> Result<DecodeStats> {
+        let o = self.decode(responses, decode_iters)?;
+        out.gradient.clear();
+        out.gradient.extend_from_slice(&o.gradient);
+        Ok(DecodeStats {
+            unrecovered_coords: o.unrecovered_coords,
+            decode_rounds: o.decode_rounds,
+        })
+    }
 
     /// Scalars communicated per worker per step (cost accounting for the
     /// §3 comparison table).
@@ -85,6 +157,58 @@ pub fn partition_ranges(total: usize, parts: usize) -> Vec<std::ops::Range<usize
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    struct FixedScheme {
+        g: Vec<f64>,
+    }
+
+    impl GradientScheme for FixedScheme {
+        fn name(&self) -> String {
+            "fixed".into()
+        }
+        fn workers(&self) -> usize {
+            1
+        }
+        fn dimension(&self) -> usize {
+            self.g.len()
+        }
+        fn payloads(&self) -> &[WorkerPayload] {
+            &[]
+        }
+        fn decode(
+            &self,
+            _responses: &[Option<Vec<f64>>],
+            _decode_iters: usize,
+        ) -> Result<DecodeOutput> {
+            Ok(DecodeOutput {
+                gradient: self.g.clone(),
+                unrecovered_coords: 1,
+                decode_rounds: 2,
+            })
+        }
+    }
+
+    #[test]
+    fn default_decode_into_delegates_to_decode() {
+        let s = FixedScheme { g: vec![1.0, 2.0] };
+        let mut scratch = DecodeScratch {
+            gradient: vec![9.0; 7], // stale content must be replaced
+            ..Default::default()
+        };
+        let stats = s.decode_into(&[], 0, &mut scratch).unwrap();
+        assert_eq!(scratch.gradient, vec![1.0, 2.0]);
+        assert_eq!(stats.unrecovered_coords, 1);
+        assert_eq!(stats.decode_rounds, 2);
+    }
+
+    #[test]
+    fn decode_via_scratch_packages_output() {
+        let s = FixedScheme { g: vec![3.0] };
+        let out = decode_via_scratch(&s, &[], 0).unwrap();
+        assert_eq!(out.gradient, vec![3.0]);
+        assert_eq!(out.unrecovered_coords, 1);
+        assert_eq!(out.decode_rounds, 2);
+    }
 
     #[test]
     fn partition_covers_everything() {

@@ -5,7 +5,7 @@
 //! sums; a block contributes nothing only when *all* its replicas
 //! straggle.
 
-use super::{partition_ranges, DecodeOutput, GradientScheme};
+use super::{partition_ranges, DecodeOutput, DecodeScratch, DecodeStats, GradientScheme};
 use crate::codes::replication::ReplicatedAssignment;
 use crate::coordinator::protocol::WorkerPayload;
 use crate::data::RegressionProblem;
@@ -62,26 +62,39 @@ impl GradientScheme for ReplicationScheme {
     fn decode(
         &self,
         responses: &[Option<Vec<f64>>],
-        _decode_iters: usize,
+        decode_iters: usize,
     ) -> Result<DecodeOutput> {
+        super::decode_via_scratch(self, responses, decode_iters)
+    }
+
+    fn decode_into(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        _decode_iters: usize,
+        out: &mut DecodeScratch,
+    ) -> Result<DecodeStats> {
         if responses.len() != self.assignment.workers() {
             return Err(Error::Runtime("response count mismatch".into()));
         }
-        let responded: Vec<usize> =
-            (0..responses.len()).filter(|&j| responses[j].is_some()).collect();
-        let per_part = self.assignment.resolve(&responded);
-        let mut gradient = vec![0.0; self.k];
+        let responded = &mut out.indices;
+        responded.clear();
+        responded.extend((0..responses.len()).filter(|&j| responses[j].is_some()));
+        let per_part = self.assignment.resolve(responded);
+        out.gradient.clear();
+        out.gradient.resize(self.k, 0.0);
         let mut lost_parts = 0usize;
         for got in &per_part {
             match got {
-                Some(w) => {
-                    crate::linalg::axpy(1.0, responses[*w].as_ref().unwrap(), &mut gradient)
-                }
+                Some(w) => crate::linalg::axpy(
+                    1.0,
+                    responses[*w].as_ref().unwrap(),
+                    &mut out.gradient,
+                ),
                 None => lost_parts += 1,
             }
         }
         let unrecovered_coords = lost_parts * self.k / self.assignment.num_parts();
-        Ok(DecodeOutput { gradient, unrecovered_coords, decode_rounds: 0 })
+        Ok(DecodeStats { unrecovered_coords, decode_rounds: 0 })
     }
 }
 

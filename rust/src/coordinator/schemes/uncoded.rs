@@ -9,7 +9,7 @@
 //! Scheme 2's `(1 − q_D)` but with a *much larger* erased fraction
 //! (`s/w` versus the post-peeling residual).
 
-use super::{partition_ranges, DecodeOutput, GradientScheme};
+use super::{partition_ranges, DecodeOutput, DecodeScratch, DecodeStats, GradientScheme};
 use crate::coordinator::protocol::WorkerPayload;
 use crate::data::RegressionProblem;
 use crate::error::{Error, Result};
@@ -62,16 +62,26 @@ impl GradientScheme for UncodedScheme {
     fn decode(
         &self,
         responses: &[Option<Vec<f64>>],
-        _decode_iters: usize,
+        decode_iters: usize,
     ) -> Result<DecodeOutput> {
+        super::decode_via_scratch(self, responses, decode_iters)
+    }
+
+    fn decode_into(
+        &self,
+        responses: &[Option<Vec<f64>>],
+        _decode_iters: usize,
+        out: &mut DecodeScratch,
+    ) -> Result<DecodeStats> {
         if responses.len() != self.workers {
             return Err(Error::Runtime("response count mismatch".into()));
         }
-        let mut gradient = vec![0.0; self.k];
+        out.gradient.clear();
+        out.gradient.resize(self.k, 0.0);
         let mut missing = 0usize;
         for r in responses {
             match r {
-                Some(v) => crate::linalg::axpy(1.0, v, &mut gradient),
+                Some(v) => crate::linalg::axpy(1.0, v, &mut out.gradient),
                 None => missing += 1,
             }
         }
@@ -79,7 +89,7 @@ impl GradientScheme for UncodedScheme {
         // sample mass; we report the number of lost *blocks* times k/w as
         // an effective-coordinates figure so the metric is comparable.
         let unrecovered_coords = missing * self.k / self.workers;
-        Ok(DecodeOutput { gradient, unrecovered_coords, decode_rounds: 0 })
+        Ok(DecodeStats { unrecovered_coords, decode_rounds: 0 })
     }
 }
 

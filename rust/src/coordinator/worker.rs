@@ -38,11 +38,18 @@ pub fn worker_loop(
 ) {
     while let Ok(req) = requests.recv() {
         match req {
-            Request::Step { t, theta } => {
+            Request::Step { t, theta, recycle } => {
                 let start = thread_cpu_ns();
-                // Key the payload by worker id so backends (PJRT) can keep
-                // a device-resident copy of the constant shard.
-                let values = payload.compute_keyed(&theta, backend.as_ref(), Some(id as u64));
+                // Compute into the buffer the master recycled from a
+                // previous step (fresh on the first laps, before buffers
+                // circulate): at steady state the worker allocates
+                // nothing. The payload is keyed by worker id so backends
+                // (PJRT) can keep a device-resident copy of the constant
+                // shard.
+                let mut buf = recycle.unwrap_or_default();
+                let values = payload
+                    .compute_into(&theta, backend.as_ref(), Some(id as u64), &mut buf)
+                    .map(|()| buf);
                 let compute_ns = thread_cpu_ns().saturating_sub(start);
                 // A send failure means the master hung up; exit quietly.
                 if responses.send(Response { worker: id, t, values, compute_ns }).is_err() {
@@ -73,11 +80,38 @@ mod tests {
             worker_loop(3, payload, backend, req_rx, resp_tx)
         });
         req_tx
-            .send(Request::Step { t: 1, theta: Arc::new(vec![1.0, 2.0]) })
+            .send(Request::Step { t: 1, theta: Arc::new(vec![1.0, 2.0]), recycle: None })
             .unwrap();
         let r = resp_rx.recv().unwrap();
         assert_eq!(r.worker, 3);
         assert_eq!(r.t, 1);
+        assert_eq!(r.values.unwrap(), vec![3.0, 2.0]);
+        req_tx.send(Request::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn worker_computes_into_recycled_buffer() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let payload = Arc::new(WorkerPayload::Rows {
+            rows: Matrix::from_rows(&[vec![1.0, 1.0], vec![2.0, 0.0]]).unwrap(),
+        });
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let h = std::thread::spawn(move || {
+            worker_loop(0, payload, backend, req_rx, resp_tx)
+        });
+        // A stale buffer of the wrong length must be overwritten, not
+        // appended to.
+        let stale = vec![f64::NAN; 7];
+        req_tx
+            .send(Request::Step {
+                t: 1,
+                theta: Arc::new(vec![1.0, 2.0]),
+                recycle: Some(stale),
+            })
+            .unwrap();
+        let r = resp_rx.recv().unwrap();
         assert_eq!(r.values.unwrap(), vec![3.0, 2.0]);
         req_tx.send(Request::Shutdown).unwrap();
         h.join().unwrap();

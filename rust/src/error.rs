@@ -1,47 +1,74 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline crate set has no
+//! `thiserror`, and the enum is small enough that the derive buys
+//! nothing.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Result alias used throughout the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors surfaced by the moment-ldpc library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid configuration or parameters (dimension mismatch, bad code
     /// parameters, ...).
-    #[error("invalid configuration: {0}")]
     Config(String),
 
-    /// A linear-algebra routine failed (singular matrix, non-convergence).
-    #[error("linear algebra error: {0}")]
+    /// A linear-algebra routine failed (singular matrix, non-convergence,
+    /// shape overflow).
     Linalg(String),
 
     /// Code construction failed (e.g. could not build a simple regular
     /// bipartite graph, or no invertible parity submatrix was found).
-    #[error("code construction error: {0}")]
     Code(String),
 
     /// Erasure decoding failed (too many erasures for an exact decoder).
-    #[error("decode error: {0}")]
     Decode(String),
 
     /// The distributed runtime failed (a worker panicked or a channel was
     /// closed unexpectedly).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// A PJRT artifact was missing or failed to load/compile/execute.
-    #[error("pjrt error: {0}")]
     Pjrt(String),
 
     /// I/O error (reading artifacts, writing reports).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// Error from the underlying `xla` crate.
-    #[error("xla error: {0}")]
+    /// Error from the underlying XLA/PJRT layer.
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::Linalg(m) => write!(f, "linear algebra error: {m}"),
+            Error::Code(m) => write!(f, "code construction error: {m}"),
+            Error::Decode(m) => write!(f, "decode error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Pjrt(m) => write!(f, "pjrt error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -51,8 +78,28 @@ impl Error {
     }
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl From<crate::runtime::xla_stub::Error> for Error {
+    fn from(e: crate::runtime::xla_stub::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(format!("{}", Error::Config("x".into())), "invalid configuration: x");
+        assert_eq!(format!("{}", Error::Linalg("y".into())), "linear algebra error: y");
+        assert_eq!(format!("{}", Error::Pjrt("z".into())), "pjrt error: z");
+    }
+
+    #[test]
+    fn io_conversion_preserves_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

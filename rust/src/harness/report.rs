@@ -103,6 +103,35 @@ pub fn write_csv(table: &Table, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Render a flat `key -> number` map as a JSON object (hand-rolled; no
+/// serde in the offline crate set). Non-finite values become `null`.
+pub fn json_kv(pairs: &[(String, f64)]) -> String {
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        let key = k.replace('\\', "\\\\").replace('"', "\\\"");
+        let val = if v.is_finite() { format!("{v:.3}") } else { "null".into() };
+        out.push_str(&format!("  \"{key}\": {val}"));
+        if i + 1 < pairs.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Write a flat `key -> number` JSON object to `path`, creating parent
+/// directories — the machine-readable side of the perf benches
+/// (`BENCH_hotpath.json`), so the perf trajectory can be tracked across
+/// PRs without parsing human-format tables.
+pub fn write_json_kv(path: &Path, pairs: &[(String, f64)]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, json_kv(pairs))?;
+    Ok(())
+}
+
 /// Format a mean ± std pair.
 pub fn pm(mean: f64, std: f64) -> String {
     if mean.is_nan() {
@@ -149,6 +178,30 @@ mod tests {
         write_csv(&t, &p).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert_eq!(s, "a\n1\n");
+    }
+
+    #[test]
+    fn json_kv_shape_and_escaping() {
+        let s = json_kv(&[
+            ("plain".into(), 1.5),
+            ("quo\"te".into(), 2.0),
+            ("bad".into(), f64::NAN),
+        ]);
+        assert!(s.starts_with("{\n") && s.ends_with("}\n"), "{s}");
+        assert!(s.contains("\"plain\": 1.500"));
+        assert!(s.contains("\"quo\\\"te\": 2.000"));
+        assert!(s.contains("\"bad\": null"));
+        // Exactly two separating commas for three entries.
+        assert_eq!(s.matches(',').count(), 2);
+    }
+
+    #[test]
+    fn json_kv_roundtrip_to_file() {
+        let dir = crate::testing::TempDir::new("j").unwrap();
+        let p = dir.path().join("sub/BENCH_x.json");
+        write_json_kv(&p, &[("a".into(), 3.0)]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "{\n  \"a\": 3.000\n}\n");
     }
 
     #[test]

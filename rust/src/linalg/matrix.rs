@@ -8,6 +8,11 @@ use crate::rng::Rng;
 /// Deliberately minimal: the crate's numerics are dominated by mat-vec and
 /// small dense solves, so we favour explicit loops (which LLVM vectorizes
 /// well) over a BLAS dependency that is unavailable in this offline build.
+/// The GEMM-shaped entry points ([`Matrix::matmul_into`],
+/// [`Matrix::gram_into`]) parallelize over row bands with scoped threads;
+/// every output row is produced by the same inner loop in the same
+/// floating-point order regardless of the thread count, so results are
+/// bit-identical to the sequential kernels.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Matrix {
     rows: usize,
@@ -15,10 +20,68 @@ pub struct Matrix {
     data: Vec<f64>,
 }
 
+/// Below this many multiply-adds a GEMM runs single-threaded: scoped
+/// thread spawn + join costs ~10 µs, which dwarfs the work itself.
+const PAR_FLOP_THRESHOLD: usize = 1 << 18;
+
+/// Number of rows of the right-hand operand streamed per cache panel in
+/// the blocked GEMM (64 rows of ≤1k f64 columns ≈ L2-resident).
+const GEMM_K_BLOCK: usize = 64;
+
+/// Square tile edge for the cache-blocked transpose.
+const TRANSPOSE_BLOCK: usize = 32;
+
+/// Worker threads available for row-band parallelism.
+fn parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// `rows * cols` with overflow reported as a linalg error (adversarial
+/// shapes must not wrap in release builds).
+fn checked_len(rows: usize, cols: usize) -> Result<usize> {
+    rows.checked_mul(cols)
+        .ok_or_else(|| Error::Linalg(format!("shape {rows}x{cols} overflows usize")))
+}
+
+/// Split `out` (a `rows x cols` row-major buffer) into contiguous row
+/// bands and run `body(first_row, band)` on each, using up to `threads`
+/// scoped threads. `body` must compute each output row independently —
+/// then the result is identical for every band split, including the
+/// sequential `threads == 1` case.
+fn for_each_row_band<F>(out: &mut [f64], rows: usize, cols: usize, threads: usize, body: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, rows);
+    if threads == 1 {
+        body(0, out);
+        return;
+    }
+    let band_rows = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (b, band) in out.chunks_mut(band_rows * cols).enumerate() {
+            let body = &body;
+            scope.spawn(move || body(b * band_rows, band));
+        }
+    });
+}
+
 impl Matrix {
-    /// All-zeros matrix.
+    /// All-zeros matrix. Panics on shape overflow; use
+    /// [`Matrix::try_zeros`] where the shape is untrusted.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Self::try_zeros(rows, cols).expect("matrix shape overflows usize")
+    }
+
+    /// All-zeros matrix with a checked `rows * cols` (adversarial shapes
+    /// surface as [`Error::Linalg`] instead of wrapping or aborting).
+    pub fn try_zeros(rows: usize, cols: usize) -> Result<Self> {
+        let len = checked_len(rows, cols)?;
+        Ok(Matrix { rows, cols, data: vec![0.0; len] })
     }
 
     /// Identity matrix.
@@ -32,12 +95,13 @@ impl Matrix {
 
     /// Build from a row-major data vector.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
-        if data.len() != rows * cols {
+        let need = checked_len(rows, cols)?;
+        if data.len() != need {
             return Err(Error::Linalg(format!(
                 "from_vec: {}x{} needs {} elements, got {}",
                 rows,
                 cols,
-                rows * cols,
+                need,
                 data.len()
             )));
         }
@@ -51,11 +115,11 @@ impl Matrix {
         if rows.iter().any(|x| x.len() != c) {
             return Err(Error::Linalg("from_rows: ragged rows".into()));
         }
-        let mut data = Vec::with_capacity(r * c);
+        let mut data = Vec::with_capacity(checked_len(r, c)?);
         for row in rows {
             data.extend_from_slice(row);
         }
-        Ok(Matrix { rows: r, cols: c, data })
+        Matrix::from_vec(r, c, data)
     }
 
     /// Matrix with i.i.d. standard-normal entries.
@@ -118,14 +182,29 @@ impl Matrix {
         (0..self.rows).map(|i| self[(i, j)]).collect()
     }
 
-    /// Matrix transpose (new allocation).
+    /// Matrix transpose (new allocation). Walks `TRANSPOSE_BLOCK`-square
+    /// tiles so both source reads and destination writes stay within a
+    /// few cache lines per tile, instead of striding the destination by
+    /// the full row length on every element.
     pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            let row = self.row(i);
-            for (j, &v) in row.iter().enumerate() {
-                t[(j, i)] = v;
+        let (r, c) = (self.rows, self.cols);
+        let mut t = Matrix::zeros(c, r);
+        const B: usize = TRANSPOSE_BLOCK;
+        let mut ib = 0;
+        while ib < r {
+            let imax = (ib + B).min(r);
+            let mut jb = 0;
+            while jb < c {
+                let jmax = (jb + B).min(c);
+                for i in ib..imax {
+                    let src = &self.data[i * c..i * c + c];
+                    for j in jb..jmax {
+                        t.data[j * r + i] = src[j];
+                    }
+                }
+                jb = jmax;
             }
+            ib = imax;
         }
         t
     }
@@ -146,11 +225,13 @@ impl Matrix {
         out
     }
 
-    /// Transposed mat-vec `selfᵀ * x` (allocates; x has len = rows).
-    /// Streams through rows so access stays contiguous.
-    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+    /// Transposed mat-vec `selfᵀ * x`, writing into `out` (len = cols;
+    /// x has len = rows). Streams through rows so access stays
+    /// contiguous.
+    pub fn matvec_t_into(&self, x: &[f64], out: &mut [f64]) {
         debug_assert_eq!(x.len(), self.rows);
-        let mut out = vec![0.0; self.cols];
+        debug_assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
         for i in 0..self.rows {
             let xi = x[i];
             if xi == 0.0 {
@@ -161,52 +242,110 @@ impl Matrix {
                 *o += xi * r;
             }
         }
+    }
+
+    /// Transposed mat-vec `selfᵀ * x` (allocates; x has len = rows).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        self.matvec_t_into(x, &mut out);
         out
     }
 
-    /// Dense matrix product `self * other`.
-    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+    /// Dense matrix product `self * other` written into `out`
+    /// (`self.rows x other.cols`, fully overwritten).
+    ///
+    /// Row bands of the output are computed on scoped threads when the
+    /// problem is large enough to amortize spawning; within a band the
+    /// kernel is the ikj loop with `k` panels of [`GEMM_K_BLOCK`] rows of
+    /// `other` kept hot in cache. Per output element the `k` summation
+    /// order is ascending in every configuration, so the product is
+    /// bit-identical to the sequential kernel.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) -> Result<()> {
         if self.cols != other.rows {
             return Err(Error::Linalg(format!(
                 "matmul: {}x{} * {}x{}",
                 self.rows, self.cols, other.rows, other.cols
             )));
         }
-        let mut out = Matrix::zeros(self.rows, other.cols);
-        // ikj loop order: streams `other` rows, vectorizes the inner axpy.
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
-                if a == 0.0 {
-                    continue;
+        if out.shape() != (self.rows, other.cols) {
+            return Err(Error::Linalg(format!(
+                "matmul_into: output is {}x{}, need {}x{}",
+                out.rows, out.cols, self.rows, other.cols
+            )));
+        }
+        let n = other.cols;
+        out.data.fill(0.0);
+        let flops = self.rows.saturating_mul(self.cols).saturating_mul(n);
+        let threads = if flops >= PAR_FLOP_THRESHOLD { parallelism() } else { 1 };
+        for_each_row_band(&mut out.data, self.rows, n, threads, |row0, band| {
+            let band_rows = band.len() / n;
+            let mut kp = 0;
+            while kp < self.cols {
+                let kend = (kp + GEMM_K_BLOCK).min(self.cols);
+                for i in 0..band_rows {
+                    let arow = self.row(row0 + i);
+                    let orow = &mut band[i * n..(i + 1) * n];
+                    for (k, &a) in arow.iter().enumerate().take(kend).skip(kp) {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = other.row(k);
+                        for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                            *o += a * b;
+                        }
+                    }
                 }
-                let brow = other.row(k);
-                let orow = out.row_mut(i);
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
+                kp = kend;
+            }
+        });
+        Ok(())
+    }
+
+    /// Dense matrix product `self * other` (allocates).
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        let mut out = Matrix::try_zeros(self.rows, other.cols)?;
+        self.matmul_into(other, &mut out)?;
+        Ok(out)
+    }
+
+    /// Gram matrix `selfᵀ * self` written into `out` (`cols x cols`,
+    /// fully overwritten). Parallel over output row bands; per output
+    /// element the sample index ascends in every configuration, so the
+    /// result is bit-identical to the sequential kernel.
+    pub fn gram_into(&self, out: &mut Matrix) -> Result<()> {
+        let k = self.cols;
+        if out.shape() != (k, k) {
+            return Err(Error::Linalg(format!(
+                "gram_into: output is {}x{}, need {k}x{k}",
+                out.rows, out.cols
+            )));
+        }
+        out.data.fill(0.0);
+        let flops = self.rows.saturating_mul(k).saturating_mul(k);
+        let threads = if flops >= PAR_FLOP_THRESHOLD { parallelism() } else { 1 };
+        for_each_row_band(&mut out.data, k, k, threads, |a0, band| {
+            let band_rows = band.len() / k;
+            for i in 0..self.rows {
+                let row = self.row(i);
+                for da in 0..band_rows {
+                    let ra = row[a0 + da];
+                    if ra == 0.0 {
+                        continue;
+                    }
+                    let grow = &mut band[da * k..(da + 1) * k];
+                    for (g, &rb) in grow.iter_mut().zip(row.iter()) {
+                        *g += ra * rb;
+                    }
                 }
             }
-        }
-        Ok(out)
+        });
+        Ok(())
     }
 
     /// Gram matrix `selfᵀ * self` (symmetric `cols x cols`).
     pub fn gram(&self) -> Matrix {
-        let k = self.cols;
-        let mut g = Matrix::zeros(k, k);
-        for i in 0..self.rows {
-            let row = self.row(i);
-            for a in 0..k {
-                let ra = row[a];
-                if ra == 0.0 {
-                    continue;
-                }
-                let grow = g.row_mut(a);
-                for (b, &rb) in row.iter().enumerate() {
-                    grow[b] += ra * rb;
-                }
-            }
-        }
+        let mut g = Matrix::zeros(self.cols, self.cols);
+        self.gram_into(&mut g).expect("output shape matches by construction");
         g
     }
 
@@ -258,7 +397,7 @@ impl Matrix {
         if rows < self.rows || cols < self.cols {
             return Err(Error::Linalg("pad_to: target smaller than source".into()));
         }
-        let mut out = Matrix::zeros(rows, cols);
+        let mut out = Matrix::try_zeros(rows, cols)?;
         for i in 0..self.rows {
             out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
         }
@@ -296,6 +435,25 @@ mod tests {
         Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap()
     }
 
+    /// The pre-band-parallel reference kernel: sequential ikj with the
+    /// same zero-skip. The production GEMM must match it bit-for-bit at
+    /// every size (the fixed-seed trajectory invariant).
+    fn matmul_reference(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for k in 0..a.cols() {
+                let av = a[(i, k)];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..b.cols() {
+                    out[(i, j)] += av * b[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
     #[test]
     fn matvec_basic() {
         assert_eq!(m22().matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
@@ -311,6 +469,17 @@ mod tests {
         for (g, w) in got.iter().zip(want.iter()) {
             assert!((g - w).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn matvec_t_into_overwrites_stale_output() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::gaussian(6, 4, &mut rng);
+        let x = rng.gaussian_vec(6);
+        let want = a.matvec_t(&x);
+        let mut out = vec![f64::NAN; 4];
+        a.matvec_t_into(&x, &mut out);
+        assert_eq!(out, want);
     }
 
     #[test]
@@ -337,6 +506,44 @@ mod tests {
     }
 
     #[test]
+    fn matmul_into_shape_checked() {
+        let a = m22();
+        let b = Matrix::identity(2);
+        let mut bad = Matrix::zeros(3, 3);
+        assert!(a.matmul_into(&b, &mut bad).is_err());
+    }
+
+    #[test]
+    fn matmul_bitwise_matches_reference_across_sizes() {
+        // Sizes straddle PAR_FLOP_THRESHOLD and GEMM_K_BLOCK so the
+        // sequential, blocked, and multi-threaded paths are all
+        // exercised; every one must agree with the reference kernel
+        // bit-for-bit (not approximately).
+        let mut rng = Rng::new(2);
+        for (m, k, n) in [(3, 5, 4), (17, 70, 9), (80, 80, 80), (33, 130, 65)] {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            let got = a.matmul(&b).unwrap();
+            let want = matmul_reference(&a, &b);
+            assert_eq!(got.as_slice(), want.as_slice(), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer_and_overwrites() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(8, 6, &mut rng);
+        let b = Matrix::gaussian(6, 7, &mut rng);
+        let want = a.matmul(&b).unwrap();
+        let mut out = Matrix::zeros(8, 7);
+        for v in out.as_mut_slice() {
+            *v = f64::NAN; // stale garbage must not leak through
+        }
+        a.matmul_into(&b, &mut out).unwrap();
+        assert_eq!(out.as_slice(), want.as_slice());
+    }
+
+    #[test]
     fn gram_matches_explicit() {
         let mut rng = Rng::new(2);
         let x = Matrix::gaussian(10, 4, &mut rng);
@@ -351,6 +558,31 @@ mod tests {
                 assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn gram_bitwise_matches_sequential_reference() {
+        // 300*40*40 multiply-adds crosses PAR_FLOP_THRESHOLD, so this
+        // runs the multi-threaded path on multi-core hosts. The data
+        // problem's moment matrix comes from gram(); a bitwise change
+        // here would shift every fixed-seed trajectory.
+        let mut rng = Rng::new(4);
+        let x = Matrix::gaussian(300, 40, &mut rng);
+        let mut want = Matrix::zeros(40, 40);
+        for i in 0..x.rows() {
+            let row = x.row(i);
+            for a in 0..40 {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in 0..40 {
+                    want[(a, b)] += ra * row[b];
+                }
+            }
+        }
+        let got = x.gram();
+        assert_eq!(got.as_slice(), want.as_slice());
     }
 
     #[test]
@@ -375,6 +607,23 @@ mod tests {
     }
 
     #[test]
+    fn transpose_blocked_matches_naive() {
+        // Sizes around the tile edge: exact multiples, off-by-one, and
+        // tall/wide extremes.
+        let mut rng = Rng::new(5);
+        for (r, c) in [(1, 1), (31, 33), (32, 32), (65, 7), (7, 65), (100, 3)] {
+            let a = Matrix::gaussian(r, c, &mut rng);
+            let t = a.transpose();
+            assert_eq!(t.shape(), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t[(j, i)], a[(i, j)], "({r},{c}) at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn pad_to_preserves_and_zeros() {
         let a = m22();
         let p = a.pad_to(3, 4).unwrap();
@@ -392,5 +641,17 @@ mod tests {
         let v = a.vstack(&b).unwrap();
         assert_eq!(v.shape(), (4, 2));
         assert_eq!(v.row(2), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn overflowing_shapes_rejected_not_wrapped() {
+        let huge = usize::MAX / 2;
+        assert!(matches!(Matrix::try_zeros(huge, 4), Err(Error::Linalg(_))));
+        // from_vec with a wrapping rows*cols must not accept a tiny
+        // buffer as "matching".
+        assert!(Matrix::from_vec(huge, 4, vec![0.0; 16]).is_err());
+        assert!(Matrix::from_vec(usize::MAX, usize::MAX, Vec::new()).is_err());
+        // Sane shapes still work.
+        assert!(Matrix::try_zeros(3, 4).is_ok());
     }
 }

@@ -60,9 +60,21 @@ pub fn scale(x: &mut [f64], alpha: f64) {
     }
 }
 
+/// Swap rows `a` and `b` of a matrix via whole-row slices.
+fn swap_rows(m: &mut Matrix, a: usize, b: usize) {
+    debug_assert_ne!(a, b);
+    let cols = m.cols();
+    let (lo, hi) = (a.min(b), a.max(b));
+    let (head, tail) = m.as_mut_slice().split_at_mut(hi * cols);
+    head[lo * cols..lo * cols + cols].swap_with_slice(&mut tail[..cols]);
+}
+
 /// Solve `A x = b` by Gaussian elimination with partial pivoting.
 /// `A` is consumed as a copy; suitable for the small systems that arise in
-/// systematic-generator construction and MDS erasure decoding.
+/// systematic-generator construction and MDS erasure decoding. Row
+/// updates run on whole-row slices (vectorizable axpy) but keep the
+/// element order of the textbook loop, so results are unchanged
+/// bit-for-bit.
 pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     let n = a.rows();
     if a.cols() != n || b.len() != n {
@@ -70,6 +82,9 @@ pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     }
     let mut m = a.clone();
     let mut x = b.to_vec();
+    // Scratch copy of the pivot-row tail so eliminations below can use
+    // disjoint row slices.
+    let mut piv_row = vec![0.0; n];
     for col in 0..n {
         // Partial pivot.
         let mut piv = col;
@@ -85,25 +100,19 @@ pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
             return Err(Error::Linalg(format!("solve: singular at column {col}")));
         }
         if piv != col {
-            // Swap rows piv <-> col.
-            for j in 0..n {
-                let t = m[(col, j)];
-                m[(col, j)] = m[(piv, j)];
-                m[(piv, j)] = t;
-            }
+            swap_rows(&mut m, col, piv);
             x.swap(col, piv);
         }
         let d = m[(col, col)];
+        piv_row[col + 1..n].copy_from_slice(&m.row(col)[col + 1..n]);
         for r in col + 1..n {
             let f = m[(r, col)] / d;
             if f == 0.0 {
                 continue;
             }
-            m[(r, col)] = 0.0;
-            for j in col + 1..n {
-                let v = m[(col, j)];
-                m[(r, j)] -= f * v;
-            }
+            let row = m.row_mut(r);
+            row[col] = 0.0;
+            axpy(-f, &piv_row[col + 1..n], &mut row[col + 1..n]);
             x[r] -= f * x[col];
         }
     }
@@ -118,7 +127,9 @@ pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     Ok(x)
 }
 
-/// Matrix inverse via Gauss–Jordan with partial pivoting.
+/// Matrix inverse via Gauss–Jordan with partial pivoting. As in
+/// [`solve`], elimination runs as whole-row axpys with unchanged
+/// element order (bit-identical results, fewer bounds checks).
 pub fn invert(a: &Matrix) -> Result<Matrix> {
     let n = a.rows();
     if a.cols() != n {
@@ -126,6 +137,8 @@ pub fn invert(a: &Matrix) -> Result<Matrix> {
     }
     let mut m = a.clone();
     let mut inv = Matrix::identity(n);
+    let mut piv_m = vec![0.0; n];
+    let mut piv_inv = vec![0.0; n];
     for col in 0..n {
         let mut piv = col;
         let mut best = m[(col, col)].abs();
@@ -140,20 +153,18 @@ pub fn invert(a: &Matrix) -> Result<Matrix> {
             return Err(Error::Linalg(format!("invert: singular at column {col}")));
         }
         if piv != col {
-            for j in 0..n {
-                let t = m[(col, j)];
-                m[(col, j)] = m[(piv, j)];
-                m[(piv, j)] = t;
-                let t = inv[(col, j)];
-                inv[(col, j)] = inv[(piv, j)];
-                inv[(piv, j)] = t;
-            }
+            swap_rows(&mut m, col, piv);
+            swap_rows(&mut inv, col, piv);
         }
         let d = m[(col, col)];
-        for j in 0..n {
-            m[(col, j)] /= d;
-            inv[(col, j)] /= d;
+        for v in m.row_mut(col) {
+            *v /= d;
         }
+        for v in inv.row_mut(col) {
+            *v /= d;
+        }
+        piv_m.copy_from_slice(m.row(col));
+        piv_inv.copy_from_slice(inv.row(col));
         for r in 0..n {
             if r == col {
                 continue;
@@ -162,12 +173,8 @@ pub fn invert(a: &Matrix) -> Result<Matrix> {
             if f == 0.0 {
                 continue;
             }
-            for j in 0..n {
-                let mv = m[(col, j)];
-                m[(r, j)] -= f * mv;
-                let iv = inv[(col, j)];
-                inv[(r, j)] -= f * iv;
-            }
+            axpy(-f, &piv_m, m.row_mut(r));
+            axpy(-f, &piv_inv, inv.row_mut(r));
         }
     }
     Ok(inv)
@@ -255,7 +262,10 @@ pub fn lambda_max(m: &Matrix, iters: usize, seed: u64) -> f64 {
 /// paper cites as a motivation for LDPC codes. A numerically singular
 /// matrix reports `f64::INFINITY` rather than an error.
 pub fn condition_number(a: &Matrix, iters: usize, seed: u64) -> Result<f64> {
-    let ata = a.transpose().matmul(a)?;
+    // gram() forms AᵀA directly (no transpose allocation) through the
+    // band-parallel kernel; term order matches transpose().matmul()
+    // exactly, so estimates are unchanged.
+    let ata = a.gram();
     let smax2 = lambda_max(&ata, iters, seed);
     // Inverse power iteration: v <- (AᵀA)^{-1} v normalized.
     let n = ata.rows();
@@ -378,6 +388,128 @@ mod tests {
         let m = Matrix::from_rows(&[vec![10.0, 0.0], vec![0.0, 0.1]]).unwrap();
         let c = condition_number(&m, 200, 4).unwrap();
         assert!((c - 100.0).abs() / 100.0 < 0.01, "cond {c}");
+    }
+
+    /// Textbook Gauss–Jordan exactly as shipped before the slice/axpy
+    /// restructuring. `invert` feeds systematic-generator construction
+    /// (and therefore every fixed-seed trajectory), so the restructured
+    /// kernel must match this bit-for-bit, not approximately.
+    fn invert_reference(a: &Matrix) -> Matrix {
+        let n = a.rows();
+        let mut m = a.clone();
+        let mut inv = Matrix::identity(n);
+        for col in 0..n {
+            let mut piv = col;
+            let mut best = m[(col, col)].abs();
+            for r in col + 1..n {
+                let v = m[(r, col)].abs();
+                if v > best {
+                    best = v;
+                    piv = r;
+                }
+            }
+            assert!(best >= 1e-12, "reference: singular");
+            if piv != col {
+                for j in 0..n {
+                    let t = m[(col, j)];
+                    m[(col, j)] = m[(piv, j)];
+                    m[(piv, j)] = t;
+                    let t = inv[(col, j)];
+                    inv[(col, j)] = inv[(piv, j)];
+                    inv[(piv, j)] = t;
+                }
+            }
+            let d = m[(col, col)];
+            for j in 0..n {
+                m[(col, j)] /= d;
+                inv[(col, j)] /= d;
+            }
+            for r in 0..n {
+                if r == col {
+                    continue;
+                }
+                let f = m[(r, col)];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    let mv = m[(col, j)];
+                    m[(r, j)] -= f * mv;
+                    let iv = inv[(col, j)];
+                    inv[(r, j)] -= f * iv;
+                }
+            }
+        }
+        inv
+    }
+
+    #[test]
+    fn invert_bitwise_matches_textbook_order() {
+        let mut rng = Rng::new(23);
+        for n in [1usize, 2, 5, 12, 30] {
+            let a = Matrix::gaussian(n, n, &mut rng);
+            let got = invert(&a).unwrap();
+            let want = invert_reference(&a);
+            assert_eq!(got.as_slice(), want.as_slice(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_bitwise_matches_textbook_order() {
+        // Reference: elimination with in-place reads of the pivot row,
+        // exactly the pre-restructuring loop.
+        let mut rng = Rng::new(29);
+        for n in [1usize, 3, 8, 25] {
+            let a = Matrix::gaussian(n, n, &mut rng);
+            let b = rng.gaussian_vec(n);
+            let got = solve(&a, &b).unwrap();
+            let want = {
+                let mut m = a.clone();
+                let mut x = b.clone();
+                for col in 0..n {
+                    let mut piv = col;
+                    let mut best = m[(col, col)].abs();
+                    for r in col + 1..n {
+                        let v = m[(r, col)].abs();
+                        if v > best {
+                            best = v;
+                            piv = r;
+                        }
+                    }
+                    assert!(best >= 1e-12);
+                    if piv != col {
+                        for j in 0..n {
+                            let t = m[(col, j)];
+                            m[(col, j)] = m[(piv, j)];
+                            m[(piv, j)] = t;
+                        }
+                        x.swap(col, piv);
+                    }
+                    let d = m[(col, col)];
+                    for r in col + 1..n {
+                        let f = m[(r, col)] / d;
+                        if f == 0.0 {
+                            continue;
+                        }
+                        m[(r, col)] = 0.0;
+                        for j in col + 1..n {
+                            let v = m[(col, j)];
+                            m[(r, j)] -= f * v;
+                        }
+                        x[r] -= f * x[col];
+                    }
+                }
+                for col in (0..n).rev() {
+                    let mut s = x[col];
+                    for j in col + 1..n {
+                        s -= m[(col, j)] * x[j];
+                    }
+                    x[col] = s / m[(col, col)];
+                }
+                x
+            };
+            assert_eq!(got, want, "n={n}");
+        }
     }
 
     #[test]

@@ -60,6 +60,36 @@ pub trait ComputeBackend: Send + Sync {
         self.local_grad(x, y, theta)
     }
 
+    /// Buffer-reusing variant of [`ComputeBackend::matvec_keyed`]: the
+    /// result is written into `out` (resized to `rows.rows()`), so a
+    /// worker that hands back the same buffer every step allocates
+    /// nothing. The default moves the allocating path's result into
+    /// `out`; backends with native in-place kernels override it.
+    fn matvec_keyed_into(
+        &self,
+        key: Option<u64>,
+        rows: &Matrix,
+        theta: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        *out = self.matvec_keyed(key, rows, theta)?;
+        Ok(())
+    }
+
+    /// Buffer-reusing variant of [`ComputeBackend::local_grad_keyed`]
+    /// (result length `theta.len()`).
+    fn local_grad_keyed_into(
+        &self,
+        key: Option<u64>,
+        x: &Matrix,
+        y: &[f64],
+        theta: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        *out = self.local_grad_keyed(key, x, y, theta)?;
+        Ok(())
+    }
+
     /// Human-readable backend name (metrics / logs).
     fn name(&self) -> &'static str;
 }
@@ -71,6 +101,40 @@ pub struct NativeBackend;
 impl ComputeBackend for NativeBackend {
     fn matvec(&self, rows: &Matrix, theta: &[f64]) -> Result<Vec<f64>> {
         Ok(rows.matvec(theta))
+    }
+
+    fn matvec_keyed_into(
+        &self,
+        _key: Option<u64>,
+        rows: &Matrix,
+        theta: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        // The zero-allocation worker fast path: every output element is
+        // overwritten, so a recycled buffer needs no clearing.
+        out.resize(rows.rows(), 0.0);
+        rows.matvec_into(theta, out);
+        Ok(())
+    }
+
+    fn local_grad_keyed_into(
+        &self,
+        _key: Option<u64>,
+        x: &Matrix,
+        y: &[f64],
+        theta: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        // The residual `Xθ − y` is inherently a fresh length-m vector
+        // here (stateless backend); only the k-length output reuses the
+        // caller's buffer. Matches local_grad()'s arithmetic exactly.
+        let mut r = x.matvec(theta);
+        for (ri, yi) in r.iter_mut().zip(y) {
+            *ri -= yi;
+        }
+        out.resize(x.cols(), 0.0);
+        x.matvec_t_into(&r, out);
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
@@ -110,6 +174,22 @@ mod tests {
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_paths_bitwise() {
+        let b = NativeBackend;
+        let mut rng = Rng::new(2);
+        let m = Matrix::gaussian(9, 4, &mut rng);
+        let theta = rng.gaussian_vec(4);
+        let mut out = vec![f64::NAN; 1]; // wrong-size stale buffer
+        b.matvec_keyed_into(Some(1), &m, &theta, &mut out).unwrap();
+        assert_eq!(out, b.matvec(&m, &theta).unwrap());
+
+        let y = rng.gaussian_vec(9);
+        let mut g = Vec::new();
+        b.local_grad_keyed_into(None, &m, &y, &theta, &mut g).unwrap();
+        assert_eq!(g, b.local_grad(&m, &y, &theta).unwrap());
     }
 
     #[test]

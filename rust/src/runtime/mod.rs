@@ -15,5 +15,6 @@
 pub mod artifact;
 pub mod backend;
 pub mod pjrt;
+pub mod xla_stub;
 
 pub use backend::{BackendChoice, ComputeBackend, NativeBackend};

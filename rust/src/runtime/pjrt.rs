@@ -24,6 +24,9 @@ use std::sync::Mutex;
 
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
+// Offline builds compile against the in-tree API stub; swap this alias
+// for the real `xla` crate to enable actual PJRT execution.
+use crate::runtime::xla_stub as xla;
 
 use super::artifact::{ArtifactRegistry, Kernel};
 use super::backend::ComputeBackend;

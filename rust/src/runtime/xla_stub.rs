@@ -1,0 +1,163 @@
+//! Offline stand-in for the `xla` crate's PJRT surface.
+//!
+//! The offline crate set does not ship the `xla` crate, so this module
+//! mirrors exactly the API slice `runtime::pjrt` consumes. Every
+//! entry point that would touch a real PJRT client returns
+//! [`Error::Unavailable`]; `PjrtBackend::load` therefore fails loudly
+//! (and `cargo test` skips the PJRT integration suite) instead of the
+//! whole crate failing to build. Building against real XLA is a
+//! one-line swap: replace the `use crate::runtime::xla_stub as xla;`
+//! alias in `pjrt.rs` with the real crate.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT is not available in this build.
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla/pjrt support is not compiled into this binary (offline stub)")
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias mirroring the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Stand-in for `xla::PjRtClient`.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Mirrors `xla::PjRtClient::cpu`; always unavailable offline.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable)
+    }
+
+    /// Mirrors `compile`; unreachable offline (no client can exist).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+
+    /// Mirrors `buffer_from_host_buffer`; unreachable offline.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer` (a device-resident array).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Mirrors `to_literal_sync`.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors `execute` (literal arguments).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+
+    /// Mirrors `execute_b` (buffer arguments).
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Stand-in for `xla::Literal` (a host-resident array).
+#[derive(Debug)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    /// Mirrors `Literal::vec1`.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    /// Mirrors `reshape`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    /// Mirrors `to_tuple1`.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    /// Mirrors `to_vec`.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Mirrors `from_text_file`.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    /// Mirrors `from_proto`.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_unavailable_offline() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse");
+        assert!(format!("{err}").contains("offline stub"));
+    }
+
+    #[test]
+    fn literal_ops_fail_loud() {
+        let l = Literal::vec1(&[1.0f32]);
+        assert!(l.reshape(&[1]).is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
