@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 gate in one command: format, lint, test.
+# Tier-1 gate in one command: format, lint, test, examples, sim smoke.
 #
-#   ./ci.sh            # runs cargo fmt --check, clippy -D warnings, test -q
+#   ./ci.sh            # fmt --check, clippy -D warnings, test -q,
+#                      # build --examples, and a quick `simulate` run
 #
 # The heavier release build (`cargo build --release`) is what the repo's
 # tier-1 definition in ROADMAP.md adds on top; CI environments should run
@@ -22,5 +23,13 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== cargo build --examples =="
+cargo build --examples
+
+echo "== simulator smoke test (64 virtual workers) =="
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --max-steps 500 --rel-tol 1e-2
 
 echo "ci.sh: all gates passed"

@@ -1,0 +1,102 @@
+//! Deadline-policy ablation in virtual time: time-to-accuracy for the
+//! paper's scheme vs the uncoded baseline, across latency models and
+//! collection policies, at a worker count (256) far past host cores.
+//!
+//! The question this bench answers is the paper's Fig. 3 story under
+//! deadline semantics: with heavy-tailed or correlated stragglers, how
+//! much simulated time does deadline-driven collection (wait-for-k,
+//! fixed budget, quantile-adaptive) save over wait-for-all, and what
+//! does the LDPC decoder's adaptivity buy over ignoring the losses?
+//!
+//! Output: a table on stdout, `bench_out/sim_deadline.csv`, and
+//! `bench_out/BENCH_sim_deadline.json` (cell → simulated ms).
+//!
+//! `cargo bench --offline --bench sim_deadline`
+
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::straggler::LatencyModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::experiment::{run_sim_trials, ExperimentSpec, SchemeSpec, SimSpec};
+use moment_ldpc::harness::report::{pm, write_csv, write_json_kv, Table};
+use moment_ldpc::sim::deadline::DeadlinePolicy;
+
+fn main() {
+    let workers = 256usize;
+    let k = 64usize;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 17);
+
+    let schemes: Vec<(&str, SchemeSpec)> = vec![
+        ("ldpc", SchemeSpec::Ldpc { code_k: workers / 2, l: 3, r: 6, seed: 7 }),
+        ("uncoded", SchemeSpec::Uncoded),
+    ];
+    let latencies: Vec<(&str, LatencyModel)> = vec![
+        ("shifted-exp", LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 1 }),
+        ("pareto", LatencyModel::Pareto { scale_ms: 1.0, shape: 1.5, seed: 1 }),
+        (
+            "markov",
+            LatencyModel::Markov {
+                shift_ms: 1.0,
+                rate: 1.0,
+                slowdown: 10.0,
+                p_slow: 0.05,
+                p_fast: 0.3,
+                seed: 1,
+            },
+        ),
+        (
+            "hetero",
+            LatencyModel::Heterogeneous { shift_ms: 1.0, rate: 1.0, spread: 3.0, seed: 1 },
+        ),
+    ];
+    let policies: Vec<(&str, DeadlinePolicy)> = vec![
+        ("wait-all", DeadlinePolicy::WaitForAll),
+        ("wait-k", DeadlinePolicy::WaitForK(workers * 7 / 8)),
+        ("deadline", DeadlinePolicy::FixedDeadline { ms: 3.0 }),
+        (
+            "quantile",
+            DeadlinePolicy::QuantileAdaptive { q: 0.9, slack: 1.5, window: 2048 },
+        ),
+    ];
+
+    let mut table = Table::new(
+        format!("deadline ablation, n={workers} simulated workers, k={k}, 2 trials"),
+        &["scheme", "latency", "policy", "conv %", "steps", "sim ms", "unrec/step", "rounds/step"],
+    );
+    let mut json: Vec<(String, f64)> = Vec::new();
+
+    for (sname, scheme) in &schemes {
+        for (lname, latency) in &latencies {
+            for (pname, policy) in &policies {
+                let spec = ExperimentSpec {
+                    config: RunConfig {
+                        workers,
+                        rel_tol: 1e-3,
+                        max_steps: 1500,
+                        ..Default::default()
+                    },
+                    trials: 2,
+                    straggler_seed_base: 300,
+                };
+                let sim = SimSpec { latency: latency.clone(), policy: policy.clone() };
+                let agg = run_sim_trials(scheme, &problem, &spec, &sim)
+                    .unwrap_or_else(|e| panic!("{sname}/{lname}/{pname}: {e}"));
+                table.row(vec![
+                    (*sname).into(),
+                    (*lname).into(),
+                    (*pname).into(),
+                    format!("{:.0}", 100.0 * agg.convergence_rate),
+                    pm(agg.mean_steps, agg.std_steps),
+                    pm(agg.mean_sim_ms, agg.std_sim_ms),
+                    format!("{:.2}", agg.mean_unrecovered),
+                    format!("{:.2}", agg.mean_decode_rounds),
+                ]);
+                json.push((format!("{sname}_{lname}_{pname}_sim_ms"), agg.mean_sim_ms));
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    write_csv(&table, std::path::Path::new("bench_out/sim_deadline.csv")).unwrap();
+    write_json_kv(std::path::Path::new("bench_out/BENCH_sim_deadline.json"), &json).unwrap();
+    eprintln!("sim_deadline done -> bench_out/sim_deadline.csv, bench_out/BENCH_sim_deadline.json");
+}

@@ -89,6 +89,16 @@ COMMANDS:
              --m N --k N [--sparsity U] --workers W --stragglers S
              --decode-iters D --rel-tol T --max-steps N --trials N
              --backend native|pjrt [--trace] [--json]
+  simulate   Virtual-time run: deadline-driven collection over simulated
+             workers (scales past host cores; default 512 workers)
+             --workers N --m N --k N --scheme <as run> --trials N
+             --latency shifted-exp|pareto|markov|hetero
+               [--shift-ms F --rate F] [--scale-ms F --shape F]
+               [--slowdown F --p-slow F --p-fast F] [--spread F]
+             --policy all|wait-k|deadline|quantile|mirror
+               [--wait-k N] [--deadline-ms F]
+               [--quantile F --slack F --window N] [--mirror-stragglers S]
+             --max-steps N --rel-tol T [--json]
   fig1       Reproduce Figure 1 (least squares)        [--trials N] [--quick]
   fig2       Reproduce Figure 2 (sparse, m > k)        [--trials N] [--quick]
   fig3       Reproduce Figure 3 (sparse, k > m)        [--trials N] [--quick]

@@ -14,6 +14,14 @@
 //!    coordinates zeroed in both `ĉ` and `b̂` (eq. 15);
 //! 5. master applies `θ_t = P_Θ(θ_{t-1} − η g_t)` and checks
 //!    convergence against `θ*`.
+//!
+//! Steps 1–3 — broadcast, gather, mask — are abstracted behind the
+//! [`StepExecutor`] trait so that the *same* master loop
+//! ([`run_with_executor`]) drives both the OS-thread cluster
+//! ([`ThreadStepExecutor`] over [`cluster::Cluster`]) and the
+//! virtual-time discrete-event simulator ([`crate::sim::SimCluster`]),
+//! which replaces wait-for-everyone collection with deadline-driven
+//! collection over thousands of simulated workers.
 
 pub mod cluster;
 pub mod encoder;
@@ -36,6 +44,7 @@ use cluster::Cluster;
 use metrics::{MetricTotals, RunReport, StepMetrics};
 use protocol::Response;
 use schemes::{DecodeScratch, GradientScheme};
+use straggler::{StragglerModel, StragglerSampler};
 
 /// Instantiate the configured compute backend.
 pub fn make_backend(cfg: &RunConfig) -> Result<Arc<dyn ComputeBackend>> {
@@ -72,6 +81,140 @@ pub fn run_distributed(
     report
 }
 
+/// What one executed step reports back to the shared master loop: how
+/// many responses were dropped, the slowest counted worker's measured
+/// compute time (thread cluster; 0 in virtual time), and the simulated
+/// collection time (latency models / the virtual clock).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepExecution {
+    /// Responses dropped this step (stragglers / past-deadline).
+    pub stragglers: usize,
+    /// Slowest counted worker compute time in ns (measured; 0 when the
+    /// step ran in virtual time).
+    pub worker_ns: u64,
+    /// Simulated time until the master could proceed (ms), when a
+    /// latency model or virtual clock is active.
+    pub collect_ms: Option<f64>,
+}
+
+/// One gradient step's broadcast/gather/mask, abstracted over *how* the
+/// workers run: OS threads with post-hoc straggler masking
+/// ([`ThreadStepExecutor`]) or a virtual-clock discrete-event simulation
+/// with deadline-driven collection ([`crate::sim::SimCluster`]). The
+/// shared master loop ([`run_with_executor`]) owns everything else —
+/// decode, update, projection, convergence, metrics — so both worlds run
+/// literally the same optimization code.
+pub trait StepExecutor {
+    /// Number of workers the executor drives.
+    fn workers(&self) -> usize;
+
+    /// Execute step `t`: broadcast `theta`, gather responses, and write
+    /// the straggler-masked view into `masked` (`masked[j] = None` iff
+    /// worker `j`'s response was dropped). `masked` has one slot per
+    /// worker and carries the previous step's buffers in; executors
+    /// recycle them to keep the loop allocation-free.
+    fn execute_step(
+        &mut self,
+        t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+    ) -> Result<StepExecution>;
+}
+
+/// [`StepExecutor`] over the OS-thread [`Cluster`]: every worker always
+/// computes and responds; the configured [`StragglerModel`] picks the
+/// per-step straggler set and the master masks those responses after the
+/// fact (the seed repo's semantics, preserved bit-for-bit).
+pub struct ThreadStepExecutor<'a> {
+    cluster: &'a Cluster,
+    sampler: StragglerSampler,
+    // Steady-state arenas: after the first couple of laps the executor
+    // performs no per-step heap allocation (the zero-allocation
+    // invariant — see rust/README.md).
+    //
+    // * `bcast` — double-buffered broadcast iterates. Workers release
+    //   the step-`t` Arc before answering step `t+1`, so by step `t+2`
+    //   the buffer is unique again and is rewritten in place.
+    // * `slots` — response collection arena, reused every step.
+    // * `spares` — buffers of masked responses, handed back to workers
+    //   on the next broadcast so they compute in place.
+    bcast: [Arc<Vec<f64>>; 2],
+    slots: Vec<Option<Response>>,
+    spares: Vec<Vec<f64>>,
+}
+
+impl<'a> ThreadStepExecutor<'a> {
+    /// Bind a straggler model to a running cluster.
+    pub fn new(cluster: &'a Cluster, model: &StragglerModel) -> Self {
+        ThreadStepExecutor {
+            cluster,
+            sampler: model.sampler(),
+            bcast: [Arc::new(Vec::new()), Arc::new(Vec::new())],
+            slots: Vec::new(),
+            spares: Vec::new(),
+        }
+    }
+}
+
+impl StepExecutor for ThreadStepExecutor<'_> {
+    fn workers(&self) -> usize {
+        self.cluster.workers()
+    }
+
+    fn execute_step(
+        &mut self,
+        t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+    ) -> Result<StepExecution> {
+        let w = self.cluster.workers();
+        let straggling = self.sampler.next_step(w);
+
+        let buf = &mut self.bcast[t % 2];
+        if let Some(v) = Arc::get_mut(buf) {
+            v.clear();
+            v.extend_from_slice(theta);
+        } else {
+            // A worker still holds the two-steps-ago Arc (cold start or
+            // a lagging thread): fall back to a fresh allocation.
+            *buf = Arc::new(theta.to_vec());
+        }
+        let theta_arc = &self.bcast[t % 2];
+        let spares = &mut self.spares;
+        self.cluster.broadcast_with(t, theta_arc, |j| {
+            masked[j].take().or_else(|| spares.pop())
+        })?;
+        self.cluster.collect_into(t, &mut self.slots)?;
+
+        // Deadline semantics: drop the stragglers' responses (their
+        // buffers go to the spare pool for recycling).
+        let mut worker_ns = 0u64;
+        let mut strag_iter = straggling.stragglers.iter().peekable();
+        for (j, slot) in self.slots.iter_mut().enumerate() {
+            let r = slot.take().expect("collect_into fills every slot");
+            let is_straggler = matches!(strag_iter.peek(), Some(&&s) if s == j);
+            if is_straggler {
+                strag_iter.next();
+                masked[j] = None;
+                if let Ok(v) = r.values {
+                    spares.push(v);
+                }
+            } else {
+                let values = r
+                    .values
+                    .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
+                worker_ns = worker_ns.max(r.compute_ns);
+                masked[j] = Some(values);
+            }
+        }
+        Ok(StepExecution {
+            stragglers: straggling.stragglers.len(),
+            worker_ns,
+            collect_ms: straggling.collect_ms,
+        })
+    }
+}
+
 /// The step loop against an existing cluster (separated so the harness
 /// can reuse a cluster across trials).
 pub fn run_with_cluster(
@@ -80,14 +223,38 @@ pub fn run_with_cluster(
     problem: &RegressionProblem,
     cfg: &RunConfig,
 ) -> Result<RunReport> {
+    let mut exec = ThreadStepExecutor::new(cluster, &cfg.straggler);
+    run_with_executor(scheme, &mut exec, problem, cfg)
+}
+
+/// The shared master loop: per step, hand broadcast/gather/mask to the
+/// executor, then decode, update, project, and check convergence. This is
+/// the *only* step loop in the crate — the thread cluster and the
+/// virtual-time simulator both run through it, so a fixed seed and a
+/// fixed masking sequence give bit-identical θ-trajectories in either
+/// world.
+pub fn run_with_executor(
+    scheme: &dyn GradientScheme,
+    exec: &mut dyn StepExecutor,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+) -> Result<RunReport> {
     let k = problem.k();
-    let w = cfg.workers;
+    let w = exec.workers();
+    if w != scheme.workers() {
+        return Err(Error::Config(format!(
+            "executor drives {w} workers but the scheme shards over {}",
+            scheme.workers()
+        )));
+    }
+    if scheme.dimension() != k {
+        return Err(Error::Config("scheme/problem dimension mismatch".into()));
+    }
     let eta = cfg.step_size.unwrap_or_else(|| problem.spectral_step_size());
     let rule = ConvergenceRule::RelativeDistance {
         theta_star: problem.theta_star.clone(),
         tol: cfg.rel_tol,
     };
-    let mut sampler = cfg.straggler.sampler();
     let mut theta = vec![0.0; k];
     let mut totals = MetricTotals::default();
     let mut trace = Vec::new();
@@ -95,64 +262,14 @@ pub fn run_with_cluster(
     let mut converged = false;
     let mut steps = 0;
 
-    // Steady-state arenas: after the first couple of laps the loop
-    // performs no per-step heap allocation (the zero-allocation
-    // invariant — see rust/README.md).
-    //
-    // * `bcast` — double-buffered broadcast iterates. Workers release
-    //   the step-`t` Arc before answering step `t+1`, so by step `t+2`
-    //   the buffer is unique again and is rewritten in place.
-    // * `slots` / `masked` — response collection and straggler-masked
-    //   views, reused every step.
-    // * `spares` — buffers of masked responses, handed back to workers
-    //   on the next broadcast so they compute in place.
-    let mut bcast: [Arc<Vec<f64>>; 2] = [Arc::new(vec![0.0; k]), Arc::new(vec![0.0; k])];
-    let mut slots: Vec<Option<Response>> = Vec::new();
+    // The straggler-masked response view, reused every step (the
+    // executor recycles the buffers it carries).
     let mut masked: Vec<Option<Vec<f64>>> = (0..w).map(|_| None).collect();
-    let mut spares: Vec<Vec<f64>> = Vec::new();
     let mut scratch = DecodeScratch::default();
 
     for t in 1..=cfg.max_steps {
         steps = t;
-        let straggling = sampler.next_step(w);
-
-        let buf = &mut bcast[t % 2];
-        if let Some(v) = Arc::get_mut(buf) {
-            v.copy_from_slice(&theta);
-        } else {
-            // A worker still holds the two-steps-ago Arc (cold start or
-            // a lagging thread): fall back to a fresh allocation.
-            *buf = Arc::new(theta.clone());
-        }
-        let theta_arc = &bcast[t % 2];
-        cluster.broadcast_with(t, theta_arc, |j| {
-            masked[j].take().or_else(|| spares.pop())
-        })?;
-        cluster.collect_into(t, &mut slots)?;
-
-        // Deadline semantics: drop the stragglers' responses (their
-        // buffers go to the spare pool for recycling).
-        let mut worker_ns = 0u64;
-        {
-            let mut strag_iter = straggling.stragglers.iter().peekable();
-            for (j, slot) in slots.iter_mut().enumerate() {
-                let r = slot.take().expect("collect_into fills every slot");
-                let is_straggler = matches!(strag_iter.peek(), Some(&&s) if s == j);
-                if is_straggler {
-                    strag_iter.next();
-                    masked[j] = None;
-                    if let Ok(v) = r.values {
-                        spares.push(v);
-                    }
-                } else {
-                    let values = r
-                        .values
-                        .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
-                    worker_ns = worker_ns.max(r.compute_ns);
-                    masked[j] = Some(values);
-                }
-            }
-        }
+        let exec_stats = exec.execute_step(t, &theta, &mut masked)?;
 
         // Simulated communication: broadcast θ + the largest surviving
         // upload (collection waits for the slowest counted worker).
@@ -189,13 +306,13 @@ pub fn run_with_cluster(
         let error = crate::linalg::dist2(&theta, &problem.theta_star);
         let sm = StepMetrics {
             t,
-            stragglers: straggling.stragglers.len(),
+            stragglers: exec_stats.stragglers,
             unrecovered: stats.unrecovered_coords,
             decode_rounds: stats.decode_rounds,
-            worker_ns,
+            worker_ns: exec_stats.worker_ns,
             decode_ns,
             update_ns,
-            collect_ms: straggling.collect_ms,
+            collect_ms: exec_stats.collect_ms,
             comm_ms,
             error,
         };

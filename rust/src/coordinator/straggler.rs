@@ -1,10 +1,21 @@
-//! Straggler injection models.
+//! Straggler injection and worker-latency models.
 //!
-//! The paper's experiments fix the number of stragglers per step (s ∈ {5,
-//! 10} of 40 workers — "we wait for either 30 or 35 workers"), while the
-//! convergence analysis (Assumption 1) uses i.i.d. Bernoulli straggling.
-//! The shifted-exponential latency model from the coded-computation
-//! literature is also provided for deadline-driven experiments.
+//! Two families live here:
+//!
+//! * [`StragglerModel`] decides *who* straggles each step — the paper's
+//!   experiments fix the number of stragglers per step (s ∈ {5, 10} of 40
+//!   workers — "we wait for either 30 or 35 workers"), the convergence
+//!   analysis (Assumption 1) uses i.i.d. Bernoulli straggling, and a
+//!   shifted-exponential order-statistics model supports wait-for-k runs.
+//! * [`LatencyModel`] decides *when* each worker's response arrives —
+//!   the virtual-time simulator (`crate::sim`) samples per-worker
+//!   completion times from it and lets a deadline policy decide who is
+//!   dropped. Beyond the canonical shifted exponential it covers
+//!   heavy-tailed Pareto latencies, Markov-correlated slowdowns (a slow
+//!   worker *stays* slow across steps), heterogeneous per-worker speeds,
+//!   and replay of a recorded latency trace.
+
+use std::sync::Arc;
 
 use crate::rng::Rng;
 
@@ -114,6 +125,223 @@ impl StragglerSampler {
     }
 }
 
+/// Pluggable per-worker completion-latency models for the virtual-time
+/// simulator (see [`StragglerSampler`]'s sibling [`LatencySampler`] for
+/// the stateful per-run form). All times are in milliseconds of
+/// *simulated* time.
+#[derive(Debug, Clone)]
+pub enum LatencyModel {
+    /// i.i.d. `shift + Exp(rate)` per worker per step — the canonical
+    /// model of the coded-computation literature (Lee et al. 2018,
+    /// Tandon et al. "Gradient Coding").
+    ShiftedExp {
+        /// Deterministic base time (ms).
+        shift_ms: f64,
+        /// Exponential tail rate (1/ms).
+        rate: f64,
+        /// RNG seed.
+        seed: u64,
+    },
+    /// Heavy-tailed i.i.d. Pareto: `scale · U^{-1/shape}`, so
+    /// `P[X > t] = (scale/t)^shape` — occasional *extreme* stragglers,
+    /// the regime where deadline collection beats wait-for-all hardest.
+    Pareto {
+        /// Minimum (and typical) latency (ms).
+        scale_ms: f64,
+        /// Tail index `α`; smaller = heavier tail.
+        shape: f64,
+        /// RNG seed.
+        seed: u64,
+    },
+    /// Markov-correlated slowdowns: each worker carries a fast/slow
+    /// state across steps (a slow worker *stays* slow). A fast worker
+    /// turns slow with probability `p_slow`, a slow one recovers with
+    /// probability `p_fast`; states start at the stationary mix
+    /// `p_slow/(p_slow + p_fast)`. Slow workers' shifted-exponential
+    /// latency is multiplied by `slowdown`.
+    Markov {
+        /// Base deterministic time (ms).
+        shift_ms: f64,
+        /// Exponential tail rate (1/ms).
+        rate: f64,
+        /// Multiplier applied while slow.
+        slowdown: f64,
+        /// P(fast → slow) per step.
+        p_slow: f64,
+        /// P(slow → fast) per step.
+        p_fast: f64,
+        /// RNG seed.
+        seed: u64,
+    },
+    /// Heterogeneous fleet: a per-worker speed multiplier drawn once
+    /// (uniform in `[1, spread]`) scales a shifted-exponential base —
+    /// persistently slower machines rather than per-step noise.
+    Heterogeneous {
+        /// Base deterministic time (ms).
+        shift_ms: f64,
+        /// Exponential tail rate (1/ms).
+        rate: f64,
+        /// Slowest/fastest machine ratio (≥ 1).
+        spread: f64,
+        /// RNG seed.
+        seed: u64,
+    },
+    /// Replay a recorded trace: step `t` over `w` workers reads
+    /// `table[t % table.len()][j % row.len()]`. Pair with
+    /// [`record_trace`] for a round-trippable capture of any other
+    /// model.
+    Trace {
+        /// Step-major latency table (ms); must be non-empty with
+        /// non-empty rows.
+        table: Arc<Vec<Vec<f64>>>,
+    },
+}
+
+impl LatencyModel {
+    /// Create the stateful per-run sampler.
+    pub fn sampler(&self) -> LatencySampler {
+        LatencySampler {
+            model: self.clone(),
+            rng: Rng::new(self.seed()),
+            slow: Vec::new(),
+            mult: Vec::new(),
+            step: 0,
+        }
+    }
+
+    fn seed(&self) -> u64 {
+        match *self {
+            LatencyModel::ShiftedExp { seed, .. }
+            | LatencyModel::Pareto { seed, .. }
+            | LatencyModel::Markov { seed, .. }
+            | LatencyModel::Heterogeneous { seed, .. } => seed,
+            LatencyModel::Trace { .. } => 0,
+        }
+    }
+
+    /// The same model with a fresh seed (trace replay is untouched —
+    /// it has no randomness to vary).
+    pub fn reseed(&self, seed: u64) -> LatencyModel {
+        let mut m = self.clone();
+        match &mut m {
+            LatencyModel::ShiftedExp { seed: s, .. }
+            | LatencyModel::Pareto { seed: s, .. }
+            | LatencyModel::Markov { seed: s, .. }
+            | LatencyModel::Heterogeneous { seed: s, .. } => *s = seed,
+            LatencyModel::Trace { .. } => {}
+        }
+        m
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> String {
+        match *self {
+            LatencyModel::ShiftedExp { shift_ms, rate, .. } => {
+                format!("shifted-exp({shift_ms},{rate})")
+            }
+            LatencyModel::Pareto { scale_ms, shape, .. } => {
+                format!("pareto({scale_ms},{shape})")
+            }
+            LatencyModel::Markov { slowdown, p_slow, p_fast, .. } => {
+                format!("markov(x{slowdown},{p_slow}/{p_fast})")
+            }
+            LatencyModel::Heterogeneous { spread, .. } => format!("hetero(x{spread})"),
+            LatencyModel::Trace { .. } => "trace".into(),
+        }
+    }
+}
+
+/// Stateful latency sampler; one per run, advanced once per step. Two
+/// samplers created from the same model produce bit-identical latency
+/// sequences.
+#[derive(Debug, Clone)]
+pub struct LatencySampler {
+    model: LatencyModel,
+    rng: Rng,
+    /// Markov per-worker slow flags (grown on first use).
+    slow: Vec<bool>,
+    /// Heterogeneous per-worker multipliers (drawn on first use).
+    mult: Vec<f64>,
+    step: usize,
+}
+
+impl LatencySampler {
+    /// Sample the next step's per-worker completion times into `out`
+    /// (cleared and filled with `w` entries).
+    pub fn sample_into(&mut self, w: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(w);
+        match self.model.clone() {
+            LatencyModel::ShiftedExp { shift_ms, rate, .. } => {
+                for _ in 0..w {
+                    out.push(self.rng.shifted_exponential(shift_ms, rate));
+                }
+            }
+            LatencyModel::Pareto { scale_ms, shape, .. } => {
+                for _ in 0..w {
+                    out.push(self.rng.pareto(scale_ms, shape));
+                }
+            }
+            LatencyModel::Markov { shift_ms, rate, slowdown, p_slow, p_fast, .. } => {
+                // First use: start each worker at the stationary mix so
+                // the slow fraction has no burn-in transient.
+                let pi_slow = p_slow / (p_slow + p_fast);
+                while self.slow.len() < w {
+                    let s = self.rng.bernoulli(pi_slow);
+                    self.slow.push(s);
+                }
+                let LatencySampler { rng, slow, .. } = self;
+                for st in slow.iter_mut().take(w) {
+                    let s = if *st { !rng.bernoulli(p_fast) } else { rng.bernoulli(p_slow) };
+                    *st = s;
+                    let base = rng.shifted_exponential(shift_ms, rate);
+                    out.push(if s { base * slowdown } else { base });
+                }
+            }
+            LatencyModel::Heterogeneous { shift_ms, rate, spread, .. } => {
+                while self.mult.len() < w {
+                    let m = self.rng.uniform_range(1.0, spread.max(1.0));
+                    self.mult.push(m);
+                }
+                let LatencySampler { rng, mult, .. } = self;
+                for m in mult.iter().take(w) {
+                    out.push(m * rng.shifted_exponential(shift_ms, rate));
+                }
+            }
+            LatencyModel::Trace { table } => {
+                assert!(!table.is_empty(), "latency trace is empty");
+                let row = &table[self.step % table.len()];
+                assert!(!row.is_empty(), "latency trace row is empty");
+                for j in 0..w {
+                    out.push(row[j % row.len()]);
+                }
+            }
+        }
+        self.step += 1;
+    }
+
+    /// Allocating convenience wrapper over [`LatencySampler::sample_into`].
+    pub fn sample(&mut self, w: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.sample_into(w, &mut out);
+        out
+    }
+}
+
+/// Record `steps` draws of a model over `w` workers into a table
+/// replayable through [`LatencyModel::Trace`] — the round-trippable
+/// capture used to re-run an interesting straggler scenario exactly.
+pub fn record_trace(model: &LatencyModel, w: usize, steps: usize) -> Vec<Vec<f64>> {
+    let mut sampler = model.sampler();
+    let mut out = Vec::with_capacity(steps);
+    let mut buf = Vec::new();
+    for _ in 0..steps {
+        sampler.sample_into(w, &mut buf);
+        out.push(buf.clone());
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +423,229 @@ mod tests {
         for _ in 0..20 {
             assert_eq!(a.next_step(40).stragglers, b.next_step(40).stragglers);
         }
+    }
+
+    #[test]
+    fn recreated_samplers_replay_all_models() {
+        // Seed determinism across *re-created* samplers, for every
+        // straggler model kind: sampling must depend only on (model,
+        // seed, step), never on sampler identity.
+        let models = [
+            StragglerModel::FixedCount { s: 5, seed: 11 },
+            StragglerModel::Bernoulli { q0: 0.3, seed: 12 },
+            StragglerModel::ShiftedExp { shift_ms: 5.0, rate: 0.2, wait_for: 25, seed: 13 },
+        ];
+        for model in &models {
+            let mut a = model.sampler();
+            let first: Vec<Vec<usize>> = (0..10).map(|_| a.next_step(40).stragglers).collect();
+            let mut b = model.sampler();
+            let second: Vec<Vec<usize>> = (0..10).map(|_| b.next_step(40).stragglers).collect();
+            assert_eq!(first, second, "{}", model.name());
+        }
+    }
+
+    #[test]
+    fn shifted_exp_marks_workers_minus_wait_for() {
+        for (w, wait_for) in [(40usize, 30usize), (64, 48), (10, 1), (10, 10)] {
+            let mut s = StragglerModel::ShiftedExp {
+                shift_ms: 2.0,
+                rate: 0.5,
+                wait_for,
+                seed: 21,
+            }
+            .sampler();
+            for _ in 0..20 {
+                let st = s.next_step(w);
+                assert_eq!(st.stragglers.len(), w - wait_for, "w={w} wait_for={wait_for}");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_count_draws_exactly_s_distinct_indices() {
+        let mut s = StragglerModel::FixedCount { s: 9, seed: 31 }.sampler();
+        for _ in 0..200 {
+            let st = s.next_step(64);
+            assert_eq!(st.stragglers.len(), 9);
+            // Sorted and strictly increasing => all distinct and in range.
+            assert!(st.stragglers.windows(2).all(|w| w[0] < w[1]));
+            assert!(st.stragglers.iter().all(|&i| i < 64));
+        }
+    }
+}
+
+#[cfg(test)]
+mod latency_tests {
+    use super::*;
+
+    #[test]
+    fn recreated_latency_samplers_bit_identical() {
+        let models = [
+            LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 0.5, seed: 1 },
+            LatencyModel::Pareto { scale_ms: 1.0, shape: 2.0, seed: 2 },
+            LatencyModel::Markov {
+                shift_ms: 1.0,
+                rate: 1.0,
+                slowdown: 10.0,
+                p_slow: 0.1,
+                p_fast: 0.3,
+                seed: 3,
+            },
+            LatencyModel::Heterogeneous { shift_ms: 1.0, rate: 1.0, spread: 3.0, seed: 4 },
+        ];
+        for model in &models {
+            let mut a = model.sampler();
+            let mut b = model.sampler();
+            for _ in 0..25 {
+                assert_eq!(a.sample(16), b.sample(16), "{}", model.name());
+            }
+        }
+    }
+
+    #[test]
+    fn reseed_changes_draws_but_not_shape() {
+        let m = LatencyModel::ShiftedExp { shift_ms: 2.0, rate: 0.5, seed: 5 };
+        let a = m.sampler().sample(32);
+        let b = m.reseed(6).sampler().sample(32);
+        assert_ne!(a, b);
+        assert!(b.iter().all(|&l| l >= 2.0), "shift preserved after reseed");
+    }
+
+    #[test]
+    fn pareto_tail_shape() {
+        // P[X > 2·scale] = 2^-shape; with shape 2 that is 0.25, and the
+        // support never dips below the scale.
+        let m = LatencyModel::Pareto { scale_ms: 3.0, shape: 2.0, seed: 7 };
+        let mut s = m.sampler();
+        let mut over = 0usize;
+        let mut total = 0usize;
+        for _ in 0..500 {
+            for &l in &s.sample(64) {
+                assert!(l >= 3.0);
+                total += 1;
+                if l > 6.0 {
+                    over += 1;
+                }
+            }
+        }
+        let frac = over as f64 / total as f64;
+        assert!((frac - 0.25).abs() < 0.02, "tail fraction {frac}");
+    }
+
+    #[test]
+    fn markov_stationary_slow_fraction() {
+        // p_slow/(p_slow+p_fast) = 0.25 of workers slow on average, and
+        // the ×100 slowdown makes the slow set readable off the latency
+        // (the Exp(1) tail never reaches 100·shift).
+        let m = LatencyModel::Markov {
+            shift_ms: 1.0,
+            rate: 1.0,
+            slowdown: 100.0,
+            p_slow: 0.1,
+            p_fast: 0.3,
+            seed: 8,
+        };
+        let mut s = m.sampler();
+        let (w, steps) = (40, 2000);
+        let mut slow_total = 0usize;
+        for _ in 0..steps {
+            slow_total += s.sample(w).iter().filter(|&&l| l > 50.0).count();
+        }
+        let frac = slow_total as f64 / (w * steps) as f64;
+        assert!((frac - 0.25).abs() < 0.03, "stationary slow fraction {frac}");
+    }
+
+    #[test]
+    fn markov_slow_workers_stay_slow() {
+        // With a tiny recovery probability, a worker slow at step t is
+        // almost always slow at step t+1 — the correlation that i.i.d.
+        // models cannot express.
+        let m = LatencyModel::Markov {
+            shift_ms: 1.0,
+            rate: 1.0,
+            slowdown: 100.0,
+            p_slow: 0.05,
+            p_fast: 0.05,
+            seed: 9,
+        };
+        let mut s = m.sampler();
+        let w = 64;
+        let mut prev: Vec<bool> = s.sample(w).iter().map(|&l| l > 50.0).collect();
+        let mut stayed = 0usize;
+        let mut was_slow = 0usize;
+        for _ in 0..500 {
+            let cur: Vec<bool> = s.sample(w).iter().map(|&l| l > 50.0).collect();
+            for j in 0..w {
+                if prev[j] {
+                    was_slow += 1;
+                    if cur[j] {
+                        stayed += 1;
+                    }
+                }
+            }
+            prev = cur;
+        }
+        assert!(was_slow > 0);
+        let persistence = stayed as f64 / was_slow as f64;
+        assert!(persistence > 0.85, "slow-state persistence {persistence}");
+    }
+
+    #[test]
+    fn heterogeneous_multipliers_persist_per_worker() {
+        // Per-worker minima over many steps expose the fixed multiplier:
+        // with spread 3 the slowest machine's floor is well above the
+        // fastest machine's.
+        let m = LatencyModel::Heterogeneous { shift_ms: 10.0, rate: 10.0, spread: 3.0, seed: 10 };
+        let mut s = m.sampler();
+        let w = 16;
+        let mut mins = vec![f64::INFINITY; w];
+        for _ in 0..300 {
+            for (j, &l) in s.sample(w).iter().enumerate() {
+                mins[j] = mins[j].min(l);
+            }
+        }
+        let lo = mins.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = mins.iter().cloned().fold(0.0f64, f64::max);
+        assert!(lo >= 10.0, "floor below shift: {lo}");
+        assert!(hi / lo > 1.2, "multiplier spread invisible: {lo}..{hi}");
+    }
+
+    #[test]
+    fn trace_replay_round_trip() {
+        // record_trace(model) replayed through LatencyModel::Trace must
+        // reproduce the original model's draws bit-for-bit, then wrap.
+        let base = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 0.7, seed: 11 };
+        let (w, steps) = (8, 5);
+        let table = record_trace(&base, w, steps);
+        assert_eq!(table.len(), steps);
+
+        let mut orig = base.sampler();
+        let mut replay = LatencyModel::Trace { table: Arc::new(table.clone()) }.sampler();
+        for _ in 0..steps {
+            assert_eq!(orig.sample(w), replay.sample(w));
+        }
+        // Past the end the trace wraps to step 0.
+        assert_eq!(replay.sample(w), table[0]);
+    }
+
+    #[test]
+    fn trace_tiles_rows_over_more_workers() {
+        let table = vec![vec![1.0, 2.0]];
+        let mut s = LatencyModel::Trace { table: Arc::new(table) }.sampler();
+        assert_eq!(s.sample(5), vec![1.0, 2.0, 1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn model_names_are_stable() {
+        assert!(LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 0.5, seed: 0 }
+            .name()
+            .starts_with("shifted-exp"));
+        assert!(LatencyModel::Pareto { scale_ms: 1.0, shape: 2.0, seed: 0 }
+            .name()
+            .starts_with("pareto"));
+        assert_eq!(
+            LatencyModel::Trace { table: Arc::new(vec![vec![1.0]]) }.name(),
+            "trace"
+        );
     }
 }

@@ -3,7 +3,10 @@
 //! A *trial* re-runs the same (problem, scheme, config) with a fresh
 //! straggler realization — matching the paper's "results averaged over
 //! 100 trials". The scheme (and its one-time encoding) and the worker
-//! cluster are built once and reused across trials.
+//! cluster are built once and reused across trials. Trials run either on
+//! the OS-thread cluster ([`run_trials`]) or in the virtual-time
+//! simulator ([`run_sim_trials`]), which scales to hundreds or thousands
+//! of simulated workers with deadline-driven collection.
 
 use std::sync::Arc;
 
@@ -11,6 +14,7 @@ use crate::codes::ldpc::LdpcCode;
 use crate::codes::mds::{EvalPoints, VandermondeCode};
 use crate::config::RunConfig;
 use crate::coordinator::cluster::Cluster;
+use crate::coordinator::metrics::RunReport;
 use crate::coordinator::run_with_cluster;
 use crate::coordinator::schemes::gradcoding::GradCodingScheme;
 use crate::coordinator::schemes::ksdy::{KsdyScheme, SketchKind};
@@ -19,9 +23,11 @@ use crate::coordinator::schemes::mds_moment::MdsMomentScheme;
 use crate::coordinator::schemes::replication::ReplicationScheme;
 use crate::coordinator::schemes::uncoded::UncodedScheme;
 use crate::coordinator::schemes::GradientScheme;
-use crate::coordinator::straggler::StragglerModel;
+use crate::coordinator::straggler::{LatencyModel, StragglerModel};
 use crate::data::RegressionProblem;
 use crate::error::Result;
+use crate::sim::deadline::DeadlinePolicy;
+use crate::sim::{SimCluster, SimConfig};
 
 /// Declarative scheme choice (factory).
 #[derive(Debug, Clone)]
@@ -139,6 +145,51 @@ fn mean_std(xs: &[f64]) -> (f64, f64) {
     (m, v.sqrt())
 }
 
+/// Per-trial report folding shared by the thread and simulated trial
+/// loops.
+#[derive(Debug, Default)]
+struct TrialStats {
+    steps: Vec<f64>,
+    sim_ms: Vec<f64>,
+    wall_ms: Vec<f64>,
+    unrec: Vec<f64>,
+    rounds: Vec<f64>,
+    converged: usize,
+}
+
+impl TrialStats {
+    fn add(&mut self, report: &RunReport) {
+        if report.converged {
+            self.converged += 1;
+            self.steps.push(report.steps as f64);
+            self.sim_ms.push(report.sim_time_ms());
+            self.wall_ms.push(report.wall_ms);
+        }
+        self.unrec.push(report.totals.mean_unrecovered());
+        self.rounds.push(report.totals.mean_decode_rounds());
+    }
+
+    fn finish(self, scheme: String, trials: usize) -> Aggregate {
+        let (mean_steps, std_steps) = mean_std(&self.steps);
+        let (mean_sim_ms, std_sim_ms) = mean_std(&self.sim_ms);
+        let (mean_wall_ms, _) = mean_std(&self.wall_ms);
+        let (mean_unrecovered, _) = mean_std(&self.unrec);
+        let (mean_decode_rounds, _) = mean_std(&self.rounds);
+        Aggregate {
+            scheme,
+            trials,
+            convergence_rate: self.converged as f64 / trials.max(1) as f64,
+            mean_steps,
+            std_steps,
+            mean_sim_ms,
+            std_sim_ms,
+            mean_wall_ms,
+            mean_unrecovered,
+            mean_decode_rounds,
+        }
+    }
+}
+
 /// Re-seed the straggler model for a trial.
 fn reseed(model: &StragglerModel, seed: u64) -> StragglerModel {
     match *model {
@@ -162,46 +213,58 @@ pub fn run_trials(
     let backend = crate::coordinator::make_backend(&spec.config)?;
     let cluster = Cluster::spawn(scheme.payloads(), Arc::clone(&backend));
 
-    let mut steps = Vec::with_capacity(spec.trials);
-    let mut sim_ms = Vec::with_capacity(spec.trials);
-    let mut wall_ms = Vec::with_capacity(spec.trials);
-    let mut unrec = Vec::with_capacity(spec.trials);
-    let mut rounds = Vec::with_capacity(spec.trials);
-    let mut converged = 0usize;
-
+    let mut stats = TrialStats::default();
     for trial in 0..spec.trials {
         let mut cfg = spec.config.clone();
         cfg.straggler =
             reseed(&spec.config.straggler, spec.straggler_seed_base + trial as u64);
         let report = run_with_cluster(scheme.as_ref(), &cluster, problem, &cfg)?;
-        if report.converged {
-            converged += 1;
-            steps.push(report.steps as f64);
-            sim_ms.push(report.sim_time_ms());
-            wall_ms.push(report.wall_ms);
-        }
-        unrec.push(report.totals.mean_unrecovered());
-        rounds.push(report.totals.mean_decode_rounds());
+        stats.add(&report);
     }
     cluster.shutdown();
+    Ok(stats.finish(scheme.name(), spec.trials))
+}
 
-    let (mean_steps, std_steps) = mean_std(&steps);
-    let (mean_sim_ms, std_sim_ms) = mean_std(&sim_ms);
-    let (mean_wall_ms, _) = mean_std(&wall_ms);
-    let (mean_unrecovered, _) = mean_std(&unrec);
-    let (mean_decode_rounds, _) = mean_std(&rounds);
-    Ok(Aggregate {
-        scheme: scheme.name(),
-        trials: spec.trials,
-        convergence_rate: converged as f64 / spec.trials.max(1) as f64,
-        mean_steps,
-        std_steps,
-        mean_sim_ms,
-        std_sim_ms,
-        mean_wall_ms,
-        mean_unrecovered,
-        mean_decode_rounds,
-    })
+/// Virtual-time counterpart of the experiment spec: a latency model and
+/// a deadline policy for the simulated master. The latency seed is
+/// varied per trial (base + trial index) exactly like the straggler
+/// seed.
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    /// Per-worker completion-time model.
+    pub latency: LatencyModel,
+    /// Collection policy.
+    pub policy: DeadlinePolicy,
+}
+
+/// Run `spec.trials` virtual-time trials of a scheme — time-to-accuracy
+/// under deadline-driven collection at worker counts far beyond host
+/// cores (the harness's n ≥ 512 experiments). The scheme encoding is
+/// built once; each trial gets a fresh simulated cluster with reseeded
+/// latency (and straggler, for the mirror policy) draws.
+pub fn run_sim_trials(
+    scheme_spec: &SchemeSpec,
+    problem: &RegressionProblem,
+    spec: &ExperimentSpec,
+    sim: &SimSpec,
+) -> Result<Aggregate> {
+    let scheme = scheme_spec.build(problem, spec.config.workers)?;
+    // Build the backend once (PJRT loads AOT artifacts from disk); the
+    // per-trial SimCluster itself is free — it borrows the payloads.
+    let backend = crate::coordinator::make_backend(&spec.config)?;
+    let mut stats = TrialStats::default();
+    for trial in 0..spec.trials {
+        let seed = spec.straggler_seed_base + trial as u64;
+        let mut cfg = spec.config.clone();
+        cfg.straggler = reseed(&spec.config.straggler, seed);
+        let sim_cfg = SimConfig::new(sim.latency.reseed(seed), sim.policy.clone());
+        let mut cluster =
+            SimCluster::new(scheme.payloads(), Arc::clone(&backend), &cfg, &sim_cfg);
+        let report =
+            crate::coordinator::run_with_executor(scheme.as_ref(), &mut cluster, problem, &cfg)?;
+        stats.add(&report);
+    }
+    Ok(stats.finish(scheme.name(), spec.trials))
 }
 
 #[cfg(test)]
@@ -232,6 +295,59 @@ mod tests {
         assert!(agg.convergence_rate > 0.99, "{agg:?}");
         assert!(agg.mean_steps > 0.0);
         assert!(agg.mean_sim_ms > 0.0);
+    }
+
+    #[test]
+    fn sim_trials_aggregate_with_deadline_drops() {
+        let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), 3);
+        let spec = ExperimentSpec {
+            config: RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() },
+            trials: 3,
+            straggler_seed_base: 50,
+        };
+        let sim = SimSpec {
+            latency: LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 0 },
+            policy: DeadlinePolicy::WaitForK(34),
+        };
+        let agg = run_sim_trials(
+            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
+            &p,
+            &spec,
+            &sim,
+        )
+        .unwrap();
+        assert_eq!(agg.trials, 3);
+        assert!(agg.convergence_rate > 0.99, "{agg:?}");
+        assert!(agg.mean_sim_ms > 0.0, "virtual time must accumulate");
+        // 6 of 40 dropped per step leaves some coordinates unrecovered
+        // at least occasionally; the decoder must be doing *some* work.
+        assert!(agg.mean_decode_rounds > 0.0);
+    }
+
+    #[test]
+    fn sim_trials_vary_latency_seed_per_trial() {
+        // With one trial per aggregate and different seed bases, the
+        // realized step counts should differ (w.h.p. under 6 random
+        // drops/step) — reseeding is actually happening.
+        let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), 4);
+        let mk = |base: u64| ExperimentSpec {
+            config: RunConfig { rel_tol: 1e-5, max_steps: 6000, ..Default::default() },
+            trials: 1,
+            straggler_seed_base: base,
+        };
+        let sim = SimSpec {
+            latency: LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 0 },
+            policy: DeadlinePolicy::WaitForK(34),
+        };
+        let scheme = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 };
+        let a = run_sim_trials(&scheme, &p, &mk(100), &sim).unwrap();
+        let b = run_sim_trials(&scheme, &p, &mk(900), &sim).unwrap();
+        let c = run_sim_trials(&scheme, &p, &mk(100), &sim).unwrap();
+        assert_eq!(a.mean_steps, c.mean_steps, "same seeds, same trajectory");
+        assert!(
+            a.mean_steps != b.mean_steps || a.mean_sim_ms != b.mean_sim_ms,
+            "different latency seeds should change the run"
+        );
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //! * **L3 — Rust coordinator** (this crate): encoding, master/worker
 //!   message loop, straggler injection, peeling decode, optimizer loop,
 //!   all baselines (uncoded, replication, KSDY17 sketching, MDS moment
-//!   encoding, gradient coding), metrics, CLI, benches.
+//!   encoding, gradient coding), metrics, CLI, benches. The same master
+//!   loop also drives a virtual-time discrete-event simulator
+//!   ([`sim`]) with deadline-driven collection over thousands of
+//!   simulated workers.
 //! * **L2 — JAX model** (`python/compile/model.py`): the worker compute
 //!   graph (encoded shard mat-vec, KSDY local gradient) lowered once to
 //!   HLO text by `python/compile/aot.py`.
@@ -61,6 +64,7 @@ pub mod linalg;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod sim;
 pub mod testing;
 
 pub use error::{Error, Result};
@@ -78,8 +82,11 @@ pub mod prelude {
     pub use crate::coordinator::schemes::replication::ReplicationScheme;
     pub use crate::coordinator::schemes::uncoded::UncodedScheme;
     pub use crate::coordinator::schemes::GradientScheme;
-    pub use crate::coordinator::straggler::StragglerModel;
+    pub use crate::coordinator::straggler::{LatencyModel, StragglerModel};
+    pub use crate::coordinator::{run_with_executor, StepExecutor};
     pub use crate::data::{RegressionProblem, SynthConfig};
+    pub use crate::sim::deadline::DeadlinePolicy;
+    pub use crate::sim::{run_simulated, SimCluster, SimConfig};
     pub use crate::error::{Error, Result};
     pub use crate::linalg::Matrix;
     pub use crate::optim::projections::Projection;

@@ -5,15 +5,18 @@ use moment_ldpc::cli::{Args, USAGE};
 use moment_ldpc::codes::density::DensityEvolution;
 use moment_ldpc::config::RunConfig;
 use moment_ldpc::coordinator::schemes::ksdy::SketchKind;
-use moment_ldpc::coordinator::straggler::StragglerModel;
+use moment_ldpc::coordinator::straggler::{LatencyModel, StragglerModel};
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
 use moment_ldpc::error::{Error, Result};
-use moment_ldpc::harness::experiment::{run_trials, ExperimentSpec, SchemeSpec};
+use moment_ldpc::harness::experiment::{
+    run_sim_trials, run_trials, Aggregate, ExperimentSpec, SchemeSpec, SimSpec,
+};
 use moment_ldpc::harness::figures::{fig1, fig2, fig3, FigureScale};
 use moment_ldpc::harness::report::{write_csv, Table};
 use moment_ldpc::optim::projections::Projection;
 use moment_ldpc::runtime::artifact::{ArtifactRegistry, Kernel};
 use moment_ldpc::runtime::BackendChoice;
+use moment_ldpc::sim::deadline::DeadlinePolicy;
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -40,6 +43,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         "run" => cmd_run(args),
+        "simulate" => cmd_simulate(args),
         "fig1" => cmd_fig(args, 1),
         "fig2" => cmd_fig(args, 2),
         "fig3" => cmd_fig(args, 3),
@@ -121,12 +125,65 @@ fn cmd_run(args: &Args) -> Result<()> {
         straggler_seed_base: args.get::<u64>("straggler-seed", 1000)?,
     };
     let scheme = scheme_spec_from(&args.get_str("scheme", "ldpc"), args, workers)?;
+    let setup = spec.config.straggler.name();
     let agg = run_trials(&scheme, &problem, &spec)?;
-    if args.has("json") {
+    print_aggregate(&agg, &setup, args.has("json"));
+    Ok(())
+}
+
+fn latency_model_from(args: &Args) -> Result<LatencyModel> {
+    // The per-trial harness reseeds the model from --seed-base + trial
+    // index, so the model's own seed is a placeholder.
+    let seed = 0;
+    let shift_ms = args.get::<f64>("shift-ms", 1.0)?;
+    let rate = args.get::<f64>("rate", 0.5)?;
+    Ok(match args.get_str("latency", "shifted-exp").as_str() {
+        "shifted-exp" => LatencyModel::ShiftedExp { shift_ms, rate, seed },
+        "pareto" => LatencyModel::Pareto {
+            scale_ms: args.get::<f64>("scale-ms", 1.0)?,
+            shape: args.get::<f64>("shape", 2.0)?,
+            seed,
+        },
+        "markov" => LatencyModel::Markov {
+            shift_ms,
+            rate,
+            slowdown: args.get::<f64>("slowdown", 10.0)?,
+            p_slow: args.get::<f64>("p-slow", 0.05)?,
+            p_fast: args.get::<f64>("p-fast", 0.3)?,
+            seed,
+        },
+        "hetero" => LatencyModel::Heterogeneous {
+            shift_ms,
+            rate,
+            spread: args.get::<f64>("spread", 3.0)?,
+            seed,
+        },
+        other => return Err(Error::Config(format!("unknown latency model '{other}'"))),
+    })
+}
+
+fn deadline_policy_from(args: &Args, workers: usize) -> Result<DeadlinePolicy> {
+    Ok(match args.get_str("policy", "wait-k").as_str() {
+        "all" => DeadlinePolicy::WaitForAll,
+        "wait-k" => DeadlinePolicy::WaitForK(args.get::<usize>("wait-k", workers * 7 / 8)?),
+        "deadline" => DeadlinePolicy::FixedDeadline { ms: args.get::<f64>("deadline-ms", 5.0)? },
+        "quantile" => DeadlinePolicy::QuantileAdaptive {
+            q: args.get::<f64>("quantile", 0.9)?,
+            slack: args.get::<f64>("slack", 1.5)?,
+            window: args.get::<usize>("window", 1024)?,
+        },
+        "mirror" => DeadlinePolicy::MirrorStraggler,
+        other => return Err(Error::Config(format!("unknown deadline policy '{other}'"))),
+    })
+}
+
+fn print_aggregate(agg: &Aggregate, setup: &str, json: bool) {
+    if json {
         println!(
-            "{{\"scheme\":\"{}\",\"trials\":{},\"convergence_rate\":{:.3},\
-             \"mean_steps\":{:.2},\"std_steps\":{:.2},\"mean_sim_ms\":{:.3},\
-             \"mean_unrecovered\":{:.3},\"mean_decode_rounds\":{:.3}}}",
+            "{{\"scheme\":\"{}\",\"setup\":\"{setup}\",\"trials\":{},\
+             \"convergence_rate\":{:.3},\"mean_steps\":{:.2},\"std_steps\":{:.2},\
+             \"mean_sim_ms\":{:.3},\"mean_unrecovered\":{:.3},\
+             \"mean_decode_rounds\":{:.3}}}",
             agg.scheme,
             agg.trials,
             agg.convergence_rate,
@@ -138,8 +195,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     } else {
         println!(
-            "scheme={} trials={} converged={:.0}% steps={:.1}±{:.1} sim_ms={:.2}±{:.2} \
-             unrec/step={:.2} rounds/step={:.2}",
+            "scheme={} setup={setup} trials={} converged={:.0}% steps={:.1}±{:.1} \
+             sim_ms={:.2}±{:.2} unrec/step={:.2} rounds/step={:.2}",
             agg.scheme,
             agg.trials,
             100.0 * agg.convergence_rate,
@@ -151,6 +208,59 @@ fn cmd_run(args: &Args) -> Result<()> {
             agg.mean_decode_rounds
         );
     }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let workers = args.get::<usize>("workers", 512)?;
+    let k = args.get::<usize>("k", 64)?;
+    let m = args.get::<usize>("m", 4 * k)?;
+    let trials = args.get::<usize>("trials", 3)?;
+    let problem =
+        RegressionProblem::generate(&SynthConfig::dense(m, k), args.get::<u64>("data-seed", 1)?);
+    let latency = latency_model_from(args)?;
+    let policy = deadline_policy_from(args, workers)?;
+    // The mirror policy masks from a straggler model instead of the
+    // latency draw — `--mirror-stragglers` sets its FixedCount size
+    // (default 5, the `run` command's default). A dedicated flag, not
+    // `--stragglers`: that one stays the scheme knob (gradient-coding
+    // tolerance), exactly as in `run`.
+    let mirror = matches!(policy, DeadlinePolicy::MirrorStraggler);
+    let s = args.get::<usize>("mirror-stragglers", if mirror { 5 } else { 0 })?;
+    if s > 0 && !mirror {
+        return Err(Error::Config(
+            "--mirror-stragglers only applies to --policy mirror (other policies drop \
+             by latency)"
+                .into(),
+        ));
+    }
+    if mirror && s == 0 {
+        return Err(Error::Config(
+            "--policy mirror needs --mirror-stragglers S > 0 to have anything to mirror"
+                .into(),
+        ));
+    }
+    let spec = ExperimentSpec {
+        config: RunConfig {
+            workers,
+            straggler: if s == 0 {
+                StragglerModel::None
+            } else {
+                StragglerModel::FixedCount { s, seed: 0 }
+            },
+            decode_iters: args.get::<usize>("decode-iters", 40)?,
+            step_size: args.get_opt::<f64>("step")?,
+            rel_tol: args.get::<f64>("rel-tol", 1e-3)?,
+            max_steps: args.get::<usize>("max-steps", 2000)?,
+            ..Default::default()
+        },
+        trials,
+        straggler_seed_base: args.get::<u64>("seed-base", 1000)?,
+    };
+    let scheme = scheme_spec_from(&args.get_str("scheme", "ldpc"), args, workers)?;
+    let sim = SimSpec { latency: latency.clone(), policy: policy.clone() };
+    let agg = run_sim_trials(&scheme, &problem, &spec, &sim)?;
+    let setup = format!("{}/{}", latency.name(), policy.name());
+    print_aggregate(&agg, &setup, args.has("json"));
     Ok(())
 }
 

@@ -161,6 +161,21 @@ impl Rng {
         shift + self.exponential(rate)
     }
 
+    /// Pareto variate with scale `x_m` and shape `alpha` via inverse
+    /// transform: `x_m · U^{-1/alpha}`, so `P[X > t] = (x_m/t)^alpha`
+    /// for `t ≥ x_m` — the heavy-tailed worker-latency model.
+    #[inline]
+    pub fn pareto(&mut self, scale: f64, shape: f64) -> f64 {
+        debug_assert!(scale > 0.0 && shape > 0.0);
+        let u = loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        scale * u.powf(-1.0 / shape)
+    }
+
     /// Vector of i.i.d. standard normals.
     pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
         (0..n).map(|_| self.gaussian()).collect()
@@ -302,6 +317,18 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pareto_tail_and_support() {
+        let mut r = Rng::new(41);
+        let (scale, shape) = (2.0, 2.0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.pareto(scale, shape)).collect();
+        assert!(xs.iter().all(|&x| x >= scale), "support is [scale, inf)");
+        // P[X > 2*scale] = 2^-shape = 0.25.
+        let tail = xs.iter().filter(|&&x| x > 2.0 * scale).count() as f64 / n as f64;
+        assert!((tail - 0.25).abs() < 0.01, "tail {tail}");
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Deadline policies for the simulated master.
+//!
+//! The thread cluster waits for *every* worker and masks stragglers after
+//! the fact; a real deadline-driven master stops collecting early and the
+//! late responses never count. The policies here decide, per step, when
+//! the simulated master stops collecting:
+//!
+//! * wait-for-k — the classical coded-computation policy (Tandon et al.,
+//!   "Gradient Coding"): proceed after the fastest `k` responses;
+//! * fixed deadline — a hard per-step time budget;
+//! * quantile-adaptive — track recent response latencies and set the
+//!   deadline at a slacked quantile, so the budget follows the fleet's
+//!   actual speed (and tightens/loosens as stragglers come and go);
+//! * mirror — delegate the drop decision to the run's
+//!   [`crate::coordinator::straggler::StragglerModel`], reproducing the
+//!   thread cluster bit-for-bit for a fixed seed (the parity-test mode).
+
+/// Per-step collection policy of the simulated master.
+#[derive(Debug, Clone)]
+pub enum DeadlinePolicy {
+    /// Wait for every worker (no drops; the collect time is the slowest
+    /// worker — the wait-for-all baseline the paper argues against).
+    WaitForAll,
+    /// Proceed after the fastest `k` responses; the rest are dropped.
+    WaitForK(usize),
+    /// Proceed at a fixed per-step deadline (ms of simulated time);
+    /// responses arriving later are dropped.
+    FixedDeadline {
+        /// Per-step budget (ms).
+        ms: f64,
+    },
+    /// Adaptive: deadline = `slack ×` the `q`-quantile of the last
+    /// `window` observed worker latencies (the simulator feeds the
+    /// window every realized arrival, dropped ones included, so the
+    /// budget follows the fleet as it slows down or recovers). The
+    /// first step (empty window) waits for all workers to seed the
+    /// estimate.
+    QuantileAdaptive {
+        /// Quantile in `[0, 1]` of observed latencies.
+        q: f64,
+        /// Multiplier on the quantile (≥ 1 loosens).
+        slack: f64,
+        /// Observation ring-buffer capacity.
+        window: usize,
+    },
+    /// Drop the workers named by the run's `StragglerModel` instead of
+    /// deciding by latency — mirrors the thread cluster's masking
+    /// bit-for-bit for a fixed seed.
+    MirrorStraggler,
+}
+
+impl DeadlinePolicy {
+    /// Short name for reports.
+    pub fn name(&self) -> String {
+        match *self {
+            DeadlinePolicy::WaitForAll => "wait-all".into(),
+            DeadlinePolicy::WaitForK(k) => format!("wait-k({k})"),
+            DeadlinePolicy::FixedDeadline { ms } => format!("deadline({ms}ms)"),
+            DeadlinePolicy::QuantileAdaptive { q, slack, .. } => {
+                format!("quantile({q},x{slack})")
+            }
+            DeadlinePolicy::MirrorStraggler => "mirror".into(),
+        }
+    }
+}
+
+/// This step's collection cut, as decided by [`DeadlineState::cutoff`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Cutoff {
+    /// Count every response.
+    All,
+    /// Count the fastest `n` responses.
+    Count(usize),
+    /// Count responses arriving within `ms` of the step start.
+    Time(f64),
+}
+
+/// Stateful per-run policy evaluator (the quantile policy learns from
+/// observed latencies; the others are stateless).
+#[derive(Debug, Clone)]
+pub struct DeadlineState {
+    policy: DeadlinePolicy,
+    /// Ring buffer of observed response latencies (ms, step-relative).
+    window: Vec<f64>,
+    next: usize,
+    scratch: Vec<f64>,
+}
+
+impl DeadlineState {
+    /// Fresh state for a policy.
+    pub fn new(policy: DeadlinePolicy) -> Self {
+        DeadlineState { policy, window: Vec::new(), next: 0, scratch: Vec::new() }
+    }
+
+    /// The policy this state evaluates.
+    pub fn policy(&self) -> &DeadlinePolicy {
+        &self.policy
+    }
+
+    /// Decide this step's cut for `w` workers. `MirrorStraggler` never
+    /// reaches here (the simulator short-circuits it).
+    pub fn cutoff(&mut self, w: usize) -> Cutoff {
+        match self.policy {
+            DeadlinePolicy::WaitForAll | DeadlinePolicy::MirrorStraggler => Cutoff::All,
+            DeadlinePolicy::WaitForK(k) => Cutoff::Count(k.clamp(1, w)),
+            DeadlinePolicy::FixedDeadline { ms } => Cutoff::Time(ms),
+            DeadlinePolicy::QuantileAdaptive { q, slack, .. } => {
+                if self.observed_len() == 0 {
+                    // Nothing observed yet: seed the window by waiting
+                    // for everyone once.
+                    Cutoff::All
+                } else {
+                    Cutoff::Time(slack * self.quantile(q))
+                }
+            }
+        }
+    }
+
+    /// Record an observed worker latency (ms, step-relative). Only the
+    /// quantile policy keeps state; the others ignore observations.
+    pub fn observe(&mut self, latency_ms: f64) {
+        let cap = match self.policy {
+            DeadlinePolicy::QuantileAdaptive { window, .. } => window.max(1),
+            _ => return,
+        };
+        if self.window.len() < cap {
+            self.window.push(latency_ms);
+        } else {
+            self.window[self.next] = latency_ms;
+        }
+        self.next = (self.next + 1) % cap;
+    }
+
+    fn observed_len(&self) -> usize {
+        self.window.len()
+    }
+
+    /// The `q`-quantile of the observation window (nearest-rank, via
+    /// O(window) selection — this runs every step).
+    fn quantile(&mut self, q: f64) -> f64 {
+        debug_assert!(!self.window.is_empty());
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.window);
+        let n = self.scratch.len();
+        let idx = (((n as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize).min(n - 1);
+        let (_, v, _) = self.scratch.select_nth_unstable_by(idx, f64::total_cmp);
+        *v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wait_for_k_clamps() {
+        let mut s = DeadlineState::new(DeadlinePolicy::WaitForK(30));
+        assert_eq!(s.cutoff(40), Cutoff::Count(30));
+        assert_eq!(s.cutoff(10), Cutoff::Count(10));
+        let mut z = DeadlineState::new(DeadlinePolicy::WaitForK(0));
+        assert_eq!(z.cutoff(10), Cutoff::Count(1));
+    }
+
+    #[test]
+    fn fixed_deadline_is_constant() {
+        let mut s = DeadlineState::new(DeadlinePolicy::FixedDeadline { ms: 4.5 });
+        for _ in 0..5 {
+            s.observe(100.0); // ignored
+            assert_eq!(s.cutoff(8), Cutoff::Time(4.5));
+        }
+    }
+
+    #[test]
+    fn quantile_seeds_with_wait_all_then_adapts() {
+        let mut s = DeadlineState::new(DeadlinePolicy::QuantileAdaptive {
+            q: 0.5,
+            slack: 2.0,
+            window: 64,
+        });
+        assert_eq!(s.cutoff(8), Cutoff::All, "empty window must wait for all");
+        for l in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.observe(l);
+        }
+        // Median 3.0 × slack 2.0.
+        assert_eq!(s.cutoff(8), Cutoff::Time(6.0));
+    }
+
+    #[test]
+    fn quantile_window_is_bounded_and_rolls() {
+        let mut s = DeadlineState::new(DeadlinePolicy::QuantileAdaptive {
+            q: 1.0,
+            slack: 1.0,
+            window: 4,
+        });
+        for l in [10.0, 20.0, 30.0, 40.0] {
+            s.observe(l);
+        }
+        assert_eq!(s.cutoff(8), Cutoff::Time(40.0));
+        // Four more observations overwrite the whole window.
+        for l in [1.0, 2.0, 3.0, 4.0] {
+            s.observe(l);
+        }
+        assert_eq!(s.cutoff(8), Cutoff::Time(4.0), "old max must have rolled out");
+    }
+
+    #[test]
+    fn quantile_extremes() {
+        let mut s = DeadlineState::new(DeadlinePolicy::QuantileAdaptive {
+            q: 0.0,
+            slack: 1.0,
+            window: 16,
+        });
+        for l in [5.0, 1.0, 9.0] {
+            s.observe(l);
+        }
+        assert_eq!(s.cutoff(4), Cutoff::Time(1.0));
+        let mut hi = DeadlineState::new(DeadlinePolicy::QuantileAdaptive {
+            q: 1.0,
+            slack: 1.5,
+            window: 16,
+        });
+        for l in [5.0, 1.0, 9.0] {
+            hi.observe(l);
+        }
+        assert_eq!(hi.cutoff(4), Cutoff::Time(13.5));
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(DeadlinePolicy::WaitForAll.name(), "wait-all");
+        assert_eq!(DeadlinePolicy::WaitForK(30).name(), "wait-k(30)");
+        assert_eq!(DeadlinePolicy::FixedDeadline { ms: 2.0 }.name(), "deadline(2ms)");
+        assert_eq!(DeadlinePolicy::MirrorStraggler.name(), "mirror");
+    }
+}

@@ -1,0 +1,156 @@
+//! Deterministic discrete-event heap for the virtual-time simulator.
+//!
+//! A min-heap keyed by simulated time with an insertion-sequence
+//! tie-break, so two events at the same instant always pop in the order
+//! they were scheduled — runs are bit-reproducible regardless of float
+//! ties.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// A scheduled arrival: worker `worker`'s response becomes available at
+/// simulated time `time_ms`.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Absolute simulated arrival time (ms).
+    pub time_ms: f64,
+    /// Insertion sequence number (tie-break; unique per queue).
+    pub seq: u64,
+    /// Worker id.
+    pub worker: usize,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // total_cmp: latencies are finite, but stay total-order-safe.
+        self.time_ms
+            .total_cmp(&other.time_ms)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-queue of [`Event`]s in (time, insertion) order.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule worker `worker` at absolute time `time_ms`.
+    pub fn push(&mut self, time_ms: f64, worker: usize) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Event { time_ms, seq, worker }));
+    }
+
+    /// Pop the earliest event (ties in insertion order).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    /// Earliest pending time, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(e)| e.time_ms)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drop all pending events (the sequence counter keeps running so
+    /// later pushes still order after earlier ones).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, 0);
+        q.push(1.0, 1);
+        q.push(2.0, 2);
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.worker).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for w in 0..10 {
+            q.push(5.0, w);
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.worker).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn peek_and_len() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        q.push(7.5, 3);
+        q.push(2.5, 4);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peek_time(), Some(2.5));
+        q.clear();
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clear_keeps_sequence_monotone() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 0);
+        q.clear();
+        q.push(4.0, 1);
+        q.push(4.0, 2);
+        assert_eq!(q.pop().unwrap().worker, 1);
+        assert_eq!(q.pop().unwrap().worker, 2);
+    }
+
+    #[test]
+    fn identical_pushes_identical_pops() {
+        // Determinism: two queues fed the same schedule drain identically.
+        let feed = [(3.0, 1usize), (3.0, 2), (0.5, 3), (9.0, 4), (0.5, 5)];
+        let drain = |q: &mut EventQueue| -> Vec<(u64, usize)> {
+            std::iter::from_fn(|| q.pop()).map(|e| (e.seq, e.worker)).collect()
+        };
+        let mut a = EventQueue::new();
+        let mut b = EventQueue::new();
+        for &(t, w) in &feed {
+            a.push(t, w);
+            b.push(t, w);
+        }
+        assert_eq!(drain(&mut a), drain(&mut b));
+    }
+}

@@ -1,0 +1,449 @@
+//! Virtual-time cluster simulator: deadline-driven distributed GD over
+//! thousands of simulated workers.
+//!
+//! The OS-thread [`crate::coordinator::cluster::Cluster`] caps
+//! experiments at host-core counts and always waits for every worker
+//! (straggling is masked *after* collection). This module replaces the
+//! thread topology with a deterministic discrete-event simulation:
+//!
+//! * a virtual clock and an event heap ([`event::EventQueue`]) order
+//!   per-worker response arrivals, with completion times sampled from a
+//!   pluggable [`LatencyModel`] (shifted-exponential, heavy-tail Pareto,
+//!   Markov-correlated slowdowns, heterogeneous fleets, trace replay);
+//! * a [`deadline::DeadlinePolicy`] decides when the master stops
+//!   collecting — wait-for-k, a fixed per-step budget, or a
+//!   quantile-adaptive budget — and late responses are *genuinely
+//!   dropped*: their worker tasks are never computed;
+//! * the gradient step itself is the coordinator's
+//!   [`run_with_executor`] loop, shared verbatim with the thread
+//!   cluster through the [`StepExecutor`] trait, so the LDPC peeling
+//!   iterations adapt to each step's realized erasure pattern exactly as
+//!   in a real deployment (the paper's "decoding iterations adjust to
+//!   the number of stragglers" claim, now under deadline semantics).
+//!
+//! With [`DeadlinePolicy::MirrorStraggler`] the simulator defers the
+//! drop decision to the run's [`StragglerModel`] sampler, which makes a
+//! fixed-seed simulated run bit-identical to the thread cluster — the
+//! equivalence the integration tests pin down.
+
+pub mod deadline;
+pub mod event;
+
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::RunReport;
+use crate::coordinator::protocol::WorkerPayload;
+use crate::coordinator::schemes::GradientScheme;
+use crate::coordinator::straggler::{LatencyModel, LatencySampler, StragglerSampler};
+use crate::coordinator::{run_with_executor, StepExecution, StepExecutor};
+use crate::data::RegressionProblem;
+use crate::error::{Error, Result};
+use crate::runtime::ComputeBackend;
+
+use deadline::{Cutoff, DeadlinePolicy, DeadlineState};
+use event::EventQueue;
+
+/// Configuration of the virtual-time simulation: where latencies come
+/// from and when the master stops collecting.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Per-worker completion-time model.
+    pub latency: LatencyModel,
+    /// Collection policy.
+    pub policy: DeadlinePolicy,
+}
+
+impl SimConfig {
+    /// Bundle a latency model with a deadline policy.
+    pub fn new(latency: LatencyModel, policy: DeadlinePolicy) -> Self {
+        SimConfig { latency, policy }
+    }
+
+    /// Label for reports: `latency/policy`.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.latency.name(), self.policy.name())
+    }
+}
+
+/// A simulated cluster: borrows the scheme's worker payloads and
+/// executes each gradient step in virtual time on the calling thread.
+/// Implements [`StepExecutor`], so [`run_with_executor`] drives it with
+/// the same master loop as the OS-thread cluster. Construction is cheap
+/// (no payload copies), so per-trial clusters cost nothing.
+pub struct SimCluster<'a> {
+    payloads: &'a [WorkerPayload],
+    backend: Arc<dyn ComputeBackend>,
+    latency: LatencySampler,
+    deadline: DeadlineState,
+    /// `Some` iff the policy is [`DeadlinePolicy::MirrorStraggler`].
+    mirror: Option<StragglerSampler>,
+    queue: EventQueue,
+    /// Per-step latency draw (reused).
+    lat_buf: Vec<f64>,
+    /// Per-step counted-worker flags (reused).
+    counted: Vec<bool>,
+    /// Spare response buffers (recycled across steps).
+    spares: Vec<Vec<f64>>,
+    /// The virtual clock (ms since the run began).
+    now_ms: f64,
+    /// Responses dropped over the cluster's lifetime.
+    dropped_total: u64,
+}
+
+impl<'a> SimCluster<'a> {
+    /// Build a simulated cluster over `payloads` (borrowed from the
+    /// scheme). `cfg.straggler` is only consulted by the
+    /// [`DeadlinePolicy::MirrorStraggler`] policy.
+    pub fn new(
+        payloads: &'a [WorkerPayload],
+        backend: Arc<dyn ComputeBackend>,
+        cfg: &RunConfig,
+        sim: &SimConfig,
+    ) -> SimCluster<'a> {
+        let mirror = if matches!(sim.policy, DeadlinePolicy::MirrorStraggler) {
+            Some(cfg.straggler.sampler())
+        } else {
+            None
+        };
+        SimCluster {
+            payloads,
+            backend,
+            latency: sim.latency.sampler(),
+            deadline: DeadlineState::new(sim.policy.clone()),
+            mirror,
+            queue: EventQueue::new(),
+            lat_buf: Vec::new(),
+            counted: Vec::new(),
+            spares: Vec::new(),
+            now_ms: 0.0,
+            dropped_total: 0,
+        }
+    }
+
+    /// Current simulated time (ms).
+    pub fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    /// Responses dropped so far.
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped_total
+    }
+
+    /// Compute worker `j`'s response into a recycled buffer and park it
+    /// in `masked[j]`.
+    fn compute_worker(
+        &mut self,
+        j: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+    ) -> Result<()> {
+        let mut buf = masked[j].take().or_else(|| self.spares.pop()).unwrap_or_default();
+        self.payloads[j].compute_into(theta, self.backend.as_ref(), Some(j as u64), &mut buf)?;
+        masked[j] = Some(buf);
+        Ok(())
+    }
+
+    /// Mirror mode: delegate the drop decision to the straggler model
+    /// (bit-identical masking to the thread cluster for a fixed seed).
+    fn execute_mirror_step(
+        &mut self,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+    ) -> Result<StepExecution> {
+        let w = self.payloads.len();
+        let straggling = self
+            .mirror
+            .as_mut()
+            .expect("mirror step without a straggler sampler")
+            .next_step(w);
+        let mut strag_iter = straggling.stragglers.iter().peekable();
+        for j in 0..w {
+            let is_straggler = matches!(strag_iter.peek(), Some(&&s) if s == j);
+            if is_straggler {
+                strag_iter.next();
+                if let Some(buf) = masked[j].take() {
+                    self.spares.push(buf);
+                }
+            } else {
+                self.compute_worker(j, theta, masked)?;
+            }
+        }
+        self.dropped_total += straggling.stragglers.len() as u64;
+        self.now_ms += straggling.collect_ms.unwrap_or(0.0);
+        Ok(StepExecution {
+            stragglers: straggling.stragglers.len(),
+            worker_ns: 0,
+            collect_ms: straggling.collect_ms,
+        })
+    }
+}
+
+impl StepExecutor for SimCluster<'_> {
+    fn workers(&self) -> usize {
+        self.payloads.len()
+    }
+
+    fn execute_step(
+        &mut self,
+        _t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+    ) -> Result<StepExecution> {
+        if self.mirror.is_some() {
+            return self.execute_mirror_step(theta, masked);
+        }
+        let w = self.payloads.len();
+        if w == 0 {
+            return Err(Error::Config("simulated cluster has no workers".into()));
+        }
+
+        // 1. Sample this step's completion times and schedule arrivals.
+        let mut lat = std::mem::take(&mut self.lat_buf);
+        self.latency.sample_into(w, &mut lat);
+        debug_assert!(self.queue.is_empty());
+        for (j, &l) in lat.iter().enumerate() {
+            debug_assert!(l.is_finite() && l >= 0.0, "latency {l} for worker {j}");
+            self.queue.push(self.now_ms + l, j);
+        }
+        self.lat_buf = lat;
+
+        // 2. Drain the heap in arrival order; the deadline policy decides
+        //    where collection stops. Late arrivals are genuinely dropped:
+        //    their tasks are never computed.
+        let cut = self.deadline.cutoff(w);
+        let target = match cut {
+            Cutoff::All => w,
+            Cutoff::Count(n) => n,
+            Cutoff::Time(_) => w,
+        };
+        let deadline_abs = match cut {
+            Cutoff::Time(ms) => Some(self.now_ms + ms),
+            _ => None,
+        };
+        self.counted.clear();
+        self.counted.resize(w, false);
+        let mut counted = 0usize;
+        let mut dropped = 0usize;
+        let mut last_arrival = self.now_ms;
+        while let Some(ev) = self.queue.pop() {
+            // Feed the policy the realized latency of *every* arrival,
+            // dropped ones included. A real master only sees censored
+            // times for missed responses; the simulator can afford the
+            // oracle, and it keeps the quantile window tracking the true
+            // distribution — without this, a fleet-wide slowdown freezes
+            // the window below every future arrival and the adaptive
+            // deadline can never loosen again.
+            self.deadline.observe(ev.time_ms - self.now_ms);
+            let in_time = match deadline_abs {
+                Some(d) => ev.time_ms <= d,
+                None => true,
+            };
+            if counted < target && in_time {
+                counted += 1;
+                last_arrival = ev.time_ms;
+                self.counted[ev.worker] = true;
+            } else {
+                dropped += 1;
+            }
+        }
+
+        // 3. Compute the counted workers' responses; recycle the rest.
+        for j in 0..w {
+            if self.counted[j] {
+                self.compute_worker(j, theta, masked)?;
+            } else if let Some(buf) = masked[j].take() {
+                self.spares.push(buf);
+            }
+        }
+
+        // 4. Advance the clock: a master with a time budget sits out the
+        //    full budget when anyone missed it; otherwise it proceeds at
+        //    the last counted arrival.
+        let proceed_at = match deadline_abs {
+            Some(d) if dropped > 0 => d,
+            _ => last_arrival,
+        };
+        let collect_ms = proceed_at - self.now_ms;
+        self.now_ms = proceed_at;
+        self.dropped_total += dropped as u64;
+        Ok(StepExecution { stragglers: dropped, worker_ns: 0, collect_ms: Some(collect_ms) })
+    }
+}
+
+/// Run the distributed optimization loop in virtual time: the simulated
+/// counterpart of [`crate::coordinator::run_distributed`], sharing its
+/// master loop. In the returned [`RunReport`], `collect_ms` totals are
+/// simulated-clock milliseconds (the virtual collection time), while
+/// `decode_ns`/`update_ns` remain *measured* master-side work — so
+/// `sim_time_ms()` keeps the crate's usual "collection + master
+/// compute" semantics. For a pure virtual-clock comparison, read
+/// `totals.collect_ms`.
+pub fn run_simulated(
+    scheme: &dyn GradientScheme,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+    sim: &SimConfig,
+) -> Result<RunReport> {
+    let backend = crate::coordinator::make_backend(cfg)?;
+    let mut cluster = SimCluster::new(scheme.payloads(), backend, cfg, sim);
+    run_with_executor(scheme, &mut cluster, problem, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::ldpc::LdpcCode;
+    use crate::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+    use crate::coordinator::schemes::uncoded::UncodedScheme;
+    use crate::coordinator::straggler::StragglerModel;
+    use crate::data::SynthConfig;
+
+    fn problem(k: usize) -> RegressionProblem {
+        RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 42)
+    }
+
+    fn ldpc_scheme(p: &RegressionProblem, seed: u64) -> LdpcMomentScheme {
+        let code = LdpcCode::gallager(40, 20, 3, 6, seed).unwrap();
+        LdpcMomentScheme::new(p, code).unwrap()
+    }
+
+    fn sim_exp(policy: DeadlinePolicy) -> SimConfig {
+        SimConfig::new(
+            LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 5 },
+            policy,
+        )
+    }
+
+    #[test]
+    fn wait_for_all_converges_and_advances_clock() {
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 1);
+        let cfg = RunConfig {
+            rel_tol: 1e-5,
+            max_steps: 3000,
+            record_trace: true,
+            ..Default::default()
+        };
+        let r = run_simulated(&s, &p, &cfg, &sim_exp(DeadlinePolicy::WaitForAll)).unwrap();
+        assert!(r.converged, "{}", r.summary());
+        assert_eq!(r.totals.stragglers, 0, "wait-for-all drops nothing");
+        assert!(r.totals.collect_ms > 0.0, "virtual clock must advance");
+        // Every step recorded a simulated collection time ≥ the shift.
+        assert!(r.trace.iter().all(|m| m.collect_ms.unwrap() >= 1.0));
+    }
+
+    #[test]
+    fn wait_for_k_drops_exactly_the_slack() {
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 2);
+        let cfg = RunConfig { rel_tol: 1e-4, max_steps: 4000, ..Default::default() };
+        let r = run_simulated(&s, &p, &cfg, &sim_exp(DeadlinePolicy::WaitForK(35))).unwrap();
+        assert!(r.converged, "{}", r.summary());
+        assert_eq!(r.totals.stragglers, 5 * r.steps, "5 dropped per step");
+    }
+
+    #[test]
+    fn impossible_deadline_drops_everyone_without_progress() {
+        // A 0.5 ms budget under a 1 ms shift: every response misses, the
+        // LDPC decode recovers nothing, θ never moves — and nothing
+        // panics or diverges.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 3);
+        let cfg = RunConfig { max_steps: 10, ..Default::default() };
+        let r = run_simulated(
+            &s,
+            &p,
+            &cfg,
+            &sim_exp(DeadlinePolicy::FixedDeadline { ms: 0.5 }),
+        )
+        .unwrap();
+        assert!(!r.converged);
+        assert_eq!(r.totals.stragglers, 40 * 10);
+        assert!(r.theta.iter().all(|&v| v == 0.0), "no recovered responses, no update");
+        // The master still pays the budget every step.
+        assert!((r.totals.collect_ms - 0.5 * 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_policy_seeds_then_drops_the_tail() {
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 4);
+        let cfg = RunConfig {
+            rel_tol: 1e-4,
+            max_steps: 4000,
+            record_trace: true,
+            ..Default::default()
+        };
+        let sim = SimConfig::new(
+            LatencyModel::Pareto { scale_ms: 1.0, shape: 1.5, seed: 9 },
+            DeadlinePolicy::QuantileAdaptive { q: 0.9, slack: 1.5, window: 512 },
+        );
+        let r = run_simulated(&s, &p, &cfg, &sim).unwrap();
+        assert!(r.converged, "{}", r.summary());
+        assert_eq!(r.trace[0].stragglers, 0, "first step seeds the window");
+        assert!(r.totals.stragglers > 0, "the heavy tail must get cut eventually");
+    }
+
+    #[test]
+    fn mirror_mode_matches_thread_cluster_masking() {
+        // Same seed, same FixedCount model: the simulated run must mask
+        // the same workers and land on the same θ as the thread run.
+        // (The full bit-identity test lives in tests/integration_sim.rs;
+        // this is the fast in-module version.)
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 6);
+        let cfg = RunConfig {
+            straggler: StragglerModel::FixedCount { s: 5, seed: 7 },
+            rel_tol: 1e-5,
+            max_steps: 400,
+            ..Default::default()
+        };
+        let sim = sim_exp(DeadlinePolicy::MirrorStraggler);
+        let a = run_simulated(&s, &p, &cfg, &sim).unwrap();
+        let b = run_simulated(&s, &p, &cfg, &sim).unwrap();
+        assert_eq!(a.theta, b.theta, "simulated runs are deterministic");
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.totals.stragglers, 5 * a.steps);
+    }
+
+    #[test]
+    fn uncoded_scheme_runs_under_deadline() {
+        // The executor is scheme-agnostic: a LocalGrad payload works too.
+        let p = problem(40);
+        let s = UncodedScheme::new(&p, 40).unwrap();
+        let cfg = RunConfig { rel_tol: 1e-3, max_steps: 4000, ..Default::default() };
+        let r = run_simulated(&s, &p, &cfg, &sim_exp(DeadlinePolicy::WaitForK(30))).unwrap();
+        assert!(r.converged, "{}", r.summary());
+        assert_eq!(r.totals.stragglers, 10 * r.steps);
+    }
+
+    #[test]
+    fn worker_count_mismatch_rejected() {
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 8);
+        let cfg = RunConfig::default(); // 40 workers
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        // A cluster over a *subset* of payloads must be rejected by the
+        // shared loop.
+        let sim = sim_exp(DeadlinePolicy::WaitForAll);
+        let mut cluster = SimCluster::new(&s.payloads()[..8], backend, &cfg, &sim);
+        assert!(run_with_executor(&s, &mut cluster, &p, &cfg).is_err());
+    }
+
+    #[test]
+    fn virtual_clock_is_monotone_across_steps() {
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 11);
+        let cfg = RunConfig { max_steps: 25, record_trace: true, ..Default::default() };
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        let sim = sim_exp(DeadlinePolicy::WaitForK(30));
+        let mut cluster = SimCluster::new(s.payloads(), backend, &cfg, &sim);
+        let r = run_with_executor(&s, &mut cluster, &p, &cfg).unwrap();
+        let total: f64 = r.trace.iter().map(|m| m.collect_ms.unwrap()).sum();
+        assert!((cluster.now_ms() - total).abs() < 1e-9, "clock equals summed collects");
+        assert!(r.trace.iter().all(|m| m.collect_ms.unwrap() > 0.0));
+        assert_eq!(cluster.dropped_total(), (10 * r.steps) as u64);
+    }
+}

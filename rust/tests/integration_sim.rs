@@ -1,0 +1,209 @@
+//! Integration tests for the virtual-time simulator: thread/sim parity
+//! and deadline-driven runs at worker counts past host cores.
+
+use std::sync::Arc;
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::cluster::Cluster;
+use moment_ldpc::coordinator::run_with_cluster;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::straggler::{record_trace, LatencyModel, StragglerModel};
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::runtime::NativeBackend;
+use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::{run_simulated, SimConfig};
+
+/// The acceptance criterion: for a fixed seed and FixedCount straggling,
+/// the virtual-time cluster's θ-trajectory is *bit-identical* to the
+/// thread cluster's — same masked sets, same decodes, same floats.
+#[test]
+fn sim_mirror_bit_identical_to_thread_cluster() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 42);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 2).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        straggler: StragglerModel::FixedCount { s: 5, seed: 7 },
+        rel_tol: 1e-6,
+        max_steps: 5000,
+        record_trace: true,
+        ..Default::default()
+    };
+
+    let cluster = Cluster::spawn(scheme.payloads(), Arc::new(NativeBackend));
+    let threaded = run_with_cluster(&scheme, &cluster, &problem, &cfg).unwrap();
+    cluster.shutdown();
+
+    let sim = SimConfig::new(
+        LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 99 },
+        DeadlinePolicy::MirrorStraggler,
+    );
+    let simulated = run_simulated(&scheme, &problem, &cfg, &sim).unwrap();
+
+    assert_eq!(threaded.steps, simulated.steps, "step counts diverged");
+    assert_eq!(threaded.converged, simulated.converged);
+    assert!(threaded.converged, "{}", threaded.summary());
+    // Bit-identical final iterate — not approximately equal.
+    assert_eq!(threaded.theta, simulated.theta, "θ-trajectories diverged");
+    // And the whole per-step error curve matches bitwise too.
+    let errs = |r: &moment_ldpc::coordinator::metrics::RunReport| -> Vec<f64> {
+        r.trace.iter().map(|m| m.error).collect()
+    };
+    assert_eq!(errs(&threaded), errs(&simulated));
+    // Same masking: per-step straggler counts agree.
+    assert!(threaded
+        .trace
+        .iter()
+        .zip(&simulated.trace)
+        .all(|(a, b)| a.stragglers == b.stragglers));
+}
+
+/// ShiftedExp straggling is also mirrored exactly, including the
+/// simulated collection times the thread loop derives from the order
+/// statistics.
+#[test]
+fn sim_mirror_matches_shifted_exp_collect_times() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 8);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 3).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        straggler: StragglerModel::ShiftedExp {
+            shift_ms: 2.0,
+            rate: 0.5,
+            wait_for: 34,
+            seed: 13,
+        },
+        rel_tol: 1e-5,
+        max_steps: 4000,
+        record_trace: true,
+        ..Default::default()
+    };
+
+    let cluster = Cluster::spawn(scheme.payloads(), Arc::new(NativeBackend));
+    let threaded = run_with_cluster(&scheme, &cluster, &problem, &cfg).unwrap();
+    cluster.shutdown();
+
+    let sim = SimConfig::new(
+        LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 0 },
+        DeadlinePolicy::MirrorStraggler,
+    );
+    let simulated = run_simulated(&scheme, &problem, &cfg, &sim).unwrap();
+    assert_eq!(threaded.theta, simulated.theta);
+    let collects = |r: &moment_ldpc::coordinator::metrics::RunReport| -> Vec<f64> {
+        r.trace.iter().map(|m| m.collect_ms.unwrap()).collect()
+    };
+    assert_eq!(collects(&threaded), collects(&simulated));
+}
+
+/// The scale the thread cluster cannot reach: 512 simulated workers with
+/// a (512, 256) code, wait-for-448 deadline collection, heavy dropping —
+/// must converge quickly enough to live in the tier-1 test gate.
+#[test]
+fn sim_512_workers_deadline_run_converges() {
+    let k = 48usize;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 5);
+    let code = LdpcCode::gallager(512, 256, 3, 6, 11).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    assert_eq!(scheme.workers(), 512);
+    let cfg = RunConfig {
+        workers: 512,
+        decode_iters: 40,
+        rel_tol: 1e-3,
+        max_steps: 2000,
+        record_trace: true,
+        ..Default::default()
+    };
+    let sim = SimConfig::new(
+        LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 21 },
+        DeadlinePolicy::WaitForK(448),
+    );
+    let r = run_simulated(&scheme, &problem, &cfg, &sim).unwrap();
+    assert!(r.converged, "512-worker sim did not converge: {}", r.summary());
+    // 64 responses genuinely dropped every step.
+    assert_eq!(r.totals.stragglers, 64 * r.steps);
+    // The peeling effort adapts to the realized erasures: rounds happen.
+    assert!(r.totals.decode_rounds > 0);
+    assert!(r.totals.collect_ms > 0.0, "virtual clock must advance");
+}
+
+/// Deadline policies measurably change simulated time-to-accuracy: under
+/// a heavy-tailed latency model, wait-for-k beats wait-for-all on the
+/// simulated clock even though it may spend more gradient steps.
+#[test]
+fn deadline_policy_changes_time_to_accuracy() {
+    let k = 32usize;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 6);
+    let code = LdpcCode::gallager(64, 32, 3, 6, 4).unwrap();
+    let mk_cfg = || RunConfig {
+        workers: 64,
+        rel_tol: 1e-4,
+        max_steps: 4000,
+        ..Default::default()
+    };
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let pareto = LatencyModel::Pareto { scale_ms: 1.0, shape: 1.2, seed: 31 };
+
+    let wait_all = run_simulated(
+        &scheme,
+        &problem,
+        &mk_cfg(),
+        &SimConfig::new(pareto.clone(), DeadlinePolicy::WaitForAll),
+    )
+    .unwrap();
+    let wait_k = run_simulated(
+        &scheme,
+        &problem,
+        &mk_cfg(),
+        &SimConfig::new(pareto.clone(), DeadlinePolicy::WaitForK(56)),
+    )
+    .unwrap();
+    assert!(wait_all.converged && wait_k.converged);
+    assert_eq!(wait_all.totals.stragglers, 0);
+    assert!(wait_k.totals.stragglers > 0);
+    // Dropping the tail may cost a few extra steps, but wins big on the
+    // virtual clock under a heavy tail. Compare pure simulated
+    // collection time (collect_ms) — sim_time_ms() also includes
+    // host-measured decode/update ns, which would make the margin
+    // depend on the build profile and machine.
+    assert!(
+        wait_k.totals.collect_ms < wait_all.totals.collect_ms / 2.0,
+        "wait-k {} ms !<< wait-all {} ms",
+        wait_k.totals.collect_ms,
+        wait_all.totals.collect_ms
+    );
+}
+
+/// A recorded latency trace replayed through the simulator reproduces
+/// the originating model's run exactly.
+#[test]
+fn trace_replay_reproduces_simulated_run() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 9);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 6).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() };
+    let base = LatencyModel::Heterogeneous { shift_ms: 1.0, rate: 1.0, spread: 3.0, seed: 14 };
+
+    let live = run_simulated(
+        &scheme,
+        &problem,
+        &cfg,
+        &SimConfig::new(base.clone(), DeadlinePolicy::WaitForK(34)),
+    )
+    .unwrap();
+    // Record enough steps to cover the run, then replay.
+    let table = record_trace(&base, 40, live.steps);
+    let replayed = run_simulated(
+        &scheme,
+        &problem,
+        &cfg,
+        &SimConfig::new(
+            LatencyModel::Trace { table: Arc::new(table) },
+            DeadlinePolicy::WaitForK(34),
+        ),
+    )
+    .unwrap();
+    assert_eq!(live.steps, replayed.steps);
+    assert_eq!(live.theta, replayed.theta, "trace replay must be bit-identical");
+    assert_eq!(live.totals.collect_ms, replayed.totals.collect_ms);
+}
