@@ -32,4 +32,11 @@ cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
     --latency shifted-exp --policy wait-k --wait-k 56 \
     --max-steps 500 --rel-tol 1e-2
 
+echo "== async pipelined simulator smoke test (flop-priced, NIC contention) =="
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency pareto --scale-ms 1 --shape 1.5 \
+    --policy wait-k --wait-k 56 \
+    --async --staleness 2 --flops-per-ms 200 --nic-gbps 1 \
+    --max-steps 500 --rel-tol 1e-2
+
 echo "ci.sh: all gates passed"

@@ -77,7 +77,11 @@ fn main() {
                     trials: 2,
                     straggler_seed_base: 300,
                 };
-                let sim = SimSpec { latency: latency.clone(), policy: policy.clone() };
+                let sim = SimSpec {
+                    latency: latency.clone(),
+                    policy: policy.clone(),
+                    pipeline: None,
+                };
                 let agg = run_sim_trials(scheme, &problem, &spec, &sim)
                     .unwrap_or_else(|e| panic!("{sname}/{lname}/{pname}: {e}"));
                 table.row(vec![

@@ -19,7 +19,7 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const SWITCHES: &[&str] = &["quick", "trace", "json", "help"];
+const SWITCHES: &[&str] = &["quick", "trace", "json", "help", "async"];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
@@ -95,9 +95,17 @@ COMMANDS:
              --latency shifted-exp|pareto|markov|hetero
                [--shift-ms F --rate F] [--scale-ms F --shape F]
                [--slowdown F --p-slow F --p-fast F] [--spread F]
-             --policy all|wait-k|deadline|quantile|mirror
+             --policy all|wait-k|wait-fresh|deadline|quantile|mirror
                [--wait-k N] [--deadline-ms F]
                [--quantile F --slack F --window N] [--mirror-stragglers S]
+             [--async] asynchronous pipelined master (laggards keep
+               computing; stale responses applied within the bound)
+               [--staleness S] max applied staleness (default 1; S=0
+                 replays the synchronous simulator bit for bit)
+               [--flops-per-ms F] flop-aware compute times (latency
+                 draws become per-worker slowdown multipliers)
+               [--nic-gbps F --nic-overhead-ms F] master-NIC contention
+                 (broadcasts and responses serialize on one link)
              --max-steps N --rel-tol T [--json]
   fig1       Reproduce Figure 1 (least squares)        [--trials N] [--quick]
   fig2       Reproduce Figure 2 (sparse, m > k)        [--trials N] [--quick]

@@ -539,4 +539,93 @@ mod tests {
         assert_eq!(sched.unrecovered.len(), 40);
         assert_eq!(sched.rounds, 0);
     }
+
+    /// Cached and fresh schedules must agree for a given code across
+    /// random patterns, including the order/duplicate canonicalization
+    /// edges of the key — shared driver for the N = 64 / N > 64
+    /// boundary tests below.
+    fn assert_cache_boundary(n: usize, k: usize) {
+        let c = LdpcCode::gallager(n, k, 3, 6, 13).unwrap();
+        let dec = PeelingDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let mut rng = Rng::new(41);
+        let x = rng.gaussian_vec(k);
+        let truth = c.encode(&x);
+
+        for trial in 0..60 {
+            let s = 1 + rng.below(n / 3);
+            let erased = rng.choose_k(n, s);
+            let fresh = dec.schedule(&erased, 40);
+            let cached = dec.schedule_cached(&mut cache, &erased, 40);
+            assert_eq!(cached.unrecovered, fresh.unrecovered, "n={n} trial {trial}");
+            assert_eq!(cached.rounds, fresh.rounds, "n={n} trial {trial}");
+            let apply = |sched: &PeelSchedule| -> Vec<f64> {
+                let mut v = truth.clone();
+                for &e in &erased {
+                    v[e] = 0.0;
+                }
+                sched.apply(&mut v);
+                v
+            };
+            assert_eq!(apply(&cached), apply(&fresh), "n={n} trial {trial}");
+
+            // Key canonicalization: the same *set* presented shuffled
+            // and with duplicates must hit the same entry.
+            let mut scrambled = erased.clone();
+            scrambled.reverse();
+            scrambled.push(erased[0]);
+            let hit = dec.schedule_cached(&mut cache, &scrambled, 40);
+            assert!(
+                Arc::ptr_eq(&cached, &hit),
+                "n={n} trial {trial}: scrambled pattern missed the cache"
+            );
+        }
+        // Every scrambled replay must hit; distinct patterns build at
+        // most once (random patterns may rarely repeat across trials,
+        // which only converts a miss into a hit).
+        assert_eq!(cache.hits() + cache.misses(), 120, "n={n}");
+        assert!(cache.misses() <= 60, "n={n}: {} misses", cache.misses());
+        assert!(cache.hits() >= 60, "n={n}: {} hits", cache.hits());
+    }
+
+    #[test]
+    fn cache_boundary_n_64_uses_bitmask_key() {
+        // n = 64 is the largest bitmask-keyed code: erasing coordinate
+        // 63 exercises the top bit of the u64 key.
+        assert_cache_boundary(64, 32);
+        let c = LdpcCode::gallager(64, 32, 3, 6, 13).unwrap();
+        let dec = PeelingDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let a = dec.schedule_cached(&mut cache, &[63], 40);
+        let b = dec.schedule_cached(&mut cache, &[63, 63], 40);
+        assert!(Arc::ptr_eq(&a, &b), "top-bit pattern must canonicalize");
+        let fresh = dec.schedule(&[63], 40);
+        assert_eq!(a.unrecovered, fresh.unrecovered);
+    }
+
+    #[test]
+    fn cache_boundary_n_above_64_uses_list_key() {
+        // n = 66 and n = 128 fall back to the sorted-dedup list key;
+        // cached schedules must still agree with fresh ones and pattern
+        // identity must survive order and duplicates.
+        assert_cache_boundary(66, 33);
+        assert_cache_boundary(128, 64);
+    }
+
+    #[test]
+    fn cache_distinguishes_patterns_across_the_boundary_key_kinds() {
+        // Distinct sets must stay distinct entries on both sides of the
+        // key-representation boundary.
+        for (n, k) in [(64usize, 32usize), (128, 64)] {
+            let c = LdpcCode::gallager(n, k, 3, 6, 17).unwrap();
+            let dec = PeelingDecoder::new(&c);
+            let mut cache = PeelScheduleCache::new();
+            dec.schedule_cached(&mut cache, &[0, 1], 40);
+            dec.schedule_cached(&mut cache, &[0, 2], 40);
+            dec.schedule_cached(&mut cache, &[1, 0], 40); // same set as the first
+            assert_eq!(cache.len(), 2, "n={n}");
+            assert_eq!(cache.hits(), 1, "n={n}");
+            assert_eq!(cache.misses(), 2, "n={n}");
+        }
+    }
 }

@@ -122,6 +122,13 @@ impl WorkerPayload {
         }
     }
 
+    /// Bytes of the per-step response vector (`f64` scalars on the
+    /// wire) — what the simulated master-NIC contention model prices a
+    /// response transfer at.
+    pub fn response_bytes(&self, k: usize) -> usize {
+        self.response_len(k) * std::mem::size_of::<f64>()
+    }
+
     /// Bytes held by the worker (payload storage footprint).
     pub fn storage_bytes(&self) -> usize {
         let fl = std::mem::size_of::<f64>();
@@ -255,5 +262,17 @@ mod tests {
         let p = WorkerPayload::Rows { rows };
         assert_eq!(p.flops(), 1000);
         assert_eq!(p.storage_bytes(), 8000);
+        // 10 response scalars × 8 bytes, independent of k for Rows.
+        assert_eq!(p.response_bytes(100), 80);
+    }
+
+    #[test]
+    fn response_bytes_follow_response_len() {
+        let lg = WorkerPayload::LocalGrad {
+            x: Matrix::zeros(6, 4),
+            y: vec![0.0; 6],
+        };
+        assert_eq!(lg.response_bytes(4), 32, "k=4 gradient = 32 bytes");
+        assert_eq!(WorkerPayload::Idle.response_bytes(4), 0);
     }
 }

@@ -135,6 +135,22 @@ pub trait GradientScheme: Send + Sync {
     fn total_flops_per_step(&self) -> usize {
         self.payloads().iter().map(|p| p.flops()).sum()
     }
+
+    /// Per-worker compute cost of one step's task in multiply-add flops
+    /// (index = worker id). The pipelined simulator's flop-aware compute
+    /// model derives task durations from these, so a worker assigned
+    /// twice the rows takes twice as long at equal machine speed.
+    fn task_flops(&self) -> Vec<usize> {
+        self.payloads().iter().map(|p| p.flops()).collect()
+    }
+
+    /// Per-worker response size in bytes (index = worker id). The
+    /// simulated master-NIC contention model derives transfer times —
+    /// and hence response arrival order — from these.
+    fn task_response_bytes(&self) -> Vec<usize> {
+        let k = self.dimension();
+        self.payloads().iter().map(|p| p.response_bytes(k)).collect()
+    }
 }
 
 /// Split `0..total` into `parts` contiguous ranges whose sizes differ by
@@ -211,6 +227,15 @@ mod tests {
     }
 
     #[test]
+    fn default_cost_accessors_read_payloads() {
+        // FixedScheme exposes no payloads: both vectors are empty rather
+        // than panicking.
+        let s = FixedScheme { g: vec![1.0, 2.0] };
+        assert!(s.task_flops().is_empty());
+        assert!(s.task_response_bytes().is_empty());
+    }
+
+    #[test]
     fn partition_covers_everything() {
         for (total, parts) in [(10, 3), (40, 40), (7, 10), (0, 2), (2048, 40)] {
             let ranges = partition_ranges(total, parts);
@@ -228,5 +253,106 @@ mod tests {
             let min = ranges.iter().map(|r| r.len()).min().unwrap();
             assert!(max - min <= 1);
         }
+    }
+}
+
+/// Flop/byte accounting across every scheme, pinned against
+/// hand-computed values on one 4-worker toy problem (m = 16 samples,
+/// k = 8 features) — what the pipelined simulator's flop-aware compute
+/// and NIC contention models price tasks with.
+#[cfg(test)]
+mod cost_accounting_tests {
+    use super::gradcoding::GradCodingScheme;
+    use super::ksdy::{KsdyScheme, SketchKind};
+    use super::ldpc_moment::LdpcMomentScheme;
+    use super::mds_moment::MdsMomentScheme;
+    use super::replication::ReplicationScheme;
+    use super::uncoded::UncodedScheme;
+    use super::GradientScheme;
+    use crate::codes::ldpc::LdpcCode;
+    use crate::codes::mds::{EvalPoints, VandermondeCode};
+    use crate::data::{RegressionProblem, SynthConfig};
+    use crate::sim::TaskCosts;
+
+    fn toy() -> RegressionProblem {
+        RegressionProblem::generate(&SynthConfig::dense(16, 8), 5)
+    }
+
+    fn assert_costs(s: &dyn GradientScheme, flops: usize, bytes: usize) {
+        assert_eq!(s.workers(), 4, "{}", s.name());
+        assert_eq!(s.task_flops(), vec![flops; 4], "{} flops", s.name());
+        assert_eq!(s.task_response_bytes(), vec![bytes; 4], "{} bytes", s.name());
+        assert_eq!(s.total_flops_per_step(), 4 * flops, "{}", s.name());
+    }
+
+    #[test]
+    fn uncoded_costs() {
+        // 4 of 16 samples per worker: local gradient = 2·4·8 = 64
+        // multiply-adds; upload = the k=8 gradient = 64 bytes.
+        let p = toy();
+        let s = UncodedScheme::new(&p, 4).unwrap();
+        assert_costs(&s, 64, 64);
+    }
+
+    #[test]
+    fn replication_costs() {
+        // r=2: two blocks of 8 samples, each held twice → 2·8·8 = 128
+        // flops per worker, k-vector upload.
+        let p = toy();
+        let s = ReplicationScheme::new(&p, 4, 2).unwrap();
+        assert_costs(&s, 128, 64);
+    }
+
+    #[test]
+    fn ksdy_costs() {
+        // β=2 Gaussian sketch: 32 encoded samples over 4 workers → 8
+        // rows each → 2·8·8 = 128 flops, k-vector upload.
+        let p = toy();
+        let s = KsdyScheme::new(&p, 4, SketchKind::Gaussian, 2.0, 3).unwrap();
+        assert_costs(&s, 128, 64);
+    }
+
+    #[test]
+    fn gradcoding_costs() {
+        // s=1 cyclic code: each worker holds s+1 = 2 blocks of 4 samples
+        // → 2·(2·4·8) = 128 flops, k-vector upload.
+        let p = toy();
+        let s = GradCodingScheme::new(&p, 4, 1, 7).unwrap();
+        assert_costs(&s, 128, 64);
+    }
+
+    #[test]
+    fn ldpc_moment_costs() {
+        // (8,4) code over 4 workers (2 positions each): ⌈k/K⌉ = 2 blocks
+        // × 2 positions = 4 moment rows of length 8 → 32 multiply-adds,
+        // 4 scalars = 32 bytes up — the §3 communication win.
+        let p = toy();
+        let code = (0..16)
+            .find_map(|seed| LdpcCode::gallager(8, 4, 2, 4, seed).ok())
+            .expect("an (8,4) (2,4)-regular code must be constructible");
+        let s = LdpcMomentScheme::with_workers(&p, code, 4).unwrap();
+        assert_costs(&s, 32, 32);
+        assert_eq!(s.upload_scalars_per_worker(), 4);
+    }
+
+    #[test]
+    fn mds_moment_costs() {
+        // (4,2) Vandermonde: ⌈k/K⌉ = 4 blocks × 1 row of length 8 → 32
+        // multiply-adds, 4 scalars = 32 bytes up.
+        let p = toy();
+        let code = VandermondeCode::new(4, 2, EvalPoints::Chebyshev).unwrap();
+        let s = MdsMomentScheme::new(&p, code).unwrap();
+        assert_costs(&s, 32, 32);
+    }
+
+    #[test]
+    fn task_costs_bundle_reads_the_scheme() {
+        let p = toy();
+        let s = UncodedScheme::new(&p, 4).unwrap();
+        let costs = TaskCosts::of(&s);
+        assert_eq!(costs.flops, s.task_flops());
+        assert_eq!(costs.response_bytes, s.task_response_bytes());
+        // One θ unicast = k doubles.
+        assert_eq!(costs.broadcast_bytes, 64);
     }
 }

@@ -6,5 +6,7 @@ pub mod experiment;
 pub mod figures;
 pub mod report;
 
-pub use experiment::{run_sim_trials, run_trials, Aggregate, ExperimentSpec, SchemeSpec, SimSpec};
+pub use experiment::{
+    run_sim_trials, run_trials, Aggregate, ExperimentSpec, PipelineSpec, SchemeSpec, SimSpec,
+};
 pub use report::{write_csv, Table};

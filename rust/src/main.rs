@@ -9,7 +9,7 @@ use moment_ldpc::coordinator::straggler::{LatencyModel, StragglerModel};
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
 use moment_ldpc::error::{Error, Result};
 use moment_ldpc::harness::experiment::{
-    run_sim_trials, run_trials, Aggregate, ExperimentSpec, SchemeSpec, SimSpec,
+    run_sim_trials, run_trials, Aggregate, ExperimentSpec, PipelineSpec, SchemeSpec, SimSpec,
 };
 use moment_ldpc::harness::figures::{fig1, fig2, fig3, FigureScale};
 use moment_ldpc::harness::report::{write_csv, Table};
@@ -17,6 +17,7 @@ use moment_ldpc::optim::projections::Projection;
 use moment_ldpc::runtime::artifact::{ArtifactRegistry, Kernel};
 use moment_ldpc::runtime::BackendChoice;
 use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::{ComputeModel, LinkModel};
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -166,6 +167,9 @@ fn deadline_policy_from(args: &Args, workers: usize) -> Result<DeadlinePolicy> {
     Ok(match args.get_str("policy", "wait-k").as_str() {
         "all" => DeadlinePolicy::WaitForAll,
         "wait-k" => DeadlinePolicy::WaitForK(args.get::<usize>("wait-k", workers * 7 / 8)?),
+        "wait-fresh" => {
+            DeadlinePolicy::WaitForFresh(args.get::<usize>("wait-k", workers * 7 / 8)?)
+        }
         "deadline" => DeadlinePolicy::FixedDeadline { ms: args.get::<f64>("deadline-ms", 5.0)? },
         "quantile" => DeadlinePolicy::QuantileAdaptive {
             q: args.get::<f64>("quantile", 0.9)?,
@@ -257,11 +261,53 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         straggler_seed_base: args.get::<u64>("seed-base", 1000)?,
     };
     let scheme = scheme_spec_from(&args.get_str("scheme", "ldpc"), args, workers)?;
-    let sim = SimSpec { latency: latency.clone(), policy: policy.clone() };
+    let pipeline = pipeline_spec_from(args)?;
+    let setup = match &pipeline {
+        Some(p) => format!(
+            "{}/{}/async(S={},{})",
+            latency.name(),
+            policy.name(),
+            p.max_staleness,
+            p.compute.name()
+        ),
+        None => format!("{}/{}", latency.name(), policy.name()),
+    };
+    let sim = SimSpec { latency: latency.clone(), policy: policy.clone(), pipeline };
     let agg = run_sim_trials(&scheme, &problem, &spec, &sim)?;
-    let setup = format!("{}/{}", latency.name(), policy.name());
     print_aggregate(&agg, &setup, args.has("json"));
     Ok(())
+}
+
+/// Parse the asynchronous-pipeline flags of `simulate`. `--async` (or an
+/// explicit `--staleness`) turns the pipelined executor on; the
+/// compute/NIC knobs refine it and are rejected without it.
+fn pipeline_spec_from(args: &Args) -> Result<Option<PipelineSpec>> {
+    let staleness = args.get_opt::<usize>("staleness")?;
+    let flops_per_ms = args.get_opt::<f64>("flops-per-ms")?;
+    let nic_gbps = args.get_opt::<f64>("nic-gbps")?;
+    let nic_overhead = args.get_opt::<f64>("nic-overhead-ms")?;
+    if !args.has("async") && staleness.is_none() {
+        if flops_per_ms.is_some() || nic_gbps.is_some() || nic_overhead.is_some() {
+            return Err(Error::Config(
+                "--flops-per-ms / --nic-gbps / --nic-overhead-ms need the pipelined \
+                 executor: add --async (or --staleness S)"
+                    .into(),
+            ));
+        }
+        return Ok(None);
+    }
+    if nic_overhead.is_some() && nic_gbps.is_none() {
+        return Err(Error::Config(
+            "--nic-overhead-ms refines the NIC model: add --nic-gbps F".into(),
+        ));
+    }
+    let compute = match flops_per_ms {
+        Some(f) => ComputeModel::FlopScaled { flops_per_ms: f },
+        None => ComputeModel::Opaque,
+    };
+    let link = nic_gbps
+        .map(|g| LinkModel { gbps: g, overhead_ms: nic_overhead.unwrap_or(0.01) });
+    Ok(Some(PipelineSpec { max_staleness: staleness.unwrap_or(1), compute, link }))
 }
 
 fn cmd_fig(args: &Args, which: usize) -> Result<()> {

@@ -1,0 +1,920 @@
+//! Asynchronous pipelined simulation: the master proceeds while
+//! laggards from earlier steps are still computing.
+//!
+//! The synchronous [`super::SimCluster`] ends every step with a clean
+//! slate: responses that miss the deadline are dropped and their tasks
+//! abandoned, so each window starts with a fresh fleet. A real
+//! deadline-driven master can do better — broadcast `θ_{t+1}` and begin
+//! step `t+1` while the laggards of step `t` keep computing, then apply
+//! their *stale* responses when they finally land (bounded staleness
+//! `S`; KSDY17 and Bitar–Wootters–El Rouayheb analyse exactly this
+//! staleness-as-gradient-noise regime). [`AsyncSimCluster`] implements
+//! that pipeline on the shared [`StepExecutor`] master loop:
+//!
+//! * every worker holds at most one in-flight task, tagged with the θ
+//!   *version* (step index) it computes on; idle workers restart at each
+//!   broadcast, busy laggards keep going;
+//! * a laggard's response arriving in window `t` with version `v` is
+//!   applied iff its staleness `t − v ≤ S`; at the end of window `t`
+//!   any task that could no longer make the bound is cancelled (its
+//!   response is never computed) and the worker restarts fresh;
+//! * with `S = 0` nothing may ever be applied late, every worker
+//!   restarts every step, and the executor reproduces the synchronous
+//!   simulator **bit for bit** — draws, deadline-policy observations,
+//!   masks, and θ-trajectory (pinned in `tests/integration_sim.rs`);
+//! * underneath, the opaque per-task latency draw can be replaced by a
+//!   flop-aware [`ComputeModel`] (per-worker slowdown × the scheme's
+//!   actual per-task flops) composed with a shared-link [`LinkModel`]
+//!   (broadcast and response transfers serialize on the master NIC, so
+//!   arrival order emerges from payload bytes rather than being
+//!   sampled).
+//!
+//! Deadline policies are evaluated through
+//! [`DeadlineState::cutoff_pipelined`], which scales count cuts to the
+//! freshly dispatched cohort: wait-for-`k`-of-`w` keeps its tolerated
+//! miss *fraction* instead of silently degrading to wait-for-all-fresh
+//! when part of the fleet is busy.
+
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::RunReport;
+use crate::coordinator::protocol::WorkerPayload;
+use crate::coordinator::schemes::GradientScheme;
+use crate::coordinator::straggler::{LatencyModel, LatencySampler, StragglerSampler};
+use crate::coordinator::{run_with_executor, StepExecution, StepExecutor};
+use crate::data::RegressionProblem;
+use crate::error::{Error, Result};
+use crate::runtime::ComputeBackend;
+
+use super::deadline::{Cutoff, DeadlinePolicy, DeadlineState};
+use super::event::{EventKind, TaskEventQueue};
+use super::{compute_into_slot, mirror_step};
+
+/// Staleness bounds past this are almost certainly configuration
+/// mistakes (the executor keeps `S + 1` iterate snapshots alive).
+const MAX_STALENESS_CAP: usize = 4096;
+
+/// How a worker's per-task compute time is derived from the latency
+/// model's draw.
+#[derive(Debug, Clone, Copy)]
+pub enum ComputeModel {
+    /// The draw *is* the completion time in milliseconds (the
+    /// synchronous simulator's semantics).
+    Opaque,
+    /// Flop-proportional: the task takes `draw × flops / flops_per_ms`
+    /// milliseconds, where `flops` is the worker's actual per-step
+    /// payload cost ([`crate::coordinator::schemes::GradientScheme::task_flops`]).
+    /// The latency model's draw is reinterpreted as a dimensionless
+    /// per-worker slowdown (1.0 = nominal machine speed), so e.g.
+    /// `Heterogeneous` gives persistently slow machines and `Pareto`
+    /// gives occasional extreme slowdowns — while a worker with twice
+    /// the assigned rows takes twice as long at equal speed.
+    FlopScaled {
+        /// Nominal machine throughput in multiply-adds per millisecond.
+        flops_per_ms: f64,
+    },
+}
+
+impl ComputeModel {
+    /// Short name for reports.
+    pub fn name(&self) -> String {
+        match *self {
+            ComputeModel::Opaque => "opaque".into(),
+            ComputeModel::FlopScaled { flops_per_ms } => format!("flops({flops_per_ms}/ms)"),
+        }
+    }
+
+    /// Compute time (ms) for a task of `flops` multiply-adds given the
+    /// latency model's draw for this worker and step.
+    pub fn task_ms(&self, flops: usize, draw: f64) -> f64 {
+        match *self {
+            ComputeModel::Opaque => draw,
+            ComputeModel::FlopScaled { flops_per_ms } => draw * flops as f64 / flops_per_ms,
+        }
+    }
+}
+
+/// The master's shared NIC: every θ unicast and every response transfer
+/// serializes on one link, so per-step communication time — and response
+/// *arrival order* — emerges from payload bytes and contention instead
+/// of being sampled. (Distinct from [`crate::config::CommModel`], which
+/// adds a closed-form per-step cost without modelling contention; leave
+/// `RunConfig::comm` at `None` when a link model is active.)
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Link bandwidth (Gbit/s).
+    pub gbps: f64,
+    /// Fixed per-message overhead (ms).
+    pub overhead_ms: f64,
+}
+
+impl LinkModel {
+    /// Commodity defaults: 1 Gbit/s, 10 µs per-message overhead.
+    pub fn gigabit() -> Self {
+        LinkModel { gbps: 1.0, overhead_ms: 0.01 }
+    }
+
+    /// Time (ms) the link is busy shipping one `bytes`-sized message.
+    pub fn transfer_ms(&self, bytes: usize) -> f64 {
+        self.overhead_ms + bytes as f64 * 8.0 / (self.gbps * 1e9) * 1e3
+    }
+}
+
+/// Per-worker task costs the pipelined simulator prices compute and
+/// communication with; derive from a scheme via [`TaskCosts::of`].
+#[derive(Debug, Clone)]
+pub struct TaskCosts {
+    /// Multiply-add flops of worker `j`'s per-step task.
+    pub flops: Vec<usize>,
+    /// Bytes of worker `j`'s per-step response.
+    pub response_bytes: Vec<usize>,
+    /// Bytes of one θ unicast (the broadcast payload per worker).
+    pub broadcast_bytes: usize,
+}
+
+impl TaskCosts {
+    /// Read the costs off a scheme's payload assignment.
+    pub fn of(scheme: &dyn GradientScheme) -> TaskCosts {
+        TaskCosts {
+            flops: scheme.task_flops(),
+            response_bytes: scheme.task_response_bytes(),
+            broadcast_bytes: scheme.dimension() * std::mem::size_of::<f64>(),
+        }
+    }
+}
+
+/// Configuration of an asynchronous pipelined simulation.
+#[derive(Debug, Clone)]
+pub struct AsyncSimConfig {
+    /// Per-worker draw model (completion times under
+    /// [`ComputeModel::Opaque`], dimensionless slowdowns under
+    /// [`ComputeModel::FlopScaled`]).
+    pub latency: LatencyModel,
+    /// Collection policy.
+    pub policy: DeadlinePolicy,
+    /// Bound `S` on applied staleness: a response computed on the step-
+    /// `v` iterate may be applied in windows `v ..= v + S`. `S = 0`
+    /// reproduces the synchronous simulator bit for bit.
+    pub max_staleness: usize,
+    /// Compute-time model.
+    pub compute: ComputeModel,
+    /// Master-NIC contention model (`None` = transfers are free and
+    /// instantaneous, the synchronous simulator's semantics).
+    pub link: Option<LinkModel>,
+}
+
+impl AsyncSimConfig {
+    /// Opaque compute, no link — the pure pipelining configuration.
+    pub fn new(latency: LatencyModel, policy: DeadlinePolicy, max_staleness: usize) -> Self {
+        AsyncSimConfig {
+            latency,
+            policy,
+            max_staleness,
+            compute: ComputeModel::Opaque,
+            link: None,
+        }
+    }
+
+    /// Builder-style compute model.
+    pub fn with_compute(mut self, compute: ComputeModel) -> Self {
+        self.compute = compute;
+        self
+    }
+
+    /// Builder-style link model.
+    pub fn with_link(mut self, link: LinkModel) -> Self {
+        self.link = Some(link);
+        self
+    }
+
+    /// Label for reports: `latency/policy/S=..`.
+    pub fn label(&self) -> String {
+        format!("{}/{}/S={}", self.latency.name(), self.policy.name(), self.max_staleness)
+    }
+}
+
+/// One in-flight worker task.
+#[derive(Debug, Clone, Copy)]
+struct Task {
+    /// Generation number (ghost detection for cancelled tasks).
+    id: u64,
+    /// Step index whose broadcast iterate this task computes on.
+    version: usize,
+    /// Master-side dispatch time (the broadcast instant of `version`).
+    start_ms: f64,
+    /// Expected master arrival: exact without a link; with a link it is
+    /// the compute-done time until the response transfer is scheduled,
+    /// then the actual arrival. Used for the oracle latency fed to the
+    /// deadline policy when the task is cancelled.
+    eta_ms: f64,
+}
+
+/// This step's stop rule, derived from the policy's [`Cutoff`].
+#[derive(Debug, Clone, Copy)]
+enum StopRule {
+    /// Stop after `n` usable arrivals (fresh or stale).
+    Count(usize),
+    /// Stop after `n` *fresh* arrivals (stale ones still fill slots).
+    Fresh(usize),
+    /// Stop at an absolute deadline (ms).
+    Time(f64),
+}
+
+/// The asynchronous pipelined cluster: same borrowed payloads and shared
+/// master loop as [`super::SimCluster`], but windows overlap — see the
+/// module docs for the pipeline semantics.
+pub struct AsyncSimCluster<'a> {
+    payloads: &'a [WorkerPayload],
+    costs: TaskCosts,
+    backend: Arc<dyn ComputeBackend>,
+    latency: LatencySampler,
+    deadline: DeadlineState,
+    /// `Some` iff the policy is [`DeadlinePolicy::MirrorStraggler`]
+    /// (the thread-cluster parity mode; pipelining is bypassed).
+    mirror: Option<StragglerSampler>,
+    max_staleness: usize,
+    compute: ComputeModel,
+    link: Option<LinkModel>,
+    /// The link-busy cursor: transfers serialize after this instant.
+    link_free_ms: f64,
+    queue: TaskEventQueue,
+    /// Per-worker in-flight task (`None` = idle, restarts at the next
+    /// broadcast).
+    inflight: Vec<Option<Task>>,
+    next_task_id: u64,
+    /// Ring of the last `S + 1` broadcast iterates; slot `v % (S + 1)`
+    /// holds version `v`, which no usable task can outlive.
+    thetas: Vec<Vec<f64>>,
+    /// Per-step latency draw (reused).
+    lat_buf: Vec<f64>,
+    /// End-of-step cancellation scratch: `(eta, id, worker, start)`.
+    doomed: Vec<(f64, u64, usize, f64)>,
+    /// Spare response buffers (recycled across steps).
+    spares: Vec<Vec<f64>>,
+    /// The virtual clock (ms since the run began).
+    now_ms: f64,
+    /// Tasks cancelled over the cluster's lifetime (work thrown away).
+    cancelled_total: u64,
+    /// Stale responses applied over the cluster's lifetime.
+    stale_applied_total: u64,
+}
+
+impl<'a> AsyncSimCluster<'a> {
+    /// Build a pipelined cluster over `payloads` (borrowed from the
+    /// scheme) with the scheme's `costs`. `cfg.straggler` is only
+    /// consulted by the [`DeadlinePolicy::MirrorStraggler`] policy.
+    pub fn new(
+        payloads: &'a [WorkerPayload],
+        costs: TaskCosts,
+        backend: Arc<dyn ComputeBackend>,
+        cfg: &RunConfig,
+        sim: &AsyncSimConfig,
+    ) -> Result<AsyncSimCluster<'a>> {
+        let w = payloads.len();
+        if costs.flops.len() != w || costs.response_bytes.len() != w {
+            return Err(Error::Config(format!(
+                "task costs cover {}/{} workers but the cluster has {w}",
+                costs.flops.len(),
+                costs.response_bytes.len()
+            )));
+        }
+        if sim.max_staleness > MAX_STALENESS_CAP {
+            return Err(Error::Config(format!(
+                "max staleness {} exceeds the supported cap {MAX_STALENESS_CAP}",
+                sim.max_staleness
+            )));
+        }
+        if let ComputeModel::FlopScaled { flops_per_ms } = sim.compute {
+            if !(flops_per_ms.is_finite() && flops_per_ms > 0.0) {
+                return Err(Error::Config(format!(
+                    "flop-scaled compute model needs flops_per_ms > 0, got {flops_per_ms}"
+                )));
+            }
+        }
+        if let Some(l) = sim.link {
+            let gbps_ok = l.gbps.is_finite() && l.gbps > 0.0;
+            let overhead_ok = l.overhead_ms.is_finite() && l.overhead_ms >= 0.0;
+            if !gbps_ok || !overhead_ok {
+                return Err(Error::Config(format!(
+                    "link model needs gbps > 0 and overhead >= 0, got {l:?}"
+                )));
+            }
+            if cfg.comm.is_some() {
+                return Err(Error::Config(
+                    "RunConfig::comm and the NIC link model both price communication — \
+                     set comm to None when a link model is active (it would double-count)"
+                        .into(),
+                ));
+            }
+        }
+        let mirror = if matches!(sim.policy, DeadlinePolicy::MirrorStraggler) {
+            Some(cfg.straggler.sampler())
+        } else {
+            None
+        };
+        Ok(AsyncSimCluster {
+            payloads,
+            costs,
+            backend,
+            latency: sim.latency.sampler(),
+            deadline: DeadlineState::new(sim.policy.clone()),
+            mirror,
+            max_staleness: sim.max_staleness,
+            compute: sim.compute,
+            link: sim.link,
+            link_free_ms: 0.0,
+            queue: TaskEventQueue::new(),
+            inflight: vec![None; w],
+            next_task_id: 0,
+            thetas: vec![Vec::new(); sim.max_staleness + 1],
+            lat_buf: Vec::new(),
+            doomed: Vec::new(),
+            spares: Vec::new(),
+            now_ms: 0.0,
+            cancelled_total: 0,
+            stale_applied_total: 0,
+        })
+    }
+
+    /// Current simulated time (ms).
+    pub fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    /// Tasks cancelled so far (dispatched work that was thrown away
+    /// because its response could no longer meet the staleness bound).
+    pub fn cancelled_total(&self) -> u64 {
+        self.cancelled_total
+    }
+
+    /// Stale responses applied so far (laggard work the synchronous
+    /// master would have discarded).
+    pub fn stale_applied_total(&self) -> u64 {
+        self.stale_applied_total
+    }
+}
+
+impl StepExecutor for AsyncSimCluster<'_> {
+    fn workers(&self) -> usize {
+        self.payloads.len()
+    }
+
+    fn execute_step(
+        &mut self,
+        t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+    ) -> Result<StepExecution> {
+        if self.mirror.is_some() {
+            let sampler =
+                self.mirror.as_mut().expect("mirror step without a straggler sampler");
+            let (exec, advance) = mirror_step(
+                self.payloads,
+                self.backend.as_ref(),
+                sampler,
+                &mut self.spares,
+                theta,
+                masked,
+            )?;
+            self.now_ms += advance;
+            // Mirror drops are the straggler model's masking, not
+            // staleness cancellations — `cancelled_total` keeps its
+            // pipelined meaning (the per-step report carries the drops).
+            return Ok(exec);
+        }
+        let w = self.payloads.len();
+        if w == 0 {
+            return Err(Error::Config("simulated cluster has no workers".into()));
+        }
+
+        // 0. Snapshot θ_{t-1} as version t in the staleness ring: any
+        //    task applied later in this window or a future one (within
+        //    the bound) reads its own broadcast iterate, not the newest.
+        let depth = self.thetas.len();
+        {
+            let slot = &mut self.thetas[t % depth];
+            slot.clear();
+            slot.extend_from_slice(theta);
+        }
+
+        // 1. Broadcast: draw the full fleet's values every step — this
+        //    keeps per-worker chains (Markov states, heterogeneous
+        //    multipliers) aligned with the synchronous simulator; busy
+        //    laggards simply ignore their draw. Idle workers (re)start.
+        let mut lat = std::mem::take(&mut self.lat_buf);
+        self.latency.sample_into(w, &mut lat);
+        let mut fresh_live = 0usize;
+        for (j, &draw) in lat.iter().enumerate() {
+            if self.inflight[j].is_some() {
+                continue; // laggard: still computing an earlier version
+            }
+            debug_assert!(draw.is_finite() && draw >= 0.0, "draw {draw} for worker {j}");
+            fresh_live += 1;
+            let id = self.next_task_id;
+            self.next_task_id += 1;
+            // With a link, the θ unicast to this worker serializes on
+            // the master NIC; compute starts when the transfer lands.
+            let compute_start = match self.link {
+                Some(l) => {
+                    let s = self.link_free_ms.max(self.now_ms);
+                    self.link_free_ms = s + l.transfer_ms(self.costs.broadcast_bytes);
+                    self.link_free_ms
+                }
+                None => self.now_ms,
+            };
+            let done = compute_start + self.compute.task_ms(self.costs.flops[j], draw);
+            let kind = if self.link.is_some() {
+                EventKind::ComputeDone
+            } else {
+                EventKind::Arrival
+            };
+            self.queue.push(done, j, id, kind);
+            self.inflight[j] =
+                Some(Task { id, version: t, start_ms: self.now_ms, eta_ms: done });
+        }
+        self.lat_buf = lat;
+        debug_assert!(self.inflight.iter().all(|x| x.is_some()));
+
+        // 2. Clear the decode view: every slot starts empty and only
+        //    this window's arrivals fill it.
+        for slot in masked.iter_mut() {
+            if let Some(buf) = slot.take() {
+                self.spares.push(buf);
+            }
+        }
+
+        // 3. Collection: pop events in global time order until the
+        //    policy's cut. Count cuts are scaled to the fresh cohort
+        //    (see `cutoff_pipelined`); `CountFresh` clamps to the
+        //    realized fresh dispatch count, falling back to "first
+        //    arrival" when nothing fresh was dispatched this window.
+        let stop = match self.deadline.cutoff_pipelined(w, fresh_live) {
+            Cutoff::All => StopRule::Count(w),
+            Cutoff::Count(n) => StopRule::Count(n.min(w)),
+            Cutoff::CountFresh(n) => {
+                let nf = n.min(fresh_live);
+                if nf == 0 {
+                    StopRule::Count(1)
+                } else {
+                    StopRule::Fresh(nf)
+                }
+            }
+            Cutoff::Time(ms) => StopRule::Time(self.now_ms + ms),
+        };
+
+        let mut counted = 0usize;
+        let mut fresh_counted = 0usize;
+        let mut stale_counted = 0usize;
+        let mut last_arrival = self.now_ms;
+        loop {
+            let stop_now = match stop {
+                StopRule::Count(n) => counted >= n,
+                StopRule::Fresh(nf) => fresh_counted >= nf || counted >= w,
+                StopRule::Time(_) => counted >= w,
+            };
+            if stop_now {
+                break;
+            }
+            let next_time = match self.queue.peek_time() {
+                Some(ti) => ti,
+                None => break,
+            };
+            if let StopRule::Time(d) = stop {
+                if next_time > d {
+                    break;
+                }
+            }
+            let ev = self.queue.pop().expect("peeked a pending event");
+            let task = match self.inflight[ev.worker] {
+                Some(task) if task.id == ev.task => task,
+                // Ghost of a cancelled task: its compute never finishes
+                // and its response is never shipped.
+                _ => continue,
+            };
+            match ev.kind {
+                EventKind::ComputeDone => {
+                    // The response enters the master link; transfers are
+                    // served FIFO in readiness order, so arrival order
+                    // emerges from payload bytes and contention.
+                    let l = self.link.expect("compute-done events only exist with a link");
+                    let start = self.link_free_ms.max(ev.time_ms);
+                    let arrival = start + l.transfer_ms(self.costs.response_bytes[ev.worker]);
+                    self.link_free_ms = arrival;
+                    if let Some(task) = self.inflight[ev.worker].as_mut() {
+                        task.eta_ms = arrival;
+                    }
+                    self.queue.push(arrival, ev.worker, ev.task, EventKind::Arrival);
+                }
+                EventKind::Arrival => {
+                    // Oracle policy feed, exactly as in the synchronous
+                    // simulator: every realized latency is observed.
+                    self.deadline.observe(ev.time_ms - task.start_ms);
+                    counted += 1;
+                    last_arrival = ev.time_ms;
+                    if task.version == t {
+                        fresh_counted += 1;
+                    } else {
+                        stale_counted += 1;
+                    }
+                    // Tasks in flight never exceed the staleness bound:
+                    // anything older was cancelled at a window end.
+                    debug_assert!(t - task.version <= self.max_staleness);
+                    let v_theta = &self.thetas[task.version % depth];
+                    compute_into_slot(
+                        self.payloads,
+                        self.backend.as_ref(),
+                        ev.worker,
+                        v_theta,
+                        masked,
+                        &mut self.spares,
+                    )?;
+                    self.inflight[ev.worker] = None;
+                }
+            }
+        }
+        self.stale_applied_total += stale_counted as u64;
+
+        // 4. Advance the clock: a time-budgeted master sits out the full
+        //    budget when responses are still pending; otherwise it
+        //    proceeds at the last counted arrival.
+        let pending = self.inflight.iter().filter(|x| x.is_some()).count();
+        let proceed_at = match stop {
+            StopRule::Time(d) if pending > 0 => d,
+            _ => last_arrival,
+        };
+
+        // 5. Cancel every in-flight task that could no longer meet the
+        //    staleness bound at the next window (version + S ≤ t), and
+        //    feed the policy their oracle latencies in arrival order —
+        //    the synchronous simulator observes dropped arrivals the
+        //    same way, which is what keeps S = 0 runs bit-identical.
+        self.doomed.clear();
+        for (j, slot) in self.inflight.iter().enumerate() {
+            if let Some(task) = slot {
+                if task.version + self.max_staleness <= t {
+                    self.doomed.push((task.eta_ms, task.id, j, task.start_ms));
+                }
+            }
+        }
+        self.doomed.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for &(eta, _, j, start) in self.doomed.iter() {
+            self.deadline.observe(eta - start);
+            self.inflight[j] = None;
+        }
+        self.cancelled_total += self.doomed.len() as u64;
+
+        let collect_ms = proceed_at - self.now_ms;
+        self.now_ms = proceed_at;
+        Ok(StepExecution {
+            stragglers: w - counted,
+            worker_ns: 0,
+            collect_ms: Some(collect_ms),
+        })
+    }
+}
+
+/// Run the distributed optimization loop on the asynchronous pipelined
+/// simulator: the pipelined counterpart of [`super::run_simulated`],
+/// sharing the same master loop. Task flop/byte costs are read off the
+/// scheme ([`TaskCosts::of`]).
+pub fn run_simulated_async(
+    scheme: &dyn GradientScheme,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+    sim: &AsyncSimConfig,
+) -> Result<RunReport> {
+    let backend = crate::coordinator::make_backend(cfg)?;
+    let costs = TaskCosts::of(scheme);
+    let mut cluster = AsyncSimCluster::new(scheme.payloads(), costs, backend, cfg, sim)?;
+    run_with_executor(scheme, &mut cluster, problem, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::ldpc::LdpcCode;
+    use crate::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+    use crate::coordinator::straggler::StragglerModel;
+    use crate::data::SynthConfig;
+    use crate::sim::{run_simulated, SimConfig};
+
+    fn problem(k: usize) -> RegressionProblem {
+        RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 42)
+    }
+
+    fn ldpc_scheme(p: &RegressionProblem, seed: u64) -> LdpcMomentScheme {
+        let code = LdpcCode::gallager(40, 20, 3, 6, seed).unwrap();
+        LdpcMomentScheme::new(p, code).unwrap()
+    }
+
+    #[test]
+    fn compute_model_arithmetic() {
+        assert_eq!(ComputeModel::Opaque.task_ms(1_000_000, 2.5), 2.5);
+        let m = ComputeModel::FlopScaled { flops_per_ms: 1000.0 };
+        // 2000 flops at 1000 flops/ms at nominal speed: 2 ms.
+        assert!((m.task_ms(2000, 1.0) - 2.0).abs() < 1e-12);
+        // A 3x-slow worker takes 6 ms.
+        assert!((m.task_ms(2000, 3.0) - 6.0).abs() < 1e-12);
+        assert!(ComputeModel::Opaque.name().contains("opaque"));
+        assert!(m.name().contains("1000"));
+    }
+
+    #[test]
+    fn link_model_arithmetic() {
+        let l = LinkModel { gbps: 1.0, overhead_ms: 0.1 };
+        // 125 KB over 1 Gbit/s = 1 ms, plus overhead.
+        assert!((l.transfer_ms(125_000) - 1.1).abs() < 1e-9);
+        assert!((l.transfer_ms(0) - 0.1).abs() < 1e-12);
+        let g = LinkModel::gigabit();
+        assert_eq!(g.gbps, 1.0);
+    }
+
+    #[test]
+    fn s0_wait_k_matches_synchronous_cluster() {
+        // The headline invariant (full version in tests/integration_sim.rs):
+        // with S = 0, opaque compute, and no link, the pipelined executor
+        // IS the synchronous simulator, bit for bit.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 3);
+        let cfg = RunConfig {
+            rel_tol: 1e-4,
+            max_steps: 3000,
+            record_trace: true,
+            ..Default::default()
+        };
+        let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 5 };
+        let sync = run_simulated(
+            &s,
+            &p,
+            &cfg,
+            &SimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(35)),
+        )
+        .unwrap();
+        let asy = run_simulated_async(
+            &s,
+            &p,
+            &cfg,
+            &AsyncSimConfig::new(latency, DeadlinePolicy::WaitForK(35), 0),
+        )
+        .unwrap();
+        assert_eq!(sync.theta, asy.theta, "θ-trajectories diverged");
+        assert_eq!(sync.steps, asy.steps);
+        let view = |r: &RunReport| -> Vec<(usize, Option<f64>)> {
+            r.trace.iter().map(|m| (m.stragglers, m.collect_ms)).collect()
+        };
+        assert_eq!(view(&sync), view(&asy), "per-step masks or clocks diverged");
+    }
+
+    #[test]
+    fn staleness_applies_laggard_responses() {
+        // One persistently slow worker under a deterministic trace: the
+        // synchronous wait-k master erases it every step; with S = 2 its
+        // responses land one window late and are applied stale.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 7);
+        let cfg = RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() };
+        let mut row = vec![1.0; 40];
+        row[0] = 2.5;
+        let latency = LatencyModel::Trace { table: Arc::new(vec![row]) };
+        let sim = AsyncSimConfig::new(latency, DeadlinePolicy::WaitForK(39), 2);
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        let costs = TaskCosts::of(&s);
+        let mut cluster =
+            AsyncSimCluster::new(s.payloads(), costs, backend, &cfg, &sim).unwrap();
+        let r = run_with_executor(&s, &mut cluster, &p, &cfg).unwrap();
+        assert!(r.converged, "{}", r.summary());
+        assert!(
+            cluster.stale_applied_total() > 0,
+            "the slow worker's responses must be applied stale"
+        );
+        assert_eq!(
+            cluster.cancelled_total(),
+            0,
+            "2.5 ms laggards always make the S=2 bound"
+        );
+        assert!(cluster.now_ms() > 0.0);
+    }
+
+    #[test]
+    fn s0_impossible_deadline_cancels_everything() {
+        // The pipelined analogue of the synchronous impossible-deadline
+        // test: at S = 0 every missed task is cancelled at its window
+        // end, θ never moves, and the master pays the budget every step.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 9);
+        let cfg = RunConfig { max_steps: 10, ..Default::default() };
+        let sim = AsyncSimConfig::new(
+            LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 5 },
+            DeadlinePolicy::FixedDeadline { ms: 0.5 },
+            0,
+        );
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        let costs = TaskCosts::of(&s);
+        let mut cluster =
+            AsyncSimCluster::new(s.payloads(), costs, backend, &cfg, &sim).unwrap();
+        let r = run_with_executor(&s, &mut cluster, &p, &cfg).unwrap();
+        assert!(!r.converged);
+        assert_eq!(r.totals.stragglers, 40 * 10);
+        assert_eq!(cluster.cancelled_total(), 40 * 10);
+        assert!(r.theta.iter().all(|&v| v == 0.0));
+        assert!((r.totals.collect_ms - 0.5 * 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_contention_serializes_broadcasts() {
+        // A slow master NIC: 40 θ unicasts serialize before anyone can
+        // even start computing, so every collection window is at least
+        // 40 transfer times long.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 11);
+        let cfg = RunConfig { max_steps: 5, record_trace: true, ..Default::default() };
+        let link = LinkModel { gbps: 0.001, overhead_ms: 0.01 };
+        // θ is k=40 doubles = 320 bytes → 2.56 ms + 0.01 ms per unicast.
+        let per_msg = link.transfer_ms(40 * 8);
+        assert!(per_msg > 2.5);
+        let sim = AsyncSimConfig::new(
+            LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 13 },
+            DeadlinePolicy::WaitForAll,
+            0,
+        )
+        .with_link(link);
+        let r = run_simulated_async(&s, &p, &cfg, &sim).unwrap();
+        for m in &r.trace {
+            assert!(
+                m.collect_ms.unwrap() >= 40.0 * per_msg,
+                "window {} shorter than the serialized broadcast: {} < {}",
+                m.t,
+                m.collect_ms.unwrap(),
+                40.0 * per_msg
+            );
+        }
+    }
+
+    #[test]
+    fn flop_scaled_times_follow_payload_size() {
+        // Under FlopScaled with a constant slowdown of 1, wait-for-all
+        // windows are exactly the serialized... no link here: exactly
+        // the slowest worker's flops / throughput.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 15);
+        // Every worker has the same payload shape (α rows × k), so the
+        // per-task time is uniform: flops / flops_per_ms.
+        let flops = TaskCosts::of(&s).flops;
+        assert!(flops.iter().all(|&f| f == flops[0]));
+        let cfg = RunConfig { max_steps: 4, record_trace: true, ..Default::default() };
+        let sim = AsyncSimConfig::new(
+            LatencyModel::Trace { table: Arc::new(vec![vec![1.0]]) },
+            DeadlinePolicy::WaitForAll,
+            0,
+        )
+        .with_compute(ComputeModel::FlopScaled { flops_per_ms: 100.0 });
+        let r = run_simulated_async(&s, &p, &cfg, &sim).unwrap();
+        let want = flops[0] as f64 / 100.0;
+        for m in &r.trace {
+            assert!(
+                (m.collect_ms.unwrap() - want).abs() < 1e-9,
+                "step {}: {} vs {want}",
+                m.t,
+                m.collect_ms.unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn mirror_mode_bypasses_the_pipeline() {
+        // MirrorStraggler delegates to the straggler model exactly like
+        // the synchronous simulator — the thread-parity escape hatch.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 17);
+        let cfg = RunConfig {
+            straggler: StragglerModel::FixedCount { s: 5, seed: 7 },
+            rel_tol: 1e-5,
+            max_steps: 400,
+            ..Default::default()
+        };
+        let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 5 };
+        let sync = run_simulated(
+            &s,
+            &p,
+            &cfg,
+            &SimConfig::new(latency.clone(), DeadlinePolicy::MirrorStraggler),
+        )
+        .unwrap();
+        let asy = run_simulated_async(
+            &s,
+            &p,
+            &cfg,
+            &AsyncSimConfig::new(latency, DeadlinePolicy::MirrorStraggler, 3),
+        )
+        .unwrap();
+        assert_eq!(sync.theta, asy.theta);
+        assert_eq!(sync.steps, asy.steps);
+    }
+
+    #[test]
+    fn bad_configurations_rejected() {
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 19);
+        let cfg = RunConfig::default();
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 5 };
+        // Cost vectors must cover every worker.
+        let short = TaskCosts {
+            flops: vec![1; 8],
+            response_bytes: vec![8; 8],
+            broadcast_bytes: 320,
+        };
+        assert!(AsyncSimCluster::new(
+            s.payloads(),
+            short,
+            Arc::clone(&backend),
+            &cfg,
+            &AsyncSimConfig::new(latency.clone(), DeadlinePolicy::WaitForAll, 0),
+        )
+        .is_err());
+        // Degenerate compute and link models are rejected.
+        let bad_compute = AsyncSimConfig::new(latency.clone(), DeadlinePolicy::WaitForAll, 0)
+            .with_compute(ComputeModel::FlopScaled { flops_per_ms: 0.0 });
+        assert!(AsyncSimCluster::new(
+            s.payloads(),
+            TaskCosts::of(&s),
+            Arc::clone(&backend),
+            &cfg,
+            &bad_compute,
+        )
+        .is_err());
+        let bad_link = AsyncSimConfig::new(latency.clone(), DeadlinePolicy::WaitForAll, 0)
+            .with_link(LinkModel { gbps: 0.0, overhead_ms: 0.01 });
+        assert!(AsyncSimCluster::new(
+            s.payloads(),
+            TaskCosts::of(&s),
+            Arc::clone(&backend),
+            &cfg,
+            &bad_link,
+        )
+        .is_err());
+        // Absurd staleness bounds are rejected.
+        let bad_s = AsyncSimConfig::new(
+            latency.clone(),
+            DeadlinePolicy::WaitForAll,
+            MAX_STALENESS_CAP + 1,
+        );
+        assert!(AsyncSimCluster::new(
+            s.payloads(),
+            TaskCosts::of(&s),
+            Arc::clone(&backend),
+            &cfg,
+            &bad_s,
+        )
+        .is_err());
+        // Double-counting communication models is rejected: the NIC link
+        // already prices transfers, so RunConfig::comm must stay None.
+        let with_link = AsyncSimConfig::new(latency, DeadlinePolicy::WaitForAll, 0)
+            .with_link(LinkModel::gigabit());
+        let comm_cfg = RunConfig {
+            comm: Some(crate::config::CommModel::gigabit()),
+            ..Default::default()
+        };
+        assert!(AsyncSimCluster::new(
+            s.payloads(),
+            TaskCosts::of(&s),
+            backend,
+            &comm_cfg,
+            &with_link,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn wait_fresh_counts_only_current_versions() {
+        // Same slow-worker trace as the staleness test, but wait-fresh:
+        // the stale arrival fills a slot without counting toward k, so
+        // the run still converges and stale responses are applied.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 21);
+        let cfg = RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() };
+        let mut row = vec![1.0; 40];
+        row[0] = 2.5;
+        let latency = LatencyModel::Trace { table: Arc::new(vec![row]) };
+        let sim = AsyncSimConfig::new(latency, DeadlinePolicy::WaitForFresh(38), 2);
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        let costs = TaskCosts::of(&s);
+        let mut cluster =
+            AsyncSimCluster::new(s.payloads(), costs, backend, &cfg, &sim).unwrap();
+        let r = run_with_executor(&s, &mut cluster, &p, &cfg).unwrap();
+        assert!(r.converged, "{}", r.summary());
+        assert!(cluster.stale_applied_total() > 0);
+    }
+
+    #[test]
+    fn config_label_mentions_staleness() {
+        let sim = AsyncSimConfig::new(
+            LatencyModel::Pareto { scale_ms: 1.0, shape: 1.5, seed: 1 },
+            DeadlinePolicy::WaitForK(56),
+            4,
+        );
+        let l = sim.label();
+        assert!(l.contains("pareto") && l.contains("wait-k(56)") && l.contains("S=4"), "{l}");
+    }
+}

@@ -11,9 +11,18 @@
 //! * quantile-adaptive — track recent response latencies and set the
 //!   deadline at a slacked quantile, so the budget follows the fleet's
 //!   actual speed (and tightens/loosens as stragglers come and go);
+//! * wait-for-fresh — the pipelined master's staleness-aware count:
+//!   proceed after `k` responses computed on the *current* iterate,
+//!   with stale laggard arrivals filling decode slots as a bonus;
 //! * mirror — delegate the drop decision to the run's
 //!   [`crate::coordinator::straggler::StragglerModel`], reproducing the
 //!   thread cluster bit-for-bit for a fixed seed (the parity-test mode).
+//!
+//! The asynchronous pipelined executor ([`crate::sim::async_exec`])
+//! evaluates the same policies through [`DeadlineState::cutoff_pipelined`],
+//! which scales count cuts to the freshly dispatched cohort so a policy
+//! keeps its tolerated *miss fraction* when part of the fleet is still
+//! busy with earlier steps.
 
 /// Per-step collection policy of the simulated master.
 #[derive(Debug, Clone)]
@@ -43,6 +52,11 @@ pub enum DeadlinePolicy {
         /// Observation ring-buffer capacity.
         window: usize,
     },
+    /// Proceed after the fastest `k` *fresh* responses — ones computed
+    /// on the current broadcast iterate. Stale laggard responses still
+    /// fill decode slots but do not count toward `k`. In a synchronous
+    /// run every response is fresh, so this degenerates to `WaitForK`.
+    WaitForFresh(usize),
     /// Drop the workers named by the run's `StragglerModel` instead of
     /// deciding by latency — mirrors the thread cluster's masking
     /// bit-for-bit for a fixed seed.
@@ -59,6 +73,7 @@ impl DeadlinePolicy {
             DeadlinePolicy::QuantileAdaptive { q, slack, .. } => {
                 format!("quantile({q},x{slack})")
             }
+            DeadlinePolicy::WaitForFresh(k) => format!("wait-fresh({k})"),
             DeadlinePolicy::MirrorStraggler => "mirror".into(),
         }
     }
@@ -71,6 +86,11 @@ pub enum Cutoff {
     All,
     /// Count the fastest `n` responses.
     Count(usize),
+    /// Count until `n` *fresh* responses (current-iterate versions)
+    /// arrived; stale arrivals are accepted but do not count toward `n`.
+    /// Synchronous executors, where everything is fresh, treat this
+    /// exactly like [`Cutoff::Count`].
+    CountFresh(usize),
     /// Count responses arriving within `ms` of the step start.
     Time(f64),
 }
@@ -103,6 +123,7 @@ impl DeadlineState {
         match self.policy {
             DeadlinePolicy::WaitForAll | DeadlinePolicy::MirrorStraggler => Cutoff::All,
             DeadlinePolicy::WaitForK(k) => Cutoff::Count(k.clamp(1, w)),
+            DeadlinePolicy::WaitForFresh(k) => Cutoff::CountFresh(k.clamp(1, w)),
             DeadlinePolicy::FixedDeadline { ms } => Cutoff::Time(ms),
             DeadlinePolicy::QuantileAdaptive { q, slack, .. } => {
                 if self.observed_len() == 0 {
@@ -113,6 +134,30 @@ impl DeadlineState {
                     Cutoff::Time(slack * self.quantile(q))
                 }
             }
+        }
+    }
+
+    /// The pipelined master's per-step cut: identical thresholds to
+    /// [`DeadlineState::cutoff`], but only `fresh` of the `w` in-flight
+    /// tasks were dispatched this step — the rest are laggards still
+    /// computing on earlier iterates. `Count` cuts scale to the fresh
+    /// cohort (ceiling division, floor 1) so the policy keeps its
+    /// tolerated miss *fraction*: wait-for-`k`-of-`w` over `fresh`
+    /// dispatches waits for `⌈k·fresh/w⌉` arrivals, with laggard
+    /// arrivals counting toward the target as they land. With
+    /// `fresh == w` (a fully synchronous window, e.g. max staleness 0)
+    /// this is exactly [`DeadlineState::cutoff`]. Time cuts and
+    /// [`Cutoff::CountFresh`] pass through unchanged — the latter's
+    /// clamp to the realized fresh cohort is the executor's job, which
+    /// also knows the fallback when nothing fresh was dispatched.
+    pub fn cutoff_pipelined(&mut self, w: usize, fresh: usize) -> Cutoff {
+        debug_assert!(fresh <= w);
+        match self.cutoff(w) {
+            Cutoff::Count(n) => {
+                let scaled = n * fresh / w + usize::from(n * fresh % w != 0);
+                Cutoff::Count(scaled.max(1))
+            }
+            c => c,
         }
     }
 
@@ -230,6 +275,55 @@ mod tests {
         assert_eq!(DeadlinePolicy::WaitForAll.name(), "wait-all");
         assert_eq!(DeadlinePolicy::WaitForK(30).name(), "wait-k(30)");
         assert_eq!(DeadlinePolicy::FixedDeadline { ms: 2.0 }.name(), "deadline(2ms)");
+        assert_eq!(DeadlinePolicy::WaitForFresh(30).name(), "wait-fresh(30)");
         assert_eq!(DeadlinePolicy::MirrorStraggler.name(), "mirror");
+    }
+
+    #[test]
+    fn wait_for_fresh_clamps_like_wait_for_k() {
+        let mut s = DeadlineState::new(DeadlinePolicy::WaitForFresh(30));
+        assert_eq!(s.cutoff(40), Cutoff::CountFresh(30));
+        assert_eq!(s.cutoff(10), Cutoff::CountFresh(10));
+        let mut z = DeadlineState::new(DeadlinePolicy::WaitForFresh(0));
+        assert_eq!(z.cutoff(10), Cutoff::CountFresh(1));
+    }
+
+    #[test]
+    fn pipelined_cut_scales_counts_to_fresh_cohort() {
+        let mut s = DeadlineState::new(DeadlinePolicy::WaitForK(224));
+        // Fully fresh window: identical to the synchronous cut.
+        assert_eq!(s.cutoff_pipelined(256, 256), Cutoff::Count(224));
+        // 224 fresh of 256: wait for ⌈224·224/256⌉ = 196.
+        assert_eq!(s.cutoff_pipelined(256, 224), Cutoff::Count(196));
+        // Half fresh halves the target.
+        assert_eq!(s.cutoff_pipelined(256, 128), Cutoff::Count(112));
+        // Nothing fresh: floor at one arrival so the step terminates.
+        assert_eq!(s.cutoff_pipelined(256, 0), Cutoff::Count(1));
+    }
+
+    #[test]
+    fn pipelined_cut_leaves_time_and_all_untouched() {
+        let mut f = DeadlineState::new(DeadlinePolicy::FixedDeadline { ms: 3.0 });
+        assert_eq!(f.cutoff_pipelined(64, 10), Cutoff::Time(3.0));
+        let mut a = DeadlineState::new(DeadlinePolicy::WaitForAll);
+        assert_eq!(a.cutoff_pipelined(64, 10), Cutoff::All);
+        let mut fr = DeadlineState::new(DeadlinePolicy::WaitForFresh(56));
+        assert_eq!(fr.cutoff_pipelined(64, 10), Cutoff::CountFresh(56));
+    }
+
+    #[test]
+    fn pipelined_count_is_monotone_in_fresh() {
+        let mut s = DeadlineState::new(DeadlinePolicy::WaitForK(56));
+        let mut prev = 0usize;
+        for fresh in 0..=64 {
+            let n = match s.cutoff_pipelined(64, fresh) {
+                Cutoff::Count(n) => n,
+                c => panic!("unexpected cut {c:?}"),
+            };
+            assert!(n >= prev, "fresh={fresh}: {n} < {prev}");
+            assert!(n >= 1 && n <= 56);
+            prev = n;
+        }
+        assert_eq!(prev, 56, "fully fresh must reach the synchronous count");
     }
 }

@@ -1,9 +1,12 @@
-//! Deterministic discrete-event heap for the virtual-time simulator.
+//! Deterministic discrete-event heaps for the virtual-time simulator.
 //!
-//! A min-heap keyed by simulated time with an insertion-sequence
+//! Min-heaps keyed by simulated time with an insertion-sequence
 //! tie-break, so two events at the same instant always pop in the order
 //! they were scheduled — runs are bit-reproducible regardless of float
-//! ties.
+//! ties. [`EventQueue`] carries the synchronous simulator's bare
+//! arrivals; [`TaskEventQueue`] carries the pipelined simulator's
+//! task-tagged events ([`TaskEvent`]), whose task generation number lets
+//! cancelled tasks' stale events be recognized and skipped on pop.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -90,6 +93,101 @@ impl EventQueue {
     }
 }
 
+/// What a pipelined-simulator event signifies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// The worker finished its compute; the response is ready to enter
+    /// the master link (only scheduled when a link model is active —
+    /// without one, completion and arrival coincide).
+    ComputeDone,
+    /// The response reached the master.
+    Arrival,
+}
+
+/// A task-tagged event in the pipelined simulator. `task` is the
+/// generation number of the worker's in-flight task at scheduling time;
+/// a pop whose `task` no longer matches the worker's current task is a
+/// ghost of a cancelled task and must be ignored.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskEvent {
+    /// Absolute simulated time (ms).
+    pub time_ms: f64,
+    /// Insertion sequence number (tie-break; unique per queue).
+    pub seq: u64,
+    /// Worker id.
+    pub worker: usize,
+    /// Task generation number.
+    pub task: u64,
+    /// Event kind.
+    pub kind: EventKind,
+}
+
+impl PartialEq for TaskEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for TaskEvent {}
+
+impl PartialOrd for TaskEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TaskEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time_ms
+            .total_cmp(&other.time_ms)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-queue of [`TaskEvent`]s in (time, insertion) order. Unlike
+/// [`EventQueue`], entries routinely survive across gradient steps (a
+/// laggard's arrival lands in a later collection window), so callers
+/// must never assume the queue drains at a step boundary.
+#[derive(Debug, Default)]
+pub struct TaskEventQueue {
+    heap: BinaryHeap<Reverse<TaskEvent>>,
+    seq: u64,
+}
+
+impl TaskEventQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        TaskEventQueue::default()
+    }
+
+    /// Schedule an event at absolute time `time_ms`.
+    pub fn push(&mut self, time_ms: f64, worker: usize, task: u64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(TaskEvent { time_ms, seq, worker, task, kind }));
+    }
+
+    /// Pop the earliest event (ties in insertion order).
+    pub fn pop(&mut self) -> Option<TaskEvent> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    /// Earliest pending time, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(e)| e.time_ms)
+    }
+
+    /// Number of pending events (ghosts of cancelled tasks included).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +250,48 @@ mod tests {
             b.push(t, w);
         }
         assert_eq!(drain(&mut a), drain(&mut b));
+    }
+
+    #[test]
+    fn task_queue_orders_by_time_then_insertion() {
+        let mut q = TaskEventQueue::new();
+        q.push(2.0, 0, 10, EventKind::Arrival);
+        q.push(1.0, 1, 11, EventKind::ComputeDone);
+        q.push(2.0, 2, 12, EventKind::Arrival);
+        let order: Vec<(usize, u64, EventKind)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.worker, e.task, e.kind)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (1, 11, EventKind::ComputeDone),
+                (0, 10, EventKind::Arrival),
+                (2, 12, EventKind::Arrival),
+            ]
+        );
+    }
+
+    #[test]
+    fn task_queue_peek_and_len() {
+        let mut q = TaskEventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        q.push(4.0, 0, 0, EventKind::Arrival);
+        q.push(1.5, 1, 1, EventKind::Arrival);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peek_time(), Some(1.5));
+        q.pop();
+        q.pop();
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn task_queue_tags_survive_round_trip() {
+        // The (worker, task, kind) triple pushed is the triple popped —
+        // the ghost-detection contract of the pipelined simulator.
+        let mut q = TaskEventQueue::new();
+        q.push(1.0, 7, 42, EventKind::ComputeDone);
+        let e = q.pop().unwrap();
+        assert_eq!((e.worker, e.task, e.kind), (7, 42, EventKind::ComputeDone));
+        assert_eq!(e.time_ms, 1.0);
     }
 }

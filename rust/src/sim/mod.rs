@@ -25,9 +25,21 @@
 //! drop decision to the run's [`StragglerModel`] sampler, which makes a
 //! fixed-seed simulated run bit-identical to the thread cluster — the
 //! equivalence the integration tests pin down.
+//!
+//! [`async_exec`] lifts the synchronous step barrier: an asynchronous
+//! pipelined master broadcasts the next iterate while laggards keep
+//! computing, applies their responses under a bounded-staleness rule,
+//! and can price tasks with a flop-aware compute model plus a shared-NIC
+//! contention model. With max staleness 0 it reproduces [`SimCluster`]
+//! bit for bit.
 
+pub mod async_exec;
 pub mod deadline;
 pub mod event;
+
+pub use async_exec::{
+    run_simulated_async, AsyncSimCluster, AsyncSimConfig, ComputeModel, LinkModel, TaskCosts,
+};
 
 use std::sync::Arc;
 
@@ -43,6 +55,60 @@ use crate::runtime::ComputeBackend;
 
 use deadline::{Cutoff, DeadlinePolicy, DeadlineState};
 use event::EventQueue;
+
+/// Compute worker `j`'s response into a recycled buffer parked in
+/// `masked[j]` — the buffer-recycling discipline shared by the
+/// synchronous and pipelined simulated clusters.
+pub(crate) fn compute_into_slot(
+    payloads: &[WorkerPayload],
+    backend: &dyn ComputeBackend,
+    j: usize,
+    theta: &[f64],
+    masked: &mut [Option<Vec<f64>>],
+    spares: &mut Vec<Vec<f64>>,
+) -> Result<()> {
+    let mut buf = masked[j].take().or_else(|| spares.pop()).unwrap_or_default();
+    payloads[j].compute_into(theta, backend, Some(j as u64), &mut buf)?;
+    masked[j] = Some(buf);
+    Ok(())
+}
+
+/// Mirror-mode step shared by both simulated clusters: delegate the drop
+/// decision to the run's straggler model, which masks bit-identically to
+/// the thread cluster for a fixed seed. Returns the step stats and the
+/// virtual-clock advance (callers own their clock and drop counters).
+pub(crate) fn mirror_step(
+    payloads: &[WorkerPayload],
+    backend: &dyn ComputeBackend,
+    sampler: &mut StragglerSampler,
+    spares: &mut Vec<Vec<f64>>,
+    theta: &[f64],
+    masked: &mut [Option<Vec<f64>>],
+) -> Result<(StepExecution, f64)> {
+    let w = payloads.len();
+    let straggling = sampler.next_step(w);
+    let mut strag_iter = straggling.stragglers.iter().peekable();
+    for j in 0..w {
+        let is_straggler = matches!(strag_iter.peek(), Some(&&s) if s == j);
+        if is_straggler {
+            strag_iter.next();
+            if let Some(buf) = masked[j].take() {
+                spares.push(buf);
+            }
+        } else {
+            compute_into_slot(payloads, backend, j, theta, masked, spares)?;
+        }
+    }
+    let advance = straggling.collect_ms.unwrap_or(0.0);
+    Ok((
+        StepExecution {
+            stragglers: straggling.stragglers.len(),
+            worker_ns: 0,
+            collect_ms: straggling.collect_ms,
+        },
+        advance,
+    ))
+}
 
 /// Configuration of the virtual-time simulation: where latencies come
 /// from and when the master stops collecting.
@@ -139,10 +205,7 @@ impl<'a> SimCluster<'a> {
         theta: &[f64],
         masked: &mut [Option<Vec<f64>>],
     ) -> Result<()> {
-        let mut buf = masked[j].take().or_else(|| self.spares.pop()).unwrap_or_default();
-        self.payloads[j].compute_into(theta, self.backend.as_ref(), Some(j as u64), &mut buf)?;
-        masked[j] = Some(buf);
-        Ok(())
+        compute_into_slot(self.payloads, self.backend.as_ref(), j, theta, masked, &mut self.spares)
     }
 
     /// Mirror mode: delegate the drop decision to the straggler model
@@ -152,31 +215,19 @@ impl<'a> SimCluster<'a> {
         theta: &[f64],
         masked: &mut [Option<Vec<f64>>],
     ) -> Result<StepExecution> {
-        let w = self.payloads.len();
-        let straggling = self
-            .mirror
-            .as_mut()
-            .expect("mirror step without a straggler sampler")
-            .next_step(w);
-        let mut strag_iter = straggling.stragglers.iter().peekable();
-        for j in 0..w {
-            let is_straggler = matches!(strag_iter.peek(), Some(&&s) if s == j);
-            if is_straggler {
-                strag_iter.next();
-                if let Some(buf) = masked[j].take() {
-                    self.spares.push(buf);
-                }
-            } else {
-                self.compute_worker(j, theta, masked)?;
-            }
-        }
-        self.dropped_total += straggling.stragglers.len() as u64;
-        self.now_ms += straggling.collect_ms.unwrap_or(0.0);
-        Ok(StepExecution {
-            stragglers: straggling.stragglers.len(),
-            worker_ns: 0,
-            collect_ms: straggling.collect_ms,
-        })
+        let sampler =
+            self.mirror.as_mut().expect("mirror step without a straggler sampler");
+        let (exec, advance) = mirror_step(
+            self.payloads,
+            self.backend.as_ref(),
+            sampler,
+            &mut self.spares,
+            theta,
+            masked,
+        )?;
+        self.dropped_total += exec.stragglers as u64;
+        self.now_ms += advance;
+        Ok(exec)
     }
 }
 
@@ -215,7 +266,9 @@ impl StepExecutor for SimCluster<'_> {
         let cut = self.deadline.cutoff(w);
         let target = match cut {
             Cutoff::All => w,
-            Cutoff::Count(n) => n,
+            // Every synchronous response is fresh, so a fresh-count cut
+            // is an ordinary count cut here.
+            Cutoff::Count(n) | Cutoff::CountFresh(n) => n,
             Cutoff::Time(_) => w,
         };
         let deadline_abs = match cut {

@@ -13,7 +13,9 @@ use moment_ldpc::coordinator::straggler::{record_trace, LatencyModel, StragglerM
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
 use moment_ldpc::runtime::NativeBackend;
 use moment_ldpc::sim::deadline::DeadlinePolicy;
-use moment_ldpc::sim::{run_simulated, SimConfig};
+use moment_ldpc::sim::{
+    run_simulated, run_simulated_async, AsyncSimCluster, AsyncSimConfig, SimConfig, TaskCosts,
+};
 
 /// The acceptance criterion: for a fixed seed and FixedCount straggling,
 /// the virtual-time cluster's θ-trajectory is *bit-identical* to the
@@ -172,6 +174,138 @@ fn deadline_policy_changes_time_to_accuracy() {
         wait_k.totals.collect_ms,
         wait_all.totals.collect_ms
     );
+}
+
+/// The PR-3 acceptance pin, part 1: with max staleness S = 0 (opaque
+/// compute, no link) the asynchronous pipelined executor's θ-trajectory
+/// is *bit-identical* to the synchronous `SimCluster` — same draws, same
+/// deadline decisions (including the quantile policy's observation
+/// stream, which sees cancelled laggards exactly where the synchronous
+/// master sees dropped arrivals), same masks, same floats.
+#[test]
+fn async_s0_bit_identical_to_sync_simulator_all_policies() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 11);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 9).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 3000,
+        record_trace: true,
+        ..Default::default()
+    };
+    for policy in [
+        DeadlinePolicy::WaitForAll,
+        DeadlinePolicy::WaitForK(35),
+        DeadlinePolicy::WaitForFresh(35),
+        DeadlinePolicy::FixedDeadline { ms: 2.5 },
+        DeadlinePolicy::QuantileAdaptive { q: 0.9, slack: 1.5, window: 256 },
+    ] {
+        let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 33 };
+        let sync = run_simulated(
+            &scheme,
+            &problem,
+            &cfg,
+            &SimConfig::new(latency.clone(), policy.clone()),
+        )
+        .unwrap();
+        let asy = run_simulated_async(
+            &scheme,
+            &problem,
+            &cfg,
+            &AsyncSimConfig::new(latency, policy.clone(), 0),
+        )
+        .unwrap();
+        assert_eq!(sync.theta, asy.theta, "{}: θ diverged", policy.name());
+        assert_eq!(sync.steps, asy.steps, "{}", policy.name());
+        assert_eq!(sync.converged, asy.converged, "{}", policy.name());
+        type StepView = (usize, Option<f64>, f64);
+        let view = |r: &moment_ldpc::coordinator::metrics::RunReport| -> Vec<StepView> {
+            r.trace.iter().map(|m| (m.stragglers, m.collect_ms, m.error)).collect()
+        };
+        assert_eq!(view(&sync), view(&asy), "{}: per-step trace diverged", policy.name());
+    }
+}
+
+/// The PR-3 acceptance pin, part 2: the async executor is bit-identical
+/// to the OS-thread `ThreadStepExecutor` for a fixed seed, via the
+/// mirror policy (the same chain that pins the synchronous simulator to
+/// the thread cluster).
+#[test]
+fn async_mirror_bit_identical_to_thread_cluster() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 13);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 5).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        straggler: StragglerModel::FixedCount { s: 5, seed: 7 },
+        rel_tol: 1e-5,
+        max_steps: 4000,
+        record_trace: true,
+        ..Default::default()
+    };
+
+    let cluster = Cluster::spawn(scheme.payloads(), Arc::new(NativeBackend));
+    let threaded = run_with_cluster(&scheme, &cluster, &problem, &cfg).unwrap();
+    cluster.shutdown();
+
+    let asy = run_simulated_async(
+        &scheme,
+        &problem,
+        &cfg,
+        &AsyncSimConfig::new(
+            LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 99 },
+            DeadlinePolicy::MirrorStraggler,
+            0,
+        ),
+    )
+    .unwrap();
+    assert!(threaded.converged, "{}", threaded.summary());
+    assert_eq!(threaded.theta, asy.theta, "θ-trajectories diverged");
+    assert_eq!(threaded.steps, asy.steps);
+    assert!(threaded
+        .trace
+        .iter()
+        .zip(&asy.trace)
+        .all(|(a, b)| a.stragglers == b.stragglers));
+}
+
+/// Bounded staleness does real work: under a deterministic trace with
+/// one persistently slow worker, the pipelined master applies that
+/// worker's laggard responses (which a synchronous wait-k master erases
+/// every single step) and never has to cancel them.
+#[test]
+fn async_staleness_recovers_persistent_laggard_work() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 15);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 7).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() };
+    let mut row = vec![1.0; 40];
+    row[0] = 2.5; // worker 0 is 2.5x slower, every step
+    let latency = LatencyModel::Trace { table: Arc::new(vec![row]) };
+
+    // Synchronous wait-k(39): worker 0 misses every window; its position
+    // is erased in every decode.
+    let sync = run_simulated(
+        &scheme,
+        &problem,
+        &cfg,
+        &SimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(39)),
+    )
+    .unwrap();
+    assert!(sync.converged);
+    assert_eq!(sync.totals.stragglers, sync.steps, "one erasure per sync step");
+
+    // Pipelined S=2: the slow worker's responses land a window late and
+    // are applied stale instead of being thrown away.
+    let sim = AsyncSimConfig::new(latency, DeadlinePolicy::WaitForK(39), 2);
+    let backend = Arc::new(NativeBackend);
+    let costs = TaskCosts::of(&scheme);
+    let mut cluster =
+        AsyncSimCluster::new(scheme.payloads(), costs, backend, &cfg, &sim).unwrap();
+    let asy = moment_ldpc::coordinator::run_with_executor(&scheme, &mut cluster, &problem, &cfg)
+        .unwrap();
+    assert!(asy.converged, "{}", asy.summary());
+    assert!(cluster.stale_applied_total() > 0, "laggard work must be applied stale");
+    assert_eq!(cluster.cancelled_total(), 0, "2.5 ms responses always make the S=2 bound");
 }
 
 /// A recorded latency trace replayed through the simulator reproduces

@@ -1,0 +1,184 @@
+//! Property tests for the deadline policies: quantile monotonicity,
+//! wait-k/wait-all equivalence at k = n, and the fixed-budget guarantee
+//! that nothing arriving after the budget is ever collected.
+
+use std::sync::Arc;
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::straggler::LatencyModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::rng::Rng;
+use moment_ldpc::sim::deadline::{Cutoff, DeadlinePolicy, DeadlineState};
+use moment_ldpc::sim::{run_simulated, SimConfig};
+
+fn problem_and_scheme(seed: u64) -> (RegressionProblem, LdpcMomentScheme) {
+    let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), seed);
+    let code = LdpcCode::gallager(40, 20, 3, 6, seed).unwrap();
+    let s = LdpcMomentScheme::new(&p, code).unwrap();
+    (p, s)
+}
+
+/// The quantile-adaptive budget is monotone non-decreasing in its window
+/// quantile `q`, whatever the observation window holds: a higher
+/// quantile of the same latencies can never tighten the deadline.
+#[test]
+fn quantile_budget_monotone_in_q() {
+    let mut rng = Rng::new(1);
+    for trial in 0..50 {
+        // Random window contents: heavy-tailed, varied length, so ties
+        // and duplicates all occur across trials.
+        let len = 1 + rng.below(200);
+        let obs: Vec<f64> = (0..len).map(|_| rng.pareto(1.0, 1.3)).collect();
+        let budget = |q: f64| -> f64 {
+            let mut s = DeadlineState::new(DeadlinePolicy::QuantileAdaptive {
+                q,
+                slack: 1.5,
+                window: 256,
+            });
+            for &l in &obs {
+                s.observe(l);
+            }
+            match s.cutoff(64) {
+                Cutoff::Time(ms) => ms,
+                c => panic!("quantile policy produced {c:?}"),
+            }
+        };
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let b = budget(q);
+            assert!(
+                b >= prev,
+                "trial {trial}: budget({q}) = {b} < budget at lower quantile {prev}"
+            );
+            assert!(b.is_finite() && b > 0.0);
+            prev = b;
+        }
+        // The extremes bracket: q=0 is the min, q=1 the max observation
+        // (times slack).
+        let min = obs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = obs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!((budget(0.0) - 1.5 * min).abs() < 1e-12);
+        assert!((budget(1.0) - 1.5 * max).abs() < 1e-12);
+    }
+}
+
+/// Wait-k with k = n is wait-all: not just the same cutoff, the same
+/// run — bit-identical θ, masks, and virtual clock.
+#[test]
+fn wait_k_equals_wait_all_at_k_n() {
+    // Cutoff-level equivalence: counting n of n responses counts all.
+    let mut s = DeadlineState::new(DeadlinePolicy::WaitForK(40));
+    assert_eq!(s.cutoff(40), Cutoff::Count(40));
+
+    // Run-level equivalence.
+    let (p, scheme) = problem_and_scheme(3);
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 3000,
+        record_trace: true,
+        ..Default::default()
+    };
+    let latency = LatencyModel::Pareto { scale_ms: 1.0, shape: 1.5, seed: 9 };
+    let all = run_simulated(
+        &scheme,
+        &p,
+        &cfg,
+        &SimConfig::new(latency.clone(), DeadlinePolicy::WaitForAll),
+    )
+    .unwrap();
+    let k_eq_n = run_simulated(
+        &scheme,
+        &p,
+        &cfg,
+        &SimConfig::new(latency, DeadlinePolicy::WaitForK(40)),
+    )
+    .unwrap();
+    assert_eq!(all.theta, k_eq_n.theta, "θ-trajectories diverged");
+    assert_eq!(all.steps, k_eq_n.steps);
+    assert_eq!(all.totals.stragglers, 0);
+    assert_eq!(k_eq_n.totals.stragglers, 0, "k = n must never drop anyone");
+    assert_eq!(all.totals.collect_ms, k_eq_n.totals.collect_ms);
+}
+
+/// Wait-fresh degenerates to wait-k in a synchronous run, where every
+/// response is fresh by definition.
+#[test]
+fn wait_fresh_equals_wait_k_in_sync_runs() {
+    let (p, scheme) = problem_and_scheme(5);
+    let cfg = RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 13 };
+    let k = run_simulated(
+        &scheme,
+        &p,
+        &cfg,
+        &SimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(34)),
+    )
+    .unwrap();
+    let fresh = run_simulated(
+        &scheme,
+        &p,
+        &cfg,
+        &SimConfig::new(latency, DeadlinePolicy::WaitForFresh(34)),
+    )
+    .unwrap();
+    assert_eq!(k.theta, fresh.theta);
+    assert_eq!(k.steps, fresh.steps);
+    assert_eq!(k.totals.stragglers, fresh.totals.stragglers);
+}
+
+/// A fixed budget never collects a response arriving after the budget —
+/// and always collects everything at or under it. Pinned with a
+/// deterministic trace where each step's late set is known exactly.
+#[test]
+fn fixed_budget_never_collects_late_responses() {
+    let (p, scheme) = problem_and_scheme(7);
+    assert_eq!(scheme.workers(), 40);
+    let budget = 2.0;
+    // Three deterministic latency rows, cycled; `2.0` is exactly on
+    // time (arrivals at the budget are counted), `2.0001` is late.
+    let rows: Vec<Vec<f64>> = vec![
+        {
+            let mut r = vec![1.0; 40];
+            r[3] = 3.0; // late
+            r[17] = 2.0; // exactly on time
+            r[29] = 2.0001; // late by a hair
+            r[31] = 9.0; // late
+            r
+        },
+        vec![0.5; 40],  // nobody late
+        vec![2.5; 40],  // everybody late
+    ];
+    let late_per_row: Vec<usize> = rows
+        .iter()
+        .map(|r| r.iter().filter(|&&l| l > budget).count())
+        .collect();
+    assert_eq!(late_per_row, vec![3, 0, 40]);
+
+    let cfg = RunConfig { max_steps: 9, record_trace: true, ..Default::default() };
+    let sim = SimConfig::new(
+        LatencyModel::Trace { table: Arc::new(rows.clone()) },
+        DeadlinePolicy::FixedDeadline { ms: budget },
+    );
+    let r = run_simulated(&scheme, &p, &cfg, &sim).unwrap();
+    assert_eq!(r.trace.len(), 9);
+    for (i, m) in r.trace.iter().enumerate() {
+        let expect = late_per_row[i % rows.len()];
+        assert_eq!(
+            m.stragglers, expect,
+            "step {}: dropped {} but {} responses were late",
+            m.t, m.stragglers, expect
+        );
+        // The master pays the full budget whenever anyone is late, and
+        // proceeds at the last arrival otherwise.
+        let collect = m.collect_ms.unwrap();
+        if expect > 0 {
+            assert!((collect - budget).abs() < 1e-12, "step {}: {collect}", m.t);
+        } else {
+            assert!((collect - 0.5).abs() < 1e-12, "step {}: {collect}", m.t);
+        }
+    }
+}
