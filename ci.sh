@@ -39,4 +39,7 @@ cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
     --async --staleness 2 --flops-per-ms 200 --nic-gbps 1 \
     --max-steps 500 --rel-tol 1e-2
 
+echo "== perf_hotpath smoke (tiny sizes; exercises packed GEMM + linalg pool) =="
+PERF_HOTPATH_SMOKE=1 cargo bench --bench perf_hotpath
+
 echo "ci.sh: all gates passed"

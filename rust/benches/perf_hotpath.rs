@@ -2,7 +2,11 @@
 //!
 //! Micro-benchmarks every stage of a gradient step in isolation:
 //!   encode (one-time)   — G·M blockwise moment encoding (one stacked
-//!                         GEMM through the band-parallel matmul)
+//!                         GEMM through the packed register-tiled
+//!                         kernel on the persistent linalg pool)
+//!   gemm packed/scalar  — the packed+pooled production GEMM vs the
+//!                         retained sequential scalar reference, on an
+//!                         encode-shaped and a square problem
 //!   worker matvec       — native (allocating and `_into`) vs PJRT
 //!   peel schedule/apply — fresh vs cached schedules at several
 //!                         straggler counts
@@ -16,8 +20,16 @@
 //! `BENCH_hotpath.json` at the repo root when refreshing the baseline).
 //!
 //! `cargo bench --offline --bench perf_hotpath`
+//!
+//! Set `PERF_HOTPATH_SMOKE=1` to run a seconds-long tiny-size version —
+//! ci.sh uses it to exercise the packed kernels, the pool, and the
+//! bench plumbing under test without paying full-size timings (the
+//! numbers it prints are not baseline material).
 
 use std::time::Instant;
+
+use moment_ldpc::linalg::gemm::{matmul_packed_into, matmul_reference};
+use moment_ldpc::linalg::{GemmScratch, Matrix};
 
 use moment_ldpc::codes::ldpc::LdpcCode;
 use moment_ldpc::codes::peeling::{PeelScheduleCache, PeelingDecoder};
@@ -42,13 +54,21 @@ fn time_us<F: FnMut()>(iters: usize, mut f: F) -> f64 {
 }
 
 fn main() {
-    let k = 1024usize;
-    let m = 2048usize;
+    let smoke = std::env::var_os("PERF_HOTPATH_SMOKE").is_some();
+    // Smoke mode: shrink every dimension and iteration count so the
+    // whole bench finishes in seconds while still driving the packed
+    // GEMM, the pool, the peeling cache, and the end-to-end loop.
+    let k = if smoke { 64usize } else { 1024 };
+    let m = if smoke { 128usize } else { 2048 };
+    let it = |iters: usize| if smoke { (iters / 20).max(2) } else { iters };
     let problem = RegressionProblem::generate(&SynthConfig::dense(m, k), 9);
     let mut rng = Rng::new(10);
     let theta = rng.gaussian_vec(k);
     let mut table = Table::new(
-        format!("hot-path microbenchmarks (m={m}, k={k}, w=40, K=20)"),
+        format!(
+            "hot-path microbenchmarks (m={m}, k={k}, w=40, K=20{})",
+            if smoke { ", SMOKE" } else { "" }
+        ),
         &["stage", "time", "notes"],
     );
     // stage -> µs, written to BENCH_hotpath.json.
@@ -62,16 +82,54 @@ fn main() {
     table.row(vec![
         "encode C=GM (one-time)".into(),
         format!("{:.1} ms", encode_us / 1e3),
-        format!("one (40x20)x(20x{}) stacked GEMM, band-parallel", (k / 20) * k),
+        format!("one (40x20)x(20x{}) stacked GEMM, packed + pooled", k.div_ceil(20) * k),
     ]);
     json.push(("encode_c_gm_us".into(), encode_us));
+
+    // -- GEMM: packed register-tiled + pooled vs retained scalar --
+    // "encode" is the stacked moment-encode shape (parity block × all
+    // blocks side by side); "square" is a dense square GEMM. The packed
+    // stage runs the production kernel (pool-parallel); the scalar
+    // stage runs the sequential zero-skip reference it is pinned
+    // against bit-for-bit.
+    let square = if smoke { 64usize } else { 256 };
+    // ⌈k/K⌉ blocks, matching BlockMomentEncoding's stacked width exactly.
+    let stacked_cols = k.div_ceil(20) * k;
+    let gemm_shapes =
+        [("encode", 20usize, 20usize, stacked_cols), ("square", square, square, square)];
+    for (tag, gm, gk, gn) in gemm_shapes {
+        let a = Matrix::gaussian(gm, gk, &mut rng);
+        let b = Matrix::gaussian(gk, gn, &mut rng);
+        let mut out = Matrix::zeros(gm, gn);
+        let mut scratch = GemmScratch::default();
+        let us_packed = time_us(it(40), || {
+            matmul_packed_into(&a, &b, &mut out, &mut scratch);
+            std::hint::black_box(&out);
+        });
+        let us_scalar = time_us(it(40), || {
+            matmul_reference(&a, &b, &mut out);
+            std::hint::black_box(&out);
+        });
+        table.row(vec![
+            format!("gemm packed ({tag} {gm}x{gk}x{gn})"),
+            format!("{us_packed:.1} us"),
+            "register-tiled, packed B panels, pool-parallel".into(),
+        ]);
+        table.row(vec![
+            format!("gemm scalar ({tag} {gm}x{gk}x{gn})"),
+            format!("{us_scalar:.1} us"),
+            format!("sequential reference; packed is {:.1}x", us_scalar / us_packed.max(1e-3)),
+        ]);
+        json.push((format!("gemm_packed_{tag}_us"), us_packed));
+        json.push((format!("gemm_scalar_{tag}_us"), us_scalar));
+    }
 
     // -- worker matvec: native --
     let shard = match &scheme.payloads()[0] {
         moment_ldpc::coordinator::protocol::WorkerPayload::Rows { rows } => rows.clone(),
         _ => unreachable!(),
     };
-    let us = time_us(200, || {
+    let us = time_us(it(200), || {
         std::hint::black_box(NativeBackend.matvec(&shard, &theta).unwrap());
     });
     table.row(vec![
@@ -82,7 +140,7 @@ fn main() {
     json.push(("worker_matvec_native_us".into(), us));
 
     let mut resp_buf: Vec<f64> = Vec::new();
-    let us = time_us(200, || {
+    let us = time_us(it(200), || {
         NativeBackend
             .matvec_keyed_into(Some(0), &shard, &theta, &mut resp_buf)
             .unwrap();
@@ -98,7 +156,7 @@ fn main() {
     // -- worker matvec: pjrt (optional) --
     let artifacts = std::path::PathBuf::from("artifacts");
     if let Ok(backend) = moment_ldpc::runtime::pjrt::PjrtBackend::load(&artifacts) {
-        let us = time_us(200, || {
+        let us = time_us(it(200), || {
             std::hint::black_box(backend.matvec(&shard, &theta).unwrap());
         });
         table.row(vec![
@@ -108,7 +166,7 @@ fn main() {
         ]);
         json.push(("worker_matvec_pjrt_uncached_us".into(), us));
         // §Perf optimization: device-resident shard buffer (keyed path).
-        let us = time_us(200, || {
+        let us = time_us(it(200), || {
             std::hint::black_box(backend.matvec_keyed(Some(0), &shard, &theta).unwrap());
         });
         table.row(vec![
@@ -129,16 +187,16 @@ fn main() {
     let dec = PeelingDecoder::new(&code);
     for s in [5usize, 10] {
         let erased = Rng::new(s as u64).choose_k(40, s);
-        let us_fresh = time_us(2000, || {
+        let us_fresh = time_us(it(2000), || {
             std::hint::black_box(dec.schedule(&erased, 40));
         });
         let mut cache = PeelScheduleCache::new();
-        let us_cached = time_us(2000, || {
+        let us_cached = time_us(it(2000), || {
             std::hint::black_box(dec.schedule_cached(&mut cache, &erased, 40));
         });
         let sched = dec.schedule(&erased, 40);
         let mut cw = rng.gaussian_vec(40);
-        let us_apply = time_us(5000, || {
+        let us_apply = time_us(it(5000), || {
             std::hint::black_box(sched.apply(&mut cw));
         });
         table.row(vec![
@@ -171,7 +229,7 @@ fn main() {
     for i in Rng::new(77).choose_k(40, 5) {
         masked[i] = None;
     }
-    let us = time_us(500, || {
+    let us = time_us(it(500), || {
         std::hint::black_box(scheme.decode(&masked, 40).unwrap());
     });
     table.row(vec![
@@ -182,7 +240,7 @@ fn main() {
     json.push(("master_decode_s5_us".into(), us));
 
     let mut scratch = DecodeScratch::default();
-    let us = time_us(500, || {
+    let us = time_us(it(500), || {
         std::hint::black_box(scheme.decode_into(&masked, 40, &mut scratch).unwrap());
     });
     table.row(vec![
@@ -195,7 +253,7 @@ fn main() {
     // -- update + project --
     let grad = rng.gaussian_vec(k);
     let mut th = theta.clone();
-    let us = time_us(5000, || {
+    let us = time_us(it(5000), || {
         for (t, g) in th.iter_mut().zip(&grad) {
             *t -= 1e-3 * g;
         }
@@ -212,7 +270,7 @@ fn main() {
     let cfg = RunConfig {
         straggler: StragglerModel::FixedCount { s: 5, seed: 1 },
         rel_tol: 0.0, // never converge: measure steady-state step cost
-        max_steps: 200,
+        max_steps: if smoke { 20 } else { 200 },
         ..Default::default()
     };
     let scheme2 = LdpcMomentScheme::new(&problem, code).unwrap();
@@ -242,9 +300,15 @@ fn main() {
     ]);
 
     print!("{}", table.render());
-    write_csv(&table, std::path::Path::new("bench_out/perf_hotpath.csv")).unwrap();
-    write_json_kv(std::path::Path::new("bench_out/BENCH_hotpath.json"), &json).unwrap();
-    eprintln!(
-        "perf_hotpath done -> bench_out/perf_hotpath.csv, bench_out/BENCH_hotpath.json"
-    );
+    // Smoke runs write to *_smoke files so a CI smoke pass can never
+    // clobber the real measurements an operator is about to copy into
+    // the repo-root baseline.
+    let (csv_path, json_path) = if smoke {
+        ("bench_out/perf_hotpath_smoke.csv", "bench_out/BENCH_hotpath_smoke.json")
+    } else {
+        ("bench_out/perf_hotpath.csv", "bench_out/BENCH_hotpath.json")
+    };
+    write_csv(&table, std::path::Path::new(csv_path)).unwrap();
+    write_json_kv(std::path::Path::new(json_path), &json).unwrap();
+    eprintln!("perf_hotpath done -> {csv_path}, {json_path}");
 }

@@ -128,15 +128,33 @@ impl LdpcCode {
         self.gen.encode_matrix(m)
     }
 
-    /// Verify `H c ≈ 0` for a full codeword.
+    /// [`LdpcCode::encode_matrix`] with caller-owned GEMM packing
+    /// scratch (see [`crate::linalg::GemmScratch`]) — what the moment
+    /// encoder threads through its stacked GEMM.
+    pub fn encode_matrix_with(
+        &self,
+        m: &Matrix,
+        scratch: &mut crate::linalg::GemmScratch,
+    ) -> Result<Matrix> {
+        self.gen.encode_matrix_with(m, scratch)
+    }
+
+    /// Verify `H c ≈ 0` for a full codeword. Streams per-check sums
+    /// with early exit — allocation-free, unlike computing the full
+    /// syndrome vector.
     pub fn is_codeword(&self, c: &[f64], tol: f64) -> bool {
         if c.len() != self.n {
             return false;
         }
-        self.h.matvec(c).iter().all(|s| s.abs() <= tol)
+        self.h.matvec_within(c, tol)
     }
 
-    /// Syndrome `H c`.
+    /// Syndrome `H c`, written into `out` (len = `n - k` checks).
+    pub fn syndrome_into(&self, c: &[f64], out: &mut [f64]) {
+        self.h.matvec_into(c, out);
+    }
+
+    /// Syndrome `H c` (allocates).
     pub fn syndrome(&self, c: &[f64]) -> Vec<f64> {
         self.h.matvec(c)
     }
@@ -271,6 +289,33 @@ mod tests {
             assert_eq!(&cw[..20], &x[..]);
             assert!(c.is_codeword(&cw, 1e-9), "syndrome {:?}", c.syndrome(&cw));
         }
+    }
+
+    #[test]
+    fn syndrome_into_matches_allocating_syndrome() {
+        let c = code_40_20();
+        let mut rng = Rng::new(12);
+        let cw = c.encode(&rng.gaussian_vec(20));
+        let mut corrupted = cw.clone();
+        corrupted[7] += 1.0;
+        for v in [&cw, &corrupted] {
+            let want = c.syndrome(v);
+            let mut got = vec![f64::NAN; 20];
+            c.syndrome_into(v, &mut got);
+            assert_eq!(got, want);
+        }
+        assert!(!c.is_codeword(&corrupted, 1e-9));
+    }
+
+    #[test]
+    fn encode_matrix_with_scratch_matches_plain() {
+        let c = code_40_20();
+        let mut rng = Rng::new(13);
+        let m = Matrix::gaussian(20, 9, &mut rng);
+        let plain = c.encode_matrix(&m).unwrap();
+        let mut scratch = crate::linalg::GemmScratch::default();
+        let with = c.encode_matrix_with(&m, &mut scratch).unwrap();
+        assert_eq!(with.as_slice(), plain.as_slice());
     }
 
     #[test]

@@ -143,6 +143,24 @@ impl VandermondeCode {
 
     /// Encode a `K x d` message matrix columnwise: `C = G M` (`N x d`).
     pub fn encode_matrix(&self, m: &Matrix) -> Result<Matrix> {
+        self.encode_matrix_impl(m, None)
+    }
+
+    /// [`VandermondeCode::encode_matrix`] with caller-owned GEMM packing
+    /// scratch (the Scheme-1 moment encoder threads one through).
+    pub fn encode_matrix_with(
+        &self,
+        m: &Matrix,
+        scratch: &mut crate::linalg::GemmScratch,
+    ) -> Result<Matrix> {
+        self.encode_matrix_impl(m, Some(scratch))
+    }
+
+    fn encode_matrix_impl(
+        &self,
+        m: &Matrix,
+        scratch: Option<&mut crate::linalg::GemmScratch>,
+    ) -> Result<Matrix> {
         if m.rows() != self.k {
             return Err(Error::Code(format!(
                 "encode_matrix: {} rows vs code dimension {}",
@@ -150,7 +168,12 @@ impl VandermondeCode {
                 self.k
             )));
         }
-        self.g.matmul(m)
+        let mut out = Matrix::try_zeros(self.n, m.cols())?;
+        match scratch {
+            Some(s) => self.g.matmul_into_with(m, &mut out, s)?,
+            None => self.g.matmul_into(m, &mut out)?,
+        }
+        Ok(out)
     }
 
     /// Decode the message from any `≥ K` surviving coordinates by solving
@@ -272,6 +295,21 @@ mod tests {
         for j in 0..5 {
             assert_eq!(cm.col(j), code.encode(&m.col(j)));
         }
+    }
+
+    #[test]
+    fn encode_matrix_with_scratch_matches_plain() {
+        let code = VandermondeCode::new(8, 3, EvalPoints::Chebyshev).unwrap();
+        let mut rng = Rng::new(6);
+        let m = Matrix::gaussian(3, 5, &mut rng);
+        let plain = code.encode_matrix(&m).unwrap();
+        let mut scratch = crate::linalg::GemmScratch::default();
+        let with = code.encode_matrix_with(&m, &mut scratch).unwrap();
+        assert_eq!(with.as_slice(), plain.as_slice());
+        // Same validation either way.
+        let bad = Matrix::zeros(2, 5);
+        assert!(code.encode_matrix(&bad).is_err());
+        assert!(code.encode_matrix_with(&bad, &mut scratch).is_err());
     }
 
     #[test]

@@ -85,13 +85,33 @@ impl SparseMatrix {
         self.row_entries.iter().map(|r| r.len()).sum()
     }
 
-    /// Sparse mat-vec `H x`.
+    /// Sparse mat-vec `H x`, written into `out` (len = rows; every
+    /// element overwritten). The allocation-free primitive behind the
+    /// peeling/syndrome paths — summation order per row matches
+    /// [`SparseMatrix::matvec`] exactly.
+    pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(out.len(), self.rows);
+        for (o, row) in out.iter_mut().zip(self.row_entries.iter()) {
+            *o = row.iter().map(|&(c, v)| v * x[c]).sum();
+        }
+    }
+
+    /// Sparse mat-vec `H x` (allocates).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// Does `H x` vanish to within `tol` in every coordinate? Streams
+    /// row sums with early exit — no allocation, unlike
+    /// `matvec(x)`-then-check.
+    pub fn matvec_within(&self, x: &[f64], tol: f64) -> bool {
         debug_assert_eq!(x.len(), self.cols);
         self.row_entries
             .iter()
-            .map(|row| row.iter().map(|&(c, v)| v * x[c]).sum())
-            .collect()
+            .all(|row| row.iter().map(|&(c, v)| v * x[c]).sum::<f64>().abs() <= tol)
     }
 
     /// Densify (for rank checks / generator construction).
@@ -133,6 +153,37 @@ mod tests {
         assert_eq!(h.matvec(&x), vec![-2.0, 8.0]);
         let d = h.to_dense();
         assert_eq!(d.matvec(&x), vec![-2.0, 8.0]);
+    }
+
+    #[test]
+    fn sparse_matvec_into_overwrites_stale_buffer() {
+        let h = SparseMatrix::from_rows(
+            2,
+            4,
+            vec![vec![(0, 1.0), (2, -1.0)], vec![(1, 2.0), (3, 1.0)]],
+        );
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut out = vec![f64::NAN; 2];
+        h.matvec_into(&x, &mut out);
+        assert_eq!(out, vec![-2.0, 8.0]);
+        // An all-padding (empty) row must be written to 0, not left stale.
+        let e = SparseMatrix::from_rows(2, 3, vec![vec![(1, 2.0)], vec![]]);
+        let mut out = vec![f64::NAN; 2];
+        e.matvec_into(&[1.0, 5.0, 0.0], &mut out);
+        assert_eq!(out, vec![10.0, 0.0]);
+    }
+
+    #[test]
+    fn matvec_within_matches_explicit_syndrome_check() {
+        let h = SparseMatrix::from_rows(
+            3,
+            3,
+            vec![vec![(0, 1.0), (1, -1.0)], vec![(2, 0.5)], vec![]],
+        );
+        assert!(h.matvec_within(&[2.0, 2.0, 0.0], 1e-12));
+        assert!(!h.matvec_within(&[2.0, 1.0, 0.0], 1e-12));
+        // Tolerance boundary is inclusive, like `all(|s| s.abs() <= tol)`.
+        assert!(h.matvec_within(&[0.0, 0.0, 2.0], 1.0));
     }
 
     #[test]

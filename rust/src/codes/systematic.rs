@@ -16,7 +16,7 @@
 
 use super::SparseMatrix;
 use crate::error::{Error, Result};
-use crate::linalg::{invert, Matrix};
+use crate::linalg::{invert, GemmScratch, Matrix};
 
 /// A systematic generator `G = [I; P]` for an `(n, k)` linear code.
 #[derive(Debug, Clone)]
@@ -103,8 +103,22 @@ impl SystematicGenerator {
     }
 
     /// Encode a `k x d` message matrix columnwise: `C = [M; PM]`
-    /// (`n x d`). Each column of `C` is a codeword.
+    /// (`n x d`). Each column of `C` is a codeword. The systematic half
+    /// is a memcpy; the parity half is one GEMM computed *directly into*
+    /// the bottom rows of the output (no `PM` temporary), using
+    /// per-thread packing scratch.
     pub fn encode_matrix(&self, m: &Matrix) -> Result<Matrix> {
+        self.encode_matrix_impl(m, None)
+    }
+
+    /// [`SystematicGenerator::encode_matrix`] with caller-owned GEMM
+    /// packing scratch — threaded through by the moment encoder so
+    /// repeated encodes reuse one pack buffer.
+    pub fn encode_matrix_with(&self, m: &Matrix, scratch: &mut GemmScratch) -> Result<Matrix> {
+        self.encode_matrix_impl(m, Some(scratch))
+    }
+
+    fn encode_matrix_impl(&self, m: &Matrix, scratch: Option<&mut GemmScratch>) -> Result<Matrix> {
         if m.rows() != self.k {
             return Err(Error::Code(format!(
                 "encode_matrix: message has {} rows, code dimension is {}",
@@ -112,11 +126,12 @@ impl SystematicGenerator {
                 self.k
             )));
         }
-        let pm = self.p.matmul(m)?;
-        let mut data = Vec::with_capacity(self.n * m.cols());
-        data.extend_from_slice(m.as_slice());
-        data.extend_from_slice(pm.as_slice());
-        Matrix::from_vec(self.n, m.cols(), data)
+        let d = m.cols();
+        let mut coded = Matrix::try_zeros(self.n, d)?;
+        let (top, bottom) = coded.as_mut_slice().split_at_mut(self.k * d);
+        top.copy_from_slice(m.as_slice());
+        self.p.matmul_into_buf(m, bottom, scratch)?;
+        Ok(coded)
     }
 
     /// Dense `n x k` generator matrix `[I; P]` (tests / MDS interop).
@@ -236,6 +251,25 @@ mod tests {
             let col_msg = m.col(j);
             let col_cw = cm.col(j);
             assert_eq!(col_cw, gen.encode(&col_msg));
+        }
+    }
+
+    #[test]
+    fn encode_matrix_with_scratch_and_plain_agree() {
+        let h = small_h();
+        let (gen, _) = SystematicGenerator::from_parity_check(&h).unwrap();
+        let mut rng = Rng::new(7);
+        let mut scratch = GemmScratch::default();
+        for d in [1usize, 5, 9] {
+            let m = Matrix::gaussian(3, d, &mut rng);
+            let plain = gen.encode_matrix(&m).unwrap();
+            let with = gen.encode_matrix_with(&m, &mut scratch).unwrap();
+            assert_eq!(with.as_slice(), plain.as_slice(), "d={d}");
+            // And both equal the explicit [M; PM] stacking.
+            let pm = gen.parity_block().matmul(&m).unwrap();
+            let mut stacked = m.as_slice().to_vec();
+            stacked.extend_from_slice(pm.as_slice());
+            assert_eq!(plain.as_slice(), &stacked[..], "d={d}");
         }
     }
 

@@ -38,9 +38,11 @@ impl BlockMomentEncoding {
     ///
     /// All `⌈k/K⌉` row blocks are stacked side by side into one
     /// `K x (blocks·k)` message matrix and encoded with a *single*
-    /// call — one large GEMM that the band-parallel matmul kernel
-    /// spreads across cores — instead of `blocks` small sequential
-    /// ones. A columnwise encoder treats every column independently,
+    /// call — one large GEMM that the packed register-tiled kernel
+    /// spreads across the persistent linalg pool (the schemes thread a
+    /// reusable `GemmScratch` pack buffer through this closure) —
+    /// instead of `blocks` small sequential ones. A columnwise encoder
+    /// treats every column independently,
     /// so the coded values are bit-identical to per-block encoding.
     /// Tradeoff: the stacked message and the full coded matrix are
     /// transiently live alongside the shards, roughly doubling the

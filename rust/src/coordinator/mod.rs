@@ -250,6 +250,9 @@ pub fn run_with_executor(
     if scheme.dimension() != k {
         return Err(Error::Config("scheme/problem dimension mismatch".into()));
     }
+    // Spawn the linalg pool's persistent workers now (idempotent) so the
+    // first timed step doesn't pay thread creation.
+    crate::linalg::pool::prewarm();
     let eta = cfg.step_size.unwrap_or_else(|| problem.spectral_step_size());
     let rule = ConvergenceRule::RelativeDistance {
         theta_star: problem.theta_star.clone(),

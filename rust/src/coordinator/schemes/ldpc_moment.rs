@@ -79,8 +79,10 @@ impl LdpcMomentScheme {
         let n = code.n();
         let pos_worker: Vec<usize> = (0..n).map(|p| p / ppw).collect();
         let pos_slot: Vec<usize> = (0..n).map(|p| p % ppw).collect();
+        // One packing scratch threaded through the stacked moment GEMM.
+        let mut gemm_scratch = crate::linalg::GemmScratch::default();
         let enc = BlockMomentEncoding::new(&problem.moment, n, code.k(), |blk| {
-            code.encode_matrix(blk)
+            code.encode_matrix_with(blk, &mut gemm_scratch)
         })?;
         // Worker j's shard: for each block i and slot s, row of the
         // position j*ppw + s — laid out block-major so the response

@@ -26,8 +26,9 @@ impl MdsMomentScheme {
     /// Build the scheme. The code is put in systematic form internally.
     pub fn new(problem: &RegressionProblem, code: VandermondeCode) -> Result<Self> {
         let code = if code.is_systematic() { code } else { code.into_systematic()? };
+        let mut gemm_scratch = crate::linalg::GemmScratch::default();
         let enc = BlockMomentEncoding::new(&problem.moment, code.n(), code.k(), |blk| {
-            code.encode_matrix(blk)
+            code.encode_matrix_with(blk, &mut gemm_scratch)
         })?;
         let payloads = enc
             .shards

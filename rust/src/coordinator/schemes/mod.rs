@@ -58,6 +58,12 @@ pub struct DecodeScratch {
     pub indices: Vec<usize>,
     /// Second index scratch (e.g. unrecovered systematic positions).
     pub indices2: Vec<usize>,
+    /// GEMM packing scratch for any matmul-shaped work a scheme does
+    /// while decoding (pass to [`crate::linalg::Matrix::matmul_into_with`]).
+    /// No in-tree scheme multiplies matrices during decode today; the
+    /// field keeps the zero-allocation invariant reachable for one that
+    /// does, without widening the `decode_into` signature again.
+    pub gemm: crate::linalg::GemmScratch,
 }
 
 /// Run a scheme's buffer-reusing decode with a throwaway scratch and

@@ -36,6 +36,10 @@ pub fn worker_loop(
     requests: Receiver<Request>,
     responses: Sender<Response>,
 ) {
+    // Cluster workers are already running w-way parallel; their shard
+    // mat-vecs must not also contend for the shared linalg pool (forty
+    // threads behind one condvar would serialize, not speed up).
+    crate::linalg::pool::set_thread_inline(true);
     while let Ok(req) = requests.recv() {
         match req {
             Request::Step { t, theta, recycle } => {

@@ -1,0 +1,626 @@
+//! Packed, register-tiled GEMM kernels and banded kernel drivers.
+//!
+//! PR 1's cache-blocked scalar GEMM streamed `GEMM_K_BLOCK`-row panels
+//! of the right operand straight from its row-major storage and carried
+//! a per-element `a == 0.0` branch. This module supplies the next level:
+//!
+//! * **Operand packing** — each `k` panel of the right operand is copied
+//!   once into a contiguous scratch buffer laid out in [`NR`]-column
+//!   micro-panels, so the innermost loop reads one unit-stride 8-vector
+//!   per `k` step regardless of the output width.
+//! * **Register tiling** — the micro-kernel computes an [`MR`]` × `[`NR`]
+//!   (4 × 8) output tile with the `k` loop innermost. The 32 accumulators
+//!   are spread across output *rows and columns*, never across `k`: per
+//!   output element the summation is a single chain in ascending-`k`
+//!   order, exactly the chain of the retained scalar reference
+//!   ([`matmul_reference`]) and of PR 1's kernel. That invariant is what
+//!   keeps every fixed-seed trajectory — and the thread-vs-sim parity
+//!   pins — unchanged across kernel generations.
+//! * **Sparsity-probing dispatch** — the dense path drops the
+//!   per-element zero branch (a pure win on Gaussian data); operands
+//!   that are ≥ 25% exact zeros (the `[I; P]` systematic generator's
+//!   identity half, masked designs) keep PR 1's zero-skipping kernel,
+//!   which for such inputs is both faster and the reference semantics.
+//!
+//! Equality contract: for real (finite, not-signed-zero-sensitive)
+//! inputs every path is **bit-identical** to [`matmul_reference`]. The
+//! only divergence class is adding an explicit `0.0 · b` term that the
+//! zero-skipping reference skips, which can flip a signed zero or
+//! propagate a NaN/∞ from the right operand — both outside the data
+//! domain of this crate and invisible to `f64` equality on real data.
+//! Property tests in `tests/prop_linalg.rs` pin the equality across
+//! adversarial shapes and both dispatch paths.
+//!
+//! Parallel kernels split the *output* into contiguous row bands
+//! (deterministic partition, identical per-row arithmetic in every
+//! configuration) and run the bands on the process-lifetime
+//! [`pool`](super::pool) instead of per-call scoped threads.
+
+use std::cell::RefCell;
+
+use super::matrix::Matrix;
+use super::pool;
+
+/// Register-tile rows (left-operand rows per micro-kernel call).
+pub const MR: usize = 4;
+
+/// Register-tile columns (right-operand columns per micro-kernel call).
+pub const NR: usize = 8;
+
+/// Rows of the right-hand operand packed per cache panel (64 rows of
+/// ≤1k f64 columns ≈ L2-resident).
+pub const GEMM_K_BLOCK: usize = 64;
+
+/// Below this many multiply-adds a kernel runs single-threaded. With
+/// the persistent pool, dispatch is a condvar wake (~1 µs) instead of
+/// PR 1's ~10 µs scoped spawn/join, so the threshold drops from 2¹⁸ to
+/// 2¹⁵ and mid-size step-loop matmuls parallelize too.
+pub const PAR_FLOP_THRESHOLD: usize = 1 << 15;
+
+/// Left operands whose exact-zero fraction reaches 1/4 route to the
+/// zero-skipping scalar kernel instead of the packed dense kernel.
+const SPARSE_ZERO_FRACTION: (usize, usize) = (1, 4); // (num, den)
+
+/// Reusable packing scratch for the GEMM kernels. One buffer holds the
+/// current `GEMM_K_BLOCK × cols` panel of the right operand in
+/// micro-panel order; reusing it across calls (or taking the per-thread
+/// default) keeps repeated GEMMs allocation-free at steady state.
+#[derive(Debug, Default)]
+pub struct GemmScratch {
+    packed: Vec<f64>,
+}
+
+thread_local! {
+    /// Per-thread fallback scratch for callers that do not thread their
+    /// own. Pool workers and the master thread are long-lived, so the
+    /// buffer amortizes to zero allocations.
+    static PACK_TLS: RefCell<GemmScratch> = RefCell::new(GemmScratch::default());
+}
+
+fn with_scratch<R>(scratch: Option<&mut GemmScratch>, f: impl FnOnce(&mut GemmScratch) -> R) -> R {
+    match scratch {
+        Some(s) => f(s),
+        None => PACK_TLS.with(|c| f(&mut c.borrow_mut())),
+    }
+}
+
+/// Threads to use for a kernel costing `flops` multiply-adds.
+pub(crate) fn threads_for(flops: usize) -> usize {
+    if flops >= PAR_FLOP_THRESHOLD {
+        pool::parallelism()
+    } else {
+        1
+    }
+}
+
+/// Does the exact-zero fraction of `a` reach the sparse-dispatch
+/// threshold? An `O(len)` probe, negligible against the `O(len · n)`
+/// GEMM it steers.
+pub(crate) fn probe_sparse(a: &Matrix) -> bool {
+    let d = a.as_slice();
+    if d.is_empty() {
+        return false;
+    }
+    let zeros = d.iter().filter(|&&v| v == 0.0).count();
+    let (num, den) = SPARSE_ZERO_FRACTION;
+    zeros * den >= d.len() * num
+}
+
+/// Wrapper making a raw band base pointer shareable with pool tasks.
+/// Sound: tasks write disjoint bands and finish before the caller
+/// returns.
+struct SyncPtr(*mut f64);
+unsafe impl Sync for SyncPtr {}
+
+/// Split `out` (a `rows x cols` row-major buffer) into contiguous row
+/// bands and run `body(first_row, band)` on each, using up to `threads`
+/// lanes of the persistent pool. `body` must compute each output row
+/// independently — then the result is identical for every band split,
+/// including the sequential `threads == 1` case and the pool-busy
+/// inline fallback.
+pub(crate) fn for_each_row_band<F>(
+    out: &mut [f64],
+    rows: usize,
+    cols: usize,
+    threads: usize,
+    body: F,
+) where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, rows);
+    if threads == 1 {
+        body(0, out);
+        return;
+    }
+    let band_rows = rows.div_ceil(threads);
+    let bands = rows.div_ceil(band_rows);
+    let total = out.len();
+    let base = SyncPtr(out.as_mut_ptr());
+    pool::run(bands, &|b| {
+        let start = b * band_rows * cols;
+        let len = (band_rows * cols).min(total - start);
+        // Safety: bands are disjoint slices of `out`, and `pool::run`
+        // returns only after every task has finished.
+        let band = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+        body(b * band_rows, band);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Dense packed path
+// ---------------------------------------------------------------------
+
+/// Pack rows `kp..kend` of `b` into `packed` as [`NR`]-column
+/// micro-panels: for column block `jb`, `klen` consecutive 8-vectors
+/// `b[k][jb·NR .. jb·NR+NR]`, the ragged tail zero-padded. Every slot
+/// is overwritten, so a recycled buffer needs no clearing.
+///
+/// Packing is pure data movement (no floating-point arithmetic), so it
+/// can use pool lanes freely without touching the bit-identity
+/// invariant — important for short-`m` GEMMs like the stacked moment
+/// encode, where a serial pack would otherwise be a large Amdahl
+/// fraction of the panel's wall time.
+fn pack_b_panel(b: &Matrix, kp: usize, kend: usize, packed: &mut Vec<f64>, threads: usize) {
+    let n = b.cols();
+    let klen = kend - kp;
+    let jblocks = n.div_ceil(NR);
+    let panel_len = klen * NR;
+    packed.resize(jblocks * panel_len, 0.0);
+    if panel_len == 0 {
+        return;
+    }
+    // Treat each micro-panel as one "row" of the destination; bands of
+    // micro-panels are disjoint, so the copy parallelizes like a GEMM
+    // band. Tiny panels stay inline (threads = 1).
+    let threads = if klen.saturating_mul(n) >= PAR_FLOP_THRESHOLD { threads } else { 1 };
+    for_each_row_band(packed, jblocks, panel_len, threads, |jb0, chunk| {
+        for (dj, panel) in chunk.chunks_exact_mut(panel_len).enumerate() {
+            let j0 = (jb0 + dj) * NR;
+            let jw = NR.min(n - j0);
+            for (kk, dst) in panel.chunks_exact_mut(NR).enumerate() {
+                let row = b.row(kp + kk);
+                dst[..jw].copy_from_slice(&row[j0..j0 + jw]);
+                for d in &mut dst[jw..] {
+                    *d = 0.0;
+                }
+            }
+        }
+    });
+}
+
+/// The register-tiled micro-kernel: accumulate an `RH × NR` tile with
+/// the `k` loop innermost. Accumulators are spread across rows and
+/// columns only — each `acc[r][j]` is a single ascending-`k` chain, so
+/// the result is bit-identical to the scalar reference.
+#[inline]
+fn micro_kernel<const RH: usize>(arows: &[&[f64]; MR], bp: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for (kk, b8) in bp.chunks_exact(NR).enumerate() {
+        for r in 0..RH {
+            let av = arows[r][kk];
+            for (c, &bv) in acc[r].iter_mut().zip(b8) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+/// Accumulate one packed `k` panel into a row band of the output:
+/// `band += A[row0.., kp..kend] · B[kp..kend, ..]` with `B` already
+/// packed. Handles ragged row/column tails with narrower tiles (same
+/// per-element order).
+fn gemm_band_panel(
+    a: &Matrix,
+    row0: usize,
+    band: &mut [f64],
+    n: usize,
+    kp: usize,
+    kend: usize,
+    packed: &[f64],
+) {
+    let band_rows = band.len() / n;
+    let klen = kend - kp;
+    if band_rows == 0 || klen == 0 {
+        return;
+    }
+    let jblocks = n.div_ceil(NR);
+    for jb in 0..jblocks {
+        let j0 = jb * NR;
+        let jw = NR.min(n - j0);
+        let bp = &packed[jb * klen * NR..(jb + 1) * klen * NR];
+        let mut i0 = 0;
+        while i0 < band_rows {
+            let rh = MR.min(band_rows - i0);
+            let mut arows: [&[f64]; MR] = [&[]; MR];
+            for (r, ar) in arows.iter_mut().enumerate().take(rh) {
+                *ar = &a.row(row0 + i0 + r)[kp..kend];
+            }
+            // Tiles resume from the partial sums of earlier k panels;
+            // padded lanes start at zero and are never stored.
+            let mut acc = [[0.0f64; NR]; MR];
+            for r in 0..rh {
+                let row_off = (i0 + r) * n + j0;
+                acc[r][..jw].copy_from_slice(&band[row_off..row_off + jw]);
+            }
+            match rh {
+                4 => micro_kernel::<4>(&arows, bp, &mut acc),
+                3 => micro_kernel::<3>(&arows, bp, &mut acc),
+                2 => micro_kernel::<2>(&arows, bp, &mut acc),
+                _ => micro_kernel::<1>(&arows, bp, &mut acc),
+            }
+            for r in 0..rh {
+                let row_off = (i0 + r) * n + j0;
+                band[row_off..row_off + jw].copy_from_slice(&acc[r][..jw]);
+            }
+            i0 += rh;
+        }
+    }
+}
+
+/// Packed dense GEMM over a pre-zeroed output buffer: per `k` panel,
+/// pack once on the calling thread, then accumulate row bands in
+/// parallel (barrier per panel — panels ascend, so per-element `k`
+/// order is globally ascending).
+fn matmul_packed_buf(
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut [f64],
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    let (m, kd) = a.shape();
+    let n = b.cols();
+    let mut kp = 0;
+    while kp < kd {
+        let kend = (kp + GEMM_K_BLOCK).min(kd);
+        pack_b_panel(b, kp, kend, &mut scratch.packed, threads);
+        let packed = &scratch.packed;
+        for_each_row_band(out, m, n, threads, |row0, band| {
+            gemm_band_panel(a, row0, band, n, kp, kend, packed);
+        });
+        kp = kend;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Zero-skipping scalar path (PR 1's kernel, retained)
+// ---------------------------------------------------------------------
+
+/// PR 1's cache-blocked kernel with the per-element `a == 0.0` skip,
+/// banded over the pool. Kept as the production path for left operands
+/// with substantial exact sparsity — the systematic-generator encode's
+/// `[I; P]` identity half chief among them.
+fn matmul_skip_buf(a: &Matrix, b: &Matrix, out: &mut [f64], threads: usize) {
+    let (m, kd) = a.shape();
+    let n = b.cols();
+    for_each_row_band(out, m, n, threads, |row0, band| {
+        let band_rows = band.len() / n;
+        let mut kp = 0;
+        while kp < kd {
+            let kend = (kp + GEMM_K_BLOCK).min(kd);
+            for i in 0..band_rows {
+                let arow = a.row(row0 + i);
+                let orow = &mut band[i * n..(i + 1) * n];
+                for (kk, &av) in arow.iter().enumerate().take(kend).skip(kp) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(kk);
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            kp = kend;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+/// Full GEMM into a raw row-major buffer (`a.rows() x b.cols()`, fully
+/// overwritten): sparsity-probing dispatch between the packed dense
+/// kernel and the zero-skipping scalar kernel, parallel over output row
+/// bands when the problem amortizes a pool dispatch. Shapes must agree
+/// (checked by the public [`Matrix`] wrappers).
+pub(crate) fn matmul_dispatch_buf(
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut [f64],
+    scratch: Option<&mut GemmScratch>,
+) {
+    let (m, kd) = a.shape();
+    let n = b.cols();
+    debug_assert_eq!(kd, b.rows());
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    if m == 0 || n == 0 || kd == 0 {
+        return;
+    }
+    let flops = m.saturating_mul(kd).saturating_mul(n);
+    let threads = threads_for(flops);
+    if probe_sparse(a) {
+        matmul_skip_buf(a, b, out, threads);
+    } else {
+        with_scratch(scratch, |s| matmul_packed_buf(a, b, out, threads, s));
+    }
+}
+
+/// The packed register-tiled GEMM, forced (no sparsity dispatch):
+/// `out = a · b`. Public so benches and property tests can time and pin
+/// this path explicitly against [`matmul_reference`]. Panics on shape
+/// mismatch.
+pub fn matmul_packed_into(a: &Matrix, b: &Matrix, out: &mut Matrix, scratch: &mut GemmScratch) {
+    assert_eq!(a.cols(), b.rows(), "matmul_packed_into: inner dimensions");
+    assert_eq!(out.shape(), (a.rows(), b.cols()), "matmul_packed_into: output shape");
+    let n = b.cols();
+    let flops = a.rows().saturating_mul(a.cols()).saturating_mul(n);
+    let threads = threads_for(flops);
+    out.as_mut_slice().fill(0.0);
+    if a.rows() == 0 || n == 0 || a.cols() == 0 {
+        return;
+    }
+    matmul_packed_buf(a, b, out.as_mut_slice(), threads, scratch);
+}
+
+/// The retained scalar reference kernel: sequential `ikj` with the
+/// `a == 0.0` skip — exactly the summation order (per output element,
+/// ascending `k`) every production GEMM path must reproduce. This is
+/// the pre-PR-1 semantics that all fixed-seed trajectories are pinned
+/// to; benches report it as the `gemm_scalar_*` stages.
+pub fn matmul_reference(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "matmul_reference: inner dimensions");
+    assert_eq!(out.shape(), (a.rows(), b.cols()), "matmul_reference: output shape");
+    let n = b.cols();
+    out.as_mut_slice().fill(0.0);
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            let orow = &mut out.as_mut_slice()[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Mat-vec kernels
+// ---------------------------------------------------------------------
+
+/// Mat-vec over `RH` consecutive rows sharing each `x` load. Every
+/// output element keeps [`crate::linalg::ops::dot`]'s exact reduction
+/// order: four `k`-strided lanes combined as `(s0 + s1) + (s2 + s3)`,
+/// then the ragged tail — so this is bit-identical to the per-row
+/// `dot` loop it replaces.
+#[inline]
+fn matvec_tile<const RH: usize>(m: &Matrix, x: &[f64], row0: usize, out: &mut [f64]) {
+    let n = x.len();
+    let chunks = n / 4;
+    let mut rows: [&[f64]; RH] = [&[]; RH];
+    for (r, slot) in rows.iter_mut().enumerate() {
+        *slot = m.row(row0 + r);
+    }
+    let mut s = [[0.0f64; 4]; RH];
+    for c in 0..chunks {
+        let i = c * 4;
+        let xs = &x[i..i + 4];
+        for r in 0..RH {
+            let a = &rows[r][i..i + 4];
+            s[r][0] += a[0] * xs[0];
+            s[r][1] += a[1] * xs[1];
+            s[r][2] += a[2] * xs[2];
+            s[r][3] += a[3] * xs[3];
+        }
+    }
+    for r in 0..RH {
+        let mut acc = (s[r][0] + s[r][1]) + (s[r][2] + s[r][3]);
+        for i in chunks * 4..n {
+            acc += rows[r][i] * x[i];
+        }
+        out[r] = acc;
+    }
+}
+
+/// Mat-vec over a row band: `out[i] = m.row(row0 + i) · x`, processed
+/// [`MR`] rows per pass (multi-accumulator column unrolling — `x` is
+/// loaded once per 4 output rows).
+pub(crate) fn matvec_band(m: &Matrix, x: &[f64], row0: usize, out: &mut [f64]) {
+    let mut i = 0;
+    while i < out.len() {
+        let rh = MR.min(out.len() - i);
+        match rh {
+            4 => matvec_tile::<4>(m, x, row0 + i, &mut out[i..i + 4]),
+            3 => matvec_tile::<3>(m, x, row0 + i, &mut out[i..i + 3]),
+            2 => matvec_tile::<2>(m, x, row0 + i, &mut out[i..i + 2]),
+            _ => matvec_tile::<1>(m, x, row0 + i, &mut out[i..i + 1]),
+        }
+        i += rh;
+    }
+}
+
+/// Transposed mat-vec over a column band: accumulate
+/// `out[j] += x[i] · m[i][col0 + j]` with `i` ascending and the
+/// whole-row skip on `x[i] == 0.0` — the exact per-element order of the
+/// pre-pool kernel. `out` must be zeroed by the caller.
+pub(crate) fn matvec_t_band(m: &Matrix, x: &[f64], col0: usize, out: &mut [f64]) {
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &m.row(i)[col0..col0 + out.len()];
+        for (o, &r) in out.iter_mut().zip(row) {
+            *o += xi * r;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gram kernels
+// ---------------------------------------------------------------------
+
+/// Dense register-tiled Gram band: `band[a][b] = Σ_i x[i][a0+a]·x[i][b]`
+/// with the sample index `i` innermost and ascending (single chain per
+/// element — the bit-identity invariant), tiled `MR × NR` over the
+/// output and paneled over `i` for cache reuse. No zero branch.
+pub(crate) fn gram_band_dense(x: &Matrix, a0: usize, band: &mut [f64]) {
+    let k = x.cols();
+    let band_rows = band.len() / k;
+    let m = x.rows();
+    let mut ip = 0;
+    while ip < m {
+        let iend = (ip + GEMM_K_BLOCK).min(m);
+        let mut a = 0;
+        while a < band_rows {
+            let rh = MR.min(band_rows - a);
+            let mut jb = 0;
+            while jb < k {
+                let jw = NR.min(k - jb);
+                let mut acc = [[0.0f64; NR]; MR];
+                for r in 0..rh {
+                    let off = (a + r) * k + jb;
+                    acc[r][..jw].copy_from_slice(&band[off..off + jw]);
+                }
+                for i in ip..iend {
+                    let row = x.row(i);
+                    let bvals = &row[jb..jb + jw];
+                    for r in 0..rh {
+                        let av = row[a0 + a + r];
+                        for (c, &bv) in acc[r][..jw].iter_mut().zip(bvals) {
+                            *c += av * bv;
+                        }
+                    }
+                }
+                for r in 0..rh {
+                    let off = (a + r) * k + jb;
+                    band[off..off + jw].copy_from_slice(&acc[r][..jw]);
+                }
+                jb += jw;
+            }
+            a += rh;
+        }
+        ip = iend;
+    }
+}
+
+/// PR 1's zero-skipping Gram band, retained for sparse designs: for
+/// each sample, rows of the band with `x[i][a0+da] == 0.0` are skipped
+/// wholesale.
+pub(crate) fn gram_band_skip(x: &Matrix, a0: usize, band: &mut [f64]) {
+    let k = x.cols();
+    let band_rows = band.len() / k;
+    for i in 0..x.rows() {
+        let row = x.row(i);
+        for da in 0..band_rows {
+            let ra = row[a0 + da];
+            if ra == 0.0 {
+                continue;
+            }
+            let grow = &mut band[da * k..(da + 1) * k];
+            for (g, &rb) in grow.iter_mut().zip(row.iter()) {
+                *g += ra * rb;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn packed_matches_reference_across_tile_and_panel_edges() {
+        // Shapes straddle MR (4), NR (8), and GEMM_K_BLOCK (64)
+        // boundaries, plus degenerate and prime dimensions.
+        let mut rng = Rng::new(51);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (4, 64, 8),
+            (5, 65, 9),
+            (3, 63, 7),
+            (8, 128, 16),
+            (13, 17, 19),
+            (12, 129, 24),
+        ];
+        let mut scratch = GemmScratch::default();
+        for (m, k, n) in shapes {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            let mut want = Matrix::zeros(m, n);
+            matmul_reference(&a, &b, &mut want);
+            let mut got = Matrix::zeros(m, n);
+            matmul_packed_into(&a, &b, &mut got, &mut scratch);
+            assert_eq!(got.as_slice(), want.as_slice(), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_overwrites_stale_output_and_reuses_scratch() {
+        let mut rng = Rng::new(52);
+        let a = Matrix::gaussian(9, 70, &mut rng);
+        let b = Matrix::gaussian(70, 11, &mut rng);
+        let mut want = Matrix::zeros(9, 11);
+        matmul_reference(&a, &b, &mut want);
+        let mut scratch = GemmScratch::default();
+        let mut out = Matrix::zeros(9, 11);
+        for _ in 0..3 {
+            for v in out.as_mut_slice() {
+                *v = f64::NAN;
+            }
+            matmul_packed_into(&a, &b, &mut out, &mut scratch);
+            assert_eq!(out.as_slice(), want.as_slice());
+        }
+    }
+
+    #[test]
+    fn sparse_probe_thresholds() {
+        let dense = Matrix::gaussian(10, 10, &mut Rng::new(53));
+        assert!(!probe_sparse(&dense));
+        assert!(probe_sparse(&Matrix::identity(8)));
+        assert!(!probe_sparse(&Matrix::zeros(0, 5)));
+        let mut quarter = Matrix::gaussian(4, 4, &mut Rng::new(54));
+        for j in 0..4 {
+            quarter[(0, j)] = 0.0; // exactly 1/4 zeros → sparse path
+        }
+        assert!(probe_sparse(&quarter));
+    }
+
+    #[test]
+    fn matvec_band_matches_dot_per_row() {
+        let mut rng = Rng::new(55);
+        for (rows, cols) in [(1usize, 1usize), (4, 4), (5, 7), (11, 64), (3, 130)] {
+            let m = Matrix::gaussian(rows, cols, &mut rng);
+            let x = rng.gaussian_vec(cols);
+            let mut out = vec![f64::NAN; rows];
+            matvec_band(&m, &x, 0, &mut out);
+            for i in 0..rows {
+                let want = crate::linalg::ops::dot(m.row(i), &x);
+                assert_eq!(out[i], want, "({rows},{cols}) row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_pads_ragged_column_tail_with_zeros() {
+        let b = Matrix::gaussian(3, 10, &mut Rng::new(56));
+        let mut packed = vec![f64::NAN; 4]; // stale, must be overwritten
+        pack_b_panel(&b, 0, 3, &mut packed, 1);
+        assert_eq!(packed.len(), 2 * 3 * NR);
+        // Second micro-panel holds columns 8..10 then zero padding.
+        for kk in 0..3 {
+            let chunk = &packed[(3 + kk) * NR..(3 + kk + 1) * NR];
+            assert_eq!(&chunk[..2], &b.row(kk)[8..10]);
+            assert!(chunk[2..].iter().all(|&v| v == 0.0));
+        }
+    }
+}

@@ -1,5 +1,6 @@
 //! Row-major dense matrix over `f64`.
 
+use super::gemm::{self, GemmScratch};
 use crate::error::{Error, Result};
 use crate::rng::Rng;
 
@@ -9,10 +10,12 @@ use crate::rng::Rng;
 /// small dense solves, so we favour explicit loops (which LLVM vectorizes
 /// well) over a BLAS dependency that is unavailable in this offline build.
 /// The GEMM-shaped entry points ([`Matrix::matmul_into`],
-/// [`Matrix::gram_into`]) parallelize over row bands with scoped threads;
-/// every output row is produced by the same inner loop in the same
-/// floating-point order regardless of the thread count, so results are
-/// bit-identical to the sequential kernels.
+/// [`Matrix::gram_into`], [`Matrix::matvec_into`]) run on the packed,
+/// register-tiled kernels of [`super::gemm`], parallel over output bands
+/// on the persistent [`super::pool`]; every output element is a single
+/// ascending-index summation chain in every configuration, so results
+/// are bit-identical to the sequential scalar kernels
+/// ([`gemm::matmul_reference`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Matrix {
     rows: usize,
@@ -20,54 +23,14 @@ pub struct Matrix {
     data: Vec<f64>,
 }
 
-/// Below this many multiply-adds a GEMM runs single-threaded: scoped
-/// thread spawn + join costs ~10 µs, which dwarfs the work itself.
-const PAR_FLOP_THRESHOLD: usize = 1 << 18;
-
-/// Number of rows of the right-hand operand streamed per cache panel in
-/// the blocked GEMM (64 rows of ≤1k f64 columns ≈ L2-resident).
-const GEMM_K_BLOCK: usize = 64;
-
 /// Square tile edge for the cache-blocked transpose.
 const TRANSPOSE_BLOCK: usize = 32;
-
-/// Worker threads available for row-band parallelism.
-fn parallelism() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
 
 /// `rows * cols` with overflow reported as a linalg error (adversarial
 /// shapes must not wrap in release builds).
 fn checked_len(rows: usize, cols: usize) -> Result<usize> {
     rows.checked_mul(cols)
         .ok_or_else(|| Error::Linalg(format!("shape {rows}x{cols} overflows usize")))
-}
-
-/// Split `out` (a `rows x cols` row-major buffer) into contiguous row
-/// bands and run `body(first_row, band)` on each, using up to `threads`
-/// scoped threads. `body` must compute each output row independently —
-/// then the result is identical for every band split, including the
-/// sequential `threads == 1` case.
-fn for_each_row_band<F>(out: &mut [f64], rows: usize, cols: usize, threads: usize, body: F)
-where
-    F: Fn(usize, &mut [f64]) + Sync,
-{
-    debug_assert_eq!(out.len(), rows * cols);
-    if rows == 0 || cols == 0 {
-        return;
-    }
-    let threads = threads.clamp(1, rows);
-    if threads == 1 {
-        body(0, out);
-        return;
-    }
-    let band_rows = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (b, band) in out.chunks_mut(band_rows * cols).enumerate() {
-            let body = &body;
-            scope.spawn(move || body(b * band_rows, band));
-        }
-    });
 }
 
 impl Matrix {
@@ -209,12 +172,21 @@ impl Matrix {
         t
     }
 
-    /// Mat-vec `self * x`, writing into `out` (len = rows).
+    /// Mat-vec `self * x`, writing into `out` (len = rows). Runs the
+    /// multi-accumulator row-tiled kernel ([`gemm::MR`] rows share each
+    /// `x` load), banded over the pool for large shapes; per output
+    /// element the reduction order is exactly [`super::ops::dot`]'s, so
+    /// results are bit-identical at every size and thread count.
     pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
         debug_assert_eq!(x.len(), self.cols);
         debug_assert_eq!(out.len(), self.rows);
-        for i in 0..self.rows {
-            out[i] = super::ops::dot(self.row(i), x);
+        let threads = gemm::threads_for(self.rows.saturating_mul(self.cols));
+        if threads == 1 {
+            gemm::matvec_band(self, x, 0, out);
+        } else {
+            gemm::for_each_row_band(out, self.rows, 1, threads, |row0, band| {
+                gemm::matvec_band(self, x, row0, band);
+            });
         }
     }
 
@@ -227,20 +199,20 @@ impl Matrix {
 
     /// Transposed mat-vec `selfᵀ * x`, writing into `out` (len = cols;
     /// x has len = rows). Streams through rows so access stays
-    /// contiguous.
+    /// contiguous; large shapes split the *output columns* into pool
+    /// bands — the accumulation index `i` still ascends per element, so
+    /// results are bit-identical to the sequential kernel.
     pub fn matvec_t_into(&self, x: &[f64], out: &mut [f64]) {
         debug_assert_eq!(x.len(), self.rows);
         debug_assert_eq!(out.len(), self.cols);
         out.fill(0.0);
-        for i in 0..self.rows {
-            let xi = x[i];
-            if xi == 0.0 {
-                continue;
-            }
-            let row = self.row(i);
-            for (o, &r) in out.iter_mut().zip(row.iter()) {
-                *o += xi * r;
-            }
+        let threads = gemm::threads_for(self.rows.saturating_mul(self.cols));
+        if threads == 1 {
+            gemm::matvec_t_band(self, x, 0, out);
+        } else {
+            gemm::for_each_row_band(out, self.cols, 1, threads, |col0, band| {
+                gemm::matvec_t_band(self, x, col0, band);
+            });
         }
     }
 
@@ -251,16 +223,8 @@ impl Matrix {
         out
     }
 
-    /// Dense matrix product `self * other` written into `out`
-    /// (`self.rows x other.cols`, fully overwritten).
-    ///
-    /// Row bands of the output are computed on scoped threads when the
-    /// problem is large enough to amortize spawning; within a band the
-    /// kernel is the ikj loop with `k` panels of [`GEMM_K_BLOCK`] rows of
-    /// `other` kept hot in cache. Per output element the `k` summation
-    /// order is ascending in every configuration, so the product is
-    /// bit-identical to the sequential kernel.
-    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) -> Result<()> {
+    /// Shape checks shared by the GEMM entry points.
+    fn check_matmul_shapes(&self, other: &Matrix, out: &Matrix) -> Result<()> {
         if self.cols != other.rows {
             return Err(Error::Linalg(format!(
                 "matmul: {}x{} * {}x{}",
@@ -273,31 +237,67 @@ impl Matrix {
                 out.rows, out.cols, self.rows, other.cols
             )));
         }
-        let n = other.cols;
-        out.data.fill(0.0);
-        let flops = self.rows.saturating_mul(self.cols).saturating_mul(n);
-        let threads = if flops >= PAR_FLOP_THRESHOLD { parallelism() } else { 1 };
-        for_each_row_band(&mut out.data, self.rows, n, threads, |row0, band| {
-            let band_rows = band.len() / n;
-            let mut kp = 0;
-            while kp < self.cols {
-                let kend = (kp + GEMM_K_BLOCK).min(self.cols);
-                for i in 0..band_rows {
-                    let arow = self.row(row0 + i);
-                    let orow = &mut band[i * n..(i + 1) * n];
-                    for (k, &a) in arow.iter().enumerate().take(kend).skip(kp) {
-                        if a == 0.0 {
-                            continue;
-                        }
-                        let brow = other.row(k);
-                        for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                            *o += a * b;
-                        }
-                    }
-                }
-                kp = kend;
-            }
-        });
+        Ok(())
+    }
+
+    /// Dense matrix product `self * other` written into `out`
+    /// (`self.rows x other.cols`, fully overwritten).
+    ///
+    /// Dispatches on a sparsity probe of `self`: mostly-dense operands
+    /// run the packed register-tiled kernel (no per-element zero
+    /// branch), operands with ≥ 25% exact zeros (e.g. the `[I; P]`
+    /// systematic generator) keep the zero-skipping scalar kernel. Row
+    /// bands of the output run on the persistent pool when the problem
+    /// amortizes a dispatch. Per output element the `k` summation order
+    /// is ascending in every configuration, so the product is
+    /// bit-identical to the sequential reference kernel
+    /// ([`gemm::matmul_reference`]). Packing scratch comes from a
+    /// per-thread buffer; use [`Matrix::matmul_into_with`] to thread an
+    /// explicit one.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) -> Result<()> {
+        self.check_matmul_shapes(other, out)?;
+        gemm::matmul_dispatch_buf(self, other, &mut out.data, None);
+        Ok(())
+    }
+
+    /// [`Matrix::matmul_into`] with caller-owned packing scratch, for
+    /// call sites that keep GEMM-shaped work allocation-free (the
+    /// encoder's stacked moment GEMM, decode arenas).
+    pub fn matmul_into_with(
+        &self,
+        other: &Matrix,
+        out: &mut Matrix,
+        scratch: &mut GemmScratch,
+    ) -> Result<()> {
+        self.check_matmul_shapes(other, out)?;
+        gemm::matmul_dispatch_buf(self, other, &mut out.data, Some(scratch));
+        Ok(())
+    }
+
+    /// GEMM into a raw row-major buffer of length
+    /// `self.rows * other.cols` — lets callers compute directly into a
+    /// region of a larger allocation (e.g. the parity half of a stacked
+    /// codeword matrix) without a temporary.
+    pub(crate) fn matmul_into_buf(
+        &self,
+        other: &Matrix,
+        out: &mut [f64],
+        scratch: Option<&mut GemmScratch>,
+    ) -> Result<()> {
+        if self.cols != other.rows {
+            return Err(Error::Linalg(format!(
+                "matmul: {}x{} * {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let need = checked_len(self.rows, other.cols)?;
+        if out.len() != need {
+            return Err(Error::Linalg(format!(
+                "matmul_into_buf: buffer holds {}, need {need}",
+                out.len()
+            )));
+        }
+        gemm::matmul_dispatch_buf(self, other, out, scratch);
         Ok(())
     }
 
@@ -309,9 +309,12 @@ impl Matrix {
     }
 
     /// Gram matrix `selfᵀ * self` written into `out` (`cols x cols`,
-    /// fully overwritten). Parallel over output row bands; per output
-    /// element the sample index ascends in every configuration, so the
-    /// result is bit-identical to the sequential kernel.
+    /// fully overwritten). Parallel over output row bands on the
+    /// persistent pool; the dense path is register-tiled with the
+    /// sample index innermost, the sparse path (≥ 25% exact zeros)
+    /// keeps the zero-skipping kernel. Per output element the sample
+    /// index ascends in every configuration, so the result is
+    /// bit-identical to the sequential kernel.
     pub fn gram_into(&self, out: &mut Matrix) -> Result<()> {
         let k = self.cols;
         if out.shape() != (k, k) {
@@ -321,24 +324,20 @@ impl Matrix {
             )));
         }
         out.data.fill(0.0);
+        if k == 0 || self.rows == 0 {
+            return Ok(());
+        }
         let flops = self.rows.saturating_mul(k).saturating_mul(k);
-        let threads = if flops >= PAR_FLOP_THRESHOLD { parallelism() } else { 1 };
-        for_each_row_band(&mut out.data, k, k, threads, |a0, band| {
-            let band_rows = band.len() / k;
-            for i in 0..self.rows {
-                let row = self.row(i);
-                for da in 0..band_rows {
-                    let ra = row[a0 + da];
-                    if ra == 0.0 {
-                        continue;
-                    }
-                    let grow = &mut band[da * k..(da + 1) * k];
-                    for (g, &rb) in grow.iter_mut().zip(row.iter()) {
-                        *g += ra * rb;
-                    }
-                }
-            }
-        });
+        let threads = gemm::threads_for(flops);
+        if gemm::probe_sparse(self) {
+            gemm::for_each_row_band(&mut out.data, k, k, threads, |a0, band| {
+                gemm::gram_band_skip(self, a0, band);
+            });
+        } else {
+            gemm::for_each_row_band(&mut out.data, k, k, threads, |a0, band| {
+                gemm::gram_band_dense(self, a0, band);
+            });
+        }
         Ok(())
     }
 

@@ -6,9 +6,18 @@
 //! learning-rate selection), and a handful of vector helpers. This module
 //! keeps everything row-major and allocation-explicit so the hot path can
 //! reuse buffers.
+//!
+//! Compute layout: [`matrix`] owns shapes and entry points, [`gemm`]
+//! owns the packed register-tiled kernels (and the retained scalar
+//! reference every path is pinned against), and [`pool`] owns the
+//! process-lifetime worker threads that band-parallel kernels dispatch
+//! to. See the "Kernel design" section of `rust/README.md`.
 
+pub mod gemm;
 pub mod matrix;
 pub mod ops;
+pub mod pool;
 
+pub use gemm::GemmScratch;
 pub use matrix::Matrix;
 pub use ops::*;

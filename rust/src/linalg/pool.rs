@@ -1,0 +1,396 @@
+//! Process-lifetime worker pool for the linalg kernels.
+//!
+//! PR 1 parallelized the GEMM-shaped kernels with `std::thread::scope`,
+//! which spawns and joins OS threads *per call* — roughly 10 µs of fixed
+//! overhead that forced a high `PAR_FLOP_THRESHOLD` and kept mid-size
+//! step-loop matmuls sequential. This module replaces scoped spawning
+//! with a lazily-initialized pool of persistent workers (hand-rolled on
+//! `std::sync::{Mutex, Condvar}`; the crate's only dependency is libc):
+//! dispatch is one mutex lock plus a condvar wake, so parallelism pays
+//! off one to two orders of magnitude earlier.
+//!
+//! Design constraints, in order:
+//!
+//! * **Bit-identity is the caller's invariant, not ours.** The pool runs
+//!   `body(i)` for every `i < tasks` with no ordering guarantee; linalg
+//!   kernels stay deterministic because every task writes a disjoint
+//!   output band whose contents do not depend on the split (see
+//!   `gemm::for_each_row_band`).
+//! * **Never deadlock, never queue.** If a job is already in flight —
+//!   another thread is mid-GEMM, or the caller *is* a pool worker — the
+//!   submitter simply runs its tasks inline on its own thread. The
+//!   OS-thread cluster's 40 workers therefore never serialize behind
+//!   one shared pool (they additionally opt out wholesale via
+//!   [`set_thread_inline`]), and a kernel nested inside a pool task
+//!   degrades to the sequential path instead of self-waiting.
+//! * **Spawn once per process.** Workers are created on first parallel
+//!   use and reused forever; [`threads_spawned`] exposes the count so
+//!   tests can pin the spawn-once behavior.
+//!
+//! The submitting thread always participates in executing tasks, so the
+//! pool needs only `available_parallelism() - 1` workers and a job makes
+//! progress even if every worker spawn failed.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Lifetime-erased reference to the job body. The `'static` is a lie
+/// told only inside this module: [`run`] does not return until every
+/// task has finished, so the borrow it erases strictly outlives every
+/// use. (`&(dyn Fn + Sync)` is `Send + Copy`, which is what lets the
+/// job sit in the shared mutex.)
+#[derive(Clone, Copy)]
+struct JobBody(&'static (dyn Fn(usize) + Sync));
+
+/// One in-flight batch of tasks.
+struct Job {
+    body: JobBody,
+    tasks: usize,
+    /// Next unclaimed task index.
+    next: usize,
+    /// Tasks claimed or unclaimed but not yet finished.
+    pending: usize,
+    /// First task panic payload (the submitter resumes it after the
+    /// job drains, preserving the original message/backtrace payload
+    /// exactly as `std::thread::scope` used to).
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+struct Pool {
+    state: Mutex<Option<Job>>,
+    /// Workers wait here for a job with unclaimed tasks.
+    work: Condvar,
+    /// The submitter waits here for `pending == 0`.
+    done: Condvar,
+    /// Worker threads actually running (spawn failures excluded); set
+    /// once during init, read by `parallelism()`.
+    workers: AtomicUsize,
+}
+
+static POOL: OnceLock<Option<&'static Pool>> = OnceLock::new();
+static THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+static DISPATCHES: AtomicU64 = AtomicU64::new(0);
+static INLINE_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Threads that must never submit to (or wait on) the pool: the
+    /// pool's own workers and the coordinator's cluster worker threads,
+    /// which are already running `w`-way parallel.
+    static INLINE_ONLY: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Mark (or unmark) the current thread as inline-only: linalg kernels
+/// called from it run sequentially instead of dispatching to the shared
+/// pool. The coordinator marks its cluster worker threads — forty
+/// threads each running their own shard mat-vec gain nothing from a
+/// single shared pool and would contend on its lock.
+pub fn set_thread_inline(inline: bool) {
+    INLINE_ONLY.with(|c| c.set(inline));
+}
+
+fn pool() -> Option<&'static Pool> {
+    *POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if n < 2 {
+            return None;
+        }
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            state: Mutex::new(None),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            workers: AtomicUsize::new(0),
+        }));
+        let mut spawned = 0;
+        for i in 0..n - 1 {
+            let ok = std::thread::Builder::new()
+                .name(format!("linalg-pool-{i}"))
+                .spawn(move || {
+                    set_thread_inline(true);
+                    worker_loop(pool);
+                })
+                .is_ok();
+            if ok {
+                spawned += 1;
+            }
+        }
+        THREADS_SPAWNED.store(spawned, Ordering::Relaxed);
+        // Informational only: claiming is dynamic, so a partial spawn
+        // reduces parallelism, never correctness.
+        pool.workers.store(spawned, Ordering::Relaxed);
+        if spawned == 0 {
+            None
+        } else {
+            Some(pool)
+        }
+    })
+}
+
+fn worker_loop(pool: &'static Pool) {
+    let mut state = pool.state.lock().unwrap();
+    loop {
+        let claim = match state.as_mut() {
+            Some(job) if job.next < job.tasks => {
+                let i = job.next;
+                job.next += 1;
+                Some((i, job.body))
+            }
+            _ => None,
+        };
+        match claim {
+            Some((i, body)) => {
+                drop(state);
+                // `run` keeps the body alive until the job drains.
+                let result = catch_unwind(AssertUnwindSafe(|| (body.0)(i)));
+                state = pool.state.lock().unwrap();
+                let job = state.as_mut().expect("job outlives its tasks");
+                if let Err(payload) = result {
+                    job.panic.get_or_insert(payload);
+                }
+                job.pending -= 1;
+                if job.pending == 0 {
+                    pool.done.notify_all();
+                }
+            }
+            None => state = pool.work.wait(state).unwrap(),
+        }
+    }
+}
+
+/// Run `body(0), …, body(tasks - 1)`, in parallel on the shared pool
+/// when it is free and this thread may use it, inline on the calling
+/// thread otherwise. Returns only after every task has finished (this
+/// is what makes the internal lifetime erasure sound). If any task
+/// panicked, the first panic payload is resumed on the calling thread
+/// (matching `std::thread::scope` semantics).
+///
+/// Tasks must be independent: no ordering between them is guaranteed,
+/// and any subset may run on the calling thread.
+pub fn run(tasks: usize, body: &(dyn Fn(usize) + Sync)) {
+    let run_inline = || {
+        for i in 0..tasks {
+            body(i);
+        }
+    };
+    if tasks <= 1 || INLINE_ONLY.with(|c| c.get()) {
+        run_inline();
+        return;
+    }
+    let Some(pool) = pool() else {
+        run_inline();
+        return;
+    };
+    // Lifetime erasure: see JobBody. The transmute only widens the
+    // borrow's lifetime to 'static; `run` blocks until the job drains.
+    let erased: &'static (dyn Fn(usize) + Sync) =
+        unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(body) };
+    let body_ptr = JobBody(erased);
+    {
+        let mut state = pool.state.lock().unwrap();
+        if state.is_some() {
+            // A job is in flight (possibly our own, if we are nested
+            // inside a pool task): degrade to the sequential path
+            // rather than queueing or self-waiting.
+            drop(state);
+            INLINE_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+            run_inline();
+            return;
+        }
+        *state = Some(Job {
+            body: body_ptr,
+            tasks,
+            next: 0,
+            pending: tasks,
+            panic: None,
+        });
+    }
+    DISPATCHES.fetch_add(1, Ordering::Relaxed);
+    pool.work.notify_all();
+
+    // The submitter participates: claim and run tasks like a worker.
+    loop {
+        let i = {
+            let mut state = pool.state.lock().unwrap();
+            let job = state.as_mut().expect("submitter's job is installed");
+            if job.next >= job.tasks {
+                break;
+            }
+            let i = job.next;
+            job.next += 1;
+            i
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| body(i)));
+        let mut state = pool.state.lock().unwrap();
+        let job = state.as_mut().expect("submitter's job is installed");
+        if let Err(payload) = result {
+            job.panic.get_or_insert(payload);
+        }
+        job.pending -= 1;
+        if job.pending == 0 {
+            pool.done.notify_all();
+        }
+    }
+
+    // Wait for workers to finish the tasks they claimed, then retire
+    // the job slot.
+    let mut state = pool.state.lock().unwrap();
+    while state.as_ref().expect("job retired only here").pending > 0 {
+        state = pool.done.wait(state).unwrap();
+    }
+    let job = state.take().expect("job retired only here");
+    drop(state);
+    pool.work.notify_all(); // wake workers parked mid-job so they re-park cleanly
+    if let Some(payload) = job.panic {
+        resume_unwind(payload);
+    }
+}
+
+/// Number of lanes a pooled kernel can use: the persistent workers plus
+/// the submitting thread. 1 when the host is single-core or the pool
+/// could not spawn.
+pub fn parallelism() -> usize {
+    match pool() {
+        Some(p) => p.workers.load(Ordering::Relaxed) + 1,
+        None => 1,
+    }
+}
+
+/// Force pool initialization (worker spawn) now, so the first timed
+/// gradient step does not pay it.
+pub fn prewarm() {
+    let _ = pool();
+}
+
+/// Total pool worker threads ever spawned by this process — constant
+/// after first use (the spawn-once invariant tests pin).
+pub fn threads_spawned() -> usize {
+    let _ = pool();
+    THREADS_SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Jobs dispatched to the pool (parallel runs).
+pub fn dispatches() -> u64 {
+    DISPATCHES.load(Ordering::Relaxed)
+}
+
+/// `run` calls that found the pool busy and ran inline instead.
+pub fn inline_fallbacks() -> u64 {
+    INLINE_FALLBACKS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for tasks in [0usize, 1, 2, 3, 7, 64] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            run(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_run_degrades_inline_without_deadlock() {
+        let outer = AtomicUsize::new(0);
+        let inner = AtomicUsize::new(0);
+        run(4, &|_| {
+            outer.fetch_add(1, Ordering::Relaxed);
+            run(4, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 4);
+        assert_eq!(inner.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn spawns_once_and_reuses_threads() {
+        run(8, &|_| {});
+        let after_first = threads_spawned();
+        assert!(after_first <= parallelism());
+        for _ in 0..50 {
+            run(8, &|i| {
+                std::hint::black_box(i * i);
+            });
+        }
+        assert_eq!(
+            threads_spawned(),
+            after_first,
+            "pool must reuse its workers, not respawn"
+        );
+        if parallelism() > 1 {
+            assert_eq!(after_first, parallelism() - 1);
+            assert!(dispatches() > 0, "multi-core host must dispatch to the pool");
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        // Two threads hammer `run` simultaneously: one wins the pool,
+        // the other falls back inline — both must finish all tasks.
+        let h: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    let count = AtomicUsize::new(0);
+                    for _ in 0..20 {
+                        run(8, &|_| {
+                            count.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                    count.load(Ordering::Relaxed)
+                })
+            })
+            .collect();
+        for th in h {
+            assert_eq!(th.join().unwrap(), 160);
+        }
+    }
+
+    #[test]
+    fn inline_only_thread_runs_every_task_on_itself() {
+        std::thread::spawn(|| {
+            set_thread_inline(true);
+            let me = std::thread::current().id();
+            let count = AtomicUsize::new(0);
+            run(16, &|_| {
+                assert_eq!(
+                    std::thread::current().id(),
+                    me,
+                    "task escaped an inline-only thread"
+                );
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 16);
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter() {
+        let result = catch_unwind(|| {
+            run(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        let payload = result.expect_err("panic in a task must reach the submitter");
+        // The original payload survives the pool (scope semantics).
+        assert_eq!(payload.downcast_ref::<&str>().copied(), Some("boom"));
+        // The pool must remain usable afterwards.
+        let count = AtomicUsize::new(0);
+        run(4, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+    }
+}

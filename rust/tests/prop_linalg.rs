@@ -1,0 +1,207 @@
+//! Kernel bit-identity properties: the packed register-tiled GEMM, the
+//! pooled band dispatch, and the tiled mat-vec/Gram kernels must agree
+//! with the retained scalar reference kernels *exactly* (f64 equality,
+//! not tolerance) across adversarial shapes. These pins are what let
+//! the compute layer evolve without shifting any fixed-seed trajectory
+//! (and with it, the thread-vs-sim parity pins).
+
+use moment_ldpc::linalg::gemm::{matmul_packed_into, matmul_reference};
+use moment_ldpc::linalg::{dot, pool, GemmScratch, Matrix};
+use moment_ldpc::rng::Rng;
+
+/// Shapes chosen to straddle every boundary the kernels care about:
+/// the 4-row / 8-column register tile, the 64-row `GEMM_K_BLOCK` pack
+/// panel, the parallel-dispatch flop threshold (2^15), plus degenerate,
+/// prime, tall-skinny, and wide-short cases.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (2, 3, 5),
+    (13, 17, 19),
+    (4, 64, 8),
+    (5, 65, 9),
+    (3, 63, 7),
+    (8, 128, 16),
+    (12, 129, 24),
+    (257, 8, 3),   // tall-skinny
+    (3, 8, 257),   // wide-short
+    (80, 80, 80),  // crosses PAR_FLOP_THRESHOLD → pooled bands
+    (33, 130, 65), // crosses threshold with ragged everything
+    (8, 70, 600),  // short-m, wide-n: exercises pool-parallel packing
+];
+
+fn gaussian_pair(m: usize, k: usize, n: usize, rng: &mut Rng) -> (Matrix, Matrix) {
+    (Matrix::gaussian(m, k, rng), Matrix::gaussian(k, n, rng))
+}
+
+#[test]
+fn matmul_bitwise_equals_reference_across_adversarial_shapes() {
+    let mut rng = Rng::new(101);
+    for &(m, k, n) in SHAPES {
+        let (a, b) = gaussian_pair(m, k, n, &mut rng);
+        let mut want = Matrix::zeros(m, n);
+        matmul_reference(&a, &b, &mut want);
+        // Production dispatch path (packed for dense Gaussian operands).
+        let got = a.matmul(&b).unwrap();
+        assert_eq!(got.as_slice(), want.as_slice(), "dispatch ({m},{k},{n})");
+        // Packed kernel forced, with a reused scratch.
+        let mut scratch = GemmScratch::default();
+        let mut packed = Matrix::zeros(m, n);
+        matmul_packed_into(&a, &b, &mut packed, &mut scratch);
+        assert_eq!(packed.as_slice(), want.as_slice(), "packed ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn sparse_left_operands_bitwise_equal_reference_through_dispatch() {
+    // ≥ 25% exact zeros routes to the retained zero-skipping kernel;
+    // either way the result must match the reference bit for bit.
+    let mut rng = Rng::new(103);
+    for &(m, k, n) in &[(5usize, 65usize, 9usize), (40, 20, 52), (80, 80, 80)] {
+        let (mut a, b) = gaussian_pair(m, k, n, &mut rng);
+        // Zero half the entries in a deterministic pattern (includes
+        // whole zero rows when m is even).
+        for i in 0..m {
+            for j in 0..k {
+                if (i + j) % 2 == 0 || i == 0 {
+                    a[(i, j)] = 0.0;
+                }
+            }
+        }
+        let mut want = Matrix::zeros(m, n);
+        matmul_reference(&a, &b, &mut want);
+        let got = a.matmul(&b).unwrap();
+        assert_eq!(got.as_slice(), want.as_slice(), "sparse ({m},{k},{n})");
+    }
+    // The canonical sparse case: a systematic [I; P]-shaped generator.
+    let ident = Matrix::identity(40);
+    let b = Matrix::gaussian(40, 52, &mut rng);
+    let mut want = Matrix::zeros(40, 52);
+    matmul_reference(&ident, &b, &mut want);
+    assert_eq!(ident.matmul(&b).unwrap().as_slice(), want.as_slice());
+    assert_eq!(want.as_slice(), b.as_slice(), "I·B must be B exactly");
+}
+
+#[test]
+fn gram_bitwise_equals_ascending_sample_reference() {
+    let mut rng = Rng::new(107);
+    for &(m, k) in &[(1usize, 1usize), (7, 5), (64, 8), (65, 9), (300, 40), (130, 33)] {
+        let x = Matrix::gaussian(m, k, &mut rng);
+        let mut want = Matrix::zeros(k, k);
+        for i in 0..m {
+            let row = x.row(i);
+            for a in 0..k {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in 0..k {
+                    want[(a, b)] += ra * row[b];
+                }
+            }
+        }
+        assert_eq!(x.gram().as_slice(), want.as_slice(), "gram ({m},{k})");
+    }
+    // Sparse design → zero-skipping gram path, same pin.
+    let mut x = Matrix::gaussian(50, 20, &mut rng);
+    for i in 0..50 {
+        for j in 0..20 {
+            if (i * 20 + j) % 3 != 0 {
+                x[(i, j)] = 0.0;
+            }
+        }
+    }
+    let dense_ref = x.transpose().matmul(&x).unwrap();
+    let g = x.gram();
+    for a in 0..20 {
+        for b in 0..20 {
+            assert!((g[(a, b)] - dense_ref[(a, b)]).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn matvec_bitwise_equals_dot_and_matvec_t_equals_sequential() {
+    let mut rng = Rng::new(109);
+    for &(m, k) in &[(1usize, 1usize), (3, 5), (5, 130), (52, 1024), (70, 640)] {
+        let a = Matrix::gaussian(m, k, &mut rng);
+        let x = rng.gaussian_vec(k);
+        let mut out = vec![f64::NAN; m];
+        a.matvec_into(&x, &mut out);
+        for i in 0..m {
+            assert_eq!(out[i], dot(a.row(i), &x), "matvec ({m},{k}) row {i}");
+        }
+        // matvec_t: sequential i-ascending reference with the xi == 0 skip.
+        let y = rng.gaussian_vec(m);
+        let mut want_t = vec![0.0; k];
+        for (i, &yi) in y.iter().enumerate() {
+            if yi == 0.0 {
+                continue;
+            }
+            for (w, &v) in want_t.iter_mut().zip(a.row(i)) {
+                *w += yi * v;
+            }
+        }
+        let mut got_t = vec![f64::NAN; k];
+        a.matvec_t_into(&y, &mut got_t);
+        assert_eq!(got_t, want_t, "matvec_t ({m},{k})");
+    }
+}
+
+#[test]
+fn pool_threads_spawn_once_and_are_reused_across_kernels() {
+    let mut rng = Rng::new(113);
+    // Force several pooled dispatches (shapes above the flop threshold).
+    let (a, b) = gaussian_pair(96, 96, 96, &mut rng);
+    let mut out = Matrix::zeros(96, 96);
+    a.matmul_into(&b, &mut out).unwrap();
+    let spawned = pool::threads_spawned();
+    let dispatches_before = pool::dispatches();
+    // Keep issuing pooled kernels until at least one lands on the pool
+    // (concurrent tests may transiently hold it — those runs fall back
+    // inline by design). The spawn count must never move.
+    let mut dispatched = false;
+    for _ in 0..200 {
+        a.matmul_into(&b, &mut out).unwrap();
+        let _ = a.gram();
+        if pool::dispatches() > dispatches_before {
+            dispatched = true;
+            break;
+        }
+    }
+    assert_eq!(
+        pool::threads_spawned(),
+        spawned,
+        "pool must spawn its workers once per process and reuse them"
+    );
+    if pool::parallelism() > 1 {
+        assert_eq!(spawned, pool::parallelism() - 1);
+        assert!(
+            dispatched,
+            "pooled kernels must dispatch to the persistent workers, not respawn"
+        );
+    } else {
+        assert_eq!(spawned, 0, "single-core host must not spawn pool workers");
+    }
+}
+
+#[test]
+fn concurrent_kernels_stay_bitwise_deterministic() {
+    // Many threads running pooled GEMMs at once: whoever loses the pool
+    // falls back inline, and every result must still be bit-identical
+    // to the scalar reference.
+    let mut rng = Rng::new(127);
+    let (a, b) = gaussian_pair(80, 80, 80, &mut rng);
+    let mut want = Matrix::zeros(80, 80);
+    matmul_reference(&a, &b, &mut want);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let (a, b, want) = (&a, &b, &want);
+            scope.spawn(move || {
+                for _ in 0..8 {
+                    let got = a.matmul(b).unwrap();
+                    assert_eq!(got.as_slice(), want.as_slice());
+                }
+            });
+        }
+    });
+}
