@@ -39,6 +39,15 @@ cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
     --async --staleness 2 --flops-per-ms 200 --nic-gbps 1 \
     --max-steps 500 --rel-tol 1e-2
 
+echo "== hierarchical-topology smoke test (4 racks, per-rack NICs) =="
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --async --staleness 2 --nic-gbps 1 --racks 4 --rack-gbps 10 \
+    --max-steps 500 --rel-tol 1e-2
+
+echo "== sim_topology smoke (tiny ablation; writes *_smoke outputs) =="
+SIM_TOPOLOGY_SMOKE=1 cargo bench --bench sim_topology
+
 echo "== perf_hotpath smoke (tiny sizes; exercises packed GEMM + linalg pool) =="
 PERF_HOTPATH_SMOKE=1 cargo bench --bench perf_hotpath
 

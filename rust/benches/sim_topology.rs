@@ -1,0 +1,121 @@
+//! Topology ablation: flat vs hierarchical per-rack NICs at 256
+//! simulated workers, per-policy virtual time-to-accuracy.
+//!
+//! The question: once communication is priced honestly (θ fan-out and
+//! response queueing on real NICs), what does rack structure buy? A
+//! flat master NIC serializes 256 θ unicasts and 256 response
+//! transfers per window; with racks, the master ships one θ copy per
+//! rack while the rack NICs fan out and absorb the first response hop
+//! in parallel — at the price of responses queueing twice. Rows
+//! compare flat / 4-rack / 16-rack topologies for each collection
+//! policy (wait-k, wait-fresh, quantile-adaptive) under two latency
+//! models, all on the pipelined executor with bounded staleness S=4.
+//!
+//! Output: a table on stdout, `bench_out/sim_topology.csv`, and
+//! `bench_out/BENCH_sim_topology.json` (cell → virtual ms to accuracy).
+//!
+//! Set `SIM_TOPOLOGY_SMOKE=1` (what ci.sh does) for a seconds-long
+//! tiny run that writes `*_smoke` file names instead, so a CI pass can
+//! never clobber real measurements.
+//!
+//! `cargo bench --offline --bench sim_topology`
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::straggler::LatencyModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::report::{write_csv, write_json_kv, Table};
+use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::{run_simulated_async, AsyncSimConfig, LinkModel, Topology};
+
+fn main() {
+    let smoke = std::env::var_os("SIM_TOPOLOGY_SMOKE").is_some();
+    let workers = if smoke { 64usize } else { 256 };
+    let k = if smoke { 32usize } else { 64 };
+    let wait_k = workers * 7 / 8;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 29);
+    let code = LdpcCode::gallager(workers, workers / 2, 3, 6, 7).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        workers,
+        decode_iters: 40,
+        rel_tol: if smoke { 1e-2 } else { 1e-3 },
+        max_steps: if smoke { 400 } else { 1500 },
+        ..Default::default()
+    };
+
+    // Master NIC: 1 Gbit/s; rack NICs: 10 Gbit/s (intra-rack links are
+    // typically faster than the aggregation uplink they feed).
+    let master = LinkModel::gigabit();
+    let rack = LinkModel { gbps: 10.0, overhead_ms: 0.005 };
+    let topologies: Vec<(&str, Topology)> = vec![
+        ("flat", Topology::flat(master)),
+        ("racks=4", Topology::hierarchical(4, rack, master)),
+        ("racks=16", Topology::hierarchical(16, rack, master)),
+    ];
+    let latencies: Vec<(&str, LatencyModel)> = if smoke {
+        vec![("shifted-exp", LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 21 })]
+    } else {
+        vec![
+            ("shifted-exp", LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 21 }),
+            ("pareto", LatencyModel::Pareto { scale_ms: 1.0, shape: 1.2, seed: 21 }),
+        ]
+    };
+    let policies: Vec<(&str, DeadlinePolicy)> = vec![
+        ("wait-k", DeadlinePolicy::WaitForK(wait_k)),
+        ("wait-fresh", DeadlinePolicy::WaitForFresh(wait_k)),
+        (
+            "quantile",
+            DeadlinePolicy::QuantileAdaptive { q: 0.9, slack: 1.5, window: 2048 },
+        ),
+    ];
+
+    let mut table = Table::new(
+        format!(
+            "topology ablation, n={workers} simulated workers, k={k}, async S=4{}",
+            if smoke { ", SMOKE" } else { "" }
+        ),
+        &["latency", "policy", "topology", "converged", "steps", "virtual ms", "stragglers/step"],
+    );
+    let mut json: Vec<(String, f64)> = Vec::new();
+    let mut exp_wait_k_converged = true;
+
+    for (lname, latency) in &latencies {
+        for (pname, policy) in &policies {
+            for (tname, topo) in &topologies {
+                let sim = AsyncSimConfig::new(latency.clone(), policy.clone(), 4)
+                    .with_topology(topo.clone());
+                let r = run_simulated_async(&scheme, &problem, &cfg, &sim).expect("sim run");
+                table.row(vec![
+                    (*lname).into(),
+                    (*pname).into(),
+                    (*tname).into(),
+                    format!("{}", r.converged),
+                    format!("{}", r.steps),
+                    format!("{:.2}", r.totals.collect_ms),
+                    format!("{:.2}", r.totals.stragglers as f64 / r.steps.max(1) as f64),
+                ]);
+                json.push((format!("{lname}_{pname}_{tname}_virtual_ms"), r.totals.collect_ms));
+                if *lname == "shifted-exp" && *pname == "wait-k" && !r.converged {
+                    exp_wait_k_converged = false;
+                }
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    let (csv, jsonp) = if smoke {
+        ("bench_out/sim_topology_smoke.csv", "bench_out/BENCH_sim_topology_smoke.json")
+    } else {
+        ("bench_out/sim_topology.csv", "bench_out/BENCH_sim_topology.json")
+    };
+    write_csv(&table, std::path::Path::new(csv)).unwrap();
+    write_json_kv(std::path::Path::new(jsonp), &json).unwrap();
+
+    // Sanity pin kept mild on purpose (this is an ablation, not a test
+    // suite): the benign latency model must converge under wait-k on
+    // every topology.
+    assert!(exp_wait_k_converged, "shifted-exp wait-k must converge on every topology");
+    eprintln!("sim_topology done -> {csv}, {jsonp}");
+}

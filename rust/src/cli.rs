@@ -106,6 +106,11 @@ COMMANDS:
                  draws become per-worker slowdown multipliers)
                [--nic-gbps F --nic-overhead-ms F] master-NIC contention
                  (broadcasts and responses serialize on one link)
+               [--racks N --rack-gbps F --rack-overhead-ms F]
+                 hierarchical topology: N racks with their own NICs
+                 uplinking into the master link (θ fans out per rack,
+                 responses queue twice; racks=1 = flat; rack NIC
+                 defaults to the master link's parameters)
              --max-steps N --rel-tol T [--json]
   fig1       Reproduce Figure 1 (least squares)        [--trials N] [--quick]
   fig2       Reproduce Figure 2 (sparse, m > k)        [--trials N] [--quick]

@@ -28,7 +28,7 @@ use crate::data::RegressionProblem;
 use crate::error::Result;
 use crate::sim::deadline::DeadlinePolicy;
 use crate::sim::{
-    AsyncSimCluster, AsyncSimConfig, ComputeModel, LinkModel, SimCluster, SimConfig, TaskCosts,
+    AsyncSimCluster, AsyncSimConfig, ComputeModel, SimCluster, SimConfig, TaskCosts, Topology,
 };
 
 /// Declarative scheme choice (factory).
@@ -252,13 +252,14 @@ pub struct PipelineSpec {
     pub max_staleness: usize,
     /// Compute-time model.
     pub compute: ComputeModel,
-    /// Master-NIC contention model (`None` = free transfers).
-    pub link: Option<LinkModel>,
+    /// Network contention model (`None` = free transfers): the flat
+    /// master NIC, or hierarchical per-rack NICs feeding it.
+    pub topology: Option<Topology>,
 }
 
 impl Default for PipelineSpec {
     fn default() -> Self {
-        PipelineSpec { max_staleness: 1, compute: ComputeModel::Opaque, link: None }
+        PipelineSpec { max_staleness: 1, compute: ComputeModel::Opaque, topology: None }
     }
 }
 
@@ -297,7 +298,7 @@ pub fn run_sim_trials(
                     policy: sim.policy.clone(),
                     max_staleness: p.max_staleness,
                     compute: p.compute,
-                    link: p.link,
+                    topology: p.topology.clone(),
                 };
                 let mut cluster = AsyncSimCluster::new(
                     scheme.payloads(),
@@ -436,6 +437,39 @@ mod tests {
         assert_eq!(a.mean_decode_rounds, b.mean_decode_rounds);
         let c = run_sim_trials(&scheme, &p, &spec, &s2).unwrap();
         assert!(c.convergence_rate > 0.99, "{c:?}");
+    }
+
+    #[test]
+    fn pipelined_trials_with_rack_topology_converge() {
+        use crate::sim::LinkModel;
+        let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), 8);
+        let spec = ExperimentSpec {
+            config: RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() },
+            trials: 2,
+            straggler_seed_base: 90,
+        };
+        let sim = SimSpec {
+            latency: LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 0 },
+            policy: DeadlinePolicy::WaitForK(34),
+            pipeline: Some(PipelineSpec {
+                max_staleness: 2,
+                topology: Some(Topology::hierarchical(
+                    4,
+                    LinkModel::gigabit(),
+                    LinkModel::gigabit(),
+                )),
+                ..Default::default()
+            }),
+        };
+        let agg = run_sim_trials(
+            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
+            &p,
+            &spec,
+            &sim,
+        )
+        .unwrap();
+        assert!(agg.convergence_rate > 0.99, "{agg:?}");
+        assert!(agg.mean_sim_ms > 0.0, "virtual time must accumulate");
     }
 
     #[test]

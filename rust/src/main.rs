@@ -17,7 +17,7 @@ use moment_ldpc::optim::projections::Projection;
 use moment_ldpc::runtime::artifact::{ArtifactRegistry, Kernel};
 use moment_ldpc::runtime::BackendChoice;
 use moment_ldpc::sim::deadline::DeadlinePolicy;
-use moment_ldpc::sim::{ComputeModel, LinkModel};
+use moment_ldpc::sim::{ComputeModel, LinkModel, Topology};
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -263,13 +263,19 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let scheme = scheme_spec_from(&args.get_str("scheme", "ldpc"), args, workers)?;
     let pipeline = pipeline_spec_from(args)?;
     let setup = match &pipeline {
-        Some(p) => format!(
-            "{}/{}/async(S={},{})",
-            latency.name(),
-            policy.name(),
-            p.max_staleness,
-            p.compute.name()
-        ),
+        Some(p) => {
+            let topo = match &p.topology {
+                Some(t) => format!(",{}", t.label()),
+                None => String::new(),
+            };
+            format!(
+                "{}/{}/async(S={},{}{topo})",
+                latency.name(),
+                policy.name(),
+                p.max_staleness,
+                p.compute.name()
+            )
+        }
         None => format!("{}/{}", latency.name(), policy.name()),
     };
     let sim = SimSpec { latency: latency.clone(), policy: policy.clone(), pipeline };
@@ -280,17 +286,27 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 /// Parse the asynchronous-pipeline flags of `simulate`. `--async` (or an
 /// explicit `--staleness`) turns the pipelined executor on; the
-/// compute/NIC knobs refine it and are rejected without it.
+/// compute/NIC/topology knobs refine it and are rejected without it.
 fn pipeline_spec_from(args: &Args) -> Result<Option<PipelineSpec>> {
     let staleness = args.get_opt::<usize>("staleness")?;
     let flops_per_ms = args.get_opt::<f64>("flops-per-ms")?;
     let nic_gbps = args.get_opt::<f64>("nic-gbps")?;
     let nic_overhead = args.get_opt::<f64>("nic-overhead-ms")?;
+    let racks = args.get_opt::<usize>("racks")?;
+    let rack_gbps = args.get_opt::<f64>("rack-gbps")?;
+    let rack_overhead = args.get_opt::<f64>("rack-overhead-ms")?;
     if !args.has("async") && staleness.is_none() {
-        if flops_per_ms.is_some() || nic_gbps.is_some() || nic_overhead.is_some() {
+        if flops_per_ms.is_some()
+            || nic_gbps.is_some()
+            || nic_overhead.is_some()
+            || racks.is_some()
+            || rack_gbps.is_some()
+            || rack_overhead.is_some()
+        {
             return Err(Error::Config(
-                "--flops-per-ms / --nic-gbps / --nic-overhead-ms need the pipelined \
-                 executor: add --async (or --staleness S)"
+                "--flops-per-ms / --nic-gbps / --nic-overhead-ms / --racks / --rack-gbps \
+                 / --rack-overhead-ms need the pipelined executor: add --async (or \
+                 --staleness S)"
                     .into(),
             ));
         }
@@ -301,13 +317,34 @@ fn pipeline_spec_from(args: &Args) -> Result<Option<PipelineSpec>> {
             "--nic-overhead-ms refines the NIC model: add --nic-gbps F".into(),
         ));
     }
+    if (racks.is_some() || rack_gbps.is_some() || rack_overhead.is_some())
+        && nic_gbps.is_none()
+    {
+        return Err(Error::Config(
+            "a rack topology prices transfers on the master link: add --nic-gbps F".into(),
+        ));
+    }
+    if (rack_gbps.is_some() || rack_overhead.is_some()) && racks.unwrap_or(1) <= 1 {
+        return Err(Error::Config(
+            "--rack-gbps / --rack-overhead-ms need a hierarchy: add --racks N (N > 1)"
+                .into(),
+        ));
+    }
     let compute = match flops_per_ms {
         Some(f) => ComputeModel::FlopScaled { flops_per_ms: f },
         None => ComputeModel::Opaque,
     };
-    let link = nic_gbps
-        .map(|g| LinkModel { gbps: g, overhead_ms: nic_overhead.unwrap_or(0.01) });
-    Ok(Some(PipelineSpec { max_staleness: staleness.unwrap_or(1), compute, link }))
+    let topology = nic_gbps.map(|g| {
+        let master = LinkModel { gbps: g, overhead_ms: nic_overhead.unwrap_or(0.01) };
+        // The rack NIC defaults to the master link's parameters; --racks
+        // 1 (or unset) is the flat single-rack configuration.
+        let rack = LinkModel {
+            gbps: rack_gbps.unwrap_or(master.gbps),
+            overhead_ms: rack_overhead.unwrap_or(master.overhead_ms),
+        };
+        Topology::hierarchical(racks.unwrap_or(1), rack, master)
+    });
+    Ok(Some(PipelineSpec { max_staleness: staleness.unwrap_or(1), compute, topology }))
 }
 
 fn cmd_fig(args: &Args, which: usize) -> Result<()> {

@@ -24,10 +24,19 @@
 //!   masks, and θ-trajectory (pinned in `tests/integration_sim.rs`);
 //! * underneath, the opaque per-task latency draw can be replaced by a
 //!   flop-aware [`ComputeModel`] (per-worker slowdown × the scheme's
-//!   actual per-task flops) composed with a shared-link [`LinkModel`]
-//!   (broadcast and response transfers serialize on the master NIC, so
-//!   arrival order emerges from payload bytes rather than being
-//!   sampled).
+//!   actual per-task flops) composed with a network [`Topology`]:
+//!   either the flat configuration — every θ unicast and response
+//!   transfer serializes on the master NIC, so arrival order emerges
+//!   from payload bytes rather than being sampled — or a hierarchical
+//!   per-rack network where θ fans out per rack and responses queue
+//!   twice (rack NIC FIFO, then master FIFO);
+//! * every dispatched task carries a transfer-aware ETA of its master
+//!   arrival (compute-done → rack hop → master hop, refined to exact
+//!   times as hops are scheduled; unscheduled hops are priced at their
+//!   unqueued service time), so a *cancelled* task feeds the deadline
+//!   policy the same latency definition an *arrived* task does — a
+//!   compute-only feed would bias adaptive budgets low under
+//!   contention.
 //!
 //! Deadline policies are evaluated through
 //! [`DeadlineState::cutoff_pipelined`], which scales count cuts to the
@@ -49,6 +58,7 @@ use crate::runtime::ComputeBackend;
 
 use super::deadline::{Cutoff, DeadlinePolicy, DeadlineState};
 use super::event::{EventKind, TaskEventQueue};
+use super::topology::{LinkModel, Topology, TopologyState};
 use super::{compute_into_slot, mirror_step};
 
 /// Staleness bounds past this are almost certainly configuration
@@ -95,32 +105,6 @@ impl ComputeModel {
     }
 }
 
-/// The master's shared NIC: every θ unicast and every response transfer
-/// serializes on one link, so per-step communication time — and response
-/// *arrival order* — emerges from payload bytes and contention instead
-/// of being sampled. (Distinct from [`crate::config::CommModel`], which
-/// adds a closed-form per-step cost without modelling contention; leave
-/// `RunConfig::comm` at `None` when a link model is active.)
-#[derive(Debug, Clone, Copy)]
-pub struct LinkModel {
-    /// Link bandwidth (Gbit/s).
-    pub gbps: f64,
-    /// Fixed per-message overhead (ms).
-    pub overhead_ms: f64,
-}
-
-impl LinkModel {
-    /// Commodity defaults: 1 Gbit/s, 10 µs per-message overhead.
-    pub fn gigabit() -> Self {
-        LinkModel { gbps: 1.0, overhead_ms: 0.01 }
-    }
-
-    /// Time (ms) the link is busy shipping one `bytes`-sized message.
-    pub fn transfer_ms(&self, bytes: usize) -> f64 {
-        self.overhead_ms + bytes as f64 * 8.0 / (self.gbps * 1e9) * 1e3
-    }
-}
-
 /// Per-worker task costs the pipelined simulator prices compute and
 /// communication with; derive from a scheme via [`TaskCosts::of`].
 #[derive(Debug, Clone)]
@@ -159,20 +143,26 @@ pub struct AsyncSimConfig {
     pub max_staleness: usize,
     /// Compute-time model.
     pub compute: ComputeModel,
-    /// Master-NIC contention model (`None` = transfers are free and
-    /// instantaneous, the synchronous simulator's semantics).
-    pub link: Option<LinkModel>,
+    /// Network contention model (`None` = transfers are free and
+    /// instantaneous, the synchronous simulator's semantics). The flat
+    /// [`Topology`] serializes everything on the master NIC; the
+    /// hierarchical one adds per-rack NICs feeding it. (Distinct from
+    /// [`crate::config::CommModel`], which adds a closed-form per-step
+    /// cost without modelling contention; leave `RunConfig::comm` at
+    /// `None` when a topology is active.)
+    pub topology: Option<Topology>,
 }
 
 impl AsyncSimConfig {
-    /// Opaque compute, no link — the pure pipelining configuration.
+    /// Opaque compute, free transfers — the pure pipelining
+    /// configuration.
     pub fn new(latency: LatencyModel, policy: DeadlinePolicy, max_staleness: usize) -> Self {
         AsyncSimConfig {
             latency,
             policy,
             max_staleness,
             compute: ComputeModel::Opaque,
-            link: None,
+            topology: None,
         }
     }
 
@@ -182,15 +172,27 @@ impl AsyncSimConfig {
         self
     }
 
-    /// Builder-style link model.
-    pub fn with_link(mut self, link: LinkModel) -> Self {
-        self.link = Some(link);
+    /// Builder-style flat master link — sugar for
+    /// [`AsyncSimConfig::with_topology`] over [`Topology::flat`].
+    pub fn with_link(self, link: LinkModel) -> Self {
+        self.with_topology(Topology::flat(link))
+    }
+
+    /// Builder-style network topology.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = Some(topology);
         self
     }
 
-    /// Label for reports: `latency/policy/S=..`.
+    /// Label for reports: `latency/policy/S=..`, plus the rack count
+    /// when the topology is hierarchical.
     pub fn label(&self) -> String {
-        format!("{}/{}/S={}", self.latency.name(), self.policy.name(), self.max_staleness)
+        let base =
+            format!("{}/{}/S={}", self.latency.name(), self.policy.name(), self.max_staleness);
+        match &self.topology {
+            Some(t) if !t.is_flat() => format!("{base}/{}", t.label()),
+            _ => base,
+        }
     }
 }
 
@@ -203,10 +205,12 @@ struct Task {
     version: usize,
     /// Master-side dispatch time (the broadcast instant of `version`).
     start_ms: f64,
-    /// Expected master arrival: exact without a link; with a link it is
-    /// the compute-done time until the response transfer is scheduled,
-    /// then the actual arrival. Used for the oracle latency fed to the
-    /// deadline policy when the task is cancelled.
+    /// Expected master arrival, always transfer-aware: at dispatch it is
+    /// compute-done plus every remaining hop's unqueued service time,
+    /// then it is refined to the exact time as each hop (rack uplink,
+    /// master link) is actually scheduled. This is the oracle latency
+    /// fed to the deadline policy when the task is cancelled, so
+    /// cancelled and arrived tasks observe the same latency definition.
     eta_ms: f64,
 }
 
@@ -235,9 +239,8 @@ pub struct AsyncSimCluster<'a> {
     mirror: Option<StragglerSampler>,
     max_staleness: usize,
     compute: ComputeModel,
-    link: Option<LinkModel>,
-    /// The link-busy cursor: transfers serialize after this instant.
-    link_free_ms: f64,
+    /// Network busy cursors (`None` = free instantaneous transfers).
+    net: Option<TopologyState>,
     queue: TaskEventQueue,
     /// Per-worker in-flight task (`None` = idle, restarts at the next
     /// broadcast).
@@ -274,7 +277,8 @@ impl<'a> AsyncSimCluster<'a> {
         let w = payloads.len();
         if costs.flops.len() != w || costs.response_bytes.len() != w {
             return Err(Error::Config(format!(
-                "task costs cover {}/{} workers but the cluster has {w}",
+                "task costs must cover the cluster's {w} workers: flops covers {} \
+                 worker(s), response_bytes covers {} worker(s)",
                 costs.flops.len(),
                 costs.response_bytes.len()
             )));
@@ -292,22 +296,19 @@ impl<'a> AsyncSimCluster<'a> {
                 )));
             }
         }
-        if let Some(l) = sim.link {
-            let gbps_ok = l.gbps.is_finite() && l.gbps > 0.0;
-            let overhead_ok = l.overhead_ms.is_finite() && l.overhead_ms >= 0.0;
-            if !gbps_ok || !overhead_ok {
-                return Err(Error::Config(format!(
-                    "link model needs gbps > 0 and overhead >= 0, got {l:?}"
-                )));
+        let net = match &sim.topology {
+            Some(topo) => {
+                if cfg.comm.is_some() {
+                    return Err(Error::Config(
+                        "RunConfig::comm and the NIC topology both price communication — \
+                         set comm to None when a topology is active (it would double-count)"
+                            .into(),
+                    ));
+                }
+                Some(TopologyState::new(topo.clone(), w)?)
             }
-            if cfg.comm.is_some() {
-                return Err(Error::Config(
-                    "RunConfig::comm and the NIC link model both price communication — \
-                     set comm to None when a link model is active (it would double-count)"
-                        .into(),
-                ));
-            }
-        }
+            None => None,
+        };
         let mirror = if matches!(sim.policy, DeadlinePolicy::MirrorStraggler) {
             Some(cfg.straggler.sampler())
         } else {
@@ -322,8 +323,7 @@ impl<'a> AsyncSimCluster<'a> {
             mirror,
             max_staleness: sim.max_staleness,
             compute: sim.compute,
-            link: sim.link,
-            link_free_ms: 0.0,
+            net,
             queue: TaskEventQueue::new(),
             inflight: vec![None; w],
             next_task_id: 0,
@@ -352,6 +352,13 @@ impl<'a> AsyncSimCluster<'a> {
     /// master would have discarded).
     pub fn stale_applied_total(&self) -> u64 {
         self.stale_applied_total
+    }
+
+    /// The deadline policy's observed-latency window (oracle-feed
+    /// introspection: regression tests pin that cancelled and arrived
+    /// tasks feed the same transfer-aware latency definition).
+    pub fn deadline_observations(&self) -> &[f64] {
+        self.deadline.observations()
     }
 }
 
@@ -404,6 +411,9 @@ impl StepExecutor for AsyncSimCluster<'_> {
         //    laggards simply ignore their draw. Idle workers (re)start.
         let mut lat = std::mem::take(&mut self.lat_buf);
         self.latency.sample_into(w, &mut lat);
+        if let Some(net) = self.net.as_mut() {
+            net.begin_window();
+        }
         let mut fresh_live = 0usize;
         for (j, &draw) in lat.iter().enumerate() {
             if self.inflight[j].is_some() {
@@ -413,25 +423,25 @@ impl StepExecutor for AsyncSimCluster<'_> {
             fresh_live += 1;
             let id = self.next_task_id;
             self.next_task_id += 1;
-            // With a link, the θ unicast to this worker serializes on
-            // the master NIC; compute starts when the transfer lands.
-            let compute_start = match self.link {
-                Some(l) => {
-                    let s = self.link_free_ms.max(self.now_ms);
-                    self.link_free_ms = s + l.transfer_ms(self.costs.broadcast_bytes);
-                    self.link_free_ms
-                }
+            // With a topology, θ reaches this worker through the network
+            // (flat: a serialized master unicast; hierarchical: one
+            // master relay per rack, then a rack-NIC unicast); compute
+            // starts when the transfer lands.
+            let compute_start = match self.net.as_mut() {
+                Some(net) => net.unicast_theta(j, self.now_ms, self.costs.broadcast_bytes),
                 None => self.now_ms,
             };
             let done = compute_start + self.compute.task_ms(self.costs.flops[j], draw);
-            let kind = if self.link.is_some() {
-                EventKind::ComputeDone
-            } else {
-                EventKind::Arrival
+            let (kind, eta) = match self.net.as_ref() {
+                Some(net) => (
+                    EventKind::ComputeDone,
+                    net.eta_at_dispatch(done, self.costs.response_bytes[j]),
+                ),
+                None => (EventKind::Arrival, done),
             };
             self.queue.push(done, j, id, kind);
             self.inflight[j] =
-                Some(Task { id, version: t, start_ms: self.now_ms, eta_ms: done });
+                Some(Task { id, version: t, start_ms: self.now_ms, eta_ms: eta });
         }
         self.lat_buf = lat;
         debug_assert!(self.inflight.iter().all(|x| x.is_some()));
@@ -493,18 +503,31 @@ impl StepExecutor for AsyncSimCluster<'_> {
                 _ => continue,
             };
             match ev.kind {
-                EventKind::ComputeDone => {
-                    // The response enters the master link; transfers are
-                    // served FIFO in readiness order, so arrival order
+                EventKind::ComputeDone | EventKind::RackDone => {
+                    // The response advances one network hop; each hop
+                    // serves FIFO in readiness order, so arrival order
                     // emerges from payload bytes and contention.
-                    let l = self.link.expect("compute-done events only exist with a link");
-                    let start = self.link_free_ms.max(ev.time_ms);
-                    let arrival = start + l.transfer_ms(self.costs.response_bytes[ev.worker]);
-                    self.link_free_ms = arrival;
+                    // Hierarchical racks insert an uplink hop
+                    // (ComputeDone → RackDone) before the master link;
+                    // everything else queues straight onto the master.
+                    let net = self
+                        .net
+                        .as_mut()
+                        .expect("transfer events only exist with a topology");
+                    let bytes = self.costs.response_bytes[ev.worker];
+                    let (at, eta, kind) =
+                        if ev.kind == EventKind::ComputeDone && net.hierarchical() {
+                            let rack_done =
+                                net.enqueue_rack_uplink(ev.worker, ev.time_ms, bytes);
+                            (rack_done, net.eta_after_rack(rack_done, bytes), EventKind::RackDone)
+                        } else {
+                            let arrival = net.enqueue_master(ev.time_ms, bytes);
+                            (arrival, arrival, EventKind::Arrival)
+                        };
                     if let Some(task) = self.inflight[ev.worker].as_mut() {
-                        task.eta_ms = arrival;
+                        task.eta_ms = eta;
                     }
-                    self.queue.push(arrival, ev.worker, ev.task, EventKind::Arrival);
+                    self.queue.push(at, ev.worker, ev.task, kind);
                 }
                 EventKind::Arrival => {
                     // Oracle policy feed, exactly as in the synchronous
@@ -621,13 +644,36 @@ mod tests {
     }
 
     #[test]
-    fn link_model_arithmetic() {
-        let l = LinkModel { gbps: 1.0, overhead_ms: 0.1 };
-        // 125 KB over 1 Gbit/s = 1 ms, plus overhead.
-        assert!((l.transfer_ms(125_000) - 1.1).abs() < 1e-9);
-        assert!((l.transfer_ms(0) - 0.1).abs() < 1e-12);
-        let g = LinkModel::gigabit();
-        assert_eq!(g.gbps, 1.0);
+    fn task_costs_mismatch_reports_each_vector_against_cluster_size() {
+        // Regression for the old message, which interpolated the two
+        // vector lengths as if they were a covered/total fraction.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 23);
+        let cfg = RunConfig::default();
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        let full = TaskCosts::of(&s);
+        let short = TaskCosts {
+            flops: vec![1; 8],
+            response_bytes: full.response_bytes.clone(),
+            broadcast_bytes: full.broadcast_bytes,
+        };
+        let err = AsyncSimCluster::new(
+            s.payloads(),
+            short,
+            backend,
+            &cfg,
+            &AsyncSimConfig::new(
+                LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 5 },
+                DeadlinePolicy::WaitForAll,
+                0,
+            ),
+        )
+        .err()
+        .expect("a flops-only mismatch must be rejected");
+        let msg = err.to_string();
+        assert!(msg.contains("40 workers"), "{msg}");
+        assert!(msg.contains("flops covers 8"), "{msg}");
+        assert!(msg.contains("response_bytes covers 40"), "{msg}");
     }
 
     #[test]
@@ -916,5 +962,71 @@ mod tests {
         );
         let l = sim.label();
         assert!(l.contains("pareto") && l.contains("wait-k(56)") && l.contains("S=4"), "{l}");
+        // Hierarchical topologies show up in the label; flat stays as
+        // before.
+        let hier = sim
+            .clone()
+            .with_topology(Topology::hierarchical(4, LinkModel::gigabit(), LinkModel::gigabit()));
+        assert!(hier.label().contains("racks=4"), "{}", hier.label());
+        let flat = sim.with_link(LinkModel::gigabit());
+        assert!(!flat.label().contains("racks"), "{}", flat.label());
+    }
+
+    #[test]
+    fn rack_fan_out_shortens_windows_on_a_slow_master() {
+        // A slow master NIC (1 ms per message) with fast rack NICs: the
+        // flat topology pays 40 serialized θ unicasts on the master,
+        // the 4-rack one only 4 relays (the per-rack fan-out runs in
+        // parallel on the rack NICs). Responses serialize on the master
+        // either way, so the hierarchical windows must be shorter by
+        // roughly the broadcast difference, every step.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 27);
+        let cfg = RunConfig { max_steps: 5, record_trace: true, ..Default::default() };
+        let latency = LatencyModel::Trace { table: Arc::new(vec![vec![1.0]]) };
+        let master = LinkModel { gbps: 1e6, overhead_ms: 1.0 };
+        let rack = LinkModel { gbps: 1e6, overhead_ms: 0.01 };
+        let flat = run_simulated_async(
+            &s,
+            &p,
+            &cfg,
+            &AsyncSimConfig::new(latency.clone(), DeadlinePolicy::WaitForAll, 0)
+                .with_topology(Topology::flat(master)),
+        )
+        .unwrap();
+        let hier = run_simulated_async(
+            &s,
+            &p,
+            &cfg,
+            &AsyncSimConfig::new(latency, DeadlinePolicy::WaitForAll, 0)
+                .with_topology(Topology::hierarchical(4, rack, master)),
+        )
+        .unwrap();
+        for (a, b) in flat.trace.iter().zip(&hier.trace) {
+            let (fa, hi) = (a.collect_ms.unwrap(), b.collect_ms.unwrap());
+            // Flat broadcast: 40 master messages; hierarchical: 4.
+            // Responses cost ~40 master messages in both.
+            assert!(
+                hi + 30.0 < fa,
+                "step {}: hierarchical window {hi} not ~36 ms shorter than flat {fa}",
+                a.t
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_racks_run_converges() {
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 29);
+        let cfg = RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() };
+        let sim = AsyncSimConfig::new(
+            LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 31 },
+            DeadlinePolicy::WaitForK(35),
+            2,
+        )
+        .with_topology(Topology::hierarchical(4, LinkModel::gigabit(), LinkModel::gigabit()));
+        let r = run_simulated_async(&s, &p, &cfg, &sim).unwrap();
+        assert!(r.converged, "{}", r.summary());
+        assert!(r.totals.collect_ms > 0.0);
     }
 }

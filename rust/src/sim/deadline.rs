@@ -180,6 +180,13 @@ impl DeadlineState {
         self.window.len()
     }
 
+    /// The observed-latency window contents (oracle-feed introspection;
+    /// regression tests pin what cancelled vs arrived tasks feed). Ring
+    /// order: insertion order until the window wraps, then rotated.
+    pub fn observations(&self) -> &[f64] {
+        &self.window
+    }
+
     /// The `q`-quantile of the observation window (nearest-rank, via
     /// O(window) selection — this runs every step).
     fn quantile(&mut self, q: f64) -> f64 {

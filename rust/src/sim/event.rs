@@ -97,9 +97,12 @@ impl EventQueue {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
     /// The worker finished its compute; the response is ready to enter
-    /// the master link (only scheduled when a link model is active —
-    /// without one, completion and arrival coincide).
+    /// the network (only scheduled when a topology is active — without
+    /// one, completion and arrival coincide).
     ComputeDone,
+    /// The response cleared its rack's uplink NIC and is ready to enter
+    /// the master link (hierarchical topologies only).
+    RackDone,
     /// The response reached the master.
     Arrival,
 }
@@ -293,5 +296,8 @@ mod tests {
         let e = q.pop().unwrap();
         assert_eq!((e.worker, e.task, e.kind), (7, 42, EventKind::ComputeDone));
         assert_eq!(e.time_ms, 1.0);
+        q.push(2.0, 8, 43, EventKind::RackDone);
+        let e = q.pop().unwrap();
+        assert_eq!((e.worker, e.task, e.kind), (8, 43, EventKind::RackDone));
     }
 }

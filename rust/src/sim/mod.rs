@@ -29,17 +29,20 @@
 //! [`async_exec`] lifts the synchronous step barrier: an asynchronous
 //! pipelined master broadcasts the next iterate while laggards keep
 //! computing, applies their responses under a bounded-staleness rule,
-//! and can price tasks with a flop-aware compute model plus a shared-NIC
-//! contention model. With max staleness 0 it reproduces [`SimCluster`]
-//! bit for bit.
+//! and can price tasks with a flop-aware compute model plus a network
+//! [`topology::Topology`] — the flat master-NIC contention model, or
+//! hierarchical per-rack NICs whose uplinks feed the master link. With
+//! max staleness 0 it reproduces [`SimCluster`] bit for bit.
 
 pub mod async_exec;
 pub mod deadline;
 pub mod event;
+pub mod topology;
 
 pub use async_exec::{
-    run_simulated_async, AsyncSimCluster, AsyncSimConfig, ComputeModel, LinkModel, TaskCosts,
+    run_simulated_async, AsyncSimCluster, AsyncSimConfig, ComputeModel, TaskCosts,
 };
+pub use topology::{LinkModel, Topology};
 
 use std::sync::Arc;
 

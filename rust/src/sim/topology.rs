@@ -1,0 +1,404 @@
+//! Network topologies for the pipelined simulator: who queues where.
+//!
+//! The original contention model put every worker directly on the
+//! master's NIC (a single flat [`LinkModel`]): θ unicasts and response
+//! transfers serialize on one busy cursor, and arrival order emerges
+//! from payload bytes. [`Topology`] generalizes that to hierarchical
+//! per-rack networks — workers are block-assigned to racks, each rack
+//! has its own NIC (bandwidth + per-message overhead), and the rack
+//! uplinks feed the shared master link:
+//!
+//! * θ broadcasts fan out per rack: the master ships **one** copy per
+//!   rack over its link and the rack NIC unicasts it to the rack's
+//!   (re)starting workers — instead of `w` master unicasts;
+//! * responses queue **twice**: FIFO on their rack's NIC, then FIFO on
+//!   the master link ([`super::event::EventKind::RackDone`] marks the
+//!   intermediate hop);
+//! * a single rack *is* the flat configuration — its top-of-rack switch
+//!   is the master's switch, so pricing a rack hop on top of the master
+//!   hop would double-count one physical link.
+//!   [`Topology::hierarchical`] with one rack therefore normalizes to
+//!   [`Topology::flat`], which keeps the flat `LinkModel` semantics
+//!   bit-identical (pinned in `tests/integration_topology.rs`).
+//!
+//! [`TopologyState`] owns the busy cursors and the transfer arithmetic:
+//! the pipelined executor asks it where a message queues and when it
+//! lands. It also prices the *service-time ETA* every task carries from
+//! dispatch onward (compute-done → rack hop → master hop), refined to
+//! the exact time as each hop is actually scheduled — so a cancelled
+//! task feeds the deadline policy the same transfer-aware latency
+//! definition an arrived task does, instead of a compute-only time that
+//! biases adaptive budgets low under contention. (Hops not yet
+//! scheduled are priced at their unqueued service time: the ETA of a
+//! task cancelled mid-flight is exact on every scheduled hop and a
+//! lower bound on the queueing of the remaining ones.)
+
+use crate::error::{Error, Result};
+
+/// A serializing network link: every message occupies it for
+/// `overhead + bytes / bandwidth`, FIFO in readiness order.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Link bandwidth (Gbit/s).
+    pub gbps: f64,
+    /// Fixed per-message overhead (ms).
+    pub overhead_ms: f64,
+}
+
+impl LinkModel {
+    /// Commodity defaults: 1 Gbit/s, 10 µs per-message overhead.
+    pub fn gigabit() -> Self {
+        LinkModel { gbps: 1.0, overhead_ms: 0.01 }
+    }
+
+    /// Time (ms) the link is busy shipping one `bytes`-sized message.
+    pub fn transfer_ms(&self, bytes: usize) -> f64 {
+        self.overhead_ms + bytes as f64 * 8.0 / (self.gbps * 1e9) * 1e3
+    }
+
+    /// Reject degenerate parameters with a message naming the link.
+    pub(crate) fn validate(&self, what: &str) -> Result<()> {
+        let gbps_ok = self.gbps.is_finite() && self.gbps > 0.0;
+        let overhead_ok = self.overhead_ms.is_finite() && self.overhead_ms >= 0.0;
+        if !gbps_ok || !overhead_ok {
+            return Err(Error::Config(format!(
+                "{what} needs gbps > 0 and overhead >= 0, got {self:?}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Where the workers sit relative to the master NIC.
+///
+/// Flat: every worker hangs directly off the master link. Hierarchical:
+/// workers are partitioned into contiguous, near-even rack blocks
+/// (worker `j` of `w` sits in rack `j·racks/w`); each rack's NIC is a
+/// single half-duplex cursor shared by its θ fan-out and its response
+/// uplink, exactly as the master link always was.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Number of racks (≥ 1; `1` = flat).
+    racks: usize,
+    /// Per-rack NIC; `None` iff the topology is flat.
+    rack: Option<LinkModel>,
+    /// The master's shared link; rack uplinks (or, flat, the workers
+    /// themselves) feed it.
+    master: LinkModel,
+}
+
+impl Topology {
+    /// Every worker directly on the master link — the flat `LinkModel`
+    /// configuration.
+    pub fn flat(master: LinkModel) -> Topology {
+        Topology { racks: 1, rack: None, master }
+    }
+
+    /// `racks` racks, each with its own `rack` NIC, uplinking into the
+    /// shared `master` link. A single rack collapses to
+    /// [`Topology::flat`]: its switch *is* the master switch, and the
+    /// `rack` NIC is dropped rather than double-counting the one
+    /// physical hop.
+    pub fn hierarchical(racks: usize, rack: LinkModel, master: LinkModel) -> Topology {
+        if racks == 1 {
+            Topology::flat(master)
+        } else {
+            Topology { racks, rack: Some(rack), master }
+        }
+    }
+
+    /// Number of racks (1 = flat).
+    pub fn racks(&self) -> usize {
+        self.racks
+    }
+
+    /// Is this the flat single-rack configuration?
+    pub fn is_flat(&self) -> bool {
+        self.rack.is_none()
+    }
+
+    /// The master's shared link.
+    pub fn master(&self) -> &LinkModel {
+        &self.master
+    }
+
+    /// The per-rack NIC (`None` when flat).
+    pub fn rack_nic(&self) -> Option<&LinkModel> {
+        self.rack.as_ref()
+    }
+
+    /// Rack of worker `j` in a `w`-worker fleet: contiguous blocks whose
+    /// sizes differ by at most one.
+    pub fn rack_of(&self, j: usize, w: usize) -> usize {
+        debug_assert!(j < w);
+        j * self.racks / w
+    }
+
+    /// Short label for reports: `flat` or `racks=N`.
+    pub fn label(&self) -> String {
+        if self.is_flat() {
+            "flat".into()
+        } else {
+            format!("racks={}", self.racks)
+        }
+    }
+
+    /// Reject configurations that cannot drive a `w`-worker cluster.
+    pub fn validate(&self, w: usize) -> Result<()> {
+        if self.racks == 0 {
+            return Err(Error::Config("topology needs at least one rack".into()));
+        }
+        if self.racks > w {
+            return Err(Error::Config(format!(
+                "topology has {} racks but only {w} workers (empty racks are a \
+                 configuration mistake)",
+                self.racks
+            )));
+        }
+        self.master.validate("master link")?;
+        if let Some(rack) = &self.rack {
+            rack.validate("rack NIC")?;
+        }
+        Ok(())
+    }
+}
+
+/// The mutable network state of one simulated run: the master link's
+/// and every rack NIC's busy cursor, plus the per-window memo of which
+/// racks already received this window's θ copy.
+///
+/// All methods keep the FIFO-in-readiness-order discipline: a transfer
+/// starts at `max(cursor, ready)` and occupies the link for the
+/// message's [`LinkModel::transfer_ms`].
+///
+/// One deliberate exception: a window's θ fan-out is priced eagerly at
+/// the broadcast instant, so on a rack NIC it takes precedence over a
+/// laggard response whose compute finishes while the rack's θ relay is
+/// still in flight on the master link (control plane before data
+/// plane). On the master link this is exact — the master's own
+/// broadcasts really are ready first — and it is what keeps the
+/// single-rack configuration bit-identical to the flat link. Making θ
+/// delivery event-driven, so an idle rack NIC can ship a
+/// just-finished laggard response ahead of the incoming fan-out, is a
+/// ROADMAP item.
+#[derive(Debug)]
+pub struct TopologyState {
+    topo: Topology,
+    /// Worker → rack (precomputed contiguous blocks).
+    rack_of: Vec<usize>,
+    /// Per-rack NIC busy cursor.
+    rack_free: Vec<f64>,
+    /// This window's θ-copy arrival at each rack (`NAN` = not relayed
+    /// yet this window). Only meaningful when hierarchical.
+    rack_theta: Vec<f64>,
+    /// Master-link busy cursor.
+    master_free: f64,
+}
+
+impl TopologyState {
+    /// Validate `topo` against the fleet size and build idle cursors.
+    pub fn new(topo: Topology, workers: usize) -> Result<TopologyState> {
+        topo.validate(workers)?;
+        let racks = topo.racks();
+        Ok(TopologyState {
+            rack_of: (0..workers).map(|j| topo.rack_of(j, workers)).collect(),
+            rack_free: vec![0.0; racks],
+            rack_theta: vec![f64::NAN; racks],
+            topo,
+            master_free: 0.0,
+        })
+    }
+
+    /// Does a response pay a rack hop before the master hop?
+    pub fn hierarchical(&self) -> bool {
+        !self.topo.is_flat()
+    }
+
+    /// Start a broadcast window: forget which racks hold this window's
+    /// θ copy (the master re-relays on first use per rack).
+    pub fn begin_window(&mut self) {
+        if self.hierarchical() {
+            self.rack_theta.fill(f64::NAN);
+        }
+    }
+
+    /// Ship this window's θ to worker `j`, returning the instant the
+    /// worker can start computing. Flat: one master unicast per worker.
+    /// Hierarchical: the first worker of a rack pays the master→rack
+    /// relay (one `bytes` copy on the master link, memoized for the
+    /// window); every worker then pays its rack NIC unicast.
+    pub fn unicast_theta(&mut self, j: usize, now: f64, bytes: usize) -> f64 {
+        if self.topo.is_flat() {
+            return self.enqueue_master(now, bytes);
+        }
+        let r = self.rack_of[j];
+        if self.rack_theta[r].is_nan() {
+            self.rack_theta[r] = self.enqueue_master(now, bytes);
+        }
+        self.enqueue_rack_uplink(j, self.rack_theta[r], bytes)
+    }
+
+    /// Queue a `bytes`-sized message for worker `j`'s rack NIC
+    /// (hierarchical only) — the half-duplex cursor shared by the rack's
+    /// θ fan-out and its response uplink — returning when the message
+    /// clears the NIC.
+    pub fn enqueue_rack_uplink(&mut self, j: usize, ready: f64, bytes: usize) -> f64 {
+        let rack = self.topo.rack.expect("rack uplink only exists in hierarchical topologies");
+        let r = self.rack_of[j];
+        let start = self.rack_free[r].max(ready);
+        self.rack_free[r] = start + rack.transfer_ms(bytes);
+        self.rack_free[r]
+    }
+
+    /// Queue a `bytes`-sized message on the master link, returning its
+    /// arrival at the master.
+    pub fn enqueue_master(&mut self, ready: f64, bytes: usize) -> f64 {
+        let start = self.master_free.max(ready);
+        self.master_free = start + self.topo.master.transfer_ms(bytes);
+        self.master_free
+    }
+
+    /// Service-time ETA of a task's master arrival, as priced at
+    /// dispatch: compute-done plus every remaining hop's unqueued
+    /// transfer time. The executor refines it to exact times as hops
+    /// are scheduled; if the task is cancelled first, this is the
+    /// transfer-aware latency the deadline policy observes.
+    pub fn eta_at_dispatch(&self, compute_done: f64, bytes: usize) -> f64 {
+        let rack_ms = match &self.topo.rack {
+            Some(rack) => rack.transfer_ms(bytes),
+            None => 0.0,
+        };
+        compute_done + rack_ms + self.topo.master.transfer_ms(bytes)
+    }
+
+    /// Service-time ETA once the rack hop is scheduled: rack egress plus
+    /// the master hop's unqueued transfer time.
+    pub fn eta_after_rack(&self, rack_done: f64, bytes: usize) -> f64 {
+        rack_done + self.topo.master.transfer_ms(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(overhead: f64) -> LinkModel {
+        // Bandwidth high enough that the byte term is negligible: the
+        // per-message cost is the overhead, which keeps hand arithmetic
+        // readable.
+        LinkModel { gbps: 1e6, overhead_ms: overhead }
+    }
+
+    #[test]
+    fn link_model_arithmetic() {
+        let l = LinkModel { gbps: 1.0, overhead_ms: 0.1 };
+        // 125 KB over 1 Gbit/s = 1 ms, plus overhead.
+        assert!((l.transfer_ms(125_000) - 1.1).abs() < 1e-9);
+        assert!((l.transfer_ms(0) - 0.1).abs() < 1e-12);
+        let g = LinkModel::gigabit();
+        assert_eq!(g.gbps, 1.0);
+    }
+
+    #[test]
+    fn single_rack_normalizes_to_flat() {
+        let t = Topology::hierarchical(1, ms(9.0), ms(1.0));
+        assert!(t.is_flat());
+        assert_eq!(t.racks(), 1);
+        assert!(t.rack_nic().is_none(), "one rack's switch IS the master switch");
+        assert_eq!(t.label(), "flat");
+        assert_eq!(Topology::hierarchical(4, ms(9.0), ms(1.0)).label(), "racks=4");
+    }
+
+    #[test]
+    fn rack_assignment_is_contiguous_and_near_even() {
+        let t = Topology::hierarchical(4, ms(1.0), ms(1.0));
+        let w = 10;
+        let assign: Vec<usize> = (0..w).map(|j| t.rack_of(j, w)).collect();
+        // Contiguous non-decreasing blocks covering every rack.
+        assert!(assign.windows(2).all(|p| p[0] <= p[1]));
+        assert_eq!(assign[0], 0);
+        assert_eq!(*assign.last().unwrap(), 3);
+        for r in 0..4 {
+            let size = assign.iter().filter(|&&a| a == r).count();
+            assert!((2..=3).contains(&size), "rack {r} holds {size} of {w}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_configs() {
+        assert!(Topology { racks: 0, rack: None, master: ms(1.0) }.validate(8).is_err());
+        assert!(Topology::hierarchical(16, ms(1.0), ms(1.0)).validate(8).is_err());
+        assert!(Topology::flat(LinkModel { gbps: 0.0, overhead_ms: 0.0 }).validate(8).is_err());
+        assert!(Topology::hierarchical(
+            2,
+            LinkModel { gbps: 1.0, overhead_ms: -1.0 },
+            ms(1.0)
+        )
+        .validate(8)
+        .is_err());
+        assert!(Topology::hierarchical(4, ms(1.0), ms(1.0)).validate(8).is_ok());
+    }
+
+    #[test]
+    fn flat_unicasts_serialize_on_the_master_link() {
+        let mut s = TopologyState::new(Topology::flat(ms(2.0)), 3).unwrap();
+        s.begin_window();
+        let t0 = s.unicast_theta(0, 0.0, 0);
+        let t1 = s.unicast_theta(1, 0.0, 0);
+        let t2 = s.unicast_theta(2, 0.0, 0);
+        assert!((t0 - 2.0).abs() < 1e-9);
+        assert!((t1 - 4.0).abs() < 1e-9);
+        assert!((t2 - 6.0).abs() < 1e-9, "three unicasts serialize: {t2}");
+    }
+
+    #[test]
+    fn hierarchical_broadcast_relays_once_per_rack() {
+        // 4 workers on 2 racks; master hop 4 ms, rack hop 1 ms.
+        let mut s =
+            TopologyState::new(Topology::hierarchical(2, ms(1.0), ms(4.0)), 4).unwrap();
+        s.begin_window();
+        // Rack 0: one master relay (0→4), then rack unicasts 4→5, 5→6.
+        assert!((s.unicast_theta(0, 0.0, 0) - 5.0).abs() < 1e-9);
+        assert!((s.unicast_theta(1, 0.0, 0) - 6.0).abs() < 1e-9);
+        // Rack 1: its relay queues after rack 0's on the master (4→8),
+        // then its own rack NIC fans out 8→9, 9→10.
+        assert!((s.unicast_theta(2, 0.0, 0) - 9.0).abs() < 1e-9);
+        assert!((s.unicast_theta(3, 0.0, 0) - 10.0).abs() < 1e-9);
+        // A new window re-relays.
+        s.begin_window();
+        let t = s.unicast_theta(0, 20.0, 0);
+        // Master relay 20→24, rack unicast 24→25.
+        assert!((t - 25.0).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn responses_queue_twice_in_hierarchy() {
+        let mut s =
+            TopologyState::new(Topology::hierarchical(2, ms(1.0), ms(4.0)), 4).unwrap();
+        // Two rack-0 responses ready at 0: rack egress at 1 and 2.
+        let r0 = s.enqueue_rack_uplink(0, 0.0, 0);
+        let r1 = s.enqueue_rack_uplink(1, 0.0, 0);
+        assert!((r0 - 1.0).abs() < 1e-9);
+        assert!((r1 - 2.0).abs() < 1e-9);
+        // A rack-1 response does not contend with rack 0's NIC.
+        let r2 = s.enqueue_rack_uplink(3, 0.0, 0);
+        assert!((r2 - 1.0).abs() < 1e-9);
+        // All three then serialize on the master link.
+        let a0 = s.enqueue_master(r0, 0);
+        let a1 = s.enqueue_master(r2, 0);
+        let a2 = s.enqueue_master(r1, 0);
+        assert!((a0 - 5.0).abs() < 1e-9);
+        assert!((a1 - 9.0).abs() < 1e-9);
+        assert!((a2 - 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn etas_price_every_remaining_hop() {
+        let flat = TopologyState::new(Topology::flat(ms(2.0)), 4).unwrap();
+        assert!((flat.eta_at_dispatch(10.0, 0) - 12.0).abs() < 1e-9);
+        let hier =
+            TopologyState::new(Topology::hierarchical(2, ms(1.0), ms(4.0)), 4).unwrap();
+        assert!((hier.eta_at_dispatch(10.0, 0) - 15.0).abs() < 1e-9);
+        assert!((hier.eta_after_rack(11.0, 0) - 15.0).abs() < 1e-9);
+    }
+}

@@ -14,7 +14,8 @@ use moment_ldpc::data::{RegressionProblem, SynthConfig};
 use moment_ldpc::runtime::NativeBackend;
 use moment_ldpc::sim::deadline::DeadlinePolicy;
 use moment_ldpc::sim::{
-    run_simulated, run_simulated_async, AsyncSimCluster, AsyncSimConfig, SimConfig, TaskCosts,
+    run_simulated, run_simulated_async, AsyncSimCluster, AsyncSimConfig, LinkModel, SimConfig,
+    TaskCosts, Topology,
 };
 
 /// The acceptance criterion: for a fixed seed and FixedCount straggling,
@@ -306,6 +307,57 @@ fn async_staleness_recovers_persistent_laggard_work() {
     assert!(asy.converged, "{}", asy.summary());
     assert!(cluster.stale_applied_total() > 0, "laggard work must be applied stale");
     assert_eq!(cluster.cancelled_total(), 0, "2.5 ms responses always make the S=2 bound");
+}
+
+/// The PR-5 acceptance pin: the single-rack `Topology` (however it is
+/// spelled — `with_link`, `Topology::flat`, or a one-rack
+/// `Topology::hierarchical`, whose rack layer collapses because its
+/// switch IS the master switch) reproduces the flat `LinkModel`
+/// trajectory bit for bit: θ, masks, and the virtual clock.
+#[test]
+fn single_rack_topology_bit_identical_to_flat_link_model() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 17);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 8).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 3000,
+        record_trace: true,
+        ..Default::default()
+    };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 51 };
+    let master = LinkModel::gigabit();
+    // A deliberately absurd rack NIC: the one-rack normalization must
+    // drop it rather than price a second hop.
+    let odd_rack = LinkModel { gbps: 0.125, overhead_ms: 3.0 };
+    let mk = |topology: Topology| {
+        run_simulated_async(
+            &scheme,
+            &problem,
+            &cfg,
+            &AsyncSimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(35), 2)
+                .with_topology(topology),
+        )
+        .unwrap()
+    };
+    let via_link = run_simulated_async(
+        &scheme,
+        &problem,
+        &cfg,
+        &AsyncSimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(35), 2)
+            .with_link(master),
+    )
+    .unwrap();
+    let via_flat = mk(Topology::flat(master));
+    let via_one_rack = mk(Topology::hierarchical(1, odd_rack, master));
+    for (label, r) in [("flat topology", &via_flat), ("one-rack topology", &via_one_rack)] {
+        assert_eq!(via_link.theta, r.theta, "{label}: θ diverged");
+        assert_eq!(via_link.steps, r.steps, "{label}");
+        let view = |r: &moment_ldpc::coordinator::metrics::RunReport| -> Vec<(usize, Option<f64>)> {
+            r.trace.iter().map(|m| (m.stragglers, m.collect_ms)).collect()
+        };
+        assert_eq!(view(&via_link), view(r), "{label}: per-step trace diverged");
+    }
 }
 
 /// A recorded latency trace replayed through the simulator reproduces

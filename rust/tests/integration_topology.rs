@@ -1,0 +1,252 @@
+//! Integration tests for the hierarchical network topology: single-rack
+//! ≡ flat-link bit-identity, per-rack broadcast fan-out arithmetic, the
+//! rack-skew policy story, and the transfer-aware oracle feed (ROADMAP
+//! nit (a)): cancelled and arrived tasks must give the deadline policy
+//! the same latency definition.
+
+use std::sync::Arc;
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::run_with_executor;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::uncoded::UncodedScheme;
+use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::straggler::LatencyModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::runtime::NativeBackend;
+use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::{
+    run_simulated_async, AsyncSimCluster, AsyncSimConfig, LinkModel, TaskCosts, Topology,
+};
+
+/// Property: a single-rack `Topology` is bitwise-identical to the flat
+/// `LinkModel` configuration — across latency models, staleness bounds,
+/// and policies (including the quantile policy, whose observation
+/// stream exercises the transfer-aware ETA feed). One rack means one
+/// switch: the rack layer must collapse into the master link, not price
+/// a second hop.
+#[test]
+fn single_rack_topology_bitwise_identical_across_models_and_staleness() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 19);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 12).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 2500,
+        record_trace: true,
+        ..Default::default()
+    };
+    let master = LinkModel::gigabit();
+    // Absurd rack parameters that would wreck the trajectory if the
+    // one-rack normalization ever priced them.
+    let odd_rack = LinkModel { gbps: 0.125, overhead_ms: 3.0 };
+    let latencies = [
+        LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 41 },
+        LatencyModel::Pareto { scale_ms: 1.0, shape: 1.5, seed: 43 },
+        LatencyModel::Heterogeneous { shift_ms: 1.0, rate: 1.0, spread: 3.0, seed: 45 },
+    ];
+    let policies = [
+        DeadlinePolicy::WaitForK(35),
+        DeadlinePolicy::QuantileAdaptive { q: 0.9, slack: 1.5, window: 256 },
+    ];
+    for latency in &latencies {
+        for policy in &policies {
+            for s in [0usize, 2] {
+                let base = AsyncSimConfig::new(latency.clone(), policy.clone(), s);
+                let flat = run_simulated_async(
+                    &scheme,
+                    &problem,
+                    &cfg,
+                    &base.clone().with_link(master),
+                )
+                .unwrap();
+                let one_rack = run_simulated_async(
+                    &scheme,
+                    &problem,
+                    &cfg,
+                    &base.with_topology(Topology::hierarchical(1, odd_rack, master)),
+                )
+                .unwrap();
+                let tag = format!("{}/{}/S={s}", latency.name(), policy.name());
+                assert_eq!(flat.theta, one_rack.theta, "{tag}: θ diverged");
+                assert_eq!(flat.steps, one_rack.steps, "{tag}");
+                let view =
+                    |r: &moment_ldpc::coordinator::metrics::RunReport| -> Vec<(usize, Option<f64>)> {
+                        r.trace.iter().map(|m| (m.stragglers, m.collect_ms)).collect()
+                    };
+                assert_eq!(view(&flat), view(&one_rack), "{tag}: trace diverged");
+            }
+        }
+    }
+}
+
+/// Deterministic arithmetic pin of the hierarchical fan-out: with a 4 ms
+/// master hop and a 1 ms rack hop, 4 workers on 2 racks finish their
+/// wait-for-all window at 24 ms (2 master relays + parallel rack
+/// fan-outs + double-queued responses), where the flat configuration
+/// pays 4 serialized master unicasts and finishes at 32 ms.
+#[test]
+fn hierarchical_broadcast_fans_out_per_rack() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(16, 4), 3);
+    let scheme = UncodedScheme::new(&problem, 4).unwrap();
+    let cfg = RunConfig { max_steps: 1, record_trace: true, rel_tol: 0.0, ..Default::default() };
+    let latency = LatencyModel::Trace { table: Arc::new(vec![vec![1.0]]) };
+    // gbps high enough that per-message cost is the overhead.
+    let master = LinkModel { gbps: 1e6, overhead_ms: 4.0 };
+    let rack = LinkModel { gbps: 1e6, overhead_ms: 1.0 };
+
+    let hier = run_simulated_async(
+        &scheme,
+        &problem,
+        &cfg,
+        &AsyncSimConfig::new(latency.clone(), DeadlinePolicy::WaitForAll, 0)
+            .with_topology(Topology::hierarchical(2, rack, master)),
+    )
+    .unwrap();
+    let flat = run_simulated_async(
+        &scheme,
+        &problem,
+        &cfg,
+        &AsyncSimConfig::new(latency, DeadlinePolicy::WaitForAll, 0)
+            .with_topology(Topology::flat(master)),
+    )
+    .unwrap();
+    let h = hier.trace[0].collect_ms.unwrap();
+    let f = flat.trace[0].collect_ms.unwrap();
+    assert!((h - 24.0).abs() < 1e-3, "hierarchical window {h} != 24 ms");
+    assert!((f - 32.0).abs() < 1e-3, "flat window {f} != 32 ms");
+}
+
+/// The ROADMAP nit (a) regression: under an active topology, a task
+/// cancelled at the end of its window must feed the deadline policy the
+/// same transfer-aware latency it would have fed on arrival — not a
+/// compute-done time that omits the response transfer.
+///
+/// Deterministic scenario (4 uncoded workers, 1 ms per master message,
+/// worker 0 computes 10 ms, the rest 1 ms, quantile policy with
+/// q = 0.7 and slack 1.05):
+///
+/// * step 1 seeds the window waiting for everyone; worker 0's *arrival*
+///   latency is `10 + 2T ≈ 12` ms (θ unicast + compute + response
+///   transfer on an idle link);
+/// * every later step budgets `1.05 × 7T ≈ 7.35` ms, so worker 0 is
+///   cancelled before its compute even finishes — the biased feed would
+///   be `10 + T ≈ 11` ms (no response transfer);
+/// * the fixed feed prices the full path: every worker-0 observation,
+///   cancelled or arrived, is the same `10 + 2T ≈ 12` ms.
+#[test]
+fn cancelled_and_arrived_tasks_feed_the_same_latency_definition() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(16, 4), 5);
+    let scheme = UncodedScheme::new(&problem, 4).unwrap();
+    let cfg = RunConfig { max_steps: 6, record_trace: true, rel_tol: 0.0, ..Default::default() };
+    let latency = LatencyModel::Trace { table: Arc::new(vec![vec![10.0, 1.0, 1.0, 1.0]]) };
+    let sim = AsyncSimConfig::new(
+        latency,
+        DeadlinePolicy::QuantileAdaptive { q: 0.7, slack: 1.05, window: 64 },
+        0,
+    )
+    .with_link(LinkModel { gbps: 1000.0, overhead_ms: 1.0 });
+    let costs = TaskCosts::of(&scheme);
+    let mut cluster =
+        AsyncSimCluster::new(scheme.payloads(), costs, Arc::new(NativeBackend), &cfg, &sim)
+            .unwrap();
+    let r = run_with_executor(&scheme, &mut cluster, &problem, &cfg).unwrap();
+    assert_eq!(r.steps, 6);
+    assert!(!r.converged);
+    // Worker 0 is cancelled in every post-seed step.
+    assert_eq!(cluster.cancelled_total(), 5, "{}", r.summary());
+
+    let obs = cluster.deadline_observations();
+    assert_eq!(obs.len(), 24, "4 seed arrivals + 5 steps × (3 arrivals + 1 cancel)");
+    // Fast workers' arrival latencies: 5T/6T/7T.
+    let (fast, slow): (Vec<f64>, Vec<f64>) = obs.iter().copied().partition(|&v| v < 8.0);
+    assert_eq!(fast.len(), 18);
+    assert!(fast.iter().all(|&v| v > 4.5 && v < 7.6), "{fast:?}");
+    // Worker 0: one observed arrival (step 1) + five cancellations, all
+    // priced with the same transfer-aware definition ≈ 10 + 2T.
+    assert_eq!(slow.len(), 6);
+    for &v in &slow {
+        assert!(
+            v > 11.5 && v < 12.2,
+            "worker-0 feed {v} omits the response transfer (compute-only would be ≈ 11)"
+        );
+    }
+    let spread = slow.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - slow.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(
+        spread < 1e-6,
+        "cancelled vs arrived worker-0 feeds must agree to the ulp: spread {spread}"
+    );
+    // And the realized budgets track the transfer-aware quantile
+    // (1.05 × 7T ≈ 7.35 ms) instead of collapsing toward compute-only
+    // latencies.
+    for m in &r.trace[1..] {
+        let c = m.collect_ms.unwrap();
+        assert!((c - 7.35).abs() < 1e-2, "step {}: budget drifted to {c}", m.t);
+        assert_eq!(m.stragglers, 1, "step {}: only worker 0 misses", m.t);
+    }
+}
+
+/// Rack skew: one rack computes 3× slower than the rest. A wait-k
+/// policy that insists on 60 of 64 responses must wait for slow-rack
+/// *fresh* arrivals every window (≈ the slow compute time), while
+/// wait-fresh(48) closes windows on the fast racks and absorbs the slow
+/// rack's work as bounded-staleness arrivals — strictly better virtual
+/// time-to-accuracy.
+#[test]
+fn rack_skew_wait_fresh_beats_wait_k() {
+    let k = 32usize;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 23);
+    let code = LdpcCode::gallager(64, 32, 3, 6, 4).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    assert_eq!(scheme.workers(), 64);
+    let cfg = RunConfig {
+        workers: 64,
+        decode_iters: 40,
+        rel_tol: 1e-3,
+        max_steps: 4000,
+        ..Default::default()
+    };
+    // Rack 0 (workers 0..16 of the 4-rack block partition) is 3× slower.
+    let mut row = vec![1.0; 64];
+    for r in row.iter_mut().take(16) {
+        *r = 3.0;
+    }
+    let latency = LatencyModel::Trace { table: Arc::new(vec![row]) };
+    let topo = Topology::hierarchical(
+        4,
+        LinkModel { gbps: 1000.0, overhead_ms: 0.005 },
+        LinkModel { gbps: 1000.0, overhead_ms: 0.01 },
+    );
+
+    let wait_k = run_simulated_async(
+        &scheme,
+        &problem,
+        &cfg,
+        &AsyncSimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(60), 4)
+            .with_topology(topo.clone()),
+    )
+    .unwrap();
+
+    let sim_fresh = AsyncSimConfig::new(latency, DeadlinePolicy::WaitForFresh(48), 4)
+        .with_topology(topo);
+    let costs = TaskCosts::of(&scheme);
+    let mut cluster =
+        AsyncSimCluster::new(scheme.payloads(), costs, Arc::new(NativeBackend), &cfg, &sim_fresh)
+            .unwrap();
+    let wait_fresh = run_with_executor(&scheme, &mut cluster, &problem, &cfg).unwrap();
+
+    assert!(wait_k.converged, "wait-k: {}", wait_k.summary());
+    assert!(wait_fresh.converged, "wait-fresh: {}", wait_fresh.summary());
+    // The slow rack's responses are recovered as stale arrivals, not
+    // thrown away: bounded staleness is doing the work.
+    assert!(cluster.stale_applied_total() > 0);
+    assert_eq!(cluster.cancelled_total(), 0, "3 ms laggards always make the S=4 bound");
+    assert!(
+        wait_fresh.totals.collect_ms < wait_k.totals.collect_ms,
+        "wait-fresh {} ms must beat wait-k {} ms under rack skew",
+        wait_fresh.totals.collect_ms,
+        wait_k.totals.collect_ms
+    );
+}
