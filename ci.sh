@@ -45,6 +45,21 @@ cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
     --async --staleness 2 --nic-gbps 1 --racks 4 --rack-gbps 10 \
     --max-steps 500 --rel-tol 1e-2
 
+echo "== fault-injection smoke test (crash/corrupt/omit + re-dispatch) =="
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --faults crash-restart:0.01:20,corrupt:0.02,omit:0.02 --retries 2 \
+    --max-steps 500 --rel-tol 1e-2
+
+echo "== async fault-injection smoke test (checksum erasure under pipelining) =="
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --async --staleness 2 --faults corrupt:0.05 --retries 1 \
+    --max-steps 500 --rel-tol 1e-2
+
+echo "== sim_faults smoke (tiny crash-rate sweep; writes *_smoke outputs) =="
+SIM_FAULTS_SMOKE=1 cargo bench --bench sim_faults
+
 echo "== sim_topology smoke (tiny ablation; writes *_smoke outputs) =="
 SIM_TOPOLOGY_SMOKE=1 cargo bench --bench sim_topology
 

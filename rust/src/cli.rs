@@ -89,6 +89,9 @@ COMMANDS:
              --m N --k N [--sparsity U] --workers W --stragglers S
              --decode-iters D --rel-tol T --max-steps N --trials N
              --backend native|pjrt [--trace] [--json]
+             [--faults SPEC] [--retries N ...] fault injection and
+               re-dispatch, as in `simulate` (crash-restart degrades to
+               crash-stop here: an OS thread cannot rejoin)
   simulate   Virtual-time run: deadline-driven collection over simulated
              workers (scales past host cores; default 512 workers)
              --workers N --m N --k N --scheme <as run> --trials N
@@ -111,6 +114,14 @@ COMMANDS:
                  uplinking into the master link (θ fans out per rack,
                  responses queue twice; racks=1 = flat; rack NIC
                  defaults to the master link's parameters)
+             [--faults SPEC] deterministic fault injection, composable
+               with every latency model; SPEC = comma-separated
+               crash:P | crash-restart:P:MS | corrupt:P | omit:P
+               (per-worker per-step probabilities; corrupted arrivals
+               are checksum-detected and erased, never decoded)
+             [--retries N] master-side re-dispatch of lost blocks to
+               survivors, with capped exponential backoff
+               [--backoff-ms F --backoff-cap-ms F --timeout-ms F]
              --max-steps N --rel-tol T [--json]
   fig1       Reproduce Figure 1 (least squares)        [--trials N] [--quick]
   fig2       Reproduce Figure 2 (sparse, m > k)        [--trials N] [--quick]

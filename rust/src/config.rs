@@ -1,5 +1,6 @@
 //! Run configuration for the distributed optimizer.
 
+use crate::coordinator::faults::{FaultModel, RetryPolicy};
 use crate::coordinator::straggler::StragglerModel;
 use crate::optim::projections::Projection;
 use crate::runtime::BackendChoice;
@@ -60,6 +61,13 @@ pub struct RunConfig {
     /// Network model added to the simulated step time (`None` = compute
     /// only).
     pub comm: Option<CommModel>,
+    /// Fault injection for the OS-thread cluster (unrolled into
+    /// per-worker schedules at spawn; the simulators take theirs from
+    /// `SimConfig`/`AsyncSimConfig` instead).
+    pub faults: FaultModel,
+    /// Master-side timeout/retry policy for re-dispatching lost
+    /// responses (disabled by default — every executor honors it).
+    pub retry: RetryPolicy,
 }
 
 impl Default for RunConfig {
@@ -76,6 +84,8 @@ impl Default for RunConfig {
             artifacts_dir: std::path::PathBuf::from("artifacts"),
             record_trace: false,
             comm: None,
+            faults: FaultModel::none(),
+            retry: RetryPolicy::disabled(),
         }
     }
 }
@@ -84,6 +94,18 @@ impl RunConfig {
     /// Builder-style straggler model.
     pub fn with_straggler(mut self, s: StragglerModel) -> Self {
         self.straggler = s;
+        self
+    }
+
+    /// Builder-style fault model (OS-thread cluster).
+    pub fn with_faults(mut self, f: FaultModel) -> Self {
+        self.faults = f;
+        self
+    }
+
+    /// Builder-style retry policy.
+    pub fn with_retry(mut self, r: RetryPolicy) -> Self {
+        self.retry = r;
         self
     }
 
@@ -111,6 +133,17 @@ mod tests {
         assert!(c.max_steps > 0);
         assert!(c.rel_tol > 0.0);
         assert_eq!(c.backend, BackendChoice::Native);
+        assert!(c.faults.is_none(), "faults must be off by default");
+        assert!(!c.retry.enabled(), "retries must be off by default");
+    }
+
+    #[test]
+    fn fault_and_retry_builders_compose() {
+        let c = RunConfig::default()
+            .with_faults(FaultModel { crash: 0.1, ..FaultModel::none() })
+            .with_retry(RetryPolicy { max_retries: 2, ..RetryPolicy::disabled() });
+        assert!(!c.faults.is_none());
+        assert!(c.retry.enabled());
     }
 
     #[test]

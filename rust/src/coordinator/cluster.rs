@@ -8,7 +8,9 @@
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
+use crate::coordinator::faults::WorkerFaultPlan;
 use crate::coordinator::protocol::{Request, Response, WorkerPayload};
 use crate::coordinator::worker::worker_loop;
 use crate::error::{Error, Result};
@@ -20,12 +22,28 @@ pub struct Cluster {
     responses: Receiver<Response>,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
+    /// True when any worker carries a non-empty fault plan; the master
+    /// then collects with deadlines instead of waiting for everyone.
+    faulty: bool,
 }
 
 impl Cluster {
-    /// Spawn one thread per payload.
+    /// Spawn one thread per payload (no fault injection).
     pub fn spawn(payloads: &[WorkerPayload], backend: Arc<dyn ComputeBackend>) -> Cluster {
+        Cluster::spawn_with_faults(payloads, backend, &[])
+    }
+
+    /// Spawn one thread per payload, giving worker `j` the fault plan
+    /// `plans[j]` (missing entries default to no faults). Crash steps
+    /// exit the worker thread — an OS thread cannot restart, so
+    /// crash-restart models degrade to crash-stop here.
+    pub fn spawn_with_faults(
+        payloads: &[WorkerPayload],
+        backend: Arc<dyn ComputeBackend>,
+        plans: &[WorkerFaultPlan],
+    ) -> Cluster {
         let workers = payloads.len();
+        let faulty = plans.iter().any(|p| !p.is_empty());
         let (resp_tx, resp_rx) = mpsc::channel();
         let mut senders = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
@@ -34,17 +52,47 @@ impl Cluster {
             let payload = Arc::new(payload.clone());
             let backend = Arc::clone(&backend);
             let resp = resp_tx.clone();
+            let plan = plans.get(id).cloned().unwrap_or_default();
             handles.push(std::thread::spawn(move || {
-                worker_loop(id, payload, backend, req_rx, resp)
+                worker_loop(id, payload, backend, req_rx, resp, plan)
             }));
             senders.push(req_tx);
         }
-        Cluster { senders, responses: resp_rx, handles, workers }
+        Cluster { senders, responses: resp_rx, handles, workers, faulty }
     }
 
     /// Number of workers.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Does any worker carry a fault plan?
+    pub fn has_faults(&self) -> bool {
+        self.faulty
+    }
+
+    /// Send one step request to worker `j`. Returns `false` when the
+    /// worker's channel is closed — its thread crashed in an earlier
+    /// step — which is how the master learns a worker is down.
+    pub fn send_step(
+        &self,
+        j: usize,
+        t: usize,
+        seq: u64,
+        theta: &Arc<Vec<f64>>,
+        recycle: Option<Vec<f64>>,
+    ) -> bool {
+        self.senders[j]
+            .send(Request::Step { t, seq, theta: Arc::clone(theta), recycle })
+            .is_ok()
+    }
+
+    /// Receive the next response, giving up at `deadline` (fault-mode
+    /// collection; [`Cluster::collect_into`] is the wait-for-everyone
+    /// path).
+    pub fn recv_deadline(&self, deadline: Instant) -> Option<Response> {
+        let timeout = deadline.saturating_duration_since(Instant::now());
+        self.responses.recv_timeout(timeout).ok()
     }
 
     /// Broadcast the step-`t` iterate to every worker.
@@ -62,7 +110,7 @@ impl Cluster {
         mut recycle: impl FnMut(usize) -> Option<Vec<f64>>,
     ) -> Result<()> {
         for (j, s) in self.senders.iter().enumerate() {
-            s.send(Request::Step { t, theta: Arc::clone(theta), recycle: recycle(j) })
+            s.send(Request::Step { t, seq: 0, theta: Arc::clone(theta), recycle: recycle(j) })
                 .map_err(|_| Error::Runtime("worker channel closed".into()))?;
         }
         Ok(())
@@ -171,6 +219,40 @@ mod tests {
         let rs = cluster.collect(1).unwrap();
         // Non-zero (the clock has ns resolution and the task does work).
         assert!(rs.iter().all(|r| r.compute_ns > 0));
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn faulty_cluster_crashes_close_the_channel() {
+        use std::time::Duration;
+        let plans = vec![
+            WorkerFaultPlan { crash_at_step: Some(1), ..Default::default() },
+            WorkerFaultPlan::default(),
+        ];
+        let cluster =
+            Cluster::spawn_with_faults(&payloads(2), Arc::new(NativeBackend), &plans);
+        assert!(cluster.has_faults());
+        assert!(!Cluster::spawn(&payloads(2), Arc::new(NativeBackend)).has_faults());
+
+        let theta = Arc::new(vec![1.0, 1.0]);
+        // Both sends are accepted (worker 0's thread dies on receipt).
+        assert!(cluster.send_step(0, 1, 7, &theta, None));
+        assert!(cluster.send_step(1, 1, 8, &theta, None));
+        let deadline = Instant::now() + Duration::from_millis(2000);
+        let r = cluster.recv_deadline(deadline).expect("the healthy worker responds");
+        assert_eq!((r.worker, r.seq), (1, 8));
+        assert!(r.verify());
+        // The crashed worker never responds: a short deadline times out…
+        let short = Instant::now() + Duration::from_millis(20);
+        assert!(cluster.recv_deadline(short).is_none());
+        // …and once its thread has exited, sends to it fail.
+        for _ in 0..400 {
+            if !cluster.send_step(0, 2, 9, &theta, None) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!cluster.send_step(0, 3, 10, &theta, None));
         cluster.shutdown();
     }
 }

@@ -1,0 +1,599 @@
+//! Deterministic fault injection: crashes, corruption, and omission.
+//!
+//! The straggler layer ([`crate::coordinator::straggler`]) models *benign*
+//! delay — every worker eventually answers, the master just may not wait.
+//! This module models the failures a real cluster adds on top: workers
+//! that crash (and maybe restart), responses that arrive bit-flipped, and
+//! responses that silently never arrive. A [`FaultModel`] composes with
+//! every `LatencyModel`: fault draws come from their *own* seeded RNG
+//! stream, so a fault-free model leaves the latency and deadline streams
+//! bit-identical to a straggler-only run (pinned by
+//! `tests/integration_faults.rs`).
+//!
+//! The model follows the same declarative-model → stateful-sampler split
+//! as the straggler layer: [`FaultModel`] is a cheap, cloneable
+//! description; [`FaultModel::sampler`] builds the [`FaultSampler`] that
+//! owns the RNG and the per-worker down-state. Samplers are deterministic
+//! in `(model, seed, step)`: every step draws exactly three Bernoulli
+//! variates per worker in worker order, *regardless* of worker state, so
+//! the stream never depends on which faults actually fired.
+//!
+//! Fault precedence when several draws fire for the same worker in the
+//! same step: **crash > omit > corrupt**. A crashed worker's task dies
+//! whole; an omitted response never exists to be corrupted.
+//!
+//! Failure semantics by kind:
+//! - **Crash-stop** (`restart_ms: None`): the worker goes down at the
+//!   crash instant and never returns. Its in-flight task is lost; no
+//!   future tasks are dispatched to it.
+//! - **Crash-restart** (`restart_ms: Some(d)`): the worker is down for
+//!   `d` virtual ms, then rejoins. In the synchronous simulator the
+//!   restarted worker redoes the window's task, arriving `d` ms late —
+//!   which is exactly what makes wait-all stall while deadline policies
+//!   shrug.
+//! - **Corrupt**: the response arrives on time but bit-flipped in
+//!   transit. The master *detects* this (checksums in
+//!   [`crate::coordinator::protocol`], `CorruptArrival` events in the
+//!   simulators) and treats it as an erasure — a corrupted value is
+//!   never decoded.
+//! - **Omit**: the response for this one task is silently dropped; the
+//!   worker itself stays healthy.
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+
+/// Declarative per-worker fault process, composable with any latency
+/// model. All probabilities are per-step, per-worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultModel {
+    /// Probability a worker crashes at dispatch time this step.
+    pub crash: f64,
+    /// Crash recovery: `None` = crash-stop (down forever),
+    /// `Some(d)` = the worker rejoins `d` virtual ms after crashing.
+    pub restart_ms: Option<f64>,
+    /// Probability a (sent) response is corrupted in transit.
+    pub corrupt: f64,
+    /// Probability a response is silently dropped.
+    pub omit: f64,
+    /// Seed for the dedicated fault RNG stream.
+    pub seed: u64,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel::none()
+    }
+}
+
+impl FaultModel {
+    /// The fault-free model: composes with anything, changes nothing.
+    pub fn none() -> Self {
+        FaultModel { crash: 0.0, restart_ms: None, corrupt: 0.0, omit: 0.0, seed: 0 }
+    }
+
+    /// True when no fault can ever fire.
+    pub fn is_none(&self) -> bool {
+        self.crash == 0.0 && self.corrupt == 0.0 && self.omit == 0.0
+    }
+
+    /// Validate probabilities and the restart delay.
+    pub fn validate(&self) -> Result<()> {
+        for (what, p) in
+            [("crash", self.crash), ("corrupt", self.corrupt), ("omit", self.omit)]
+        {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "fault probability {what}={p} must lie in [0, 1]"
+                )));
+            }
+        }
+        if let Some(d) = self.restart_ms {
+            if !d.is_finite() || d <= 0.0 {
+                return Err(Error::Config(format!(
+                    "fault restart_ms={d} must be finite and positive"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the stateful sampler that owns the RNG and down-state.
+    pub fn sampler(&self) -> FaultSampler {
+        FaultSampler {
+            model: self.clone(),
+            rng: Rng::new(self.seed),
+            step: 0,
+            down_until: Vec::new(),
+            crash_now: Vec::new(),
+            corrupt_now: Vec::new(),
+            omit_now: Vec::new(),
+        }
+    }
+
+    /// Same fault process, different RNG stream (per-trial reseeding).
+    pub fn reseed(&self, seed: u64) -> FaultModel {
+        let mut m = self.clone();
+        m.seed = seed;
+        m
+    }
+
+    /// Stable display name; round-trips through [`FaultModel::parse`]
+    /// (modulo the seed, which the spec grammar does not carry).
+    pub fn name(&self) -> String {
+        if self.is_none() {
+            return "none".into();
+        }
+        let mut parts = Vec::new();
+        if self.crash > 0.0 {
+            match self.restart_ms {
+                Some(d) => parts.push(format!("crash-restart:{}:{}", self.crash, d)),
+                None => parts.push(format!("crash:{}", self.crash)),
+            }
+        }
+        if self.omit > 0.0 {
+            parts.push(format!("omit:{}", self.omit));
+        }
+        if self.corrupt > 0.0 {
+            parts.push(format!("corrupt:{}", self.corrupt));
+        }
+        parts.join(",")
+    }
+
+    /// Parse a CLI fault spec: comma-separated clauses
+    /// `crash:P`, `crash-restart:P:MS`, `corrupt:P`, `omit:P`,
+    /// e.g. `--faults crash:0.1,corrupt:0.01`. `none` (or the empty
+    /// string) is the fault-free model. The seed defaults to 0; reseed
+    /// with [`FaultModel::reseed`] (the harness does this per trial).
+    pub fn parse(spec: &str) -> Result<FaultModel> {
+        let mut m = FaultModel::none();
+        let s = spec.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(m);
+        }
+        let num = |clause: &str, what: &str, v: &str| -> Result<f64> {
+            v.parse::<f64>().map_err(|_| {
+                Error::Config(format!("fault clause '{clause}': cannot parse {what} '{v}'"))
+            })
+        };
+        for clause in s.split(',') {
+            let clause = clause.trim();
+            let parts: Vec<&str> = clause.split(':').collect();
+            match (parts[0], parts.len()) {
+                ("crash", 2) => {
+                    m.crash = num(clause, "probability", parts[1])?;
+                    m.restart_ms = None;
+                }
+                ("crash-restart", 3) => {
+                    m.crash = num(clause, "probability", parts[1])?;
+                    m.restart_ms = Some(num(clause, "restart delay", parts[2])?);
+                }
+                ("corrupt", 2) => m.corrupt = num(clause, "probability", parts[1])?,
+                ("omit", 2) => m.omit = num(clause, "probability", parts[1])?,
+                _ => {
+                    return Err(Error::Config(format!(
+                        "unknown fault clause '{clause}' in '{spec}' (expected \
+                         crash:P, crash-restart:P:MS, corrupt:P, or omit:P)"
+                    )))
+                }
+            }
+        }
+        m.validate()?;
+        Ok(m)
+    }
+}
+
+/// Stateful fault stream: per-step draws plus persistent down-state.
+///
+/// Executors call [`FaultSampler::next_step`] once per window, query the
+/// per-worker flags, and report crashes back via
+/// [`FaultSampler::mark_down`] so down-state survives across windows.
+#[derive(Debug, Clone)]
+pub struct FaultSampler {
+    model: FaultModel,
+    rng: Rng,
+    step: usize,
+    /// Virtual time each worker rejoins (`INFINITY` = crash-stop).
+    down_until: Vec<f64>,
+    crash_now: Vec<bool>,
+    corrupt_now: Vec<bool>,
+    omit_now: Vec<bool>,
+}
+
+impl FaultSampler {
+    /// Draw this step's fault flags for `w` workers. Always draws
+    /// exactly three Bernoulli variates per worker in worker order, so
+    /// the RNG stream is independent of worker state.
+    pub fn next_step(&mut self, w: usize) {
+        self.down_until.resize(self.down_until.len().max(w), 0.0);
+        self.crash_now.clear();
+        self.corrupt_now.clear();
+        self.omit_now.clear();
+        for _ in 0..w {
+            self.crash_now.push(self.rng.bernoulli(self.model.crash));
+            self.corrupt_now.push(self.rng.bernoulli(self.model.corrupt));
+            self.omit_now.push(self.rng.bernoulli(self.model.omit));
+        }
+        self.step += 1;
+    }
+
+    /// Is worker `j` down at virtual time `now_ms`?
+    pub fn is_down(&self, j: usize, now_ms: f64) -> bool {
+        self.down_until.get(j).is_some_and(|&until| now_ms < until)
+    }
+
+    /// Did this step's draw crash worker `j`?
+    pub fn crashes(&self, j: usize) -> bool {
+        self.crash_now.get(j).copied().unwrap_or(false)
+    }
+
+    /// Did this step's draw corrupt worker `j`'s response?
+    pub fn corrupts(&self, j: usize) -> bool {
+        self.corrupt_now.get(j).copied().unwrap_or(false)
+    }
+
+    /// Did this step's draw drop worker `j`'s response?
+    pub fn omits(&self, j: usize) -> bool {
+        self.omit_now.get(j).copied().unwrap_or(false)
+    }
+
+    /// Record that worker `j` crashed at `at_ms`. Returns the rejoin
+    /// time under crash-restart, `None` under crash-stop.
+    pub fn mark_down(&mut self, j: usize, at_ms: f64) -> Option<f64> {
+        if j >= self.down_until.len() {
+            self.down_until.resize(j + 1, 0.0);
+        }
+        match self.model.restart_ms {
+            Some(d) => {
+                self.down_until[j] = at_ms + d;
+                Some(at_ms + d)
+            }
+            None => {
+                self.down_until[j] = f64::INFINITY;
+                None
+            }
+        }
+    }
+
+    /// Steps drawn so far.
+    pub fn step(&self) -> usize {
+        self.step
+    }
+}
+
+/// Per-step fault accounting, aggregated into
+/// [`crate::coordinator::metrics::MetricTotals`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Tasks never dispatched because the worker was down.
+    pub down: u32,
+    /// Tasks killed by a crash (at dispatch or mid-flight).
+    pub crashed: u32,
+    /// Responses detected as corrupted and erased.
+    pub corrupt: u32,
+    /// Responses silently dropped by the fault model.
+    pub omitted: u32,
+    /// Re-dispatch attempts issued by the retry layer.
+    pub retried: u32,
+    /// Re-dispatch attempts that recovered a missing response.
+    pub recovered: u32,
+}
+
+impl FaultCounts {
+    /// Accumulate another step's counts.
+    pub fn merge(&mut self, o: &FaultCounts) {
+        self.down += o.down;
+        self.crashed += o.crashed;
+        self.corrupt += o.corrupt;
+        self.omitted += o.omitted;
+        self.retried += o.retried;
+        self.recovered += o.recovered;
+    }
+
+    /// Responses this step lost to faults (before any retry recovered
+    /// them).
+    pub fn lost(&self) -> u32 {
+        self.down + self.crashed + self.corrupt + self.omitted
+    }
+
+    /// Did any fault fire?
+    pub fn any(&self) -> bool {
+        self.lost() > 0 || self.retried > 0
+    }
+}
+
+/// Timeout/retry knobs for the master's re-dispatch layer.
+///
+/// Attempt 0 is the speculative re-dispatch issued as the window
+/// closes; attempt `r ≥ 1` waits `min(backoff_ms · 2^(r-1),
+/// backoff_cap_ms)` after the previous attempt before firing. Each
+/// attempt is given `timeout_ms` to land before being written off.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Extra dispatch attempts per lost response (0 disables retries).
+    pub max_retries: u32,
+    /// Base backoff between attempts, virtual ms.
+    pub backoff_ms: f64,
+    /// Backoff ceiling, virtual ms.
+    pub backoff_cap_ms: f64,
+    /// Per-attempt response deadline, virtual ms (wall-clock ms for the
+    /// OS-thread cluster).
+    pub timeout_ms: f64,
+}
+
+impl RetryPolicy {
+    /// Retries off — the default everywhere, preserving pre-fault
+    /// behavior bit for bit.
+    pub fn disabled() -> Self {
+        RetryPolicy { max_retries: 0, backoff_ms: 1.0, backoff_cap_ms: 64.0, timeout_ms: 50.0 }
+    }
+
+    /// Is the retry layer active?
+    pub fn enabled(&self) -> bool {
+        self.max_retries > 0
+    }
+
+    /// Backoff before attempt `attempt` (0-indexed; attempt 0 is
+    /// immediate).
+    pub fn backoff_for(&self, attempt: u32) -> f64 {
+        if attempt == 0 {
+            0.0
+        } else {
+            (self.backoff_ms * 2f64.powi(attempt as i32 - 1)).min(self.backoff_cap_ms)
+        }
+    }
+
+    /// Validate the knobs.
+    pub fn validate(&self) -> Result<()> {
+        for (what, v) in [
+            ("backoff_ms", self.backoff_ms),
+            ("backoff_cap_ms", self.backoff_cap_ms),
+            ("timeout_ms", self.timeout_ms),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(Error::Config(format!(
+                    "retry {what}={v} must be finite and positive"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::disabled()
+    }
+}
+
+/// Precomputed fault schedule for one OS-thread worker
+/// ([`crate::coordinator::cluster::Cluster::spawn_with_faults`]).
+///
+/// Thread workers cannot restart a dead OS thread, so crash-restart
+/// degrades to crash-stop here; the virtual-time simulators model the
+/// full restart semantics.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WorkerFaultPlan {
+    /// Step at which the worker thread exits without responding.
+    pub crash_at_step: Option<usize>,
+    /// Steps whose responses are bit-flipped in transit (sorted).
+    pub corrupt_steps: Vec<usize>,
+    /// Steps whose responses are silently dropped (sorted).
+    pub omit_steps: Vec<usize>,
+}
+
+impl WorkerFaultPlan {
+    /// No fault ever fires for this worker.
+    pub fn is_empty(&self) -> bool {
+        self.crash_at_step.is_none()
+            && self.corrupt_steps.is_empty()
+            && self.omit_steps.is_empty()
+    }
+
+    /// Does the worker crash at step `t`?
+    pub fn crashes_at(&self, t: usize) -> bool {
+        self.crash_at_step == Some(t)
+    }
+
+    /// Is step `t`'s response corrupted?
+    pub fn corrupts(&self, t: usize) -> bool {
+        self.corrupt_steps.binary_search(&t).is_ok()
+    }
+
+    /// Is step `t`'s response omitted?
+    pub fn omits(&self, t: usize) -> bool {
+        self.omit_steps.binary_search(&t).is_ok()
+    }
+}
+
+/// Unroll a [`FaultModel`] into per-worker schedules for `steps` steps
+/// (steps are 1-indexed, matching the master loop's `t`). Uses the same
+/// sampler stream as the simulators, so a given `(model, seed)` crashes
+/// the same workers at the same steps on both backends.
+pub fn fault_plans(model: &FaultModel, workers: usize, steps: usize) -> Vec<WorkerFaultPlan> {
+    let mut s = model.sampler();
+    let mut plans = vec![WorkerFaultPlan::default(); workers];
+    for t in 1..=steps {
+        s.next_step(workers);
+        for (j, plan) in plans.iter_mut().enumerate() {
+            if plan.crash_at_step.is_some() {
+                continue; // dead workers keep drawing but stay dead
+            }
+            if s.crashes(j) {
+                plan.crash_at_step = Some(t);
+            } else if s.omits(j) {
+                plan.omit_steps.push(t);
+            } else if s.corrupts(j) {
+                plan.corrupt_steps.push(t);
+            }
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_through_name() {
+        let models = [
+            FaultModel::none(),
+            FaultModel { crash: 0.1, ..FaultModel::none() },
+            FaultModel { crash: 0.05, restart_ms: Some(250.0), ..FaultModel::none() },
+            FaultModel { corrupt: 0.01, omit: 0.02, ..FaultModel::none() },
+            FaultModel {
+                crash: 0.2,
+                restart_ms: Some(5.0),
+                corrupt: 0.01,
+                omit: 0.03,
+                seed: 0,
+            },
+        ];
+        for m in &models {
+            let back = FaultModel::parse(&m.name()).unwrap();
+            assert_eq!(&back, m, "name '{}' should round-trip", m.name());
+        }
+        assert_eq!(FaultModel::parse("").unwrap(), FaultModel::none());
+        assert_eq!(FaultModel::parse(" none ").unwrap(), FaultModel::none());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "explode:0.1",
+            "crash",
+            "crash:abc",
+            "crash:1.5",
+            "crash:-0.1",
+            "crash-restart:0.1",
+            "crash-restart:0.1:0",
+            "crash-restart:0.1:-5",
+            "corrupt:0.1:7",
+            "crash:0.1,,omit:0.1",
+        ] {
+            assert!(FaultModel::parse(bad).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_seed_sensitive() {
+        let m = FaultModel { crash: 0.3, corrupt: 0.3, omit: 0.3, seed: 9, ..FaultModel::none() };
+        let (mut a, mut b) = (m.sampler(), m.sampler());
+        let mut c = m.reseed(10).sampler();
+        let mut diverged = false;
+        for _ in 0..50 {
+            a.next_step(8);
+            b.next_step(8);
+            c.next_step(8);
+            for j in 0..8 {
+                assert_eq!(a.crashes(j), b.crashes(j));
+                assert_eq!(a.corrupts(j), b.corrupts(j));
+                assert_eq!(a.omits(j), b.omits(j));
+                diverged |= a.crashes(j) != c.crashes(j);
+            }
+        }
+        assert!(diverged, "a different seed must change the draw stream");
+    }
+
+    #[test]
+    fn none_model_never_fires() {
+        let mut s = FaultModel::none().sampler();
+        for _ in 0..50 {
+            s.next_step(8);
+            for j in 0..8 {
+                assert!(!s.crashes(j) && !s.corrupts(j) && !s.omits(j));
+                assert!(!s.is_down(j, 1e12));
+            }
+        }
+        assert_eq!(s.step(), 50);
+    }
+
+    #[test]
+    fn down_state_tracks_restart_and_stop() {
+        let restart =
+            FaultModel { crash: 1.0, restart_ms: Some(10.0), ..FaultModel::none() };
+        let mut s = restart.sampler();
+        s.next_step(2);
+        assert_eq!(s.mark_down(0, 5.0), Some(15.0));
+        assert!(s.is_down(0, 5.0) && s.is_down(0, 14.9));
+        assert!(!s.is_down(0, 15.0), "worker rejoins at exactly down_until");
+        assert!(!s.is_down(1, 5.0), "only the crashed worker goes down");
+
+        let stop = FaultModel { crash: 1.0, ..FaultModel::none() };
+        let mut s = stop.sampler();
+        s.next_step(1);
+        assert_eq!(s.mark_down(0, 5.0), None);
+        assert!(s.is_down(0, f64::MAX));
+    }
+
+    #[test]
+    fn plans_unroll_crash_stop_and_precedence() {
+        let m = FaultModel { crash: 1.0, corrupt: 1.0, omit: 1.0, seed: 3, ..FaultModel::none() };
+        let plans = fault_plans(&m, 4, 20);
+        for p in &plans {
+            // Crash wins over omit/corrupt, and a dead worker stays dead.
+            assert_eq!(p.crash_at_step, Some(1));
+            assert!(p.corrupt_steps.is_empty() && p.omit_steps.is_empty());
+            assert!(p.crashes_at(1) && !p.crashes_at(2));
+        }
+
+        let m = FaultModel { omit: 1.0, corrupt: 1.0, seed: 3, ..FaultModel::none() };
+        let plans = fault_plans(&m, 2, 3);
+        for p in &plans {
+            // Omit wins over corrupt; no crash ever fires.
+            assert_eq!(p.omit_steps, vec![1, 2, 3]);
+            assert!(p.corrupt_steps.is_empty() && p.crash_at_step.is_none());
+            assert!(p.omits(2) && !p.corrupts(2) && !p.is_empty());
+        }
+        assert!(WorkerFaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn plans_match_sampler_stream() {
+        let m = FaultModel { crash: 0.2, corrupt: 0.3, omit: 0.3, seed: 11, ..FaultModel::none() };
+        let plans = fault_plans(&m, 6, 40);
+        let mut s = m.sampler();
+        let mut dead = vec![false; 6];
+        for t in 1..=40 {
+            s.next_step(6);
+            for (j, plan) in plans.iter().enumerate() {
+                if dead[j] {
+                    continue;
+                }
+                if s.crashes(j) {
+                    assert!(plan.crashes_at(t));
+                    dead[j] = true;
+                } else {
+                    assert_eq!(plan.omits(t), s.omits(j));
+                    assert_eq!(plan.corrupts(t), !s.omits(j) && s.corrupts(j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fault_counts_accumulate() {
+        let mut tot = FaultCounts::default();
+        assert!(!tot.any());
+        tot.merge(&FaultCounts { down: 1, crashed: 2, corrupt: 3, omitted: 4, retried: 5, recovered: 6 });
+        tot.merge(&FaultCounts { down: 1, ..Default::default() });
+        assert_eq!(tot.down, 2);
+        assert_eq!(tot.lost(), 11);
+        assert!(tot.any());
+    }
+
+    #[test]
+    fn retry_backoff_caps() {
+        let r = RetryPolicy { max_retries: 5, backoff_ms: 2.0, backoff_cap_ms: 10.0, timeout_ms: 50.0 };
+        assert!(r.enabled() && r.validate().is_ok());
+        assert_eq!(r.backoff_for(0), 0.0);
+        assert_eq!(r.backoff_for(1), 2.0);
+        assert_eq!(r.backoff_for(2), 4.0);
+        assert_eq!(r.backoff_for(3), 8.0);
+        assert_eq!(r.backoff_for(4), 10.0);
+        assert_eq!(r.backoff_for(10), 10.0);
+        assert!(!RetryPolicy::disabled().enabled());
+        assert!(RetryPolicy { timeout_ms: 0.0, ..r }.validate().is_err());
+        assert!(RetryPolicy { backoff_ms: f64::NAN, ..r }.validate().is_err());
+    }
+}

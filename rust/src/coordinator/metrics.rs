@@ -4,7 +4,12 @@
 //! gradient steps to convergence and the total computation time. We track
 //! both, plus the decode-quality counters that drive the analysis
 //! (erased/unrecovered coordinates, peeling rounds) and a wall/simulated
-//! time breakdown (worker compute, collection, decode, update).
+//! time breakdown (worker compute, collection, decode, update). Under
+//! fault injection, per-step [`FaultCounts`] and the degraded-step count
+//! (steps that applied a best-effort gradient with unrecovered
+//! coordinates) quantify how gracefully a scheme absorbs failures.
+
+use crate::coordinator::faults::FaultCounts;
 
 /// Metrics for a single gradient step.
 #[derive(Debug, Clone, Default)]
@@ -29,6 +34,8 @@ pub struct StepMetrics {
     pub comm_ms: f64,
     /// Distance ‖θ_t − θ*‖ after the step.
     pub error: f64,
+    /// Injected-fault accounting (all-zero without a fault model).
+    pub faults: FaultCounts,
 }
 
 impl StepMetrics {
@@ -63,6 +70,11 @@ pub struct MetricTotals {
     pub collect_ms: f64,
     /// Σ simulated communication (ms).
     pub comm_ms: f64,
+    /// Σ per-step fault/retry counters.
+    pub faults: FaultCounts,
+    /// Steps that proceeded on a best-effort gradient (unrecovered
+    /// coordinates zeroed) — the graceful-degradation counter.
+    pub degraded_steps: usize,
 }
 
 impl MetricTotals {
@@ -77,6 +89,10 @@ impl MetricTotals {
         self.update_ns += s.update_ns;
         self.collect_ms += s.collect_ms.unwrap_or(0.0);
         self.comm_ms += s.comm_ms;
+        self.faults.merge(&s.faults);
+        if s.unrecovered > 0 {
+            self.degraded_steps += 1;
+        }
     }
 
     /// Simulated total computation time (ms).
@@ -137,7 +153,7 @@ impl RunReport {
 
     /// Compact single-line summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{:<24} steps={:<6} converged={:<5} err={:.3e} sim_ms={:.2} (worker {:.2} decode {:.3} update {:.3}) unrec/step={:.2} rounds/step={:.2}",
             self.scheme,
             self.steps,
@@ -149,7 +165,16 @@ impl RunReport {
             self.totals.update_ns as f64 / 1e6,
             self.totals.mean_unrecovered(),
             self.totals.mean_decode_rounds(),
-        )
+        );
+        let fc = &self.totals.faults;
+        if fc.any() || self.totals.degraded_steps > 0 {
+            s.push_str(&format!(
+                " faults[down={} crashed={} corrupt={} omitted={} retried={} recovered={}] degraded_steps={}",
+                fc.down, fc.crashed, fc.corrupt, fc.omitted, fc.retried, fc.recovered,
+                self.totals.degraded_steps,
+            ));
+        }
+        s
     }
 
     /// Minimal JSON object (hand-rolled; no serde in the offline crate
@@ -160,7 +185,9 @@ impl RunReport {
                 "{{\"scheme\":\"{}\",\"steps\":{},\"converged\":{},",
                 "\"final_error\":{:.6e},\"final_rel_error\":{:.6e},",
                 "\"wall_ms\":{:.3},\"sim_ms\":{:.3},",
-                "\"mean_unrecovered\":{:.4},\"mean_decode_rounds\":{:.4}}}"
+                "\"mean_unrecovered\":{:.4},\"mean_decode_rounds\":{:.4},",
+                "\"degraded_steps\":{},\"faults_lost\":{},",
+                "\"faults_retried\":{},\"faults_recovered\":{}}}"
             ),
             self.scheme,
             self.steps,
@@ -171,6 +198,10 @@ impl RunReport {
             self.sim_time_ms(),
             self.totals.mean_unrecovered(),
             self.totals.mean_decode_rounds(),
+            self.totals.degraded_steps,
+            self.totals.faults.lost(),
+            self.totals.faults.retried,
+            self.totals.faults.recovered,
         )
     }
 }
@@ -191,6 +222,7 @@ mod tests {
             collect_ms: None,
             comm_ms: 0.0,
             error: 0.5,
+            faults: FaultCounts::default(),
         }
     }
 
@@ -206,6 +238,36 @@ mod tests {
         assert!((tot.mean_unrecovered() - 2.0).abs() < 1e-12);
         assert!((tot.mean_decode_rounds() - 3.0).abs() < 1e-12);
         assert!((tot.sim_time_ms() - 10.15).abs() < 1e-9);
+        // Every synthetic step left 2 coordinates unrecovered.
+        assert_eq!(tot.degraded_steps, 10);
+    }
+
+    #[test]
+    fn fault_counters_aggregate_and_surface() {
+        let mut tot = MetricTotals::default();
+        let mut s = step(1);
+        s.unrecovered = 0;
+        tot.add(&s);
+        s.faults = FaultCounts { crashed: 1, retried: 2, recovered: 2, ..Default::default() };
+        s.unrecovered = 4;
+        tot.add(&s);
+        assert_eq!(tot.faults.crashed, 1);
+        assert_eq!(tot.faults.retried, 2);
+        assert_eq!(tot.degraded_steps, 1, "only the lossy step is degraded");
+        let r = RunReport {
+            scheme: "t".into(),
+            steps: 2,
+            converged: false,
+            final_error: 1.0,
+            final_rel_error: 1.0,
+            theta: vec![],
+            wall_ms: 0.0,
+            totals: tot,
+            trace: vec![],
+        };
+        assert!(r.summary().contains("faults[down=0 crashed=1"));
+        assert!(r.summary().contains("degraded_steps=1"));
+        assert!(r.to_json().contains("\"faults_recovered\":2"));
     }
 
     #[test]

@@ -25,6 +25,7 @@
 
 pub mod cluster;
 pub mod encoder;
+pub mod faults;
 pub mod metrics;
 pub mod protocol;
 pub mod schemes;
@@ -32,7 +33,7 @@ pub mod straggler;
 pub mod worker;
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
 use crate::data::RegressionProblem;
@@ -41,6 +42,7 @@ use crate::optim::convergence::ConvergenceRule;
 use crate::runtime::{BackendChoice, ComputeBackend, NativeBackend};
 
 use cluster::Cluster;
+use faults::{fault_plans, FaultCounts, RetryPolicy};
 use metrics::{MetricTotals, RunReport, StepMetrics};
 use protocol::Response;
 use schemes::{DecodeScratch, GradientScheme};
@@ -75,7 +77,13 @@ pub fn run_distributed(
         return Err(Error::Config("scheme/problem dimension mismatch".into()));
     }
     let backend = make_backend(cfg)?;
-    let cluster = Cluster::spawn(scheme.payloads(), backend);
+    let cluster = if cfg.faults.is_none() {
+        Cluster::spawn(scheme.payloads(), backend)
+    } else {
+        cfg.faults.validate()?;
+        let plans = fault_plans(&cfg.faults, cfg.workers, cfg.max_steps);
+        Cluster::spawn_with_faults(scheme.payloads(), backend, &plans)
+    };
     let report = run_with_cluster(scheme.as_ref(), &cluster, problem, cfg);
     cluster.shutdown();
     report
@@ -95,6 +103,20 @@ pub struct StepExecution {
     /// Simulated time until the master could proceed (ms), when a
     /// latency model or virtual clock is active.
     pub collect_ms: Option<f64>,
+    /// Injected-fault accounting for this step (all-zero when no fault
+    /// model is active).
+    pub faults: FaultCounts,
+}
+
+/// What a [`StepExecutor::redispatch`] pass reports back: the faults and
+/// retries it accrued, and the virtual time the retry rounds consumed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RedispatchOutcome {
+    /// Fault/retry counters accrued during the retry rounds.
+    pub faults: FaultCounts,
+    /// Virtual milliseconds the retry rounds took (0 for the OS-thread
+    /// cluster, which has no virtual clock).
+    pub extra_ms: f64,
 }
 
 /// One gradient step's broadcast/gather/mask, abstracted over *how* the
@@ -119,6 +141,22 @@ pub trait StepExecutor {
         theta: &[f64],
         masked: &mut [Option<Vec<f64>>],
     ) -> Result<StepExecution>;
+
+    /// Speculatively re-dispatch the still-missing blocks of step `t`
+    /// (`masked[j] = None`) under `retry`, filling in whatever the
+    /// attempts recover. Called by [`run_with_executor`] only when the
+    /// retry layer is enabled and the step left gaps; the default is a
+    /// no-op for executors without a re-dispatch path.
+    fn redispatch(
+        &mut self,
+        t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+        retry: &RetryPolicy,
+    ) -> Result<RedispatchOutcome> {
+        let _ = (t, theta, masked, retry);
+        Ok(RedispatchOutcome::default())
+    }
 }
 
 /// [`StepExecutor`] over the OS-thread [`Cluster`]: every worker always
@@ -141,6 +179,18 @@ pub struct ThreadStepExecutor<'a> {
     bcast: [Arc<Vec<f64>>; 2],
     slots: Vec<Option<Response>>,
     spares: Vec<Vec<f64>>,
+    /// Timeout/retry knobs; `timeout_ms` doubles as the wall-clock
+    /// collection deadline when the cluster runs with fault plans.
+    retry: RetryPolicy,
+    /// Next task sequence number (unique per dispatch attempt).
+    next_seq: u64,
+    /// The sequence number each worker's step-`t` response must echo
+    /// (stale retry responses from earlier steps are discarded by `t`;
+    /// this guards against duplicates within a step).
+    expected: Vec<u64>,
+    /// Which workers actually received the step-`t` request (a closed
+    /// channel means the worker thread crashed in an earlier step).
+    sent: Vec<bool>,
 }
 
 impl<'a> ThreadStepExecutor<'a> {
@@ -152,6 +202,44 @@ impl<'a> ThreadStepExecutor<'a> {
             bcast: [Arc::new(Vec::new()), Arc::new(Vec::new())],
             slots: Vec::new(),
             spares: Vec::new(),
+            retry: RetryPolicy::disabled(),
+            next_seq: 1,
+            expected: Vec::new(),
+            sent: Vec::new(),
+        }
+    }
+
+    /// Builder-style retry policy (also sets the fault-mode collection
+    /// timeout).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Wall-clock deadline for one fault-tolerant collection pass. The
+    /// floor keeps slow hosts from misreading honest compute as a fault.
+    fn collect_deadline(&self) -> Instant {
+        let ms = self.retry.timeout_ms.max(100.0);
+        Instant::now() + Duration::from_millis(ms.ceil() as u64)
+    }
+
+    /// Fault-tolerant gather: fill `slots` with the step-`t` responses
+    /// that arrive before the deadline, keyed by the expected sequence
+    /// numbers. Missing workers simply leave their slot `None`.
+    fn collect_tolerant(&mut self, t: usize, outstanding: usize) {
+        let deadline = self.collect_deadline();
+        let mut got = 0;
+        while got < outstanding {
+            let Some(r) = self.cluster.recv_deadline(deadline) else { break };
+            if r.t != t {
+                continue; // ghost of a step the master already gave up on
+            }
+            let j = r.worker;
+            if self.expected.get(j).copied() != Some(r.seq) || self.slots[j].is_some() {
+                continue;
+            }
+            self.slots[j] = Some(r);
+            got += 1;
         }
     }
 }
@@ -168,6 +256,7 @@ impl StepExecutor for ThreadStepExecutor<'_> {
         masked: &mut [Option<Vec<f64>>],
     ) -> Result<StepExecution> {
         let w = self.cluster.workers();
+        let faulty = self.cluster.has_faults();
         let straggling = self.sampler.next_step(w);
 
         let buf = &mut self.bcast[t % 2];
@@ -179,39 +268,159 @@ impl StepExecutor for ThreadStepExecutor<'_> {
             // a lagging thread): fall back to a fresh allocation.
             *buf = Arc::new(theta.to_vec());
         }
-        let theta_arc = &self.bcast[t % 2];
-        let spares = &mut self.spares;
-        self.cluster.broadcast_with(t, theta_arc, |j| {
-            masked[j].take().or_else(|| spares.pop())
-        })?;
-        self.cluster.collect_into(t, &mut self.slots)?;
+        let theta_arc = Arc::clone(&self.bcast[t % 2]);
+
+        let mut fc = FaultCounts::default();
+        if !faulty {
+            let spares = &mut self.spares;
+            self.cluster.broadcast_with(t, &theta_arc, |j| {
+                masked[j].take().or_else(|| spares.pop())
+            })?;
+            self.cluster.collect_into(t, &mut self.slots)?;
+        } else {
+            // Fault-tolerant dispatch: sends to crashed workers fail
+            // (their threads exited, closing the channel), and
+            // collection runs against a wall-clock deadline instead of
+            // waiting for everyone.
+            self.expected.clear();
+            self.expected.resize(w, 0);
+            self.sent.clear();
+            self.sent.resize(w, false);
+            for j in 0..w {
+                let seq = self.next_seq;
+                self.next_seq += 1;
+                let recycle = masked[j].take().or_else(|| self.spares.pop());
+                if self.cluster.send_step(j, t, seq, &theta_arc, recycle) {
+                    self.sent[j] = true;
+                    self.expected[j] = seq;
+                } else {
+                    fc.down += 1;
+                }
+            }
+            self.slots.clear();
+            self.slots.resize_with(w, || None);
+            let outstanding = self.sent.iter().filter(|&&s| s).count();
+            self.collect_tolerant(t, outstanding);
+        }
 
         // Deadline semantics: drop the stragglers' responses (their
-        // buffers go to the spare pool for recycling).
+        // buffers go to the spare pool for recycling). Under fault
+        // plans, silence and checksum mismatches become erasures: the
+        // master cannot tell a crash from an omission until the next
+        // dispatch finds the channel closed.
         let mut worker_ns = 0u64;
         let mut strag_iter = straggling.stragglers.iter().peekable();
-        for (j, slot) in self.slots.iter_mut().enumerate() {
-            let r = slot.take().expect("collect_into fills every slot");
+        for j in 0..w {
             let is_straggler = matches!(strag_iter.peek(), Some(&&s) if s == j);
             if is_straggler {
                 strag_iter.next();
+            }
+            let Some(r) = self.slots[j].take() else {
+                if !faulty {
+                    return Err(Error::Runtime(format!(
+                        "missing response from worker {j}"
+                    )));
+                }
+                masked[j] = None;
+                if self.sent[j] {
+                    fc.omitted += 1;
+                }
+                continue;
+            };
+            if is_straggler {
                 masked[j] = None;
                 if let Ok(v) = r.values {
-                    spares.push(v);
+                    self.spares.push(v);
                 }
-            } else {
-                let values = r
-                    .values
-                    .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
-                worker_ns = worker_ns.max(r.compute_ns);
-                masked[j] = Some(values);
+                continue;
             }
+            let intact = !faulty || r.verify();
+            let values = r
+                .values
+                .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
+            if !intact {
+                // Detected corruption: erase, never decode.
+                fc.corrupt += 1;
+                masked[j] = None;
+                self.spares.push(values);
+                continue;
+            }
+            worker_ns = worker_ns.max(r.compute_ns);
+            masked[j] = Some(values);
         }
         Ok(StepExecution {
             stragglers: straggling.stragglers.len(),
             worker_ns,
             collect_ms: straggling.collect_ms,
+            faults: fc,
         })
+    }
+
+    fn redispatch(
+        &mut self,
+        t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+        retry: &RetryPolicy,
+    ) -> Result<RedispatchOutcome> {
+        // Each worker holds only its own payload shard, so a retry can
+        // only go back to the same worker — it recovers transient
+        // omission/corruption, not crashes (the simulators model
+        // cross-worker re-dispatch of moment blocks). Wall-clock backoff
+        // would only slow the test suite; rounds fire back to back and
+        // the virtual-time executors price the backoff instead.
+        let w = self.cluster.workers();
+        let mut counts = FaultCounts::default();
+        let theta_arc = Arc::new(theta.to_vec());
+        let mut expecting: Vec<(usize, u64)> = Vec::new();
+        for _attempt in 0..retry.max_retries {
+            if masked.iter().all(|m| m.is_some()) {
+                break;
+            }
+            expecting.clear();
+            for j in 0..w {
+                if masked[j].is_some() {
+                    continue;
+                }
+                let seq = self.next_seq;
+                self.next_seq += 1;
+                let recycle = self.spares.pop();
+                if self.cluster.send_step(j, t, seq, &theta_arc, recycle) {
+                    counts.retried += 1;
+                    expecting.push((j, seq));
+                }
+            }
+            if expecting.is_empty() {
+                break; // every missing block belongs to a dead worker
+            }
+            let deadline = self.collect_deadline();
+            let mut outstanding = expecting.len();
+            while outstanding > 0 {
+                let Some(r) = self.cluster.recv_deadline(deadline) else { break };
+                if r.t != t {
+                    continue;
+                }
+                let Some(pos) =
+                    expecting.iter().position(|&(j, s)| j == r.worker && s == r.seq)
+                else {
+                    continue;
+                };
+                let (j, _) = expecting.swap_remove(pos);
+                outstanding -= 1;
+                let intact = r.verify();
+                let values = r
+                    .values
+                    .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
+                if !intact {
+                    counts.corrupt += 1;
+                    self.spares.push(values);
+                    continue;
+                }
+                masked[j] = Some(values);
+                counts.recovered += 1;
+            }
+        }
+        Ok(RedispatchOutcome { faults: counts, extra_ms: 0.0 })
     }
 }
 
@@ -223,7 +432,7 @@ pub fn run_with_cluster(
     problem: &RegressionProblem,
     cfg: &RunConfig,
 ) -> Result<RunReport> {
-    let mut exec = ThreadStepExecutor::new(cluster, &cfg.straggler);
+    let mut exec = ThreadStepExecutor::new(cluster, &cfg.straggler).with_retry(cfg.retry);
     run_with_executor(scheme, &mut exec, problem, cfg)
 }
 
@@ -250,6 +459,7 @@ pub fn run_with_executor(
     if scheme.dimension() != k {
         return Err(Error::Config("scheme/problem dimension mismatch".into()));
     }
+    cfg.retry.validate()?;
     // Spawn the linalg pool's persistent workers now (idempotent) so the
     // first timed step doesn't pay thread creation.
     crate::linalg::pool::prewarm();
@@ -272,7 +482,19 @@ pub fn run_with_executor(
 
     for t in 1..=cfg.max_steps {
         steps = t;
-        let exec_stats = exec.execute_step(t, &theta, &mut masked)?;
+        let mut exec_stats = exec.execute_step(t, &theta, &mut masked)?;
+
+        // Robustness: speculatively re-dispatch whatever the window
+        // lost — the retry rounds' realized latencies feed the deadline
+        // oracle through the executor, and their virtual cost lands in
+        // this step's collection time.
+        if cfg.retry.enabled() && masked.iter().any(|m| m.is_none()) {
+            let out = exec.redispatch(t, &theta, &mut masked, &cfg.retry)?;
+            exec_stats.faults.merge(&out.faults);
+            if let Some(ms) = exec_stats.collect_ms.as_mut() {
+                *ms += out.extra_ms;
+            }
+        }
 
         // Simulated communication: broadcast θ + the largest surviving
         // upload (collection waits for the slowest counted worker).
@@ -318,6 +540,7 @@ pub fn run_with_executor(
             collect_ms: exec_stats.collect_ms,
             comm_ms,
             error,
+            faults: exec_stats.faults,
         };
         totals.add(&sm);
         if cfg.record_trace {
@@ -433,5 +656,70 @@ mod tests {
         let scheme = UncodedScheme::new(&p, 8).unwrap();
         let cfg = RunConfig::default(); // says 40
         assert!(run_distributed(Box::new(scheme), &p, &cfg).is_err());
+    }
+
+    #[test]
+    fn corrupted_responses_are_detected_and_never_decoded() {
+        // Every response is corrupted in transit: the master must
+        // detect every checksum mismatch, erase everything, and leave θ
+        // untouched.
+        use super::faults::FaultModel;
+        let p = problem(40);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 6).unwrap();
+        let scheme = LdpcMomentScheme::new(&p, code).unwrap();
+        let cfg = RunConfig {
+            faults: FaultModel { corrupt: 1.0, seed: 17, ..FaultModel::none() },
+            max_steps: 4,
+            ..Default::default()
+        };
+        let r = run_distributed(Box::new(scheme), &p, &cfg).unwrap();
+        assert!(!r.converged);
+        assert!(r.theta.iter().all(|&v| v == 0.0), "corrupt data must not decode");
+        assert_eq!(r.totals.faults.corrupt, 40 * 4);
+    }
+
+    #[test]
+    fn retries_recover_omitted_responses() {
+        // Omission probability 1 with one retry: every first response is
+        // silently dropped, every re-dispatch lands (transient faults
+        // fire once per step), so each step is made whole again.
+        use super::faults::FaultModel;
+        let p = problem(40);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 7).unwrap();
+        let scheme = LdpcMomentScheme::new(&p, code).unwrap();
+        let cfg = RunConfig {
+            faults: FaultModel { omit: 1.0, seed: 18, ..FaultModel::none() },
+            retry: RetryPolicy { max_retries: 1, ..RetryPolicy::disabled() },
+            max_steps: 3,
+            record_trace: true,
+            ..Default::default()
+        };
+        let r = run_distributed(Box::new(scheme), &p, &cfg).unwrap();
+        assert_eq!(r.totals.faults.omitted, 40 * 3);
+        assert_eq!(r.totals.faults.retried, 40 * 3);
+        assert_eq!(r.totals.faults.recovered, 40 * 3);
+        assert_eq!(r.totals.stragglers, 0);
+        assert!(
+            r.trace.last().unwrap().error < r.trace.first().unwrap().error,
+            "recovered steps must make progress"
+        );
+    }
+
+    #[test]
+    fn crashed_workers_stay_down_and_the_run_survives() {
+        use super::faults::FaultModel;
+        let p = problem(40);
+        let code = LdpcCode::gallager(40, 20, 3, 6, 8).unwrap();
+        let scheme = LdpcMomentScheme::new(&p, code).unwrap();
+        let cfg = RunConfig {
+            faults: FaultModel { crash: 0.3, seed: 19, ..FaultModel::none() },
+            max_steps: 6,
+            ..Default::default()
+        };
+        let r = run_distributed(Box::new(scheme), &p, &cfg).unwrap();
+        assert_eq!(r.steps, 6, "crashes degrade the run, they do not abort it");
+        let fc = r.totals.faults;
+        assert!(fc.omitted > 0, "a crash step is silence at the master");
+        assert!(fc.down > 0, "later dispatches find the channel closed");
     }
 }

@@ -153,6 +153,10 @@ pub enum Request {
     Step {
         /// Step index.
         t: usize,
+        /// Per-attempt task sequence number, echoed in the response so
+        /// the master can tell a retry's answer from the original's
+        /// (the fault-free broadcast path sends 0 and ignores it).
+        seq: u64,
         /// The broadcast iterate `θ_{t-1}`.
         theta: Arc<Vec<f64>>,
         /// Response buffer returned for reuse.
@@ -162,6 +166,21 @@ pub enum Request {
     Shutdown,
 }
 
+/// FNV-1a over the response values' bit patterns: the wire checksum a
+/// worker attaches to its response and the master re-derives to detect
+/// in-transit corruption (mismatch ⇒ the response is erased, never
+/// decoded).
+pub fn checksum_of(values: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in values {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// Worker → master message.
 #[derive(Debug)]
 pub struct Response {
@@ -169,10 +188,25 @@ pub struct Response {
     pub worker: usize,
     /// Step index.
     pub t: usize,
+    /// Echo of the request's sequence number.
+    pub seq: u64,
     /// Task result (see [`WorkerPayload::response_len`]).
     pub values: Result<Vec<f64>>,
+    /// Sender-side [`checksum_of`] the task result.
+    pub checksum: u64,
     /// Worker compute time in nanoseconds.
     pub compute_ns: u64,
+}
+
+impl Response {
+    /// Does the payload match its sender-side checksum? Errors carry no
+    /// payload to damage and verify trivially.
+    pub fn verify(&self) -> bool {
+        match &self.values {
+            Ok(v) => checksum_of(v) == self.checksum,
+            Err(_) => true,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -264,6 +298,38 @@ mod tests {
         assert_eq!(p.storage_bytes(), 8000);
         // 10 response scalars × 8 bytes, independent of k for Rows.
         assert_eq!(p.response_bytes(100), 80);
+    }
+
+    #[test]
+    fn checksums_detect_single_bit_damage() {
+        let mut rng = Rng::new(4);
+        let values = rng.gaussian_vec(16);
+        let mut r = Response {
+            worker: 0,
+            t: 1,
+            seq: 9,
+            checksum: checksum_of(&values),
+            values: Ok(values),
+            compute_ns: 0,
+        };
+        assert!(r.verify());
+        if let Ok(v) = r.values.as_mut() {
+            v[7] = f64::from_bits(v[7].to_bits() ^ 1);
+        }
+        assert!(!r.verify(), "a one-bit flip must break the checksum");
+        // Distinct payloads hash apart; the empty payload is stable.
+        assert_ne!(checksum_of(&[1.0]), checksum_of(&[2.0]));
+        assert_eq!(checksum_of(&[]), 0xcbf2_9ce4_8422_2325);
+        // An error response has nothing to verify.
+        let e = Response {
+            worker: 0,
+            t: 1,
+            seq: 0,
+            values: Err(crate::error::Error::Runtime("boom".into())),
+            checksum: 123,
+            compute_ns: 0,
+        };
+        assert!(e.verify());
     }
 
     #[test]

@@ -9,7 +9,8 @@
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-use crate::coordinator::protocol::{Request, Response, WorkerPayload};
+use crate::coordinator::faults::WorkerFaultPlan;
+use crate::coordinator::protocol::{checksum_of, Request, Response, WorkerPayload};
 use crate::runtime::ComputeBackend;
 
 /// Per-thread CPU time in nanoseconds.
@@ -27,22 +28,41 @@ pub fn thread_cpu_ns() -> u64 {
     ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
 }
 
-/// Body of a worker thread. Runs until a [`Request::Shutdown`] or a
-/// closed channel.
+/// Body of a worker thread. Runs until a [`Request::Shutdown`], a
+/// closed channel, or the `plan`'s crash step.
+///
+/// Fault semantics (see [`crate::coordinator::faults`]): a crash step
+/// exits the thread before responding — the master learns of the death
+/// when a later send finds the channel closed. Omission and corruption
+/// are *transient*: they fire on the first request for their step and
+/// spare retries of the same step, which is what gives the master's
+/// re-dispatch layer something to recover. Corruption damages the
+/// payload *after* the honest checksum is taken, so the master's
+/// [`Response::verify`] detects it.
 pub fn worker_loop(
     id: usize,
     payload: Arc<WorkerPayload>,
     backend: Arc<dyn ComputeBackend>,
     requests: Receiver<Request>,
     responses: Sender<Response>,
+    plan: WorkerFaultPlan,
 ) {
     // Cluster workers are already running w-way parallel; their shard
     // mat-vecs must not also contend for the shared linalg pool (forty
     // threads behind one condvar would serialize, not speed up).
     crate::linalg::pool::set_thread_inline(true);
+    // Last step a transient fault (omit/corrupt) was applied to.
+    let mut faulted_at = 0usize;
     while let Ok(req) = requests.recv() {
         match req {
-            Request::Step { t, theta, recycle } => {
+            Request::Step { t, seq, theta, recycle } => {
+                if plan.crashes_at(t) {
+                    return;
+                }
+                if plan.omits(t) && faulted_at != t {
+                    faulted_at = t;
+                    continue;
+                }
                 let start = thread_cpu_ns();
                 // Compute into the buffer the master recycled from a
                 // previous step (fresh on the first laps, before buffers
@@ -51,12 +71,26 @@ pub fn worker_loop(
                 // (PJRT) can keep a device-resident copy of the constant
                 // shard.
                 let mut buf = recycle.unwrap_or_default();
-                let values = payload
+                let mut values = payload
                     .compute_into(&theta, backend.as_ref(), Some(id as u64), &mut buf)
                     .map(|()| buf);
                 let compute_ns = thread_cpu_ns().saturating_sub(start);
+                let mut checksum = values.as_ref().map(|v| checksum_of(v)).unwrap_or(0);
+                if plan.corrupts(t) && faulted_at != t {
+                    faulted_at = t;
+                    if let Ok(v) = values.as_mut() {
+                        if v.is_empty() {
+                            checksum ^= 1;
+                        } else {
+                            for x in v.iter_mut() {
+                                *x = f64::from_bits(x.to_bits() ^ 1);
+                            }
+                        }
+                    }
+                }
                 // A send failure means the master hung up; exit quietly.
-                if responses.send(Response { worker: id, t, values, compute_ns }).is_err() {
+                let resp = Response { worker: id, t, seq, values, checksum, compute_ns };
+                if responses.send(resp).is_err() {
                     return;
                 }
             }
@@ -81,14 +115,21 @@ mod tests {
         });
         let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
         let h = std::thread::spawn(move || {
-            worker_loop(3, payload, backend, req_rx, resp_tx)
+            worker_loop(3, payload, backend, req_rx, resp_tx, WorkerFaultPlan::default())
         });
         req_tx
-            .send(Request::Step { t: 1, theta: Arc::new(vec![1.0, 2.0]), recycle: None })
+            .send(Request::Step {
+                t: 1,
+                seq: 42,
+                theta: Arc::new(vec![1.0, 2.0]),
+                recycle: None,
+            })
             .unwrap();
         let r = resp_rx.recv().unwrap();
         assert_eq!(r.worker, 3);
         assert_eq!(r.t, 1);
+        assert_eq!(r.seq, 42, "the response echoes the request's sequence number");
+        assert!(r.verify(), "an honest response passes its checksum");
         assert_eq!(r.values.unwrap(), vec![3.0, 2.0]);
         req_tx.send(Request::Shutdown).unwrap();
         h.join().unwrap();
@@ -103,7 +144,7 @@ mod tests {
         });
         let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
         let h = std::thread::spawn(move || {
-            worker_loop(0, payload, backend, req_rx, resp_tx)
+            worker_loop(0, payload, backend, req_rx, resp_tx, WorkerFaultPlan::default())
         });
         // A stale buffer of the wrong length must be overwritten, not
         // appended to.
@@ -111,6 +152,7 @@ mod tests {
         req_tx
             .send(Request::Step {
                 t: 1,
+                seq: 0,
                 theta: Arc::new(vec![1.0, 2.0]),
                 recycle: Some(stale),
             })
@@ -127,9 +169,54 @@ mod tests {
         let (resp_tx, _resp_rx) = mpsc::channel();
         let payload = Arc::new(WorkerPayload::Idle);
         let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
-        let h =
-            std::thread::spawn(move || worker_loop(0, payload, backend, req_rx, resp_tx));
+        let h = std::thread::spawn(move || {
+            worker_loop(0, payload, backend, req_rx, resp_tx, WorkerFaultPlan::default())
+        });
         drop(req_tx);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn worker_honors_fault_plan_and_spares_retries() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let payload = Arc::new(WorkerPayload::Rows {
+            rows: Matrix::from_rows(&[vec![1.0, 1.0]]).unwrap(),
+        });
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+        let plan = WorkerFaultPlan {
+            crash_at_step: Some(3),
+            corrupt_steps: vec![2],
+            omit_steps: vec![1],
+        };
+        let h = std::thread::spawn(move || {
+            worker_loop(5, payload, backend, req_rx, resp_tx, plan)
+        });
+        let theta = Arc::new(vec![1.0, 2.0]);
+        let step = |t: usize, seq: u64| Request::Step {
+            t,
+            seq,
+            theta: Arc::clone(&theta),
+            recycle: None,
+        };
+        // Step 1 is omitted once; the retry (same step, new seq) lands.
+        req_tx.send(step(1, 1)).unwrap();
+        req_tx.send(step(1, 2)).unwrap();
+        let r = resp_rx.recv().unwrap();
+        assert_eq!((r.t, r.seq), (1, 2), "the first response was swallowed");
+        assert!(r.verify());
+        // Step 2 is corrupted once — detectably — and the retry is honest.
+        req_tx.send(step(2, 3)).unwrap();
+        let r = resp_rx.recv().unwrap();
+        assert!(!r.verify(), "corrupted payload must fail its checksum");
+        assert_ne!(r.values.unwrap(), vec![3.0]);
+        req_tx.send(step(2, 4)).unwrap();
+        let r = resp_rx.recv().unwrap();
+        assert!(r.verify());
+        assert_eq!(r.values.unwrap(), vec![3.0]);
+        // Step 3 crashes the thread: no response, channel closes.
+        req_tx.send(step(3, 5)).unwrap();
+        h.join().unwrap();
+        assert!(resp_rx.recv().is_err(), "a crashed worker never responds");
     }
 }

@@ -14,6 +14,7 @@ use crate::codes::ldpc::LdpcCode;
 use crate::codes::mds::{EvalPoints, VandermondeCode};
 use crate::config::RunConfig;
 use crate::coordinator::cluster::Cluster;
+use crate::coordinator::faults::{fault_plans, FaultModel};
 use crate::coordinator::metrics::RunReport;
 use crate::coordinator::run_with_cluster;
 use crate::coordinator::schemes::gradcoding::GradCodingScheme;
@@ -136,6 +137,13 @@ pub struct Aggregate {
     pub mean_unrecovered: f64,
     /// Mean decode rounds per step.
     pub mean_decode_rounds: f64,
+    /// Mean degraded steps per trial (steps that applied a best-effort
+    /// gradient with unrecovered coordinates; all trials, converged or
+    /// not).
+    pub mean_degraded_steps: f64,
+    /// Mean tasks lost to injected faults per trial (crash + corrupt +
+    /// omitted, minus recoveries).
+    pub mean_lost_tasks: f64,
 }
 
 fn mean_std(xs: &[f64]) -> (f64, f64) {
@@ -156,6 +164,8 @@ struct TrialStats {
     wall_ms: Vec<f64>,
     unrec: Vec<f64>,
     rounds: Vec<f64>,
+    degraded: Vec<f64>,
+    lost: Vec<f64>,
     converged: usize,
 }
 
@@ -169,6 +179,8 @@ impl TrialStats {
         }
         self.unrec.push(report.totals.mean_unrecovered());
         self.rounds.push(report.totals.mean_decode_rounds());
+        self.degraded.push(report.totals.degraded_steps as f64);
+        self.lost.push(report.totals.faults.lost() as f64);
     }
 
     fn finish(self, scheme: String, trials: usize) -> Aggregate {
@@ -177,6 +189,8 @@ impl TrialStats {
         let (mean_wall_ms, _) = mean_std(&self.wall_ms);
         let (mean_unrecovered, _) = mean_std(&self.unrec);
         let (mean_decode_rounds, _) = mean_std(&self.rounds);
+        let (mean_degraded_steps, _) = mean_std(&self.degraded);
+        let (mean_lost_tasks, _) = mean_std(&self.lost);
         Aggregate {
             scheme,
             trials,
@@ -188,6 +202,8 @@ impl TrialStats {
             mean_wall_ms,
             mean_unrecovered,
             mean_decode_rounds,
+            mean_degraded_steps,
+            mean_lost_tasks,
         }
     }
 }
@@ -205,7 +221,11 @@ fn reseed(model: &StragglerModel, seed: u64) -> StragglerModel {
 }
 
 /// Run `spec.trials` trials of a scheme on a problem, reusing the scheme
-/// encoding and worker cluster across trials.
+/// encoding and worker cluster across trials. With a fault model set,
+/// each trial instead gets its own freshly spawned cluster with a
+/// reseeded fault realization — crashed worker threads cannot be
+/// restarted, so a shared cluster would bleed one trial's deaths into
+/// the next.
 pub fn run_trials(
     scheme_spec: &SchemeSpec,
     problem: &RegressionProblem,
@@ -213,17 +233,38 @@ pub fn run_trials(
 ) -> Result<Aggregate> {
     let scheme = scheme_spec.build(problem, spec.config.workers)?;
     let backend = crate::coordinator::make_backend(&spec.config)?;
-    let cluster = Cluster::spawn(scheme.payloads(), Arc::clone(&backend));
+    spec.config.faults.validate()?;
+    let shared = if spec.config.faults.is_none() {
+        Some(Cluster::spawn(scheme.payloads(), Arc::clone(&backend)))
+    } else {
+        None
+    };
 
     let mut stats = TrialStats::default();
     for trial in 0..spec.trials {
+        let seed = spec.straggler_seed_base + trial as u64;
         let mut cfg = spec.config.clone();
-        cfg.straggler =
-            reseed(&spec.config.straggler, spec.straggler_seed_base + trial as u64);
-        let report = run_with_cluster(scheme.as_ref(), &cluster, problem, &cfg)?;
+        cfg.straggler = reseed(&spec.config.straggler, seed);
+        let report = match &shared {
+            Some(cluster) => run_with_cluster(scheme.as_ref(), cluster, problem, &cfg)?,
+            None => {
+                cfg.faults = spec.config.faults.reseed(seed);
+                let plans = fault_plans(&cfg.faults, cfg.workers, cfg.max_steps);
+                let cluster = Cluster::spawn_with_faults(
+                    scheme.payloads(),
+                    Arc::clone(&backend),
+                    &plans,
+                );
+                let report = run_with_cluster(scheme.as_ref(), &cluster, problem, &cfg)?;
+                cluster.shutdown();
+                report
+            }
+        };
         stats.add(&report);
     }
-    cluster.shutdown();
+    if let Some(cluster) = shared {
+        cluster.shutdown();
+    }
     Ok(stats.finish(scheme.name(), spec.trials))
 }
 
@@ -242,6 +283,10 @@ pub struct SimSpec {
     /// optional flop-aware compute and NIC contention); `None` = the
     /// synchronous simulator.
     pub pipeline: Option<PipelineSpec>,
+    /// Fault-injection process (crashes, corruption, omission). Like the
+    /// latency model, it is reseeded per trial (`base + trial`), so each
+    /// trial sees a fresh fault realization of the same rates.
+    pub faults: FaultModel,
 }
 
 /// Pipelined-executor add-on for [`SimSpec`].
@@ -287,7 +332,8 @@ pub fn run_sim_trials(
         cfg.straggler = reseed(&spec.config.straggler, seed);
         let report = match &sim.pipeline {
             None => {
-                let sim_cfg = SimConfig::new(sim.latency.reseed(seed), sim.policy.clone());
+                let sim_cfg = SimConfig::new(sim.latency.reseed(seed), sim.policy.clone())
+                    .with_faults(sim.faults.reseed(seed));
                 let mut cluster =
                     SimCluster::new(scheme.payloads(), Arc::clone(&backend), &cfg, &sim_cfg);
                 crate::coordinator::run_with_executor(scheme.as_ref(), &mut cluster, problem, &cfg)?
@@ -299,6 +345,7 @@ pub fn run_sim_trials(
                     max_staleness: p.max_staleness,
                     compute: p.compute,
                     topology: p.topology.clone(),
+                    faults: sim.faults.reseed(seed),
                 };
                 let mut cluster = AsyncSimCluster::new(
                     scheme.payloads(),
@@ -357,6 +404,7 @@ mod tests {
             latency: LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 0 },
             policy: DeadlinePolicy::WaitForK(34),
             pipeline: None,
+            faults: FaultModel::none(),
         };
         let agg = run_sim_trials(
             &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
@@ -388,6 +436,7 @@ mod tests {
             latency: LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 0 },
             policy: DeadlinePolicy::WaitForK(34),
             pipeline: None,
+            faults: FaultModel::none(),
         };
         let scheme = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 };
         let a = run_sim_trials(&scheme, &p, &mk(100), &sim).unwrap();
@@ -418,6 +467,7 @@ mod tests {
             latency: latency.clone(),
             policy: DeadlinePolicy::WaitForK(34),
             pipeline: None,
+            faults: FaultModel::none(),
         };
         let s0 = SimSpec {
             pipeline: Some(PipelineSpec { max_staleness: 0, ..Default::default() }),
@@ -460,6 +510,7 @@ mod tests {
                 )),
                 ..Default::default()
             }),
+            faults: FaultModel::none(),
         };
         let agg = run_sim_trials(
             &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
@@ -470,6 +521,34 @@ mod tests {
         .unwrap();
         assert!(agg.convergence_rate > 0.99, "{agg:?}");
         assert!(agg.mean_sim_ms > 0.0, "virtual time must accumulate");
+    }
+
+    #[test]
+    fn faulty_sim_trials_converge_and_track_losses() {
+        // A light corruption process: corrupted arrivals are erased at
+        // the master, the LDPC decode absorbs them, and the aggregate
+        // surfaces the losses.
+        let p = RegressionProblem::generate(&SynthConfig::dense(160, 40), 5);
+        let spec = ExperimentSpec {
+            config: RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() },
+            trials: 2,
+            straggler_seed_base: 60,
+        };
+        let sim = SimSpec {
+            latency: LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 0 },
+            policy: DeadlinePolicy::WaitForK(34),
+            pipeline: None,
+            faults: FaultModel { corrupt: 0.05, ..FaultModel::none() },
+        };
+        let agg = run_sim_trials(
+            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
+            &p,
+            &spec,
+            &sim,
+        )
+        .unwrap();
+        assert!(agg.convergence_rate > 0.99, "{agg:?}");
+        assert!(agg.mean_lost_tasks > 0.0, "corruption must register as lost tasks");
     }
 
     #[test]

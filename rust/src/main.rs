@@ -4,6 +4,7 @@
 use moment_ldpc::cli::{Args, USAGE};
 use moment_ldpc::codes::density::DensityEvolution;
 use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::faults::{FaultModel, RetryPolicy};
 use moment_ldpc::coordinator::schemes::ksdy::SketchKind;
 use moment_ldpc::coordinator::straggler::{LatencyModel, StragglerModel};
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
@@ -105,6 +106,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         Some(u) => Projection::HardThreshold(u),
         None => Projection::None,
     };
+    let faults = fault_model_from(args)?;
     let spec = ExperimentSpec {
         config: RunConfig {
             workers,
@@ -120,13 +122,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             max_steps: args.get::<usize>("max-steps", 4000)?,
             backend,
             record_trace: args.has("trace"),
+            faults: faults.clone(),
+            retry: retry_policy_from(args)?,
             ..Default::default()
         },
         trials,
         straggler_seed_base: args.get::<u64>("straggler-seed", 1000)?,
     };
     let scheme = scheme_spec_from(&args.get_str("scheme", "ldpc"), args, workers)?;
-    let setup = spec.config.straggler.name();
+    let setup = if faults.is_none() {
+        spec.config.straggler.name()
+    } else {
+        format!("{}/{}", spec.config.straggler.name(), faults.name())
+    };
     let agg = run_trials(&scheme, &problem, &spec)?;
     print_aggregate(&agg, &setup, args.has("json"));
     Ok(())
@@ -163,6 +171,42 @@ fn latency_model_from(args: &Args) -> Result<LatencyModel> {
     })
 }
 
+/// Parse `--faults SPEC` (e.g. `crash:0.05,corrupt:0.01`; default
+/// `none`). The per-trial harness reseeds the model from the trial
+/// index, exactly like the latency model.
+fn fault_model_from(args: &Args) -> Result<FaultModel> {
+    FaultModel::parse(&args.get_str("faults", "none"))
+}
+
+/// Parse the master-side retry flags. `--retries N` turns the
+/// re-dispatch layer on; the tuning knobs are rejected without it.
+fn retry_policy_from(args: &Args) -> Result<RetryPolicy> {
+    let retries = args.get_opt::<u32>("retries")?;
+    let backoff = args.get_opt::<f64>("backoff-ms")?;
+    let cap = args.get_opt::<f64>("backoff-cap-ms")?;
+    let timeout = args.get_opt::<f64>("timeout-ms")?;
+    if retries.is_none() && (backoff.is_some() || cap.is_some() || timeout.is_some()) {
+        return Err(Error::Config(
+            "--backoff-ms / --backoff-cap-ms / --timeout-ms tune the retry layer: add \
+             --retries N (N > 0)"
+                .into(),
+        ));
+    }
+    let mut p = RetryPolicy::disabled();
+    p.max_retries = retries.unwrap_or(0);
+    if let Some(b) = backoff {
+        p.backoff_ms = b;
+    }
+    if let Some(c) = cap {
+        p.backoff_cap_ms = c;
+    }
+    if let Some(t) = timeout {
+        p.timeout_ms = t;
+    }
+    p.validate()?;
+    Ok(p)
+}
+
 fn deadline_policy_from(args: &Args, workers: usize) -> Result<DeadlinePolicy> {
     Ok(match args.get_str("policy", "wait-k").as_str() {
         "all" => DeadlinePolicy::WaitForAll,
@@ -187,7 +231,8 @@ fn print_aggregate(agg: &Aggregate, setup: &str, json: bool) {
             "{{\"scheme\":\"{}\",\"setup\":\"{setup}\",\"trials\":{},\
              \"convergence_rate\":{:.3},\"mean_steps\":{:.2},\"std_steps\":{:.2},\
              \"mean_sim_ms\":{:.3},\"mean_unrecovered\":{:.3},\
-             \"mean_decode_rounds\":{:.3}}}",
+             \"mean_decode_rounds\":{:.3},\"mean_degraded_steps\":{:.2},\
+             \"mean_lost_tasks\":{:.2}}}",
             agg.scheme,
             agg.trials,
             agg.convergence_rate,
@@ -195,10 +240,12 @@ fn print_aggregate(agg: &Aggregate, setup: &str, json: bool) {
             agg.std_steps,
             agg.mean_sim_ms,
             agg.mean_unrecovered,
-            agg.mean_decode_rounds
+            agg.mean_decode_rounds,
+            agg.mean_degraded_steps,
+            agg.mean_lost_tasks
         );
     } else {
-        println!(
+        let mut line = format!(
             "scheme={} setup={setup} trials={} converged={:.0}% steps={:.1}±{:.1} \
              sim_ms={:.2}±{:.2} unrec/step={:.2} rounds/step={:.2}",
             agg.scheme,
@@ -211,6 +258,13 @@ fn print_aggregate(agg: &Aggregate, setup: &str, json: bool) {
             agg.mean_unrecovered,
             agg.mean_decode_rounds
         );
+        if agg.mean_lost_tasks > 0.0 || agg.mean_degraded_steps > 0.0 {
+            line.push_str(&format!(
+                " lost/trial={:.1} degraded/trial={:.1}",
+                agg.mean_lost_tasks, agg.mean_degraded_steps
+            ));
+        }
+        println!("{line}");
     }
 }
 
@@ -255,6 +309,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             step_size: args.get_opt::<f64>("step")?,
             rel_tol: args.get::<f64>("rel-tol", 1e-3)?,
             max_steps: args.get::<usize>("max-steps", 2000)?,
+            retry: retry_policy_from(args)?,
             ..Default::default()
         },
         trials,
@@ -262,7 +317,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     };
     let scheme = scheme_spec_from(&args.get_str("scheme", "ldpc"), args, workers)?;
     let pipeline = pipeline_spec_from(args)?;
-    let setup = match &pipeline {
+    let faults = fault_model_from(args)?;
+    let mut setup = match &pipeline {
         Some(p) => {
             let topo = match &p.topology {
                 Some(t) => format!(",{}", t.label()),
@@ -278,7 +334,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
         None => format!("{}/{}", latency.name(), policy.name()),
     };
-    let sim = SimSpec { latency: latency.clone(), policy: policy.clone(), pipeline };
+    if !faults.is_none() {
+        setup = format!("{setup}/{}", faults.name());
+    }
+    let sim = SimSpec { latency: latency.clone(), policy: policy.clone(), pipeline, faults };
     let agg = run_sim_trials(&scheme, &problem, &spec, &sim)?;
     print_aggregate(&agg, &setup, args.has("json"));
     Ok(())

@@ -47,11 +47,12 @@
 use std::sync::Arc;
 
 use crate::config::RunConfig;
+use crate::coordinator::faults::{FaultCounts, FaultModel, FaultSampler, RetryPolicy};
 use crate::coordinator::metrics::RunReport;
 use crate::coordinator::protocol::WorkerPayload;
 use crate::coordinator::schemes::GradientScheme;
 use crate::coordinator::straggler::{LatencyModel, LatencySampler, StragglerSampler};
-use crate::coordinator::{run_with_executor, StepExecution, StepExecutor};
+use crate::coordinator::{run_with_executor, RedispatchOutcome, StepExecution, StepExecutor};
 use crate::data::RegressionProblem;
 use crate::error::{Error, Result};
 use crate::runtime::ComputeBackend;
@@ -59,7 +60,11 @@ use crate::runtime::ComputeBackend;
 use super::deadline::{Cutoff, DeadlinePolicy, DeadlineState};
 use super::event::{EventKind, TaskEventQueue};
 use super::topology::{LinkModel, Topology, TopologyState};
-use super::{compute_into_slot, mirror_step};
+use super::{compute_into_slot, mirror_step, redispatch_missing, RetryEnv};
+
+/// Tag for events that are not tied to a task (fault markers, θ-at-rack
+/// fan-outs): no real task id ever reaches this value.
+const INFO_TASK: u64 = u64::MAX;
 
 /// Staleness bounds past this are almost certainly configuration
 /// mistakes (the executor keeps `S + 1` iterate snapshots alive).
@@ -151,10 +156,15 @@ pub struct AsyncSimConfig {
     /// cost without modelling contention; leave `RunConfig::comm` at
     /// `None` when a topology is active.)
     pub topology: Option<Topology>,
+    /// Fault-injection process (crashes, corruption, omission),
+    /// composable with every latency model. Fault draws use their own
+    /// RNG stream, so [`FaultModel::none`] leaves the run bit-identical
+    /// to a fault-free one.
+    pub faults: FaultModel,
 }
 
 impl AsyncSimConfig {
-    /// Opaque compute, free transfers — the pure pipelining
+    /// Opaque compute, free transfers, no faults — the pure pipelining
     /// configuration.
     pub fn new(latency: LatencyModel, policy: DeadlinePolicy, max_staleness: usize) -> Self {
         AsyncSimConfig {
@@ -163,6 +173,7 @@ impl AsyncSimConfig {
             max_staleness,
             compute: ComputeModel::Opaque,
             topology: None,
+            faults: FaultModel::none(),
         }
     }
 
@@ -184,15 +195,27 @@ impl AsyncSimConfig {
         self
     }
 
+    /// Builder-style fault model.
+    pub fn with_faults(mut self, faults: FaultModel) -> Self {
+        self.faults = faults;
+        self
+    }
+
     /// Label for reports: `latency/policy/S=..`, plus the rack count
-    /// when the topology is hierarchical.
+    /// when the topology is hierarchical and the fault model when one
+    /// is active.
     pub fn label(&self) -> String {
-        let base =
+        let mut base =
             format!("{}/{}/S={}", self.latency.name(), self.policy.name(), self.max_staleness);
-        match &self.topology {
-            Some(t) if !t.is_flat() => format!("{base}/{}", t.label()),
-            _ => base,
+        if let Some(t) = &self.topology {
+            if !t.is_flat() {
+                base = format!("{base}/{}", t.label());
+            }
         }
+        if !self.faults.is_none() {
+            base = format!("{base}/{}", self.faults.name());
+        }
+        base
     }
 }
 
@@ -212,6 +235,10 @@ struct Task {
     /// fed to the deadline policy when the task is cancelled, so
     /// cancelled and arrived tasks observe the same latency definition.
     eta_ms: f64,
+    /// The fault model corrupted this response in transit: it arrives
+    /// as a `CorruptArrival`, is detected by checksum, and is erased
+    /// instead of decoded.
+    corrupt: bool,
 }
 
 /// This step's stop rule, derived from the policy's [`Cutoff`].
@@ -241,10 +268,21 @@ pub struct AsyncSimCluster<'a> {
     compute: ComputeModel,
     /// Network busy cursors (`None` = free instantaneous transfers).
     net: Option<TopologyState>,
+    /// Fault stream (crash/corrupt/omit draws plus down-state). Always
+    /// present; a fault-free model draws from its own RNG and never
+    /// fires, leaving everything else bit-identical.
+    faults: FaultSampler,
     queue: TaskEventQueue,
     /// Per-worker in-flight task (`None` = idle, restarts at the next
     /// broadcast).
     inflight: Vec<Option<Task>>,
+    /// Per-rack list of dispatched tasks waiting for their rack's θ
+    /// relay copy: `(worker, task id, compute ms, omitted)`. Drained by
+    /// the rack's `ThetaAtRack` event, which enqueues the rack-NIC θ
+    /// downlinks at the instant the relay actually lands — an idle rack
+    /// NIC ships a ready laggard response first instead of being
+    /// pre-charged for a fan-out still crossing the master link.
+    theta_waiters: Vec<Vec<(usize, u64, f64, bool)>>,
     next_task_id: u64,
     /// Ring of the last `S + 1` broadcast iterates; slot `v % (S + 1)`
     /// holds version `v`, which no usable task can outlive.
@@ -261,6 +299,8 @@ pub struct AsyncSimCluster<'a> {
     cancelled_total: u64,
     /// Stale responses applied over the cluster's lifetime.
     stale_applied_total: u64,
+    /// Fault counters accumulated over the cluster's lifetime.
+    faults_total: FaultCounts,
 }
 
 impl<'a> AsyncSimCluster<'a> {
@@ -314,6 +354,8 @@ impl<'a> AsyncSimCluster<'a> {
         } else {
             None
         };
+        sim.faults.validate()?;
+        let racks = sim.topology.as_ref().map_or(1, |t| t.racks());
         Ok(AsyncSimCluster {
             payloads,
             costs,
@@ -324,8 +366,10 @@ impl<'a> AsyncSimCluster<'a> {
             max_staleness: sim.max_staleness,
             compute: sim.compute,
             net,
+            faults: sim.faults.sampler(),
             queue: TaskEventQueue::new(),
             inflight: vec![None; w],
+            theta_waiters: vec![Vec::new(); racks],
             next_task_id: 0,
             thetas: vec![Vec::new(); sim.max_staleness + 1],
             lat_buf: Vec::new(),
@@ -334,6 +378,7 @@ impl<'a> AsyncSimCluster<'a> {
             now_ms: 0.0,
             cancelled_total: 0,
             stale_applied_total: 0,
+            faults_total: FaultCounts::default(),
         })
     }
 
@@ -359,6 +404,11 @@ impl<'a> AsyncSimCluster<'a> {
     /// tasks feed the same transfer-aware latency definition).
     pub fn deadline_observations(&self) -> &[f64] {
         self.deadline.observations()
+    }
+
+    /// Fault counters accumulated over the cluster's lifetime.
+    pub fn faults_total(&self) -> FaultCounts {
+        self.faults_total
     }
 }
 
@@ -409,13 +459,36 @@ impl StepExecutor for AsyncSimCluster<'_> {
         //    keeps per-worker chains (Markov states, heterogeneous
         //    multipliers) aligned with the synchronous simulator; busy
         //    laggards simply ignore their draw. Idle workers (re)start.
+        //    Fault draws come from their own stream (three Bernoullis
+        //    per worker, fixed count) and fire before dispatch: crash >
+        //    omit > corrupt, and a crash kills whatever the worker was
+        //    doing — a busy laggard's task included.
         let mut lat = std::mem::take(&mut self.lat_buf);
         self.latency.sample_into(w, &mut lat);
+        self.faults.next_step(w);
         if let Some(net) = self.net.as_mut() {
             net.begin_window();
         }
+        let mut fc = FaultCounts::default();
         let mut fresh_live = 0usize;
         for (j, &draw) in lat.iter().enumerate() {
+            if self.faults.is_down(j, self.now_ms) {
+                debug_assert!(self.inflight[j].is_none(), "a down worker holds no task");
+                fc.down += 1;
+                continue; // crashed earlier; not yet (or never) restarted
+            }
+            if self.faults.crashes(j) {
+                // The crash takes the worker's current task with it: a
+                // newly dispatched task dies unstarted, a busy laggard's
+                // queued events become ghosts.
+                self.inflight[j] = None;
+                fc.crashed += 1;
+                self.queue.push(self.now_ms, j, INFO_TASK, EventKind::WorkerDown);
+                if let Some(up) = self.faults.mark_down(j, self.now_ms) {
+                    self.queue.push(up, j, INFO_TASK, EventKind::WorkerUp);
+                }
+                continue;
+            }
             if self.inflight[j].is_some() {
                 continue; // laggard: still computing an earlier version
             }
@@ -423,28 +496,61 @@ impl StepExecutor for AsyncSimCluster<'_> {
             fresh_live += 1;
             let id = self.next_task_id;
             self.next_task_id += 1;
+            let corrupt = !self.faults.omits(j) && self.faults.corrupts(j);
+            let omit = self.faults.omits(j);
+            if omit {
+                fc.omitted += 1;
+            }
+            let compute_ms = self.compute.task_ms(self.costs.flops[j], draw);
+            let bytes = self.costs.response_bytes[j];
             // With a topology, θ reaches this worker through the network
             // (flat: a serialized master unicast; hierarchical: one
-            // master relay per rack, then a rack-NIC unicast); compute
-            // starts when the transfer lands.
-            let compute_start = match self.net.as_mut() {
-                Some(net) => net.unicast_theta(j, self.now_ms, self.costs.broadcast_bytes),
-                None => self.now_ms,
+            // eagerly priced master relay per rack, with the rack-NIC
+            // fan-out deferred to the relay's `ThetaAtRack` event);
+            // compute starts when the transfer lands. An omitted task
+            // still loads every θ link — only its response vanishes —
+            // but never ships a response event.
+            let eta = match self.net.as_mut() {
+                Some(net) if net.hierarchical() => {
+                    let (r, relay_at, newly) =
+                        net.relay_theta(j, self.now_ms, self.costs.broadcast_bytes);
+                    if newly {
+                        self.queue.push(relay_at, r, INFO_TASK, EventKind::ThetaAtRack);
+                    }
+                    self.theta_waiters[r].push((j, id, compute_ms, omit));
+                    net.eta_before_theta(relay_at, self.costs.broadcast_bytes, compute_ms, bytes)
+                }
+                Some(net) => {
+                    let done =
+                        net.unicast_theta(j, self.now_ms, self.costs.broadcast_bytes)
+                            + compute_ms;
+                    if !omit {
+                        self.queue.push(done, j, id, EventKind::ComputeDone);
+                    }
+                    net.eta_at_dispatch(done, bytes)
+                }
+                None => {
+                    let done = self.now_ms + compute_ms;
+                    if !omit {
+                        let kind = if corrupt {
+                            EventKind::CorruptArrival
+                        } else {
+                            EventKind::Arrival
+                        };
+                        self.queue.push(done, j, id, kind);
+                    }
+                    done
+                }
             };
-            let done = compute_start + self.compute.task_ms(self.costs.flops[j], draw);
-            let (kind, eta) = match self.net.as_ref() {
-                Some(net) => (
-                    EventKind::ComputeDone,
-                    net.eta_at_dispatch(done, self.costs.response_bytes[j]),
-                ),
-                None => (EventKind::Arrival, done),
-            };
-            self.queue.push(done, j, id, kind);
             self.inflight[j] =
-                Some(Task { id, version: t, start_ms: self.now_ms, eta_ms: eta });
+                Some(Task { id, version: t, start_ms: self.now_ms, eta_ms: eta, corrupt });
         }
         self.lat_buf = lat;
-        debug_assert!(self.inflight.iter().all(|x| x.is_some()));
+        debug_assert!(self
+            .inflight
+            .iter()
+            .enumerate()
+            .all(|(j, x)| x.is_some() || self.faults.is_down(j, self.now_ms)));
 
         // 2. Clear the decode view: every slot starts empty and only
         //    this window's arrivals fill it.
@@ -496,6 +602,45 @@ impl StepExecutor for AsyncSimCluster<'_> {
                 }
             }
             let ev = self.queue.pop().expect("peeked a pending event");
+            match ev.kind {
+                // Fault markers carry no task; they exist so crash and
+                // restart instants are first-class, traceable events.
+                EventKind::WorkerDown | EventKind::WorkerUp => continue,
+                EventKind::ThetaAtRack => {
+                    // This rack's θ relay landed: enqueue the rack-NIC
+                    // downlinks for its waiting workers (FIFO in
+                    // dispatch order) and schedule their compute. Tasks
+                    // crashed away while the relay was in flight are
+                    // skipped; omitted tasks still load the NIC but
+                    // never ship a response.
+                    let r = ev.worker;
+                    let mut waiters = std::mem::take(&mut self.theta_waiters[r]);
+                    for &(j, id, compute_ms, omit) in waiters.iter() {
+                        let alive = matches!(self.inflight[j], Some(task) if task.id == id);
+                        if !alive {
+                            continue;
+                        }
+                        let net = self
+                            .net
+                            .as_mut()
+                            .expect("θ relay events only exist with a topology");
+                        let done = net
+                            .enqueue_rack_uplink(j, ev.time_ms, self.costs.broadcast_bytes)
+                            + compute_ms;
+                        let eta = net.eta_at_dispatch(done, self.costs.response_bytes[j]);
+                        if let Some(task) = self.inflight[j].as_mut() {
+                            task.eta_ms = eta;
+                        }
+                        if !omit {
+                            self.queue.push(done, j, id, EventKind::ComputeDone);
+                        }
+                    }
+                    waiters.clear();
+                    self.theta_waiters[r] = waiters; // recycle the allocation
+                    continue;
+                }
+                _ => {}
+            }
             let task = match self.inflight[ev.worker] {
                 Some(task) if task.id == ev.task => task,
                 // Ghost of a cancelled task: its compute never finishes
@@ -515,6 +660,14 @@ impl StepExecutor for AsyncSimCluster<'_> {
                         .as_mut()
                         .expect("transfer events only exist with a topology");
                     let bytes = self.costs.response_bytes[ev.worker];
+                    // Corruption happens in transit: a corrupted
+                    // response still occupies every link, but its final
+                    // hop lands as a CorruptArrival the checksum catches.
+                    let final_kind = if task.corrupt {
+                        EventKind::CorruptArrival
+                    } else {
+                        EventKind::Arrival
+                    };
                     let (at, eta, kind) =
                         if ev.kind == EventKind::ComputeDone && net.hierarchical() {
                             let rack_done =
@@ -522,12 +675,23 @@ impl StepExecutor for AsyncSimCluster<'_> {
                             (rack_done, net.eta_after_rack(rack_done, bytes), EventKind::RackDone)
                         } else {
                             let arrival = net.enqueue_master(ev.time_ms, bytes);
-                            (arrival, arrival, EventKind::Arrival)
+                            (arrival, arrival, final_kind)
                         };
                     if let Some(task) = self.inflight[ev.worker].as_mut() {
                         task.eta_ms = eta;
                     }
                     self.queue.push(at, ev.worker, ev.task, kind);
+                }
+                EventKind::CorruptArrival => {
+                    // The checksum fails at the master: observe the
+                    // realized latency (the master did wait for it),
+                    // count the corruption, and erase the response — it
+                    // never reaches the decoder and never advances the
+                    // stop rule.
+                    self.deadline.observe(ev.time_ms - task.start_ms);
+                    fc.corrupt += 1;
+                    last_arrival = ev.time_ms;
+                    self.inflight[ev.worker] = None;
                 }
                 EventKind::Arrival => {
                     // Oracle policy feed, exactly as in the synchronous
@@ -553,6 +717,9 @@ impl StepExecutor for AsyncSimCluster<'_> {
                         &mut self.spares,
                     )?;
                     self.inflight[ev.worker] = None;
+                }
+                EventKind::WorkerDown | EventKind::WorkerUp | EventKind::ThetaAtRack => {
+                    unreachable!("non-task events are handled before the ghost check")
                 }
             }
         }
@@ -589,11 +756,47 @@ impl StepExecutor for AsyncSimCluster<'_> {
 
         let collect_ms = proceed_at - self.now_ms;
         self.now_ms = proceed_at;
+        self.faults_total.merge(&fc);
         Ok(StepExecution {
             stragglers: w - counted,
             worker_ns: 0,
             collect_ms: Some(collect_ms),
+            faults: fc,
         })
+    }
+
+    fn redispatch(
+        &mut self,
+        _t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+        retry: &RetryPolicy,
+    ) -> Result<RedispatchOutcome> {
+        if self.mirror.is_some() {
+            return Ok(RedispatchOutcome::default());
+        }
+        let busy: Vec<bool> = self.inflight.iter().map(|x| x.is_some()).collect();
+        let out = redispatch_missing(
+            RetryEnv {
+                payloads: self.payloads,
+                backend: self.backend.as_ref(),
+                latency: &mut self.latency,
+                faults: &mut self.faults,
+                deadline: &mut self.deadline,
+                spares: &mut self.spares,
+                busy: &busy,
+                net: self.net.as_ref(),
+                costs: Some(&self.costs),
+                compute: self.compute,
+            },
+            theta,
+            masked,
+            retry,
+            self.now_ms,
+        )?;
+        self.now_ms += out.extra_ms;
+        self.faults_total.merge(&out.faults);
+        Ok(out)
     }
 }
 

@@ -95,6 +95,12 @@ pub enum Cutoff {
     Time(f64),
 }
 
+/// Observation-ring capacity for policies that don't consult the
+/// history (the quantile policy sizes the ring by its own `window`).
+/// Bounds memory on long runs while keeping enough tail for
+/// introspection and post-hoc latency summaries.
+const DEFAULT_OBSERVATION_CAP: usize = 1024;
+
 /// Stateful per-run policy evaluator (the quantile policy learns from
 /// observed latencies; the others are stateless).
 #[derive(Debug, Clone)]
@@ -162,11 +168,14 @@ impl DeadlineState {
     }
 
     /// Record an observed worker latency (ms, step-relative). Only the
-    /// quantile policy keeps state; the others ignore observations.
+    /// quantile policy *uses* the history for its cut; every policy
+    /// records into the bounded ring regardless, so long async runs
+    /// never grow without limit and [`DeadlineState::observations`]
+    /// introspection works under any policy.
     pub fn observe(&mut self, latency_ms: f64) {
         let cap = match self.policy {
             DeadlinePolicy::QuantileAdaptive { window, .. } => window.max(1),
-            _ => return,
+            _ => DEFAULT_OBSERVATION_CAP,
         };
         if self.window.len() < cap {
             self.window.push(latency_ms);
@@ -217,8 +226,35 @@ mod tests {
     fn fixed_deadline_is_constant() {
         let mut s = DeadlineState::new(DeadlinePolicy::FixedDeadline { ms: 4.5 });
         for _ in 0..5 {
-            s.observe(100.0); // ignored
+            s.observe(100.0); // recorded, but never consulted for the cut
             assert_eq!(s.cutoff(8), Cutoff::Time(4.5));
+        }
+        assert_eq!(s.observations().len(), 5);
+    }
+
+    #[test]
+    fn every_policy_records_bounded_observations() {
+        for policy in [
+            DeadlinePolicy::WaitForAll,
+            DeadlinePolicy::WaitForK(4),
+            DeadlinePolicy::WaitForFresh(4),
+            DeadlinePolicy::FixedDeadline { ms: 2.0 },
+            DeadlinePolicy::MirrorStraggler,
+        ] {
+            let mut s = DeadlineState::new(policy.clone());
+            for i in 0..(DEFAULT_OBSERVATION_CAP + 100) {
+                s.observe(i as f64);
+            }
+            assert_eq!(
+                s.observations().len(),
+                DEFAULT_OBSERVATION_CAP,
+                "{}: ring must cap at the default",
+                policy.name()
+            );
+            // The ring rolled: the oldest 100 entries are gone, the
+            // newest survive.
+            assert!(s.observations().contains(&(DEFAULT_OBSERVATION_CAP as f64 + 99.0)));
+            assert!(!s.observations().contains(&50.0));
         }
     }
 

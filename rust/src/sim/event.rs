@@ -105,6 +105,20 @@ pub enum EventKind {
     RackDone,
     /// The response reached the master.
     Arrival,
+    /// The response reached the master but fails its checksum: the
+    /// master observes the arrival, counts it as corrupt, and erases it
+    /// without decoding (fault injection only).
+    CorruptArrival,
+    /// The θ broadcast's relay copy reached this rack's NIC; the rack
+    /// can now fan θ out to its workers (`worker` is the rack index,
+    /// `task` is unused).
+    ThetaAtRack,
+    /// A worker crashed; its in-flight task (if any) is lost (`task` is
+    /// unused — informational, for tracing).
+    WorkerDown,
+    /// A crash-restarted worker rejoined and is eligible for dispatch
+    /// again (`task` is unused — informational, for tracing).
+    WorkerUp,
 }
 
 /// A task-tagged event in the pipelined simulator. `task` is the

@@ -47,17 +47,19 @@ pub use topology::{LinkModel, Topology};
 use std::sync::Arc;
 
 use crate::config::RunConfig;
+use crate::coordinator::faults::{FaultCounts, FaultModel, FaultSampler, RetryPolicy};
 use crate::coordinator::metrics::RunReport;
 use crate::coordinator::protocol::WorkerPayload;
 use crate::coordinator::schemes::GradientScheme;
 use crate::coordinator::straggler::{LatencyModel, LatencySampler, StragglerSampler};
-use crate::coordinator::{run_with_executor, StepExecution, StepExecutor};
+use crate::coordinator::{run_with_executor, RedispatchOutcome, StepExecution, StepExecutor};
 use crate::data::RegressionProblem;
 use crate::error::{Error, Result};
 use crate::runtime::ComputeBackend;
 
 use deadline::{Cutoff, DeadlinePolicy, DeadlineState};
 use event::EventQueue;
+use topology::TopologyState;
 
 /// Compute worker `j`'s response into a recycled buffer parked in
 /// `masked[j]` — the buffer-recycling discipline shared by the
@@ -108,9 +110,133 @@ pub(crate) fn mirror_step(
             stragglers: straggling.stragglers.len(),
             worker_ns: 0,
             collect_ms: straggling.collect_ms,
+            faults: FaultCounts::default(),
         },
         advance,
     ))
+}
+
+/// Everything [`redispatch_missing`] borrows from a simulated cluster:
+/// the shared retry loop works for both the synchronous and the
+/// pipelined executor because their differences reduce to these fields
+/// (the sync cluster passes no topology, no task costs, and an all-idle
+/// `busy` mask).
+pub(crate) struct RetryEnv<'a> {
+    pub(crate) payloads: &'a [WorkerPayload],
+    pub(crate) backend: &'a dyn ComputeBackend,
+    pub(crate) latency: &'a mut LatencySampler,
+    pub(crate) faults: &'a mut FaultSampler,
+    pub(crate) deadline: &'a mut DeadlineState,
+    pub(crate) spares: &'a mut Vec<Vec<f64>>,
+    /// Workers with a live in-flight task (laggards): not retry targets.
+    pub(crate) busy: &'a [bool],
+    /// Network pricing for the retry transfer, if the executor has one.
+    pub(crate) net: Option<&'a TopologyState>,
+    /// Per-block task costs, if the executor prices flop-aware compute.
+    pub(crate) costs: Option<&'a TaskCosts>,
+    pub(crate) compute: ComputeModel,
+}
+
+/// Speculatively re-dispatch every still-missing moment block to a
+/// surviving worker, with capped exponential backoff between rounds.
+///
+/// Round structure mirrors a gradient step so the per-worker fault and
+/// latency streams stay aligned: each round draws one full-fleet latency
+/// sample and one fault step regardless of how many blocks are retried.
+/// Block `j` goes to the first worker at or after `j` (cyclically) that
+/// is idle, not already carrying a retry, and not down at launch time.
+/// Every non-crashed attempt's realized round-trip feeds
+/// [`DeadlineState::observe`] under the same `arrival − launch` latency
+/// definition as first dispatches, so adaptive deadlines see retry
+/// traffic too. Retried transfers are priced as unqueued sends — they
+/// do not move the step-window NIC cursors.
+///
+/// Returns the fault/retry counters accrued and the virtual time the
+/// retry rounds consumed beyond `now_ms`.
+pub(crate) fn redispatch_missing(
+    env: RetryEnv<'_>,
+    theta: &[f64],
+    masked: &mut [Option<Vec<f64>>],
+    retry: &RetryPolicy,
+    now_ms: f64,
+) -> Result<RedispatchOutcome> {
+    let w = env.payloads.len();
+    let mut counts = FaultCounts::default();
+    let mut time = now_ms;
+    let mut lat: Vec<f64> = Vec::new();
+    let mut taken = vec![false; w];
+    for attempt in 0..retry.max_retries {
+        if masked.iter().all(|m| m.is_some()) {
+            break;
+        }
+        let launch = time + retry.backoff_for(attempt);
+        env.latency.sample_into(w, &mut lat);
+        env.faults.next_step(w);
+        taken.iter_mut().for_each(|t| *t = false);
+        let mut round_end = launch;
+        let mut launched = false;
+        for j in 0..w {
+            if masked[j].is_some() {
+                continue;
+            }
+            // Survivor scan: first idle, unclaimed, up worker at or
+            // after the block's original owner.
+            let mut chosen = None;
+            for off in 0..w {
+                let s = (j + off) % w;
+                if taken[s] || env.busy[s] || env.faults.is_down(s, launch) {
+                    continue;
+                }
+                chosen = Some(s);
+                break;
+            }
+            let Some(s) = chosen else { continue };
+            taken[s] = true;
+            counts.retried += 1;
+            launched = true;
+            if env.faults.crashes(s) {
+                // The stand-in dies mid-retry: no response, no latency
+                // observation (the round-trip never completes).
+                counts.crashed += 1;
+                env.faults.mark_down(s, launch);
+                round_end = round_end.max(launch + retry.timeout_ms);
+                continue;
+            }
+            let compute_ms = match env.costs {
+                Some(c) => env.compute.task_ms(c.flops[j], lat[s]),
+                None => lat[s],
+            };
+            let done = launch + compute_ms;
+            let arrive = match (env.net, env.costs) {
+                (Some(net), Some(c)) => net.eta_at_dispatch(done, c.response_bytes[j]),
+                _ => done,
+            };
+            env.deadline.observe(arrive - launch);
+            if env.faults.omits(s) {
+                counts.omitted += 1;
+                round_end = round_end.max(launch + retry.timeout_ms);
+                continue;
+            }
+            if arrive - launch > retry.timeout_ms {
+                round_end = round_end.max(launch + retry.timeout_ms);
+                continue;
+            }
+            round_end = round_end.max(arrive);
+            if env.faults.corrupts(s) {
+                // Checksum mismatch on the retry response: detected,
+                // counted, erased — eligible for the next round.
+                counts.corrupt += 1;
+                continue;
+            }
+            compute_into_slot(env.payloads, env.backend, j, theta, masked, env.spares)?;
+            counts.recovered += 1;
+        }
+        if !launched {
+            break;
+        }
+        time = round_end;
+    }
+    Ok(RedispatchOutcome { faults: counts, extra_ms: time - now_ms })
 }
 
 /// Configuration of the virtual-time simulation: where latencies come
@@ -121,17 +247,32 @@ pub struct SimConfig {
     pub latency: LatencyModel,
     /// Collection policy.
     pub policy: DeadlinePolicy,
+    /// Fault injection (crashes, corruption, omission). Draws from its
+    /// own RNG stream, so [`FaultModel::none`] leaves the run
+    /// bit-identical to a faultless build.
+    pub faults: FaultModel,
 }
 
 impl SimConfig {
-    /// Bundle a latency model with a deadline policy.
+    /// Bundle a latency model with a deadline policy (no faults).
     pub fn new(latency: LatencyModel, policy: DeadlinePolicy) -> Self {
-        SimConfig { latency, policy }
+        SimConfig { latency, policy, faults: FaultModel::none() }
     }
 
-    /// Label for reports: `latency/policy`.
+    /// Builder-style fault model.
+    pub fn with_faults(mut self, faults: FaultModel) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Label for reports: `latency/policy[/faults]`.
     pub fn label(&self) -> String {
-        format!("{}/{}", self.latency.name(), self.policy.name())
+        let mut base = format!("{}/{}", self.latency.name(), self.policy.name());
+        if !self.faults.is_none() {
+            base.push('/');
+            base.push_str(&self.faults.name());
+        }
+        base
     }
 }
 
@@ -158,6 +299,10 @@ pub struct SimCluster<'a> {
     now_ms: f64,
     /// Responses dropped over the cluster's lifetime.
     dropped_total: u64,
+    /// Fault injection (separate RNG stream from `latency`).
+    faults: FaultSampler,
+    /// Fault/retry counters over the cluster's lifetime.
+    faults_total: FaultCounts,
 }
 
 impl<'a> SimCluster<'a> {
@@ -187,6 +332,8 @@ impl<'a> SimCluster<'a> {
             spares: Vec::new(),
             now_ms: 0.0,
             dropped_total: 0,
+            faults: sim.faults.sampler(),
+            faults_total: FaultCounts::default(),
         }
     }
 
@@ -198,6 +345,11 @@ impl<'a> SimCluster<'a> {
     /// Responses dropped so far.
     pub fn dropped_total(&self) -> u64 {
         self.dropped_total
+    }
+
+    /// Fault/retry counters accrued so far.
+    pub fn faults_total(&self) -> FaultCounts {
+        self.faults_total
     }
 
     /// Compute worker `j`'s response into a recycled buffer and park it
@@ -254,11 +406,39 @@ impl StepExecutor for SimCluster<'_> {
         }
 
         // 1. Sample this step's completion times and schedule arrivals.
+        //    Fault draws come from a separate stream (a fixed number of
+        //    draws per worker per step), so a fault-free model leaves
+        //    the latency and deadline streams untouched.
         let mut lat = std::mem::take(&mut self.lat_buf);
         self.latency.sample_into(w, &mut lat);
+        self.faults.next_step(w);
+        let mut fc = FaultCounts::default();
         debug_assert!(self.queue.is_empty());
         for (j, &l) in lat.iter().enumerate() {
             debug_assert!(l.is_finite() && l >= 0.0, "latency {l} for worker {j}");
+            if self.faults.is_down(j, self.now_ms) {
+                // Still restarting (or gone for good): no task, no event.
+                fc.down += 1;
+                continue;
+            }
+            if self.faults.crashes(j) {
+                // Crash at dispatch. A crash-restart worker reboots,
+                // recomputes, and delivers late — under wait-for-all the
+                // master genuinely stalls on it, which is the behavior
+                // the deadline policies exist to avoid. A crash-stop
+                // worker never responds.
+                fc.crashed += 1;
+                if let Some(up) = self.faults.mark_down(j, self.now_ms) {
+                    self.queue.push(up + l, j);
+                }
+                continue;
+            }
+            if self.faults.omits(j) {
+                // Silent omission: the task runs but the response is
+                // never sent; the master just never hears back.
+                fc.omitted += 1;
+                continue;
+            }
             self.queue.push(self.now_ms + l, j);
         }
         self.lat_buf = lat;
@@ -297,9 +477,22 @@ impl StepExecutor for SimCluster<'_> {
                 None => true,
             };
             if counted < target && in_time {
-                counted += 1;
-                last_arrival = ev.time_ms;
-                self.counted[ev.worker] = true;
+                // A crashed-and-restarted worker recomputes honestly;
+                // precedence gives crash priority over the corrupt draw.
+                let corrupt =
+                    self.faults.corrupts(ev.worker) && !self.faults.crashes(ev.worker);
+                if corrupt {
+                    // Checksum mismatch: the master waited for this
+                    // response and detected the damage, so it costs
+                    // time but contributes nothing — an erasure, never
+                    // decoded and never counted toward the cutoff.
+                    fc.corrupt += 1;
+                    last_arrival = ev.time_ms;
+                } else {
+                    counted += 1;
+                    last_arrival = ev.time_ms;
+                    self.counted[ev.worker] = true;
+                }
             } else {
                 dropped += 1;
             }
@@ -324,7 +517,49 @@ impl StepExecutor for SimCluster<'_> {
         let collect_ms = proceed_at - self.now_ms;
         self.now_ms = proceed_at;
         self.dropped_total += dropped as u64;
-        Ok(StepExecution { stragglers: dropped, worker_ns: 0, collect_ms: Some(collect_ms) })
+        self.faults_total.merge(&fc);
+        Ok(StepExecution {
+            stragglers: dropped,
+            worker_ns: 0,
+            collect_ms: Some(collect_ms),
+            faults: fc,
+        })
+    }
+
+    fn redispatch(
+        &mut self,
+        _t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+        retry: &RetryPolicy,
+    ) -> Result<RedispatchOutcome> {
+        if self.mirror.is_some() {
+            return Ok(RedispatchOutcome::default());
+        }
+        // The synchronous master has no in-flight laggards: every worker
+        // that is up is an eligible retry target.
+        let busy = vec![false; self.payloads.len()];
+        let out = redispatch_missing(
+            RetryEnv {
+                payloads: self.payloads,
+                backend: self.backend.as_ref(),
+                latency: &mut self.latency,
+                faults: &mut self.faults,
+                deadline: &mut self.deadline,
+                spares: &mut self.spares,
+                busy: &busy,
+                net: None,
+                costs: None,
+                compute: ComputeModel::Opaque,
+            },
+            theta,
+            masked,
+            retry,
+            self.now_ms,
+        )?;
+        self.now_ms += out.extra_ms;
+        self.faults_total.merge(&out.faults);
+        Ok(out)
     }
 }
 
@@ -342,6 +577,7 @@ pub fn run_simulated(
     cfg: &RunConfig,
     sim: &SimConfig,
 ) -> Result<RunReport> {
+    sim.faults.validate()?;
     let backend = crate::coordinator::make_backend(cfg)?;
     let mut cluster = SimCluster::new(scheme.payloads(), backend, cfg, sim);
     run_with_executor(scheme, &mut cluster, problem, cfg)
@@ -486,6 +722,63 @@ mod tests {
         let sim = sim_exp(DeadlinePolicy::WaitForAll);
         let mut cluster = SimCluster::new(&s.payloads()[..8], backend, &cfg, &sim);
         assert!(run_with_executor(&s, &mut cluster, &p, &cfg).is_err());
+    }
+
+    #[test]
+    fn fault_free_model_leaves_runs_bit_identical() {
+        // A wired-in FaultModel whose probabilities are all zero draws
+        // from its own RNG stream and can never fire, so the θ
+        // trajectory must match a build with no fault model at all.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 21);
+        let cfg = RunConfig { rel_tol: 1e-4, max_steps: 600, ..Default::default() };
+        let plain = run_simulated(&s, &p, &cfg, &sim_exp(DeadlinePolicy::WaitForK(35))).unwrap();
+        let armed = sim_exp(DeadlinePolicy::WaitForK(35)).with_faults(FaultModel {
+            seed: 12345,
+            ..FaultModel::none()
+        });
+        let faulted = run_simulated(&s, &p, &cfg, &armed).unwrap();
+        assert_eq!(plain.theta, faulted.theta, "zero-probability faults must be inert");
+        assert_eq!(plain.steps, faulted.steps);
+        assert_eq!(plain.totals.stragglers, faulted.totals.stragglers);
+    }
+
+    #[test]
+    fn all_corrupt_responses_are_erased_never_decoded() {
+        // Corruption probability 1: every response fails its checksum,
+        // so the master erases everything and θ never moves — corrupted
+        // data must never reach the decoder.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 22);
+        let cfg = RunConfig { max_steps: 5, ..Default::default() };
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        let sim = sim_exp(DeadlinePolicy::WaitForAll)
+            .with_faults(FaultModel { corrupt: 1.0, ..FaultModel::none() });
+        let mut cluster = SimCluster::new(s.payloads(), backend, &cfg, &sim);
+        let r = run_with_executor(&s, &mut cluster, &p, &cfg).unwrap();
+        assert!(!r.converged);
+        assert!(r.theta.iter().all(|&v| v == 0.0), "corrupt responses must not decode");
+        assert_eq!(cluster.faults_total().corrupt, 40 * 5);
+        assert_eq!(cluster.faults_total().crashed, 0);
+    }
+
+    #[test]
+    fn crash_stop_shrinks_the_fleet_but_the_run_survives() {
+        // Sustained crash-stop attrition: the run must degrade (fewer
+        // arrivals per step) rather than abort, and the down counter
+        // must grow as dead workers stay dead.
+        let p = problem(40);
+        let s = ldpc_scheme(&p, 23);
+        let cfg = RunConfig { max_steps: 30, ..Default::default() };
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        let sim = sim_exp(DeadlinePolicy::WaitForK(20))
+            .with_faults(FaultModel { crash: 0.05, ..FaultModel::none() });
+        let mut cluster = SimCluster::new(s.payloads(), backend, &cfg, &sim);
+        let r = run_with_executor(&s, &mut cluster, &p, &cfg).unwrap();
+        assert_eq!(r.steps, 30, "the run completes every step despite crashes");
+        let fc = cluster.faults_total();
+        assert!(fc.crashed > 0, "5% crash over 40×30 dispatches must fire");
+        assert!(fc.down >= fc.crashed, "crash-stop workers stay down every later step");
     }
 
     #[test]

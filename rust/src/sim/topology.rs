@@ -171,16 +171,19 @@ impl Topology {
 /// starts at `max(cursor, ready)` and occupies the link for the
 /// message's [`LinkModel::transfer_ms`].
 ///
-/// One deliberate exception: a window's θ fan-out is priced eagerly at
-/// the broadcast instant, so on a rack NIC it takes precedence over a
-/// laggard response whose compute finishes while the rack's θ relay is
-/// still in flight on the master link (control plane before data
-/// plane). On the master link this is exact — the master's own
-/// broadcasts really are ready first — and it is what keeps the
-/// single-rack configuration bit-identical to the flat link. Making θ
-/// delivery event-driven, so an idle rack NIC can ship a
-/// just-finished laggard response ahead of the incoming fan-out, is a
-/// ROADMAP item.
+/// θ delivery is event-driven. The master→rack relay is still priced
+/// eagerly at the broadcast instant — exact, because the master's own
+/// broadcasts really are ready first on its link, and it is what keeps
+/// the single-rack configuration bit-identical to the flat link. But a
+/// rack NIC only learns about the fan-out when the relay copy actually
+/// lands ([`super::event::EventKind::ThetaAtRack`]): the executor calls
+/// [`TopologyState::relay_theta`] at dispatch and defers the per-worker
+/// rack downlinks ([`TopologyState::enqueue_rack_uplink`] — the same
+/// half-duplex cursor serves both directions) to the event pop. An idle
+/// rack NIC can therefore ship a just-finished laggard response ahead
+/// of an incoming fan-out that is still crossing the master link,
+/// instead of the fan-out pre-empting it retroactively — the pricing
+/// gap the ROADMAP used to document.
 #[derive(Debug)]
 pub struct TopologyState {
     topo: Topology,
@@ -222,20 +225,32 @@ impl TopologyState {
         }
     }
 
-    /// Ship this window's θ to worker `j`, returning the instant the
-    /// worker can start computing. Flat: one master unicast per worker.
-    /// Hierarchical: the first worker of a rack pays the master→rack
-    /// relay (one `bytes` copy on the master link, memoized for the
-    /// window); every worker then pays its rack NIC unicast.
+    /// Flat topologies only: ship this window's θ to worker `j` as one
+    /// master unicast, returning the instant the worker can start
+    /// computing. Hierarchical topologies go through
+    /// [`TopologyState::relay_theta`] plus event-driven rack downlinks
+    /// instead.
     pub fn unicast_theta(&mut self, j: usize, now: f64, bytes: usize) -> f64 {
-        if self.topo.is_flat() {
-            return self.enqueue_master(now, bytes);
-        }
+        debug_assert!(self.topo.is_flat(), "hierarchical θ goes through relay_theta");
+        let _ = j;
+        self.enqueue_master(now, bytes)
+    }
+
+    /// Hierarchical topologies only: make sure this window's θ relay
+    /// copy for worker `j`'s rack is on the master link. Returns
+    /// `(rack, relay_arrival, newly_issued)`; when `newly_issued` the
+    /// caller schedules a `ThetaAtRack` event at `relay_arrival`, where
+    /// it fans θ out to the rack's waiting workers via
+    /// [`TopologyState::enqueue_rack_uplink`]. Subsequent callers from
+    /// the same rack share the memoized relay.
+    pub fn relay_theta(&mut self, j: usize, now: f64, bytes: usize) -> (usize, f64, bool) {
+        debug_assert!(!self.topo.is_flat(), "flat θ goes through unicast_theta");
         let r = self.rack_of[j];
-        if self.rack_theta[r].is_nan() {
+        let newly = self.rack_theta[r].is_nan();
+        if newly {
             self.rack_theta[r] = self.enqueue_master(now, bytes);
         }
-        self.enqueue_rack_uplink(j, self.rack_theta[r], bytes)
+        (r, self.rack_theta[r], newly)
     }
 
     /// Queue a `bytes`-sized message for worker `j`'s rack NIC
@@ -275,6 +290,25 @@ impl TopologyState {
     /// the master hop's unqueued transfer time.
     pub fn eta_after_rack(&self, rack_done: f64, bytes: usize) -> f64 {
         rack_done + self.topo.master.transfer_ms(bytes)
+    }
+
+    /// Service-time ETA of a task still waiting for its rack's θ copy
+    /// (hierarchical only): the relay arrival (exact — the master hop is
+    /// scheduled eagerly) plus unqueued prices for every hop after it —
+    /// rack θ downlink, compute, rack response uplink, master hop.
+    pub fn eta_before_theta(
+        &self,
+        relay_at: f64,
+        bcast_bytes: usize,
+        compute_ms: f64,
+        resp_bytes: usize,
+    ) -> f64 {
+        let rack = self.topo.rack.expect("eta_before_theta only exists in hierarchies");
+        relay_at
+            + rack.transfer_ms(bcast_bytes)
+            + compute_ms
+            + rack.transfer_ms(resp_bytes)
+            + self.topo.master.transfer_ms(resp_bytes)
     }
 }
 
@@ -357,18 +391,20 @@ mod tests {
         let mut s =
             TopologyState::new(Topology::hierarchical(2, ms(1.0), ms(4.0)), 4).unwrap();
         s.begin_window();
-        // Rack 0: one master relay (0→4), then rack unicasts 4→5, 5→6.
-        assert!((s.unicast_theta(0, 0.0, 0) - 5.0).abs() < 1e-9);
-        assert!((s.unicast_theta(1, 0.0, 0) - 6.0).abs() < 1e-9);
-        // Rack 1: its relay queues after rack 0's on the master (4→8),
-        // then its own rack NIC fans out 8→9, 9→10.
-        assert!((s.unicast_theta(2, 0.0, 0) - 9.0).abs() < 1e-9);
-        assert!((s.unicast_theta(3, 0.0, 0) - 10.0).abs() < 1e-9);
-        // A new window re-relays.
+        // Rack 0: one master relay (0→4); the second rack-0 worker
+        // shares the memoized copy.
+        assert_eq!(s.relay_theta(0, 0.0, 0), (0, 4.0, true));
+        assert_eq!(s.relay_theta(1, 0.0, 0), (0, 4.0, false));
+        // Rack 1: its relay queues after rack 0's on the master (4→8).
+        assert_eq!(s.relay_theta(2, 0.0, 0), (1, 8.0, true));
+        assert_eq!(s.relay_theta(3, 0.0, 0), (1, 8.0, false));
+        // When the relay lands, the rack NIC fans out: 4→5, 5→6.
+        assert!((s.enqueue_rack_uplink(0, 4.0, 0) - 5.0).abs() < 1e-9);
+        assert!((s.enqueue_rack_uplink(1, 4.0, 0) - 6.0).abs() < 1e-9);
+        // A new window re-relays: master 20→24 (its cursor was at 8
+        // after both relays — ready dominates).
         s.begin_window();
-        let t = s.unicast_theta(0, 20.0, 0);
-        // Master relay 20→24, rack unicast 24→25.
-        assert!((t - 25.0).abs() < 1e-9, "{t}");
+        assert_eq!(s.relay_theta(0, 20.0, 0), (0, 24.0, true));
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Fault-injection integration: fault-free bit-identity across every
+//! backend, seed-reproducible fault realizations with pinned counters,
+//! checksum-erasure of corrupted responses, retry recovery, and the
+//! graceful-degradation story — deadline collection sails through
+//! crash-restart fleets that stall a wait-for-all master.
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::faults::{FaultCounts, FaultModel, RetryPolicy};
+use moment_ldpc::coordinator::metrics::RunReport;
+use moment_ldpc::coordinator::run_distributed;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::straggler::LatencyModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::{
+    run_simulated, run_simulated_async, AsyncSimConfig, LinkModel, SimConfig, Topology,
+};
+
+fn scheme_and_problem(data_seed: u64) -> (LdpcMomentScheme, RegressionProblem) {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), data_seed);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 2).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    (scheme, problem)
+}
+
+fn trace_view(r: &RunReport) -> Vec<(usize, Option<f64>, f64)> {
+    r.trace.iter().map(|m| (m.stragglers, m.collect_ms, m.error)).collect()
+}
+
+/// Satellite (d), part 1: a fault model that can never fire — even one
+/// carrying a live seed — leaves every execution backend bit-identical
+/// to a build with no fault layer at all. Fault draws live on their own
+/// RNG stream, so arming the stream must not perturb latency or
+/// deadline decisions.
+#[test]
+fn fault_free_model_is_bit_identical_everywhere() {
+    let (scheme, problem) = scheme_and_problem(42);
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 3000,
+        record_trace: true,
+        ..Default::default()
+    };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 33 };
+    let armed = FaultModel::none().reseed(123_456);
+    let policy = DeadlinePolicy::WaitForK(35);
+
+    // Synchronous simulator.
+    let plain = run_simulated(
+        &scheme,
+        &problem,
+        &cfg,
+        &SimConfig::new(latency.clone(), policy.clone()),
+    )
+    .unwrap();
+    let faulted = run_simulated(
+        &scheme,
+        &problem,
+        &cfg,
+        &SimConfig::new(latency.clone(), policy.clone()).with_faults(armed.clone()),
+    )
+    .unwrap();
+    assert_eq!(plain.theta, faulted.theta, "sync: θ diverged");
+    assert_eq!(trace_view(&plain), trace_view(&faulted), "sync: trace diverged");
+    assert_eq!(faulted.totals.faults, FaultCounts::default());
+
+    // Asynchronous pipelined executor: S = 0 and S = 2, free transfers,
+    // a flat gigabit link, and a 4-rack hierarchy.
+    let configs: Vec<(&str, AsyncSimConfig)> = vec![
+        ("S=0", AsyncSimConfig::new(latency.clone(), policy.clone(), 0)),
+        ("S=2", AsyncSimConfig::new(latency.clone(), policy.clone(), 2)),
+        (
+            "S=2/flat",
+            AsyncSimConfig::new(latency.clone(), policy.clone(), 2)
+                .with_link(LinkModel::gigabit()),
+        ),
+        (
+            "S=2/4-rack",
+            AsyncSimConfig::new(latency.clone(), policy.clone(), 2).with_topology(
+                Topology::hierarchical(4, LinkModel::gigabit(), LinkModel::gigabit()),
+            ),
+        ),
+    ];
+    for (label, sim) in configs {
+        let plain = run_simulated_async(&scheme, &problem, &cfg, &sim).unwrap();
+        let faulted = run_simulated_async(
+            &scheme,
+            &problem,
+            &cfg,
+            &sim.clone().with_faults(armed.clone()),
+        )
+        .unwrap();
+        assert_eq!(plain.theta, faulted.theta, "{label}: θ diverged");
+        assert_eq!(trace_view(&plain), trace_view(&faulted), "{label}: trace diverged");
+        assert_eq!(faulted.totals.faults, FaultCounts::default(), "{label}");
+    }
+}
+
+/// The acceptance pin: for an identical seed and schedule, a faulty run
+/// is bit-for-bit reproducible — the θ-trajectory AND the realized
+/// fault counters — on both simulators.
+#[test]
+fn seeded_fault_runs_are_bit_reproducible_with_identical_counters() {
+    let (scheme, problem) = scheme_and_problem(7);
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 3000,
+        record_trace: true,
+        ..Default::default()
+    };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 21 };
+    let model = FaultModel::parse("crash-restart:0.02:25,corrupt:0.03,omit:0.03")
+        .unwrap()
+        .reseed(77);
+
+    let sync_cfg = SimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(30))
+        .with_faults(model.clone());
+    let a = run_simulated(&scheme, &problem, &cfg, &sync_cfg).unwrap();
+    let b = run_simulated(&scheme, &problem, &cfg, &sync_cfg).unwrap();
+    assert_eq!(a.theta, b.theta, "sync: θ must replay bit-identically");
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.totals.faults, b.totals.faults, "sync: fault counters must replay");
+    assert_eq!(trace_view(&a), trace_view(&b));
+    assert!(a.totals.faults.any(), "the model must actually fire: {:?}", a.totals.faults);
+    assert!(a.totals.faults.crashed > 0 && a.totals.faults.corrupt > 0);
+
+    let async_cfg = AsyncSimConfig::new(latency, DeadlinePolicy::WaitForK(30), 2)
+        .with_faults(model);
+    let c = run_simulated_async(&scheme, &problem, &cfg, &async_cfg).unwrap();
+    let d = run_simulated_async(&scheme, &problem, &cfg, &async_cfg).unwrap();
+    assert_eq!(c.theta, d.theta, "async: θ must replay bit-identically");
+    assert_eq!(c.totals.faults, d.totals.faults, "async: fault counters must replay");
+    assert_eq!(trace_view(&c), trace_view(&d));
+    assert!(c.totals.faults.any());
+}
+
+/// Satellite (d), part 2 (golden): with every response corrupted, the
+/// checksum layer erases everything — the decoder never sees a damaged
+/// float and the iterate never moves off the origin.
+#[test]
+fn corruption_never_reaches_the_decoder() {
+    let (scheme, problem) = scheme_and_problem(9);
+    let cfg = RunConfig { rel_tol: 1e-6, max_steps: 4, ..Default::default() };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 4 };
+    let sim = AsyncSimConfig::new(latency, DeadlinePolicy::WaitForK(35), 0)
+        .with_faults(FaultModel { corrupt: 1.0, ..FaultModel::none() }.reseed(5));
+    let r = run_simulated_async(&scheme, &problem, &cfg, &sim).unwrap();
+    assert_eq!(r.steps, 4);
+    assert!(!r.converged);
+    assert!(
+        r.theta.iter().all(|&x| x == 0.0),
+        "a fully-corrupted fleet must leave θ at the origin"
+    );
+    assert_eq!(r.totals.faults.corrupt, 40 * 4, "every response detected, every step");
+    assert_eq!(r.totals.faults.recovered, 0, "no retry layer was armed");
+}
+
+/// The master-side retry layer re-dispatches missing blocks to
+/// survivors and actually recovers them, on both simulators.
+#[test]
+fn retry_layer_recovers_losses_in_the_simulators() {
+    let (scheme, problem) = scheme_and_problem(12);
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 3000,
+        retry: RetryPolicy { max_retries: 2, backoff_ms: 1.0, backoff_cap_ms: 8.0, timeout_ms: 50.0 },
+        ..Default::default()
+    };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 6 };
+    let model = FaultModel { omit: 0.2, ..FaultModel::none() }.reseed(5);
+
+    let sync = run_simulated(
+        &scheme,
+        &problem,
+        &cfg,
+        &SimConfig::new(latency.clone(), DeadlinePolicy::WaitForAll).with_faults(model.clone()),
+    )
+    .unwrap();
+    assert!(sync.converged, "{}", sync.summary());
+    let fc = sync.totals.faults;
+    assert!(fc.omitted > 0, "omissions must fire: {fc:?}");
+    assert!(fc.recovered > 0, "retries must recover something: {fc:?}");
+    assert!(fc.retried >= fc.recovered);
+
+    let asy = run_simulated_async(
+        &scheme,
+        &problem,
+        &cfg,
+        &AsyncSimConfig::new(latency, DeadlinePolicy::WaitForK(34), 1).with_faults(model),
+    )
+    .unwrap();
+    assert!(asy.converged, "{}", asy.summary());
+    let fc = asy.totals.faults;
+    assert!(fc.recovered > 0, "async retries must recover something: {fc:?}");
+    assert!(fc.retried >= fc.recovered);
+}
+
+/// The headline robustness claim: under crash-restart faults a
+/// wait-for-all master genuinely stalls on every rebooting worker
+/// (collection time balloons by the restart delay), while deadline
+/// collection + LDPC decoding sails through on the virtual clock,
+/// completing (degraded where necessary) at a fraction of the time.
+#[test]
+fn crash_restart_stalls_wait_all_where_deadline_collection_sails() {
+    let (scheme, problem) = scheme_and_problem(14);
+    let cfg = RunConfig { rel_tol: 1e-4, max_steps: 3000, ..Default::default() };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 3 };
+    // A modest crash rate keeps the alive fleet (mostly) above k = 30;
+    // past that, even deadline collection starts inheriting restart
+    // delays through queue exhaustion and the contrast washes out.
+    let model = FaultModel::parse("crash-restart:0.02:200").unwrap().reseed(9);
+
+    let wait_all = run_simulated(
+        &scheme,
+        &problem,
+        &cfg,
+        &SimConfig::new(latency.clone(), DeadlinePolicy::WaitForAll).with_faults(model.clone()),
+    )
+    .unwrap();
+    let wait_k = run_simulated(
+        &scheme,
+        &problem,
+        &cfg,
+        &SimConfig::new(latency, DeadlinePolicy::WaitForK(30)).with_faults(model),
+    )
+    .unwrap();
+    assert!(wait_all.totals.faults.crashed > 0);
+    assert!(wait_k.totals.faults.crashed > 0);
+    assert!(wait_k.converged, "{}", wait_k.summary());
+    assert!(wait_all.converged, "{}", wait_all.summary());
+    // Per step: any crash costs wait-for-all the full 200 ms reboot,
+    // while the deadline master proceeds at the 30th arrival (a few
+    // ms) and only stalls when crashes thin the fleet below k. The pin
+    // is per-step so the degraded trajectory's extra steps (if any)
+    // cannot mask the stall contrast.
+    let per_step =
+        |r: &RunReport| r.totals.collect_ms / r.steps.max(1) as f64;
+    assert!(
+        per_step(&wait_k) < per_step(&wait_all) / 2.0,
+        "wait-k {:.2} ms/step !<< wait-all {:.2} ms/step",
+        per_step(&wait_k),
+        per_step(&wait_all)
+    );
+}
+
+/// End-to-end on the OS-thread cluster: per-worker fault schedules,
+/// checksum detection, and same-worker re-dispatch compose under
+/// `run_distributed`. (Timing-dependent collection makes thread runs
+/// non-bit-reproducible, so this asserts counters, not trajectories.)
+#[test]
+fn thread_cluster_faults_and_retry_end_to_end() {
+    let (scheme, problem) = scheme_and_problem(16);
+    let cfg = RunConfig {
+        rel_tol: 1e-9, // unreachable: run exactly max_steps
+        max_steps: 25,
+        faults: FaultModel { corrupt: 0.08, omit: 0.03, ..FaultModel::none() }.reseed(11),
+        retry: RetryPolicy { max_retries: 2, backoff_ms: 1.0, backoff_cap_ms: 8.0, timeout_ms: 40.0 },
+        ..Default::default()
+    };
+    let r = run_distributed(Box::new(scheme), &problem, &cfg).unwrap();
+    assert_eq!(r.steps, 25);
+    let fc = r.totals.faults;
+    assert!(fc.corrupt > 0, "corruption must be detected by checksum: {fc:?}");
+    assert!(fc.recovered > 0, "same-worker retries must recover blocks: {fc:?}");
+    assert!(fc.retried >= fc.recovered);
+    assert_eq!(fc.down, 0, "no crash clauses were armed");
+}
