@@ -57,6 +57,47 @@ cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
     --async --staleness 2 --faults corrupt:0.05 --retries 1 \
     --max-steps 500 --rel-tol 1e-2
 
+echo "== trace smoke (run + simulate with --trace; Perfetto-loadable JSON) =="
+rm -rf bench_out/ci_trace
+cargo run -q -- run --m 256 --k 64 --workers 40 --stragglers 5 --trials 1 \
+    --max-steps 20 --rel-tol 1e-9 \
+    --trace bench_out/ci_trace/run_chrome.json
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --max-steps 200 --rel-tol 1e-2 \
+    --trace bench_out/ci_trace/sim_chrome.json
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --async --staleness 2 --nic-gbps 1 --racks 4 \
+    --max-steps 200 --rel-tol 1e-2 \
+    --trace bench_out/ci_trace/sim_async.jsonl --trace-format jsonl
+for f in bench_out/ci_trace/run_chrome.json bench_out/ci_trace/sim_chrome.json; do
+    python3 -m json.tool "$f" >/dev/null || { echo "invalid trace JSON: $f" >&2; exit 1; }
+    # Every worker lane must have recorded at least one span: the
+    # highest tid (64 sim workers / 40 threads) appears as a thread_name
+    # lane AND owns at least one "X" event.
+    python3 - "$f" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+events = doc["traceEvents"]
+lanes = {e["tid"] for e in events if e.get("ph") == "M" and e.get("name") == "thread_name"}
+spans = {e["tid"] for e in events if e.get("ph") == "X"}
+workers = max(lanes)
+missing = [t for t in range(workers + 1) if t not in spans]
+assert not missing, f"lanes with no spans in {sys.argv[1]}: {missing}"
+print(f"{sys.argv[1]}: {workers} worker lanes, {len(events)} events, all lanes populated")
+PY
+done
+# The JSONL stream: one valid JSON object per line.
+python3 - bench_out/ci_trace/sim_async.jsonl <<'PY'
+import json, sys
+lines = [l for l in open(sys.argv[1]) if l.strip()]
+assert lines, "empty JSONL trace"
+for l in lines:
+    json.loads(l)
+print(f"{sys.argv[1]}: {len(lines)} step records, all valid JSON")
+PY
+
 echo "== sim_faults smoke (tiny crash-rate sweep; writes *_smoke outputs) =="
 SIM_FAULTS_SMOKE=1 cargo bench --bench sim_faults
 
@@ -65,5 +106,11 @@ SIM_TOPOLOGY_SMOKE=1 cargo bench --bench sim_topology
 
 echo "== perf_hotpath smoke (tiny sizes; exercises packed GEMM + linalg pool) =="
 PERF_HOTPATH_SMOKE=1 cargo bench --bench perf_hotpath
+
+echo "== sim_deadline smoke (tiny policy ablation; writes *_smoke outputs) =="
+SIM_DEADLINE_SMOKE=1 cargo bench --bench sim_deadline
+
+echo "== sim_async smoke (tiny sync-vs-async ablation; writes *_smoke outputs) =="
+SIM_ASYNC_SMOKE=1 cargo bench --bench sim_async
 
 echo "ci.sh: all gates passed"

@@ -39,6 +39,7 @@ use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
 use moment_ldpc::coordinator::schemes::{DecodeScratch, GradientScheme};
 use moment_ldpc::coordinator::straggler::StragglerModel;
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::bench::{bench_smoke, smoke_out_path};
 use moment_ldpc::harness::report::{write_csv, write_json_kv, Table};
 use moment_ldpc::rng::Rng;
 use moment_ldpc::runtime::{ComputeBackend, NativeBackend};
@@ -54,7 +55,7 @@ fn time_us<F: FnMut()>(iters: usize, mut f: F) -> f64 {
 }
 
 fn main() {
-    let smoke = std::env::var_os("PERF_HOTPATH_SMOKE").is_some();
+    let smoke = bench_smoke("perf_hotpath");
     // Smoke mode: shrink every dimension and iteration count so the
     // whole bench finishes in seconds while still driving the packed
     // GEMM, the pool, the peeling cache, and the end-to-end loop.
@@ -303,12 +304,9 @@ fn main() {
     // Smoke runs write to *_smoke files so a CI smoke pass can never
     // clobber the real measurements an operator is about to copy into
     // the repo-root baseline.
-    let (csv_path, json_path) = if smoke {
-        ("bench_out/perf_hotpath_smoke.csv", "bench_out/BENCH_hotpath_smoke.json")
-    } else {
-        ("bench_out/perf_hotpath.csv", "bench_out/BENCH_hotpath.json")
-    };
-    write_csv(&table, std::path::Path::new(csv_path)).unwrap();
-    write_json_kv(std::path::Path::new(json_path), &json).unwrap();
+    let csv_path = smoke_out_path("bench_out/perf_hotpath.csv", smoke);
+    let json_path = smoke_out_path("bench_out/BENCH_hotpath.json", smoke);
+    write_csv(&table, std::path::Path::new(&csv_path)).unwrap();
+    write_json_kv(std::path::Path::new(&json_path), &json).unwrap();
     eprintln!("perf_hotpath done -> {csv_path}, {json_path}");
 }

@@ -11,43 +11,54 @@
 //! Output: a table on stdout, `bench_out/sim_deadline.csv`, and
 //! `bench_out/BENCH_sim_deadline.json` (cell → simulated ms).
 //!
+//! Set `SIM_DEADLINE_SMOKE=1` (what ci.sh does) for a seconds-long tiny
+//! run that writes `*_smoke` file names instead, so a CI pass can never
+//! clobber real measurements.
+//!
 //! `cargo bench --offline --bench sim_deadline`
 
 use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::faults::FaultModel;
 use moment_ldpc::coordinator::straggler::LatencyModel;
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::bench::{bench_smoke, smoke_out_path};
 use moment_ldpc::harness::experiment::{run_sim_trials, ExperimentSpec, SchemeSpec, SimSpec};
 use moment_ldpc::harness::report::{pm, write_csv, write_json_kv, Table};
 use moment_ldpc::sim::deadline::DeadlinePolicy;
 
 fn main() {
-    let workers = 256usize;
-    let k = 64usize;
+    let smoke = bench_smoke("sim_deadline");
+    let workers = if smoke { 64usize } else { 256 };
+    let k = if smoke { 32usize } else { 64 };
     let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 17);
 
     let schemes: Vec<(&str, SchemeSpec)> = vec![
         ("ldpc", SchemeSpec::Ldpc { code_k: workers / 2, l: 3, r: 6, seed: 7 }),
         ("uncoded", SchemeSpec::Uncoded),
     ];
-    let latencies: Vec<(&str, LatencyModel)> = vec![
-        ("shifted-exp", LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 1 }),
-        ("pareto", LatencyModel::Pareto { scale_ms: 1.0, shape: 1.5, seed: 1 }),
-        (
-            "markov",
-            LatencyModel::Markov {
-                shift_ms: 1.0,
-                rate: 1.0,
-                slowdown: 10.0,
-                p_slow: 0.05,
-                p_fast: 0.3,
-                seed: 1,
-            },
-        ),
-        (
-            "hetero",
-            LatencyModel::Heterogeneous { shift_ms: 1.0, rate: 1.0, spread: 3.0, seed: 1 },
-        ),
-    ];
+    let latencies: Vec<(&str, LatencyModel)> = if smoke {
+        vec![("shifted-exp", LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 1 })]
+    } else {
+        vec![
+            ("shifted-exp", LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 1 }),
+            ("pareto", LatencyModel::Pareto { scale_ms: 1.0, shape: 1.5, seed: 1 }),
+            (
+                "markov",
+                LatencyModel::Markov {
+                    shift_ms: 1.0,
+                    rate: 1.0,
+                    slowdown: 10.0,
+                    p_slow: 0.05,
+                    p_fast: 0.3,
+                    seed: 1,
+                },
+            ),
+            (
+                "hetero",
+                LatencyModel::Heterogeneous { shift_ms: 1.0, rate: 1.0, spread: 3.0, seed: 1 },
+            ),
+        ]
+    };
     let policies: Vec<(&str, DeadlinePolicy)> = vec![
         ("wait-all", DeadlinePolicy::WaitForAll),
         ("wait-k", DeadlinePolicy::WaitForK(workers * 7 / 8)),
@@ -59,7 +70,10 @@ fn main() {
     ];
 
     let mut table = Table::new(
-        format!("deadline ablation, n={workers} simulated workers, k={k}, 2 trials"),
+        format!(
+            "deadline ablation, n={workers} simulated workers, k={k}, 2 trials{}",
+            if smoke { ", SMOKE" } else { "" }
+        ),
         &["scheme", "latency", "policy", "conv %", "steps", "sim ms", "unrec/step", "rounds/step"],
     );
     let mut json: Vec<(String, f64)> = Vec::new();
@@ -70,8 +84,8 @@ fn main() {
                 let spec = ExperimentSpec {
                     config: RunConfig {
                         workers,
-                        rel_tol: 1e-3,
-                        max_steps: 1500,
+                        rel_tol: if smoke { 1e-2 } else { 1e-3 },
+                        max_steps: if smoke { 400 } else { 1500 },
                         ..Default::default()
                     },
                     trials: 2,
@@ -81,6 +95,7 @@ fn main() {
                     latency: latency.clone(),
                     policy: policy.clone(),
                     pipeline: None,
+                    faults: FaultModel::none(),
                 };
                 let agg = run_sim_trials(scheme, &problem, &spec, &sim)
                     .unwrap_or_else(|e| panic!("{sname}/{lname}/{pname}: {e}"));
@@ -100,7 +115,9 @@ fn main() {
     }
 
     print!("{}", table.render());
-    write_csv(&table, std::path::Path::new("bench_out/sim_deadline.csv")).unwrap();
-    write_json_kv(std::path::Path::new("bench_out/BENCH_sim_deadline.json"), &json).unwrap();
-    eprintln!("sim_deadline done -> bench_out/sim_deadline.csv, bench_out/BENCH_sim_deadline.json");
+    let csv = smoke_out_path("bench_out/sim_deadline.csv", smoke);
+    let jsonp = smoke_out_path("bench_out/BENCH_sim_deadline.json", smoke);
+    write_csv(&table, std::path::Path::new(&csv)).unwrap();
+    write_json_kv(std::path::Path::new(&jsonp), &json).unwrap();
+    eprintln!("sim_deadline done -> {csv}, {jsonp}");
 }

@@ -33,12 +33,13 @@ use moment_ldpc::coordinator::faults::{FaultModel, RetryPolicy};
 use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
 use moment_ldpc::coordinator::straggler::LatencyModel;
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::bench::{bench_smoke, smoke_out_path};
 use moment_ldpc::harness::report::{write_csv, write_json_kv, Table};
 use moment_ldpc::sim::deadline::DeadlinePolicy;
 use moment_ldpc::sim::{run_simulated, SimConfig};
 
 fn main() {
-    let smoke = std::env::var_os("SIM_FAULTS_SMOKE").is_some();
+    let smoke = bench_smoke("sim_faults");
     let k = 32usize;
     let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 31);
     let code = LdpcCode::gallager(40, 20, 3, 6, 7).unwrap();
@@ -140,13 +141,10 @@ fn main() {
     }
 
     print!("{}", table.render());
-    let (csv, jsonp) = if smoke {
-        ("bench_out/sim_faults_smoke.csv", "bench_out/BENCH_sim_faults_smoke.json")
-    } else {
-        ("bench_out/sim_faults.csv", "bench_out/BENCH_sim_faults.json")
-    };
-    write_csv(&table, std::path::Path::new(csv)).unwrap();
-    write_json_kv(std::path::Path::new(jsonp), &json).unwrap();
+    let csv = smoke_out_path("bench_out/sim_faults.csv", smoke);
+    let jsonp = smoke_out_path("bench_out/BENCH_sim_faults.json", smoke);
+    write_csv(&table, std::path::Path::new(&csv)).unwrap();
+    write_json_kv(std::path::Path::new(&jsonp), &json).unwrap();
 
     assert!(faultfree_wait_k_converged, "fault-free wait-k must converge");
     // Crash-invariant wait-all trajectory: same steps, monotone time.

@@ -25,12 +25,13 @@ use moment_ldpc::config::RunConfig;
 use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
 use moment_ldpc::coordinator::straggler::LatencyModel;
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::bench::{bench_smoke, smoke_out_path};
 use moment_ldpc::harness::report::{write_csv, write_json_kv, Table};
 use moment_ldpc::sim::deadline::DeadlinePolicy;
 use moment_ldpc::sim::{run_simulated_async, AsyncSimConfig, LinkModel, Topology};
 
 fn main() {
-    let smoke = std::env::var_os("SIM_TOPOLOGY_SMOKE").is_some();
+    let smoke = bench_smoke("sim_topology");
     let workers = if smoke { 64usize } else { 256 };
     let k = if smoke { 32usize } else { 64 };
     let wait_k = workers * 7 / 8;
@@ -105,13 +106,10 @@ fn main() {
     }
 
     print!("{}", table.render());
-    let (csv, jsonp) = if smoke {
-        ("bench_out/sim_topology_smoke.csv", "bench_out/BENCH_sim_topology_smoke.json")
-    } else {
-        ("bench_out/sim_topology.csv", "bench_out/BENCH_sim_topology.json")
-    };
-    write_csv(&table, std::path::Path::new(csv)).unwrap();
-    write_json_kv(std::path::Path::new(jsonp), &json).unwrap();
+    let csv = smoke_out_path("bench_out/sim_topology.csv", smoke);
+    let jsonp = smoke_out_path("bench_out/BENCH_sim_topology.json", smoke);
+    write_csv(&table, std::path::Path::new(&csv)).unwrap();
+    write_json_kv(std::path::Path::new(&jsonp), &json).unwrap();
 
     // Sanity pin kept mild on purpose (this is an ablation, not a test
     // suite): the benign latency model must converge under wait-k on

@@ -18,8 +18,9 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-/// Flags that take no value.
-const SWITCHES: &[&str] = &["quick", "trace", "json", "help", "async"];
+/// Flags that take no value. (`--trace` is NOT here: it takes the
+/// output path.)
+const SWITCHES: &[&str] = &["quick", "json", "help", "async"];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
@@ -88,7 +89,13 @@ COMMANDS:
              --scheme ldpc|mds|uncoded|replication|ksdy-hadamard|ksdy-gaussian|gradcoding
              --m N --k N [--sparsity U] --workers W --stragglers S
              --decode-iters D --rel-tol T --max-steps N --trials N
-             --backend native|pjrt [--trace] [--json]
+             --backend native|pjrt [--json]
+             [--trace PATH] write a timeline of trial 0 (per-worker
+               lanes; wall-clock ns) [--trace-format chrome|jsonl]
+               (chrome = Perfetto-loadable trace_event JSON, jsonl =
+               one step record per line) [--trace-ring N] per-lane
+               span-ring capacity (default 4096; overflow keeps the
+               newest spans and counts the dropped)
              [--faults SPEC] [--retries N ...] fault injection and
                re-dispatch, as in `simulate` (crash-restart degrades to
                crash-stop here: an OS thread cannot rejoin)
@@ -123,6 +130,9 @@ COMMANDS:
                survivors, with capped exponential backoff
                [--backoff-ms F --backoff-cap-ms F --timeout-ms F]
              --max-steps N --rel-tol T [--json]
+             [--trace PATH] timeline of trial 0 in virtual ms
+               [--trace-format chrome|jsonl] [--trace-ring N]
+               (same semantics as `run`)
   fig1       Reproduce Figure 1 (least squares)        [--trials N] [--quick]
   fig2       Reproduce Figure 2 (sparse, m > k)        [--trials N] [--quick]
   fig3       Reproduce Figure 3 (sparse, k > m)        [--trials N] [--quick]
@@ -166,6 +176,15 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(["run".to_string(), "--m".to_string()]).is_err());
+    }
+
+    #[test]
+    fn trace_takes_a_path_value() {
+        let a = parse("simulate --trace out/t.json --trace-format jsonl --json");
+        assert_eq!(a.get_str("trace", ""), "out/t.json");
+        assert_eq!(a.get_str("trace-format", "chrome"), "jsonl");
+        assert!(a.has("json"));
+        assert!(!a.has("trace"));
     }
 
     #[test]

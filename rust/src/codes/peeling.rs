@@ -49,6 +49,13 @@ impl PeelSchedule {
         self.ops.len()
     }
 
+    /// Number of peel operations fired in each round, in round order —
+    /// the per-round shape the tracing layer exports as `PeelRound`
+    /// events.
+    pub fn ops_per_round(&self) -> impl Iterator<Item = usize> + '_ {
+        self.round_offsets.windows(2).map(|w| w[1] - w[0])
+    }
+
     /// Apply the schedule to a codeword whose erased coordinates hold
     /// arbitrary values; after the call every scheduled target holds its
     /// decoded value. Coordinates in `unrecovered` are left untouched.
@@ -410,6 +417,10 @@ mod tests {
         assert_eq!(*sched.round_offsets.last().unwrap(), sched.ops.len());
         assert!(sched.round_offsets.windows(2).all(|w| w[0] < w[1]));
         assert_eq!(sched.round_offsets.len(), sched.rounds + 1);
+        let per_round: Vec<usize> = sched.ops_per_round().collect();
+        assert_eq!(per_round.len(), sched.rounds);
+        assert_eq!(per_round.iter().sum::<usize>(), sched.ops.len());
+        assert!(per_round.iter().all(|&c| c > 0));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! coordinates) quantify how gracefully a scheme absorbs failures.
 
 use crate::coordinator::faults::FaultCounts;
+use crate::obs::{json_num, json_safe, LogHistogram};
 
 /// Metrics for a single gradient step.
 #[derive(Debug, Clone, Default)]
@@ -47,6 +48,37 @@ impl StepMetrics {
             (self.worker_ns + self.decode_ns + self.update_ns) as f64 / 1.0e6;
         compute + self.collect_ms.unwrap_or(0.0) + self.comm_ms
     }
+
+    /// One-line JSON record of this step — the tracer's JSONL stream.
+    /// Non-finite floats serialize as `null`.
+    pub fn to_json_line(&self) -> String {
+        let f = &self.faults;
+        format!(
+            concat!(
+                "{{\"t\":{},\"stragglers\":{},\"unrecovered\":{},",
+                "\"decode_rounds\":{},\"worker_ns\":{},\"decode_ns\":{},",
+                "\"update_ns\":{},\"collect_ms\":{},\"comm_ms\":{},",
+                "\"error\":{},\"faults\":{{\"down\":{},\"crashed\":{},",
+                "\"corrupt\":{},\"omitted\":{},\"retried\":{},\"recovered\":{}}}}}"
+            ),
+            self.t,
+            self.stragglers,
+            self.unrecovered,
+            self.decode_rounds,
+            self.worker_ns,
+            self.decode_ns,
+            self.update_ns,
+            self.collect_ms.map_or_else(|| "null".into(), json_num),
+            json_num(self.comm_ms),
+            json_num(self.error),
+            f.down,
+            f.crashed,
+            f.corrupt,
+            f.omitted,
+            f.retried,
+            f.recovered,
+        )
+    }
 }
 
 /// Aggregate totals over a run.
@@ -75,6 +107,16 @@ pub struct MetricTotals {
     /// Steps that proceeded on a best-effort gradient (unrecovered
     /// coordinates zeroed) — the graceful-degradation counter.
     pub degraded_steps: usize,
+    /// Per-step decode-time distribution (µs) — the p50/p95/p99 view of
+    /// the `decode_ns` column, always on (a sample is one `log2`).
+    pub decode_us: LogHistogram,
+    /// Per-step collection-latency distribution (ms; latency models
+    /// only — empty for the plain thread cluster).
+    pub collect_ms_hist: LogHistogram,
+    /// Per-step peeling-round distribution.
+    pub rounds_hist: LogHistogram,
+    /// Per-step retry-count distribution (re-dispatched tasks).
+    pub retries_hist: LogHistogram,
 }
 
 impl MetricTotals {
@@ -93,6 +135,12 @@ impl MetricTotals {
         if s.unrecovered > 0 {
             self.degraded_steps += 1;
         }
+        self.decode_us.add(s.decode_ns as f64 / 1e3);
+        if let Some(c) = s.collect_ms {
+            self.collect_ms_hist.add(c);
+        }
+        self.rounds_hist.add(s.decode_rounds as f64);
+        self.retries_hist.add(s.faults.retried as f64);
     }
 
     /// Simulated total computation time (ms).
@@ -174,34 +222,64 @@ impl RunReport {
                 self.totals.degraded_steps,
             ));
         }
+        let d = &self.totals.decode_us;
+        if !d.is_empty() {
+            s.push_str(&format!(
+                " decode_us[p50/p95/p99]={:.1}/{:.1}/{:.1}",
+                d.p50(),
+                d.p95(),
+                d.p99()
+            ));
+        }
+        let c = &self.totals.collect_ms_hist;
+        if !c.is_empty() {
+            s.push_str(&format!(
+                " collect_ms[p50/p95/p99]={:.2}/{:.2}/{:.2}",
+                c.p50(),
+                c.p95(),
+                c.p99()
+            ));
+        }
         s
     }
 
     /// Minimal JSON object (hand-rolled; no serde in the offline crate
-    /// set).
+    /// set). Non-finite floats serialize as `null`.
     pub fn to_json(&self) -> String {
+        let t = &self.totals;
         format!(
             concat!(
                 "{{\"scheme\":\"{}\",\"steps\":{},\"converged\":{},",
-                "\"final_error\":{:.6e},\"final_rel_error\":{:.6e},",
-                "\"wall_ms\":{:.3},\"sim_ms\":{:.3},",
-                "\"mean_unrecovered\":{:.4},\"mean_decode_rounds\":{:.4},",
+                "\"final_error\":{},\"final_rel_error\":{},",
+                "\"wall_ms\":{},\"sim_ms\":{},",
+                "\"mean_unrecovered\":{},\"mean_decode_rounds\":{},",
                 "\"degraded_steps\":{},\"faults_lost\":{},",
-                "\"faults_retried\":{},\"faults_recovered\":{}}}"
+                "\"faults_retried\":{},\"faults_recovered\":{},",
+                "\"decode_us_p50\":{},\"decode_us_p95\":{},\"decode_us_p99\":{},",
+                "\"collect_ms_p50\":{},\"collect_ms_p95\":{},\"collect_ms_p99\":{},",
+                "\"decode_rounds_p95\":{},\"retries_per_step_p95\":{}}}"
             ),
             self.scheme,
             self.steps,
             self.converged,
-            self.final_error,
-            self.final_rel_error,
-            self.wall_ms,
-            self.sim_time_ms(),
-            self.totals.mean_unrecovered(),
-            self.totals.mean_decode_rounds(),
-            self.totals.degraded_steps,
-            self.totals.faults.lost(),
-            self.totals.faults.retried,
-            self.totals.faults.recovered,
+            json_safe(self.final_error, format!("{:.6e}", self.final_error)),
+            json_safe(self.final_rel_error, format!("{:.6e}", self.final_rel_error)),
+            json_safe(self.wall_ms, format!("{:.3}", self.wall_ms)),
+            json_safe(self.sim_time_ms(), format!("{:.3}", self.sim_time_ms())),
+            json_safe(t.mean_unrecovered(), format!("{:.4}", t.mean_unrecovered())),
+            json_safe(t.mean_decode_rounds(), format!("{:.4}", t.mean_decode_rounds())),
+            t.degraded_steps,
+            t.faults.lost(),
+            t.faults.retried,
+            t.faults.recovered,
+            json_num(t.decode_us.p50()),
+            json_num(t.decode_us.p95()),
+            json_num(t.decode_us.p99()),
+            json_num(t.collect_ms_hist.p50()),
+            json_num(t.collect_ms_hist.p95()),
+            json_num(t.collect_ms_hist.p99()),
+            json_num(t.rounds_hist.p95()),
+            json_num(t.retries_hist.p95()),
         )
     }
 }
@@ -295,5 +373,85 @@ mod tests {
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert!(j.contains("\"scheme\":\"test\""));
         assert!(j.contains("\"steps\":3"));
+        // Empty-run percentiles are null, never NaN text.
+        assert!(j.contains("\"decode_us_p95\":"));
+        assert!(j.contains("\"collect_ms_p95\":null"));
+        assert!(!j.contains("NaN"));
+    }
+
+    #[test]
+    fn nan_collect_ms_serializes_as_null() {
+        // A NaN collection time must not leak invalid JSON: the sim sum
+        // (and hence sim_ms) goes NaN, which serializes as null.
+        let mut tot = MetricTotals::default();
+        let mut s = step(1);
+        s.collect_ms = Some(f64::NAN);
+        tot.add(&s);
+        assert!(tot.collect_ms.is_nan());
+        assert_eq!(tot.collect_ms_hist.count(), 0, "NaN samples are not bucketed");
+        let line = s.to_json_line();
+        assert!(line.contains("\"collect_ms\":null"), "{line}");
+        assert!(!line.contains("NaN"), "{line}");
+        let r = RunReport {
+            scheme: "t".into(),
+            steps: 1,
+            converged: false,
+            final_error: 1.0,
+            final_rel_error: 1.0,
+            theta: vec![],
+            wall_ms: 0.0,
+            totals: tot,
+            trace: vec![],
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"sim_ms\":null"), "{j}");
+        assert!(!j.contains("NaN"), "{j}");
+    }
+
+    #[test]
+    fn step_json_line_shape() {
+        let mut s = step(7);
+        s.collect_ms = Some(2.5);
+        s.error = 0.125;
+        let line = s.to_json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        assert!(line.contains("\"t\":7"));
+        assert!(line.contains("\"collect_ms\":2.5"));
+        assert!(line.contains("\"error\":0.125"));
+        assert!(line.contains("\"faults\":{\"down\":0"));
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn decode_percentiles_surface_in_summary_and_json() {
+        let mut tot = MetricTotals::default();
+        for t in 1..=50 {
+            let mut s = step(t);
+            s.decode_ns = 1_000_000; // 1000 µs
+            s.collect_ms = Some(4.0);
+            tot.add(&s);
+        }
+        assert_eq!(tot.decode_us.count(), 50);
+        let p95 = tot.decode_us.p95();
+        // Identical samples collapse to the exact value via min/max
+        // clamping.
+        assert_eq!(p95, 1000.0);
+        let r = RunReport {
+            scheme: "t".into(),
+            steps: 50,
+            converged: true,
+            final_error: 1e-6,
+            final_rel_error: 1e-7,
+            theta: vec![],
+            wall_ms: 1.0,
+            totals: tot,
+            trace: vec![],
+        };
+        let s = r.summary();
+        assert!(s.contains("decode_us[p50/p95/p99]=1000.0/1000.0/1000.0"), "{s}");
+        assert!(s.contains("collect_ms[p50/p95/p99]=4.00/4.00/4.00"), "{s}");
+        let j = r.to_json();
+        assert!(j.contains("\"decode_us_p95\":1000"), "{j}");
+        assert!(j.contains("\"collect_ms_p95\":4"), "{j}");
     }
 }

@@ -32,12 +32,14 @@ pub mod schemes;
 pub mod straggler;
 pub mod worker;
 
+use std::rc::Rc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
 use crate::data::RegressionProblem;
 use crate::error::{Error, Result};
+use crate::obs::{SharedTracer, SpanKind, TimeDomain};
 use crate::optim::convergence::ConvergenceRule;
 use crate::runtime::{BackendChoice, ComputeBackend, NativeBackend};
 
@@ -66,6 +68,19 @@ pub fn run_distributed(
     problem: &RegressionProblem,
     cfg: &RunConfig,
 ) -> Result<RunReport> {
+    run_distributed_traced(scheme, problem, cfg, None)
+}
+
+/// [`run_distributed`] with an optional armed tracer (wall-clock
+/// domain). Tracing only records values the run already computed — it
+/// draws no RNG and changes no scheduling, so the reported θ and fault
+/// counters are bit-identical to an untraced run.
+pub fn run_distributed_traced(
+    scheme: Box<dyn GradientScheme>,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+    tracer: Option<&SharedTracer>,
+) -> Result<RunReport> {
     if scheme.workers() != cfg.workers {
         return Err(Error::Config(format!(
             "scheme shards over {} workers but config says {}",
@@ -84,7 +99,7 @@ pub fn run_distributed(
         let plans = fault_plans(&cfg.faults, cfg.workers, cfg.max_steps);
         Cluster::spawn_with_faults(scheme.payloads(), backend, &plans)
     };
-    let report = run_with_cluster(scheme.as_ref(), &cluster, problem, cfg);
+    let report = run_with_cluster_traced(scheme.as_ref(), &cluster, problem, cfg, tracer);
     cluster.shutdown();
     report
 }
@@ -157,6 +172,15 @@ pub trait StepExecutor {
         let _ = (t, theta, masked, retry);
         Ok(RedispatchOutcome::default())
     }
+
+    /// Arm a tracer on the executor (the observability layer). The
+    /// default ignores it, so an uninstrumented executor stays valid;
+    /// instrumented executors store the handle and emit spans for the
+    /// boundaries they know about. Must never draw RNG or change a
+    /// scheduling decision.
+    fn set_tracer(&mut self, tracer: SharedTracer) {
+        let _ = tracer;
+    }
 }
 
 /// [`StepExecutor`] over the OS-thread [`Cluster`]: every worker always
@@ -191,6 +215,8 @@ pub struct ThreadStepExecutor<'a> {
     /// Which workers actually received the step-`t` request (a closed
     /// channel means the worker thread crashed in an earlier step).
     sent: Vec<bool>,
+    /// Armed observability tracer (wall-clock domain); `None` = no-op.
+    tracer: Option<SharedTracer>,
 }
 
 impl<'a> ThreadStepExecutor<'a> {
@@ -206,6 +232,21 @@ impl<'a> ThreadStepExecutor<'a> {
             next_seq: 1,
             expected: Vec::new(),
             sent: Vec::new(),
+            tracer: None,
+        }
+    }
+
+    /// Current trace time (0 when disarmed; callers only use the value
+    /// under an armed tracer).
+    fn trace_now(&self) -> f64 {
+        self.tracer.as_ref().map_or(0.0, |tr| tr.borrow().now())
+    }
+
+    /// Record a span when the tracer is armed (single-branch no-op
+    /// otherwise). Reads only already-computed values — never RNG.
+    fn emit(&self, kind: SpanKind, lane: usize, step: usize, task: u64, begin: f64, end: f64) {
+        if let Some(tr) = &self.tracer {
+            tr.borrow_mut().span(kind, lane, step, task, begin, end);
         }
     }
 
@@ -249,6 +290,10 @@ impl StepExecutor for ThreadStepExecutor<'_> {
         self.cluster.workers()
     }
 
+    fn set_tracer(&mut self, tracer: SharedTracer) {
+        self.tracer = Some(tracer);
+    }
+
     fn execute_step(
         &mut self,
         t: usize,
@@ -258,6 +303,8 @@ impl StepExecutor for ThreadStepExecutor<'_> {
         let w = self.cluster.workers();
         let faulty = self.cluster.has_faults();
         let straggling = self.sampler.next_step(w);
+        let trace_begin = self.trace_now();
+        let mut bcast_end = trace_begin;
 
         let buf = &mut self.bcast[t % 2];
         if let Some(v) = Arc::get_mut(buf) {
@@ -276,6 +323,9 @@ impl StepExecutor for ThreadStepExecutor<'_> {
             self.cluster.broadcast_with(t, &theta_arc, |j| {
                 masked[j].take().or_else(|| spares.pop())
             })?;
+            if self.tracer.is_some() {
+                bcast_end = self.trace_now();
+            }
             self.cluster.collect_into(t, &mut self.slots)?;
         } else {
             // Fault-tolerant dispatch: sends to crashed workers fail
@@ -299,8 +349,16 @@ impl StepExecutor for ThreadStepExecutor<'_> {
             }
             self.slots.clear();
             self.slots.resize_with(w, || None);
+            if self.tracer.is_some() {
+                bcast_end = self.trace_now();
+            }
             let outstanding = self.sent.iter().filter(|&&s| s).count();
             self.collect_tolerant(t, outstanding);
+        }
+        let collect_end = self.trace_now();
+        if self.tracer.is_some() {
+            self.emit(SpanKind::Broadcast, 0, t, 0, trace_begin, bcast_end);
+            self.emit(SpanKind::Collect, 0, t, 0, bcast_end, collect_end);
         }
 
         // Deadline semantics: drop the stragglers' responses (their
@@ -324,17 +382,23 @@ impl StepExecutor for ThreadStepExecutor<'_> {
                 masked[j] = None;
                 if self.sent[j] {
                     fc.omitted += 1;
+                    self.emit(SpanKind::Omitted, j + 1, t, 0, collect_end, collect_end);
+                } else {
+                    self.emit(SpanKind::Down, j + 1, t, 0, collect_end, collect_end);
                 }
                 continue;
             };
+            let seq = self.expected.get(j).copied().unwrap_or(0);
             if is_straggler {
                 masked[j] = None;
+                self.emit(SpanKind::Dropped, j + 1, t, seq, collect_end, collect_end);
                 if let Ok(v) = r.values {
                     self.spares.push(v);
                 }
                 continue;
             }
             let intact = !faulty || r.verify();
+            let compute_ns = r.compute_ns;
             let values = r
                 .values
                 .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
@@ -342,10 +406,21 @@ impl StepExecutor for ThreadStepExecutor<'_> {
                 // Detected corruption: erase, never decode.
                 fc.corrupt += 1;
                 masked[j] = None;
+                self.emit(SpanKind::CorruptErase, j + 1, t, seq, collect_end, collect_end);
                 self.spares.push(values);
                 continue;
             }
-            worker_ns = worker_ns.max(r.compute_ns);
+            worker_ns = worker_ns.max(compute_ns);
+            // Anchored at the broadcast cutoff: the worker clocks its
+            // own compute, the master doesn't observe its start time.
+            self.emit(
+                SpanKind::Compute,
+                j + 1,
+                t,
+                seq,
+                bcast_end,
+                bcast_end + compute_ns as f64,
+            );
             masked[j] = Some(values);
         }
         Ok(StepExecution {
@@ -393,6 +468,7 @@ impl StepExecutor for ThreadStepExecutor<'_> {
             if expecting.is_empty() {
                 break; // every missing block belongs to a dead worker
             }
+            let launch = self.trace_now();
             let deadline = self.collect_deadline();
             let mut outstanding = expecting.len();
             while outstanding > 0 {
@@ -405,17 +481,21 @@ impl StepExecutor for ThreadStepExecutor<'_> {
                 else {
                     continue;
                 };
-                let (j, _) = expecting.swap_remove(pos);
+                let (j, seq) = expecting.swap_remove(pos);
                 outstanding -= 1;
                 let intact = r.verify();
                 let values = r
                     .values
                     .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
+                let arrive = self.trace_now();
+                self.emit(SpanKind::Retry, j + 1, t, seq, launch, arrive);
                 if !intact {
                     counts.corrupt += 1;
+                    self.emit(SpanKind::CorruptErase, j + 1, t, seq, arrive, arrive);
                     self.spares.push(values);
                     continue;
                 }
+                self.emit(SpanKind::Arrival, j + 1, t, seq, arrive, arrive);
                 masked[j] = Some(values);
                 counts.recovered += 1;
             }
@@ -432,8 +512,19 @@ pub fn run_with_cluster(
     problem: &RegressionProblem,
     cfg: &RunConfig,
 ) -> Result<RunReport> {
+    run_with_cluster_traced(scheme, cluster, problem, cfg, None)
+}
+
+/// [`run_with_cluster`] with an optional armed tracer.
+pub fn run_with_cluster_traced(
+    scheme: &dyn GradientScheme,
+    cluster: &Cluster,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+    tracer: Option<&SharedTracer>,
+) -> Result<RunReport> {
     let mut exec = ThreadStepExecutor::new(cluster, &cfg.straggler).with_retry(cfg.retry);
-    run_with_executor(scheme, &mut exec, problem, cfg)
+    run_with_executor_traced(scheme, &mut exec, problem, cfg, tracer)
 }
 
 /// The shared master loop: per step, hand broadcast/gather/mask to the
@@ -447,6 +538,22 @@ pub fn run_with_executor(
     exec: &mut dyn StepExecutor,
     problem: &RegressionProblem,
     cfg: &RunConfig,
+) -> Result<RunReport> {
+    run_with_executor_traced(scheme, exec, problem, cfg, None)
+}
+
+/// [`run_with_executor`] with an optional armed tracer. The master
+/// lane (lane 0) gets per-step `Step`/`Comm`/`Decode`/`PeelRound`/
+/// `Update` spans and one JSONL step record; the executor is handed
+/// the same tracer for broadcast/collect/worker-lane spans. Emission
+/// only reads values the loop already computed — no RNG, no
+/// scheduling — so traced and untraced runs are bit-identical.
+pub fn run_with_executor_traced(
+    scheme: &dyn GradientScheme,
+    exec: &mut dyn StepExecutor,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+    tracer: Option<&SharedTracer>,
 ) -> Result<RunReport> {
     let k = problem.k();
     let w = exec.workers();
@@ -480,8 +587,13 @@ pub fn run_with_executor(
     let mut masked: Vec<Option<Vec<f64>>> = (0..w).map(|_| None).collect();
     let mut scratch = DecodeScratch::default();
 
+    if let Some(tr) = tracer {
+        exec.set_tracer(Rc::clone(tr));
+    }
+
     for t in 1..=cfg.max_steps {
         steps = t;
+        let step_begin = tracer.map(|tr| tr.borrow().now());
         let mut exec_stats = exec.execute_step(t, &theta, &mut masked)?;
 
         // Robustness: speculatively re-dispatch whatever the window
@@ -494,6 +606,8 @@ pub fn run_with_executor(
             if let Some(ms) = exec_stats.collect_ms.as_mut() {
                 *ms += out.extra_ms;
             }
+            // Virtual-time executors advance the tracer cursor past the
+            // retry rounds themselves; wall-clock time simply passed.
         }
 
         // Simulated communication: broadcast θ + the largest surviving
@@ -511,9 +625,40 @@ pub fn run_with_executor(
             None => 0.0,
         };
 
+        if let Some(tr) = tracer {
+            if comm_ms > 0.0 {
+                let mut tr = tr.borrow_mut();
+                let b = tr.now();
+                match tr.domain() {
+                    TimeDomain::VirtualMs => {
+                        tr.set_cursor(b + comm_ms);
+                        tr.span(SpanKind::Comm, 0, t, 0, b, b + comm_ms);
+                    }
+                    TimeDomain::WallNs => {
+                        // Modeled cost — no wall time actually passed;
+                        // an instant carrying the cost (µs) as payload.
+                        tr.instant(SpanKind::Comm, 0, t, (comm_ms * 1e3) as u64, b);
+                    }
+                }
+            }
+        }
+
         let decode_start = Instant::now();
         let stats = scheme.decode_into(&masked, cfg.decode_iters, &mut scratch)?;
         let decode_ns = decode_start.elapsed().as_nanos() as u64;
+
+        if let Some(tr) = tracer {
+            let mut tr = tr.borrow_mut();
+            let (db, de) =
+                tr.span_host(SpanKind::Decode, 0, t, stats.decode_rounds as u64, decode_ns);
+            let rounds = scratch.peel_round_ops.len();
+            for (i, &ops) in scratch.peel_round_ops.iter().enumerate() {
+                // Rounds are not timed individually; spread them evenly
+                // inside the decode span, payload = peel ops fired.
+                let at = db + (de - db) * (i as f64 + 0.5) / rounds as f64;
+                tr.instant(SpanKind::PeelRound, 0, t, ops as u64, at);
+            }
+        }
 
         let update_start = Instant::now();
         for (th, g) in theta.iter_mut().zip(&scratch.gradient) {
@@ -521,6 +666,10 @@ pub fn run_with_executor(
         }
         cfg.projection.apply(&mut theta);
         let update_ns = update_start.elapsed().as_nanos() as u64;
+
+        if let Some(tr) = tracer {
+            tr.borrow_mut().span_host(SpanKind::Update, 0, t, 0, update_ns);
+        }
 
         if ConvergenceRule::is_diverged(&theta) {
             return Err(Error::Runtime(format!(
@@ -543,6 +692,13 @@ pub fn run_with_executor(
             faults: exec_stats.faults,
         };
         totals.add(&sm);
+        if let Some(tr) = tracer {
+            let mut tr = tr.borrow_mut();
+            let end = tr.now();
+            let begin = step_begin.unwrap_or(end);
+            tr.span(SpanKind::Step, 0, t, exec_stats.stragglers as u64, begin, end);
+            tr.push_step_line(sm.to_json_line());
+        }
         if cfg.record_trace {
             trace.push(sm);
         }

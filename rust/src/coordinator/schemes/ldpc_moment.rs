@@ -197,6 +197,11 @@ impl GradientScheme for LdpcMomentScheme {
             decoder.schedule_cached(&mut cache, erased, decode_iters)
         };
 
+        // Export the per-round peel shape for the tracing layer; the
+        // schedule is shared by all blocks, so this is once per step.
+        out.peel_round_ops.clear();
+        out.peel_round_ops.extend(sched.ops_per_round());
+
         // Systematic positions that stay erased => the set U_t.
         let unrec_sys = &mut out.indices2;
         unrec_sys.clear();
@@ -410,6 +415,10 @@ mod tests {
             assert_eq!(scratch.gradient, want.gradient, "trial {trial}");
             assert_eq!(stats.unrecovered_coords, want.unrecovered_coords);
             assert_eq!(stats.decode_rounds, want.decode_rounds);
+            // Per-round peel shape exported for tracing: one entry per
+            // round, each round non-empty.
+            assert_eq!(scratch.peel_round_ops.len(), stats.decode_rounds, "trial {trial}");
+            assert!(scratch.peel_round_ops.iter().all(|&c| c > 0), "trial {trial}");
         }
     }
 

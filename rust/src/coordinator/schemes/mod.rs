@@ -64,6 +64,12 @@ pub struct DecodeScratch {
     /// field keeps the zero-allocation invariant reachable for one that
     /// does, without widening the `decode_into` signature again.
     pub gemm: crate::linalg::GemmScratch,
+    /// Peel operations fired per decoding round, in round order —
+    /// written by iterative schemes (LDPC peeling), left empty by the
+    /// rest. The master loop clears it before each decode and the
+    /// tracing layer exports it as `PeelRound` events; schemes that
+    /// never fill it cost one `clear()` per step.
+    pub peel_round_ops: Vec<usize>,
 }
 
 /// Run a scheme's buffer-reusing decode with a throwaway scratch and

@@ -1,0 +1,69 @@
+//! Shared support for the `rust/benches/*` harness binaries.
+//!
+//! Every figure/ablation bench supports a seconds-long "smoke" mode that
+//! ci.sh drives by exporting `{NAME}_SMOKE=1`. The two conventions that
+//! keep smoke runs safe live here so each bench does not re-derive them:
+//!
+//! * [`bench_smoke`] — one place that maps a bench name to its env var
+//!   (`sim_faults` → `SIM_FAULTS_SMOKE`), so ci.sh and the bench can
+//!   never drift on spelling;
+//! * [`smoke_out_path`] — smoke runs write `*_smoke` output file names,
+//!   so a CI smoke pass can never clobber the real measurements an
+//!   operator is about to copy into a repo-root baseline.
+
+/// True when this bench was asked to run in smoke mode: the environment
+/// variable `{NAME}_SMOKE` (name upper-cased) is set to anything at all.
+///
+/// `bench_smoke("sim_faults")` checks `SIM_FAULTS_SMOKE`, matching what
+/// ci.sh exports for its bench-smoke stages.
+pub fn bench_smoke(name: &str) -> bool {
+    let var = format!("{}_SMOKE", name.to_ascii_uppercase());
+    std::env::var_os(var).is_some()
+}
+
+/// Output path for a bench artifact: the path itself in a full run, or
+/// the same path with `_smoke` spliced in before the extension in a
+/// smoke run (`bench_out/x.csv` → `bench_out/x_smoke.csv`).
+pub fn smoke_out_path(base: &str, smoke: bool) -> String {
+    if !smoke {
+        return base.to_string();
+    }
+    match base.rfind('.') {
+        // rfind can land on a dot inside a directory component (e.g.
+        // `./bench_out/x`); only treat it as an extension if it comes
+        // after the last path separator.
+        Some(dot) if !base[dot..].contains('/') => {
+            format!("{}_smoke{}", &base[..dot], &base[dot..])
+        }
+        _ => format!("{base}_smoke"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_env_var_naming() {
+        // Uses a name no bench owns so the test cannot race real runs.
+        assert!(!bench_smoke("bench_support_selftest"));
+        std::env::set_var("BENCH_SUPPORT_SELFTEST_SMOKE", "1");
+        assert!(bench_smoke("bench_support_selftest"));
+        std::env::remove_var("BENCH_SUPPORT_SELFTEST_SMOKE");
+    }
+
+    #[test]
+    fn smoke_paths_splice_before_extension() {
+        assert_eq!(smoke_out_path("bench_out/sim_faults.csv", false), "bench_out/sim_faults.csv");
+        assert_eq!(
+            smoke_out_path("bench_out/sim_faults.csv", true),
+            "bench_out/sim_faults_smoke.csv"
+        );
+        assert_eq!(
+            smoke_out_path("bench_out/BENCH_hotpath.json", true),
+            "bench_out/BENCH_hotpath_smoke.json"
+        );
+        assert_eq!(smoke_out_path("bench_out/noext", true), "bench_out/noext_smoke");
+        assert_eq!(smoke_out_path("./dir.d/noext", true), "./dir.d/noext_smoke");
+    }
+}

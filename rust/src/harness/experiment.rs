@@ -16,7 +16,7 @@ use crate::config::RunConfig;
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::faults::{fault_plans, FaultModel};
 use crate::coordinator::metrics::RunReport;
-use crate::coordinator::run_with_cluster;
+use crate::coordinator::run_with_cluster_traced;
 use crate::coordinator::schemes::gradcoding::GradCodingScheme;
 use crate::coordinator::schemes::ksdy::{KsdyScheme, SketchKind};
 use crate::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
@@ -27,6 +27,7 @@ use crate::coordinator::schemes::GradientScheme;
 use crate::coordinator::straggler::{LatencyModel, StragglerModel};
 use crate::data::RegressionProblem;
 use crate::error::Result;
+use crate::obs::{SharedTracer, TimeDomain, TraceSpec, Tracer};
 use crate::sim::deadline::DeadlinePolicy;
 use crate::sim::{
     AsyncSimCluster, AsyncSimConfig, ComputeModel, SimCluster, SimConfig, TaskCosts, Topology,
@@ -231,6 +232,37 @@ pub fn run_trials(
     problem: &RegressionProblem,
     spec: &ExperimentSpec,
 ) -> Result<Aggregate> {
+    run_trials_traced(scheme_spec, problem, spec, None)
+}
+
+/// Build a fresh tracer for trial 0 when a [`TraceSpec`] is armed —
+/// the first trial is representative and one trace file keeps the
+/// harness output bounded. Tracing never touches later trials.
+fn trial_tracer(trial: usize, trace: Option<&TraceSpec>, domain: TimeDomain) -> Option<SharedTracer> {
+    match (trial, trace) {
+        (0, Some(ts)) => {
+            Some(crate::obs::shared(Tracer::with_capacity(domain, ts.ring_capacity)))
+        }
+        _ => None,
+    }
+}
+
+/// Write an armed trial tracer to its spec'd path.
+fn write_trial_trace(tracer: &Option<SharedTracer>, trace: Option<&TraceSpec>) -> Result<()> {
+    if let (Some(tr), Some(ts)) = (tracer, trace) {
+        tr.borrow().write(ts)?;
+    }
+    Ok(())
+}
+
+/// [`run_trials`] with an optional trace of trial 0 (wall-clock
+/// domain), written to `trace.path` before the remaining trials run.
+pub fn run_trials_traced(
+    scheme_spec: &SchemeSpec,
+    problem: &RegressionProblem,
+    spec: &ExperimentSpec,
+    trace: Option<&TraceSpec>,
+) -> Result<Aggregate> {
     let scheme = scheme_spec.build(problem, spec.config.workers)?;
     let backend = crate::coordinator::make_backend(&spec.config)?;
     spec.config.faults.validate()?;
@@ -245,8 +277,11 @@ pub fn run_trials(
         let seed = spec.straggler_seed_base + trial as u64;
         let mut cfg = spec.config.clone();
         cfg.straggler = reseed(&spec.config.straggler, seed);
+        let tracer = trial_tracer(trial, trace, TimeDomain::WallNs);
         let report = match &shared {
-            Some(cluster) => run_with_cluster(scheme.as_ref(), cluster, problem, &cfg)?,
+            Some(cluster) => {
+                run_with_cluster_traced(scheme.as_ref(), cluster, problem, &cfg, tracer.as_ref())?
+            }
             None => {
                 cfg.faults = spec.config.faults.reseed(seed);
                 let plans = fault_plans(&cfg.faults, cfg.workers, cfg.max_steps);
@@ -255,11 +290,18 @@ pub fn run_trials(
                     Arc::clone(&backend),
                     &plans,
                 );
-                let report = run_with_cluster(scheme.as_ref(), &cluster, problem, &cfg)?;
+                let report = run_with_cluster_traced(
+                    scheme.as_ref(),
+                    &cluster,
+                    problem,
+                    &cfg,
+                    tracer.as_ref(),
+                )?;
                 cluster.shutdown();
                 report
             }
         };
+        write_trial_trace(&tracer, trace)?;
         stats.add(&report);
     }
     if let Some(cluster) = shared {
@@ -319,6 +361,18 @@ pub fn run_sim_trials(
     spec: &ExperimentSpec,
     sim: &SimSpec,
 ) -> Result<Aggregate> {
+    run_sim_trials_traced(scheme_spec, problem, spec, sim, None)
+}
+
+/// [`run_sim_trials`] with an optional trace of trial 0 (virtual-ms
+/// domain), written to `trace.path` before the remaining trials run.
+pub fn run_sim_trials_traced(
+    scheme_spec: &SchemeSpec,
+    problem: &RegressionProblem,
+    spec: &ExperimentSpec,
+    sim: &SimSpec,
+    trace: Option<&TraceSpec>,
+) -> Result<Aggregate> {
     let scheme = scheme_spec.build(problem, spec.config.workers)?;
     // Build the backend once (PJRT loads AOT artifacts from disk); the
     // per-trial clusters are free — they borrow the payloads. Task costs
@@ -330,13 +384,20 @@ pub fn run_sim_trials(
         let seed = spec.straggler_seed_base + trial as u64;
         let mut cfg = spec.config.clone();
         cfg.straggler = reseed(&spec.config.straggler, seed);
+        let tracer = trial_tracer(trial, trace, TimeDomain::VirtualMs);
         let report = match &sim.pipeline {
             None => {
                 let sim_cfg = SimConfig::new(sim.latency.reseed(seed), sim.policy.clone())
                     .with_faults(sim.faults.reseed(seed));
                 let mut cluster =
                     SimCluster::new(scheme.payloads(), Arc::clone(&backend), &cfg, &sim_cfg);
-                crate::coordinator::run_with_executor(scheme.as_ref(), &mut cluster, problem, &cfg)?
+                crate::coordinator::run_with_executor_traced(
+                    scheme.as_ref(),
+                    &mut cluster,
+                    problem,
+                    &cfg,
+                    tracer.as_ref(),
+                )?
             }
             Some(p) => {
                 let sim_cfg = AsyncSimConfig {
@@ -354,9 +415,16 @@ pub fn run_sim_trials(
                     &cfg,
                     &sim_cfg,
                 )?;
-                crate::coordinator::run_with_executor(scheme.as_ref(), &mut cluster, problem, &cfg)?
+                crate::coordinator::run_with_executor_traced(
+                    scheme.as_ref(),
+                    &mut cluster,
+                    problem,
+                    &cfg,
+                    tracer.as_ref(),
+                )?
             }
         };
+        write_trial_trace(&tracer, trace)?;
         stats.add(&report);
     }
     Ok(stats.finish(scheme.name(), spec.trials))

@@ -2,11 +2,14 @@
 //! table/CSV reporting. Every figure bench (`rust/benches/fig*.rs`) and
 //! the CLI drive experiments through this module.
 
+pub mod bench;
 pub mod experiment;
 pub mod figures;
 pub mod report;
 
+pub use bench::{bench_smoke, smoke_out_path};
 pub use experiment::{
-    run_sim_trials, run_trials, Aggregate, ExperimentSpec, PipelineSpec, SchemeSpec, SimSpec,
+    run_sim_trials, run_sim_trials_traced, run_trials, run_trials_traced, Aggregate,
+    ExperimentSpec, PipelineSpec, SchemeSpec, SimSpec,
 };
 pub use report::{write_csv, Table};

@@ -10,10 +10,12 @@ use moment_ldpc::coordinator::straggler::{LatencyModel, StragglerModel};
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
 use moment_ldpc::error::{Error, Result};
 use moment_ldpc::harness::experiment::{
-    run_sim_trials, run_trials, Aggregate, ExperimentSpec, PipelineSpec, SchemeSpec, SimSpec,
+    run_sim_trials_traced, run_trials_traced, Aggregate, ExperimentSpec, PipelineSpec, SchemeSpec,
+    SimSpec,
 };
 use moment_ldpc::harness::figures::{fig1, fig2, fig3, FigureScale};
 use moment_ldpc::harness::report::{write_csv, Table};
+use moment_ldpc::obs::{json_safe, TraceFormat, TraceSpec, DEFAULT_RING_CAP};
 use moment_ldpc::optim::projections::Projection;
 use moment_ldpc::runtime::artifact::{ArtifactRegistry, Kernel};
 use moment_ldpc::runtime::BackendChoice;
@@ -107,6 +109,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         None => Projection::None,
     };
     let faults = fault_model_from(args)?;
+    let trace = trace_spec_from(args)?;
     let spec = ExperimentSpec {
         config: RunConfig {
             workers,
@@ -121,7 +124,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             rel_tol: args.get::<f64>("rel-tol", 1e-3)?,
             max_steps: args.get::<usize>("max-steps", 4000)?,
             backend,
-            record_trace: args.has("trace"),
+            record_trace: trace.is_some(),
             faults: faults.clone(),
             retry: retry_policy_from(args)?,
             ..Default::default()
@@ -135,9 +138,40 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         format!("{}/{}", spec.config.straggler.name(), faults.name())
     };
-    let agg = run_trials(&scheme, &problem, &spec)?;
+    let agg = run_trials_traced(&scheme, &problem, &spec, trace.as_ref())?;
+    if let Some(ts) = &trace {
+        eprintln!("trace written -> {}", ts.path.display());
+    }
     print_aggregate(&agg, &setup, args.has("json"));
     Ok(())
+}
+
+/// Parse `--trace PATH [--trace-format chrome|jsonl] [--trace-ring N]`.
+/// The refinement flags are rejected without `--trace`.
+fn trace_spec_from(args: &Args) -> Result<Option<TraceSpec>> {
+    let path = args.get_opt::<String>("trace")?;
+    let format = args.get_opt::<String>("trace-format")?;
+    let ring = args.get_opt::<usize>("trace-ring")?;
+    let Some(path) = path else {
+        if format.is_some() || ring.is_some() {
+            return Err(Error::Config(
+                "--trace-format / --trace-ring refine the trace output: add --trace PATH"
+                    .into(),
+            ));
+        }
+        return Ok(None);
+    };
+    let format = match format {
+        None => TraceFormat::Chrome,
+        Some(f) => TraceFormat::parse(&f).ok_or_else(|| {
+            Error::Config(format!("unknown trace format '{f}' (chrome|jsonl)"))
+        })?,
+    };
+    Ok(Some(TraceSpec {
+        path: path.into(),
+        format,
+        ring_capacity: ring.unwrap_or(DEFAULT_RING_CAP),
+    }))
 }
 
 fn latency_model_from(args: &Args) -> Result<LatencyModel> {
@@ -227,22 +261,25 @@ fn deadline_policy_from(args: &Args, workers: usize) -> Result<DeadlinePolicy> {
 
 fn print_aggregate(agg: &Aggregate, setup: &str, json: bool) {
     if json {
+        // Non-finite aggregates (e.g. a std over one trial) must render
+        // as `null`, never as the invalid-JSON tokens NaN/inf.
+        let num = |v: f64, prec: usize| json_safe(v, format!("{v:.prec$}"));
         println!(
             "{{\"scheme\":\"{}\",\"setup\":\"{setup}\",\"trials\":{},\
-             \"convergence_rate\":{:.3},\"mean_steps\":{:.2},\"std_steps\":{:.2},\
-             \"mean_sim_ms\":{:.3},\"mean_unrecovered\":{:.3},\
-             \"mean_decode_rounds\":{:.3},\"mean_degraded_steps\":{:.2},\
-             \"mean_lost_tasks\":{:.2}}}",
+             \"convergence_rate\":{},\"mean_steps\":{},\"std_steps\":{},\
+             \"mean_sim_ms\":{},\"mean_unrecovered\":{},\
+             \"mean_decode_rounds\":{},\"mean_degraded_steps\":{},\
+             \"mean_lost_tasks\":{}}}",
             agg.scheme,
             agg.trials,
-            agg.convergence_rate,
-            agg.mean_steps,
-            agg.std_steps,
-            agg.mean_sim_ms,
-            agg.mean_unrecovered,
-            agg.mean_decode_rounds,
-            agg.mean_degraded_steps,
-            agg.mean_lost_tasks
+            num(agg.convergence_rate, 3),
+            num(agg.mean_steps, 2),
+            num(agg.std_steps, 2),
+            num(agg.mean_sim_ms, 3),
+            num(agg.mean_unrecovered, 3),
+            num(agg.mean_decode_rounds, 3),
+            num(agg.mean_degraded_steps, 2),
+            num(agg.mean_lost_tasks, 2)
         );
     } else {
         let mut line = format!(
@@ -337,8 +374,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if !faults.is_none() {
         setup = format!("{setup}/{}", faults.name());
     }
+    let trace = trace_spec_from(args)?;
     let sim = SimSpec { latency: latency.clone(), policy: policy.clone(), pipeline, faults };
-    let agg = run_sim_trials(&scheme, &problem, &spec, &sim)?;
+    let agg = run_sim_trials_traced(&scheme, &problem, &spec, &sim, trace.as_ref())?;
+    if let Some(ts) = &trace {
+        eprintln!("trace written -> {}", ts.path.display());
+    }
     print_aggregate(&agg, &setup, args.has("json"));
     Ok(())
 }

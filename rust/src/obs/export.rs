@@ -1,0 +1,166 @@
+//! Trace exporters: Chrome `trace_event` JSON and JSONL step records.
+//!
+//! The Chrome document is the `{"traceEvents": [...]}` object form
+//! with `ph: "X"` complete events — the dialect both Perfetto and
+//! `chrome://tracing` load directly. Lanes map to threads of one
+//! process: `tid` 0 is the master, `tid` `j + 1` is worker `j`, named
+//! via `thread_name` metadata events. Timestamps (`ts`) and durations
+//! (`dur`) are microseconds: wall-nanosecond tracers divide by 1e3,
+//! virtual-millisecond tracers multiply by 1e3.
+
+use super::{json_num, json_str, TimeDomain, Tracer};
+
+/// µs per domain unit.
+fn scale(domain: TimeDomain) -> f64 {
+    match domain {
+        TimeDomain::WallNs => 1e-3,
+        TimeDomain::VirtualMs => 1e3,
+    }
+}
+
+/// Render the Chrome `trace_event` JSON document.
+pub(super) fn chrome_json(t: &Tracer) -> String {
+    let k = scale(t.domain());
+    let mut out = String::from("{\"traceEvents\":[\n");
+    out.push_str(
+        "{\"ph\":\"M\",\"pid\":0,\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"moment_ldpc\"}}",
+    );
+    for (lane, _) in t.lanes() {
+        let name = lane_name(lane);
+        out.push_str(&format!(
+            ",\n{{\"ph\":\"M\",\"pid\":0,\"tid\":{lane},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":{}}}}}",
+            json_str(&name)
+        ));
+    }
+    for (lane, spans) in t.lanes() {
+        for s in spans {
+            let ts = json_num(s.begin * k);
+            let dur = json_num((s.end - s.begin).max(0.0) * k);
+            out.push_str(&format!(
+                ",\n{{\"ph\":\"X\",\"pid\":0,\"tid\":{lane},\"name\":\"{}\",\
+                 \"cat\":\"{}\",\"ts\":{ts},\"dur\":{dur},\
+                 \"args\":{{\"step\":{},\"task\":{}}}}}",
+                s.kind.as_str(),
+                s.kind.as_str(),
+                s.step,
+                s.task
+            ));
+        }
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// Render the JSONL step-record stream (one object per line).
+pub(super) fn jsonl(t: &Tracer) -> String {
+    let mut out = String::new();
+    for line in t.step_lines() {
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+fn lane_name(lane: usize) -> String {
+    if lane == 0 {
+        "master".into()
+    } else {
+        format!("worker {}", lane - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SpanKind, TraceSpec, Tracer};
+    use super::*;
+
+    /// Minimal well-formedness check: balanced braces/brackets outside
+    /// string literals (the full gate in ci.sh is `python3 -m
+    /// json.tool`).
+    fn balanced(s: &str) -> bool {
+        let (mut brace, mut bracket) = (0i64, 0i64);
+        let mut in_str = false;
+        let mut esc = false;
+        for c in s.chars() {
+            if in_str {
+                if esc {
+                    esc = false;
+                } else if c == '\\' {
+                    esc = true;
+                } else if c == '"' {
+                    in_str = false;
+                }
+                continue;
+            }
+            match c {
+                '"' => in_str = true,
+                '{' => brace += 1,
+                '}' => brace -= 1,
+                '[' => bracket += 1,
+                ']' => bracket -= 1,
+                _ => {}
+            }
+            if brace < 0 || bracket < 0 {
+                return false;
+            }
+        }
+        brace == 0 && bracket == 0 && !in_str
+    }
+
+    #[test]
+    fn chrome_lanes_scaling_and_shape() {
+        let mut t = Tracer::new(TimeDomain::VirtualMs);
+        t.span(SpanKind::Compute, 2, 1, 42, 1.5, 4.0); // worker 1
+        t.instant(SpanKind::Arrival, 2, 1, 42, 4.0);
+        t.span(SpanKind::Collect, 0, 1, 0, 0.0, 4.0);
+        let body = t.to_chrome_json();
+        assert!(balanced(&body), "{body}");
+        assert!(body.contains("\"name\":\"process_name\""));
+        assert!(body.contains("\"name\":\"master\""));
+        assert!(body.contains("\"name\":\"worker 1\""));
+        // 1.5 ms → 1500 µs, 2.5 ms → 2500 µs.
+        assert!(body.contains("\"ts\":1500,\"dur\":2500"), "{body}");
+        assert!(body.contains("\"name\":\"compute\""));
+        assert!(body.contains("\"args\":{\"step\":1,\"task\":42}"));
+        // Instants render with dur 0, still valid complete events.
+        assert!(body.contains("\"name\":\"arrival\",\"cat\":\"arrival\",\"ts\":4000,\"dur\":0"));
+    }
+
+    #[test]
+    fn chrome_wall_ns_scales_down() {
+        let mut t = Tracer::new(TimeDomain::WallNs);
+        t.span(SpanKind::Decode, 0, 0, 0, 2_000.0, 5_000.0); // ns
+        let body = t.to_chrome_json();
+        assert!(body.contains("\"ts\":2,\"dur\":3"), "{body}");
+        assert!(balanced(&body));
+    }
+
+    #[test]
+    fn negative_duration_clamped() {
+        let mut t = Tracer::new(TimeDomain::VirtualMs);
+        t.span(SpanKind::Compute, 1, 0, 0, 5.0, 4.0);
+        assert!(t.to_chrome_json().contains("\"dur\":0"));
+    }
+
+    #[test]
+    fn jsonl_streams_lines() {
+        let mut t = Tracer::new(TimeDomain::VirtualMs);
+        t.push_step_line("{\"t\":0,\"error\":1.0}".into());
+        t.push_step_line("{\"t\":1,\"error\":null}".into());
+        let s = jsonl(&t);
+        assert_eq!(s.lines().count(), 2);
+        for line in s.lines() {
+            assert!(balanced(line), "{line}");
+        }
+    }
+
+    #[test]
+    fn empty_tracer_exports_valid_documents() {
+        let t = Tracer::new(TimeDomain::WallNs);
+        assert!(balanced(&t.to_chrome_json()));
+        assert_eq!(t.to_jsonl(), "");
+        let _ = TraceSpec::chrome("x.json"); // constructor smoke
+    }
+}

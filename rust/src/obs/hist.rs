@@ -1,0 +1,226 @@
+//! Log-bucketed histograms for latency-style quantities.
+//!
+//! 64 power-of-two buckets centred on 1.0: bucket `i` covers
+//! `[2^(i-32), 2^(i-31))`, so the range spans ~2.3e-10 .. ~4.3e9 —
+//! wide enough for nanosecond counters and millisecond virtual times
+//! alike without any configuration. Percentiles are nearest-rank over
+//! the bucket counts, reported at the geometric midpoint of the
+//! selected bucket and clamped to the observed `[min, max]`, so small
+//! samples never report values outside the data. Adding a sample is a
+//! branch, a `log2`, and three adds — cheap enough to stay always-on
+//! in [`MetricTotals`](crate::coordinator::metrics::MetricTotals).
+
+const BUCKETS: usize = 64;
+const BIAS: i32 = 32;
+
+/// Fixed-footprint log₂-bucketed histogram (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    // `[u64; 64]` has no derived `Default` (std stops at 32), so spell
+    // the empty histogram out.
+    fn default() -> Self {
+        LogHistogram {
+            buckets: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v <= 0.0 {
+            // Zero and negative samples land in the lowest bucket; the
+            // exact min/max still track the true values.
+            return 0;
+        }
+        (v.log2().floor() as i32 + BIAS).clamp(0, BUCKETS as i32 - 1) as usize
+    }
+
+    /// Record one sample. NaN samples are ignored (they carry no
+    /// ordering information); ±∞ is clamped into the edge buckets.
+    pub fn add(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += *o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Has anything been recorded?
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of the exact samples (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest recorded sample (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank percentile `p` in `[0, 100]`, reported at the
+    /// geometric midpoint of the selected bucket clamped to
+    /// `[min, max]`. NaN when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = 2f64.powi(i as i32 - BIAS);
+                let mid = lo * std::f64::consts::SQRT_2;
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median.
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// 95th percentile.
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_nan() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert!(h.mean().is_nan());
+        assert!(h.p50().is_nan());
+        assert!(h.min().is_nan() && h.max().is_nan());
+    }
+
+    #[test]
+    fn percentiles_ordered_and_bounded() {
+        let mut h = LogHistogram::new();
+        for i in 1..=1000 {
+            h.add(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let (p50, p95, p99) = (h.p50(), h.p95(), h.p99());
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        for p in [p50, p95, p99] {
+            assert!((1.0..=1000.0).contains(&p), "{p}");
+        }
+        // The median of 1..=1000 sits in the 512..1024 bucket; the
+        // coarse estimate must land within a factor of √2·2 of 500.
+        assert!((250.0..=1000.0).contains(&p50), "{p50}");
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_is_exact() {
+        let mut h = LogHistogram::new();
+        h.add(7.25);
+        // Bucket midpoints are coarse, but clamping to [min, max]
+        // collapses a single sample to itself.
+        assert_eq!(h.p50(), 7.25);
+        assert_eq!(h.p99(), 7.25);
+        assert_eq!(h.min(), 7.25);
+        assert_eq!(h.max(), 7.25);
+    }
+
+    #[test]
+    fn nan_ignored_zero_and_negative_clamped() {
+        let mut h = LogHistogram::new();
+        h.add(f64::NAN);
+        assert!(h.is_empty());
+        h.add(0.0);
+        h.add(-3.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), -3.0);
+        assert_eq!(h.max(), 0.0);
+        let p = h.p50();
+        assert!((-3.0..=0.0).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn merge_matches_sequential() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut all = LogHistogram::new();
+        for i in 0..100 {
+            let v = (i as f64) * 0.37 + 0.1;
+            if i % 2 == 0 {
+                a.add(v);
+            } else {
+                b.add(v);
+            }
+            all.add(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+}

@@ -1,0 +1,512 @@
+//! Structured tracing & per-worker timelines across all three backends.
+//!
+//! A [`Tracer`] holds one bounded span ring per *lane* (lane 0 is the
+//! master, lane `j + 1` is worker `j`) plus a JSONL step-record
+//! stream. Spans carry a [`SpanKind`], begin/end timestamps, and the
+//! step/task ids they belong to. Timestamps live in the tracer's
+//! [`TimeDomain`]: wall-clock nanoseconds since the tracer's origin
+//! for the OS-thread cluster, virtual milliseconds for the
+//! synchronous and asynchronous simulators.
+//!
+//! **Hard invariant** (pinned by `tests/integration_obs.rs`): tracing
+//! draws from no RNG stream and touches no scheduling decision. Every
+//! emission site only *reads* values the backend already computed, so
+//! traced and untraced runs are bit-identical in θ and fault
+//! counters. A disarmed tracer is an `Option::None` field in each
+//! executor — the no-op path is a single branch.
+//!
+//! Exporters: [`Tracer::to_chrome_json`] renders Chrome
+//! `trace_event` JSON loadable in Perfetto / `chrome://tracing`
+//! (per-worker lanes + a master lane); [`Tracer::to_jsonl`] streams
+//! one JSON step record per line. Both are armed from the CLI via
+//! `--trace PATH [--trace-format chrome|jsonl]` on `run` and
+//! `simulate`, and from the harness via [`TraceSpec`].
+
+pub mod export;
+pub mod hist;
+
+pub use hist::LogHistogram;
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::error::Result;
+
+/// Default per-lane span-ring capacity.
+pub const DEFAULT_RING_CAP: usize = 4096;
+
+/// What a span measures. The taxonomy is the union of the interesting
+/// boundaries across the three backends; any single run only emits
+/// the subset its backend has.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Master lane: one whole optimization step.
+    Step,
+    /// Master lane: one-time scheme construction / moment encoding.
+    Encode,
+    /// Master lane: θ broadcast / fan-out window.
+    Broadcast,
+    /// Master lane: collection window (first dispatch → cutoff).
+    Collect,
+    /// Master lane: modeled communication cost (`CommModel`).
+    Comm,
+    /// Master lane: `decode_into` (erasure decode of the step).
+    Decode,
+    /// Master lane: one peeling round inside the decode; `task` holds
+    /// the number of peel operations in the round. Placement inside
+    /// the decode span is schematic (rounds are not timed
+    /// individually).
+    PeelRound,
+    /// Master lane: θ update + projection.
+    Update,
+    /// Worker lane: task compute (dispatch/θ-receipt → completion).
+    Compute,
+    /// Worker lane: waiting at the rack for the θ relay
+    /// (hierarchical topologies).
+    ThetaWait,
+    /// Worker lane: rack-uplink FIFO wait + transfer.
+    NicRack,
+    /// Worker lane: master-link FIFO wait + transfer.
+    NicMaster,
+    /// Worker lane instant: result accepted by the master.
+    Arrival,
+    /// Worker lane instant: arrival erased by the checksum
+    /// (corruption).
+    CorruptErase,
+    /// Worker lane instant: task omitted (never delivered).
+    Omitted,
+    /// Worker lane: a re-dispatched task's flight (launch → arrival).
+    Retry,
+    /// Worker lane: an in-flight task cancelled by staleness doom.
+    Cancelled,
+    /// Worker lane: crash → restart window.
+    Down,
+    /// Worker lane instant: straggler cut off at the deadline.
+    Dropped,
+}
+
+impl SpanKind {
+    /// Stable lowercase name (used as the Chrome event name).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Step => "step",
+            SpanKind::Encode => "encode",
+            SpanKind::Broadcast => "broadcast",
+            SpanKind::Collect => "collect",
+            SpanKind::Comm => "comm",
+            SpanKind::Decode => "decode",
+            SpanKind::PeelRound => "peel_round",
+            SpanKind::Update => "update",
+            SpanKind::Compute => "compute",
+            SpanKind::ThetaWait => "theta_wait",
+            SpanKind::NicRack => "nic_rack",
+            SpanKind::NicMaster => "nic_master",
+            SpanKind::Arrival => "arrival",
+            SpanKind::CorruptErase => "corrupt_erase",
+            SpanKind::Omitted => "omitted",
+            SpanKind::Retry => "retry",
+            SpanKind::Cancelled => "cancelled",
+            SpanKind::Down => "down",
+            SpanKind::Dropped => "dropped",
+        }
+    }
+}
+
+/// One traced interval (or instant, when `begin == end`). Times are in
+/// the owning tracer's [`TimeDomain`] units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    /// What the interval measures.
+    pub kind: SpanKind,
+    /// Lane: 0 = master, `j + 1` = worker `j`.
+    pub lane: u32,
+    /// Optimization step the span belongs to.
+    pub step: u32,
+    /// Task id (or a kind-specific payload, e.g. peel ops per round).
+    pub task: u64,
+    /// Begin timestamp (wall ns or virtual ms).
+    pub begin: f64,
+    /// End timestamp; `== begin` for instants.
+    pub end: f64,
+}
+
+/// Bounded per-lane ring: overwrites the oldest span when full, so the
+/// newest spans always survive, and counts what it dropped.
+#[derive(Debug, Clone, Default)]
+struct SpanRing {
+    spans: Vec<Span>,
+    head: usize,
+    dropped: u64,
+}
+
+impl SpanRing {
+    fn push(&mut self, cap: usize, s: Span) {
+        if self.spans.len() < cap {
+            self.spans.push(s);
+        } else {
+            self.spans[self.head] = s;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Oldest-first iteration.
+    fn iter(&self) -> impl Iterator<Item = &Span> {
+        self.spans[self.head..].iter().chain(self.spans[..self.head].iter())
+    }
+}
+
+/// Which clock a tracer's timestamps live on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeDomain {
+    /// Wall-clock nanoseconds since the tracer's creation (the
+    /// OS-thread cluster).
+    WallNs,
+    /// Virtual milliseconds (the synchronous and asynchronous
+    /// simulators); advanced by the executors via
+    /// [`Tracer::set_cursor`].
+    VirtualMs,
+}
+
+/// Output format for a trace file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// Chrome `trace_event` JSON (Perfetto / `chrome://tracing`).
+    Chrome,
+    /// One JSON step record per line.
+    Jsonl,
+}
+
+impl TraceFormat {
+    /// Parse a CLI flag value.
+    pub fn parse(s: &str) -> Option<TraceFormat> {
+        match s {
+            "chrome" => Some(TraceFormat::Chrome),
+            "jsonl" => Some(TraceFormat::Jsonl),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceFormat::Chrome => "chrome",
+            TraceFormat::Jsonl => "jsonl",
+        }
+    }
+}
+
+/// Where and how to write a trace — the harness-level arming knob.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Output file path (parent directories are created).
+    pub path: PathBuf,
+    /// Output format.
+    pub format: TraceFormat,
+    /// Per-lane span-ring capacity ([`DEFAULT_RING_CAP`] if built via
+    /// the constructors).
+    pub ring_capacity: usize,
+}
+
+impl TraceSpec {
+    /// Chrome-format spec with the default ring capacity.
+    pub fn chrome(path: impl Into<PathBuf>) -> Self {
+        TraceSpec { path: path.into(), format: TraceFormat::Chrome, ring_capacity: DEFAULT_RING_CAP }
+    }
+
+    /// JSONL-format spec with the default ring capacity.
+    pub fn jsonl(path: impl Into<PathBuf>) -> Self {
+        TraceSpec { path: path.into(), format: TraceFormat::Jsonl, ring_capacity: DEFAULT_RING_CAP }
+    }
+}
+
+/// The tracer: per-lane bounded span rings + a step-record stream.
+#[derive(Debug)]
+pub struct Tracer {
+    domain: TimeDomain,
+    origin: Instant,
+    cap: usize,
+    lanes: Vec<SpanRing>,
+    cursor: f64,
+    step_lines: Vec<String>,
+}
+
+/// Shared handle: the master loop and its executor both emit into one
+/// tracer. Single-threaded by construction (all emission happens on
+/// the coordinating thread — worker timings are read off response
+/// structs), so `Rc<RefCell<…>>` suffices.
+pub type SharedTracer = Rc<RefCell<Tracer>>;
+
+/// Wrap a tracer for sharing between the master loop and an executor.
+pub fn shared(tracer: Tracer) -> SharedTracer {
+    Rc::new(RefCell::new(tracer))
+}
+
+impl Tracer {
+    /// Tracer with the default per-lane ring capacity.
+    pub fn new(domain: TimeDomain) -> Self {
+        Self::with_capacity(domain, DEFAULT_RING_CAP)
+    }
+
+    /// Tracer with an explicit per-lane ring capacity (min 1).
+    pub fn with_capacity(domain: TimeDomain, cap: usize) -> Self {
+        Tracer {
+            domain,
+            origin: Instant::now(),
+            cap: cap.max(1),
+            lanes: Vec::new(),
+            cursor: 0.0,
+            step_lines: Vec::new(),
+        }
+    }
+
+    /// The tracer's clock domain.
+    pub fn domain(&self) -> TimeDomain {
+        self.domain
+    }
+
+    /// Current time in domain units: elapsed wall ns, or the virtual
+    /// cursor last set by the executor.
+    pub fn now(&self) -> f64 {
+        match self.domain {
+            TimeDomain::WallNs => self.origin.elapsed().as_nanos() as f64,
+            TimeDomain::VirtualMs => self.cursor,
+        }
+    }
+
+    /// Advance the virtual clock (no-op in the wall domain). Executors
+    /// call this so master-lane spans emitted by the generic step loop
+    /// line up with the simulator's clock.
+    pub fn set_cursor(&mut self, t_ms: f64) {
+        if self.domain == TimeDomain::VirtualMs {
+            self.cursor = t_ms;
+        }
+    }
+
+    /// Record a span on `lane` (0 = master, `j + 1` = worker `j`).
+    pub fn span(&mut self, kind: SpanKind, lane: usize, step: usize, task: u64, begin: f64, end: f64) {
+        while self.lanes.len() <= lane {
+            self.lanes.push(SpanRing::default());
+        }
+        let s = Span { kind, lane: lane as u32, step: step as u32, task, begin, end };
+        self.lanes[lane].push(self.cap, s);
+    }
+
+    /// Record an instant (zero-duration span).
+    pub fn instant(&mut self, kind: SpanKind, lane: usize, step: usize, task: u64, at: f64) {
+        self.span(kind, lane, step, task, at, at);
+    }
+
+    /// Record a host-measured duration (`host_ns`) as a span ending at
+    /// the current time. In the wall domain the span is back-dated
+    /// from now; in the virtual domain it starts at the cursor and
+    /// advances it (host compute folded into virtual time, exactly as
+    /// `sim_time_ms` does for the totals). Returns `(begin, end)`.
+    pub fn span_host(
+        &mut self,
+        kind: SpanKind,
+        lane: usize,
+        step: usize,
+        task: u64,
+        host_ns: u64,
+    ) -> (f64, f64) {
+        match self.domain {
+            TimeDomain::WallNs => {
+                let end = self.now();
+                let begin = (end - host_ns as f64).max(0.0);
+                self.span(kind, lane, step, task, begin, end);
+                (begin, end)
+            }
+            TimeDomain::VirtualMs => {
+                let begin = self.cursor;
+                let end = begin + host_ns as f64 / 1e6;
+                self.cursor = end;
+                self.span(kind, lane, step, task, begin, end);
+                (begin, end)
+            }
+        }
+    }
+
+    /// Append one pre-rendered JSON object line to the step-record
+    /// stream (the JSONL export).
+    pub fn push_step_line(&mut self, line: String) {
+        self.step_lines.push(line);
+    }
+
+    /// Number of lanes that have recorded at least one span slot.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Spans of one lane, oldest first (empty for unknown lanes).
+    pub fn lane_spans(&self, lane: usize) -> Vec<Span> {
+        self.lanes.get(lane).map(|r| r.iter().copied().collect()).unwrap_or_default()
+    }
+
+    /// Spans dropped from one lane's ring (overwritten by newer ones).
+    pub fn dropped(&self, lane: usize) -> u64 {
+        self.lanes.get(lane).map(|r| r.dropped).unwrap_or(0)
+    }
+
+    /// Total dropped spans across lanes.
+    pub fn dropped_total(&self) -> u64 {
+        self.lanes.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Total retained spans across lanes.
+    pub fn span_count(&self) -> usize {
+        self.lanes.iter().map(|r| r.spans.len()).sum()
+    }
+
+    /// Render the Chrome `trace_event` JSON document.
+    pub fn to_chrome_json(&self) -> String {
+        export::chrome_json(self)
+    }
+
+    /// Render the JSONL step-record stream.
+    pub fn to_jsonl(&self) -> String {
+        export::jsonl(self)
+    }
+
+    /// Write the trace to `spec.path` in `spec.format`, creating
+    /// parent directories.
+    pub fn write(&self, spec: &TraceSpec) -> Result<()> {
+        if let Some(parent) = spec.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let body = match spec.format {
+            TraceFormat::Chrome => self.to_chrome_json(),
+            TraceFormat::Jsonl => self.to_jsonl(),
+        };
+        std::fs::write(&spec.path, body)?;
+        Ok(())
+    }
+
+    pub(crate) fn lanes(&self) -> impl Iterator<Item = (usize, impl Iterator<Item = &Span>)> {
+        self.lanes.iter().enumerate().map(|(i, r)| (i, r.iter()))
+    }
+
+    pub(crate) fn step_lines(&self) -> &[String] {
+        &self.step_lines
+    }
+}
+
+/// JSON number in shortest `Display` form; non-finite → `null` (JSON
+/// has no NaN/Inf literals).
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+/// NaN/Inf-guard for a pre-rendered number: the rendering if `v` is
+/// finite, `null` otherwise. Lets callers keep their `{:.6e}`-style
+/// formatting without risking invalid JSON.
+pub fn json_safe(v: f64, rendered: String) -> String {
+    if v.is_finite() {
+        rendered
+    } else {
+        "null".into()
+    }
+}
+
+/// JSON string literal with `\`, `"`, and control characters escaped.
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overflow_keeps_newest_and_counts_dropped() {
+        let mut t = Tracer::with_capacity(TimeDomain::VirtualMs, 4);
+        for i in 0..10 {
+            t.span(SpanKind::Compute, 1, 0, i, i as f64, i as f64 + 0.5);
+        }
+        let spans = t.lane_spans(1);
+        assert_eq!(spans.len(), 4);
+        let tasks: Vec<u64> = spans.iter().map(|s| s.task).collect();
+        assert_eq!(tasks, vec![6, 7, 8, 9], "newest four survive, oldest first");
+        assert_eq!(t.dropped(1), 6);
+        assert_eq!(t.dropped_total(), 6);
+        assert_eq!(t.span_count(), 4);
+    }
+
+    #[test]
+    fn virtual_cursor_and_span_host() {
+        let mut t = Tracer::new(TimeDomain::VirtualMs);
+        t.set_cursor(10.0);
+        assert_eq!(t.now(), 10.0);
+        let (b, e) = t.span_host(SpanKind::Decode, 0, 3, 2, 2_000_000); // 2 ms
+        assert_eq!((b, e), (10.0, 12.0));
+        assert_eq!(t.now(), 12.0, "cursor advanced by the host duration");
+        let s = t.lane_spans(0)[0];
+        assert_eq!(s.kind, SpanKind::Decode);
+        assert_eq!((s.step, s.task), (3, 2));
+    }
+
+    #[test]
+    fn wall_domain_backdates_host_spans() {
+        let mut t = Tracer::new(TimeDomain::WallNs);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let (b, e) = t.span_host(SpanKind::Update, 0, 0, 0, 1_000_000);
+        assert!(e > b && (e - b - 1e6).abs() < 1.0, "{b} {e}");
+        // set_cursor is a no-op on the wall clock.
+        t.set_cursor(0.0);
+        assert!(t.now() > 0.0);
+    }
+
+    #[test]
+    fn json_num_and_safe_guard_nonfinite() {
+        assert_eq!(json_num(1.5), "1.5");
+        assert_eq!(json_num(-0.25), "-0.25");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_num(f64::NEG_INFINITY), "null");
+        assert_eq!(json_safe(2.0, "2.000e0".into()), "2.000e0");
+        assert_eq!(json_safe(f64::NAN, "NaN".into()), "null");
+    }
+
+    #[test]
+    fn json_str_escapes() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn write_both_formats() {
+        let dir = crate::testing::TempDir::new("obs").unwrap();
+        let mut t = Tracer::new(TimeDomain::VirtualMs);
+        t.span(SpanKind::Compute, 1, 0, 7, 1.0, 2.0);
+        t.push_step_line("{\"t\":0}".into());
+        let cp = dir.path().join("sub/trace.json");
+        t.write(&TraceSpec::chrome(&cp)).unwrap();
+        let body = std::fs::read_to_string(&cp).unwrap();
+        assert!(body.starts_with("{\"traceEvents\":["));
+        let jp = dir.path().join("trace.jsonl");
+        t.write(&TraceSpec::jsonl(&jp)).unwrap();
+        assert_eq!(std::fs::read_to_string(&jp).unwrap(), "{\"t\":0}\n");
+    }
+}

@@ -52,9 +52,12 @@ use crate::coordinator::metrics::RunReport;
 use crate::coordinator::protocol::WorkerPayload;
 use crate::coordinator::schemes::GradientScheme;
 use crate::coordinator::straggler::{LatencyModel, LatencySampler, StragglerSampler};
-use crate::coordinator::{run_with_executor, RedispatchOutcome, StepExecution, StepExecutor};
+use crate::coordinator::{
+    run_with_executor_traced, RedispatchOutcome, StepExecution, StepExecutor,
+};
 use crate::data::RegressionProblem;
 use crate::error::{Error, Result};
+use crate::obs::{SharedTracer, SpanKind};
 use crate::runtime::ComputeBackend;
 
 use super::deadline::{Cutoff, DeadlinePolicy, DeadlineState};
@@ -301,6 +304,13 @@ pub struct AsyncSimCluster<'a> {
     stale_applied_total: u64,
     /// Fault counters accumulated over the cluster's lifetime.
     faults_total: FaultCounts,
+    /// Armed observability tracer (virtual-ms domain); `None` = no-op.
+    tracer: Option<SharedTracer>,
+    /// Per-worker span anchor: when the current task's latest traced
+    /// boundary happened (dispatch → θ-at-rack → compute-done →
+    /// rack-done). One in-flight task per worker makes one anchor
+    /// enough. Pure trace bookkeeping — never read by the scheduler.
+    trace_hop: Vec<f64>,
 }
 
 impl<'a> AsyncSimCluster<'a> {
@@ -379,7 +389,25 @@ impl<'a> AsyncSimCluster<'a> {
             cancelled_total: 0,
             stale_applied_total: 0,
             faults_total: FaultCounts::default(),
+            tracer: None,
+            trace_hop: vec![0.0; w],
         })
+    }
+
+    /// Record a span when the tracer is armed (single-branch no-op
+    /// otherwise). Reads only already-computed values — never RNG.
+    fn emit(&self, kind: SpanKind, lane: usize, step: usize, task: u64, begin: f64, end: f64) {
+        if let Some(tr) = &self.tracer {
+            tr.borrow_mut().span(kind, lane, step, task, begin, end);
+        }
+    }
+
+    /// Push the virtual clock into the tracer so master-lane spans from
+    /// the shared loop line up with the simulator's time.
+    fn sync_cursor(&self) {
+        if let Some(tr) = &self.tracer {
+            tr.borrow_mut().set_cursor(self.now_ms);
+        }
     }
 
     /// Current simulated time (ms).
@@ -417,6 +445,11 @@ impl StepExecutor for AsyncSimCluster<'_> {
         self.payloads.len()
     }
 
+    fn set_tracer(&mut self, tracer: SharedTracer) {
+        tracer.borrow_mut().set_cursor(self.now_ms);
+        self.tracer = Some(tracer);
+    }
+
     fn execute_step(
         &mut self,
         t: usize,
@@ -426,6 +459,7 @@ impl StepExecutor for AsyncSimCluster<'_> {
         if self.mirror.is_some() {
             let sampler =
                 self.mirror.as_mut().expect("mirror step without a straggler sampler");
+            let start = self.now_ms;
             let (exec, advance) = mirror_step(
                 self.payloads,
                 self.backend.as_ref(),
@@ -435,6 +469,17 @@ impl StepExecutor for AsyncSimCluster<'_> {
                 masked,
             )?;
             self.now_ms += advance;
+            if self.tracer.is_some() {
+                for (j, m) in masked.iter().enumerate() {
+                    if m.is_some() {
+                        self.emit(SpanKind::Compute, j + 1, t, j as u64, start, self.now_ms);
+                    } else {
+                        self.emit(SpanKind::Dropped, j + 1, t, j as u64, self.now_ms, self.now_ms);
+                    }
+                }
+                self.emit(SpanKind::Collect, 0, t, 0, start, self.now_ms);
+                self.sync_cursor();
+            }
             // Mirror drops are the straggler model's masking, not
             // staleness cancellations — `cancelled_total` keeps its
             // pipelined meaning (the per-step report carries the drops).
@@ -471,10 +516,12 @@ impl StepExecutor for AsyncSimCluster<'_> {
         }
         let mut fc = FaultCounts::default();
         let mut fresh_live = 0usize;
+        let step_start = self.now_ms;
         for (j, &draw) in lat.iter().enumerate() {
             if self.faults.is_down(j, self.now_ms) {
                 debug_assert!(self.inflight[j].is_none(), "a down worker holds no task");
                 fc.down += 1;
+                self.emit(SpanKind::Down, j + 1, t, INFO_TASK, self.now_ms, self.now_ms);
                 continue; // crashed earlier; not yet (or never) restarted
             }
             if self.faults.crashes(j) {
@@ -486,6 +533,9 @@ impl StepExecutor for AsyncSimCluster<'_> {
                 self.queue.push(self.now_ms, j, INFO_TASK, EventKind::WorkerDown);
                 if let Some(up) = self.faults.mark_down(j, self.now_ms) {
                     self.queue.push(up, j, INFO_TASK, EventKind::WorkerUp);
+                    self.emit(SpanKind::Down, j + 1, t, INFO_TASK, self.now_ms, up);
+                } else {
+                    self.emit(SpanKind::Down, j + 1, t, INFO_TASK, self.now_ms, self.now_ms);
                 }
                 continue;
             }
@@ -500,6 +550,7 @@ impl StepExecutor for AsyncSimCluster<'_> {
             let omit = self.faults.omits(j);
             if omit {
                 fc.omitted += 1;
+                self.emit(SpanKind::Omitted, j + 1, t, id, self.now_ms, self.now_ms);
             }
             let compute_ms = self.compute.task_ms(self.costs.flops[j], draw);
             let bytes = self.costs.response_bytes[j];
@@ -544,6 +595,7 @@ impl StepExecutor for AsyncSimCluster<'_> {
             };
             self.inflight[j] =
                 Some(Task { id, version: t, start_ms: self.now_ms, eta_ms: eta, corrupt });
+            self.trace_hop[j] = self.now_ms;
         }
         self.lat_buf = lat;
         debug_assert!(self
@@ -620,6 +672,11 @@ impl StepExecutor for AsyncSimCluster<'_> {
                         if !alive {
                             continue;
                         }
+                        if self.tracer.is_some() {
+                            let v = self.inflight[j].map_or(t, |task| task.version);
+                            self.emit(SpanKind::ThetaWait, j + 1, v, id, self.trace_hop[j], ev.time_ms);
+                            self.trace_hop[j] = ev.time_ms;
+                        }
                         let net = self
                             .net
                             .as_mut()
@@ -655,6 +712,15 @@ impl StepExecutor for AsyncSimCluster<'_> {
                     // Hierarchical racks insert an uplink hop
                     // (ComputeDone → RackDone) before the master link;
                     // everything else queues straight onto the master.
+                    if self.tracer.is_some() {
+                        let span = if ev.kind == EventKind::ComputeDone {
+                            SpanKind::Compute
+                        } else {
+                            SpanKind::NicRack
+                        };
+                        self.emit(span, ev.worker + 1, task.version, ev.task, self.trace_hop[ev.worker], ev.time_ms);
+                        self.trace_hop[ev.worker] = ev.time_ms;
+                    }
                     let net = self
                         .net
                         .as_mut()
@@ -691,6 +757,14 @@ impl StepExecutor for AsyncSimCluster<'_> {
                     self.deadline.observe(ev.time_ms - task.start_ms);
                     fc.corrupt += 1;
                     last_arrival = ev.time_ms;
+                    if self.tracer.is_some() {
+                        if self.net.is_some() {
+                            self.emit(SpanKind::NicMaster, ev.worker + 1, task.version, ev.task, self.trace_hop[ev.worker], ev.time_ms);
+                        } else {
+                            self.emit(SpanKind::Compute, ev.worker + 1, task.version, ev.task, task.start_ms, ev.time_ms);
+                        }
+                        self.emit(SpanKind::CorruptErase, ev.worker + 1, task.version, ev.task, ev.time_ms, ev.time_ms);
+                    }
                     self.inflight[ev.worker] = None;
                 }
                 EventKind::Arrival => {
@@ -707,6 +781,14 @@ impl StepExecutor for AsyncSimCluster<'_> {
                     // Tasks in flight never exceed the staleness bound:
                     // anything older was cancelled at a window end.
                     debug_assert!(t - task.version <= self.max_staleness);
+                    if self.tracer.is_some() {
+                        if self.net.is_some() {
+                            self.emit(SpanKind::NicMaster, ev.worker + 1, task.version, ev.task, self.trace_hop[ev.worker], ev.time_ms);
+                        } else {
+                            self.emit(SpanKind::Compute, ev.worker + 1, task.version, ev.task, task.start_ms, ev.time_ms);
+                        }
+                        self.emit(SpanKind::Arrival, ev.worker + 1, task.version, ev.task, ev.time_ms, ev.time_ms);
+                    }
                     let v_theta = &self.thetas[task.version % depth];
                     compute_into_slot(
                         self.payloads,
@@ -748,8 +830,9 @@ impl StepExecutor for AsyncSimCluster<'_> {
             }
         }
         self.doomed.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        for &(eta, _, j, start) in self.doomed.iter() {
+        for &(eta, id, j, start) in self.doomed.iter() {
             self.deadline.observe(eta - start);
+            self.emit(SpanKind::Cancelled, j + 1, t, id, start, eta);
             self.inflight[j] = None;
         }
         self.cancelled_total += self.doomed.len() as u64;
@@ -757,6 +840,10 @@ impl StepExecutor for AsyncSimCluster<'_> {
         let collect_ms = proceed_at - self.now_ms;
         self.now_ms = proceed_at;
         self.faults_total.merge(&fc);
+        if self.tracer.is_some() {
+            self.emit(SpanKind::Collect, 0, t, counted as u64, step_start, proceed_at);
+            self.sync_cursor();
+        }
         Ok(StepExecution {
             stragglers: w - counted,
             worker_ns: 0,
@@ -767,7 +854,7 @@ impl StepExecutor for AsyncSimCluster<'_> {
 
     fn redispatch(
         &mut self,
-        _t: usize,
+        t: usize,
         theta: &[f64],
         masked: &mut [Option<Vec<f64>>],
         retry: &RetryPolicy,
@@ -788,7 +875,9 @@ impl StepExecutor for AsyncSimCluster<'_> {
                 net: self.net.as_ref(),
                 costs: Some(&self.costs),
                 compute: self.compute,
+                tracer: self.tracer.as_ref(),
             },
+            t,
             theta,
             masked,
             retry,
@@ -796,6 +885,7 @@ impl StepExecutor for AsyncSimCluster<'_> {
         )?;
         self.now_ms += out.extra_ms;
         self.faults_total.merge(&out.faults);
+        self.sync_cursor();
         Ok(out)
     }
 }
@@ -810,16 +900,30 @@ pub fn run_simulated_async(
     cfg: &RunConfig,
     sim: &AsyncSimConfig,
 ) -> Result<RunReport> {
+    run_simulated_async_traced(scheme, problem, cfg, sim, None)
+}
+
+/// [`run_simulated_async`] with an optional armed tracer (virtual-ms
+/// domain). Tracing reads only already-computed values — no RNG, no
+/// scheduling — so traced and untraced runs are bit-identical.
+pub fn run_simulated_async_traced(
+    scheme: &dyn GradientScheme,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+    sim: &AsyncSimConfig,
+    tracer: Option<&SharedTracer>,
+) -> Result<RunReport> {
     let backend = crate::coordinator::make_backend(cfg)?;
     let costs = TaskCosts::of(scheme);
     let mut cluster = AsyncSimCluster::new(scheme.payloads(), costs, backend, cfg, sim)?;
-    run_with_executor(scheme, &mut cluster, problem, cfg)
+    run_with_executor_traced(scheme, &mut cluster, problem, cfg, tracer)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::codes::ldpc::LdpcCode;
+    use crate::coordinator::run_with_executor;
     use crate::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
     use crate::coordinator::straggler::StragglerModel;
     use crate::data::SynthConfig;

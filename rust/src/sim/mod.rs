@@ -40,7 +40,8 @@ pub mod event;
 pub mod topology;
 
 pub use async_exec::{
-    run_simulated_async, AsyncSimCluster, AsyncSimConfig, ComputeModel, TaskCosts,
+    run_simulated_async, run_simulated_async_traced, AsyncSimCluster, AsyncSimConfig,
+    ComputeModel, TaskCosts,
 };
 pub use topology::{LinkModel, Topology};
 
@@ -52,9 +53,12 @@ use crate::coordinator::metrics::RunReport;
 use crate::coordinator::protocol::WorkerPayload;
 use crate::coordinator::schemes::GradientScheme;
 use crate::coordinator::straggler::{LatencyModel, LatencySampler, StragglerSampler};
-use crate::coordinator::{run_with_executor, RedispatchOutcome, StepExecution, StepExecutor};
+use crate::coordinator::{
+    run_with_executor_traced, RedispatchOutcome, StepExecution, StepExecutor,
+};
 use crate::data::RegressionProblem;
 use crate::error::{Error, Result};
+use crate::obs::{SharedTracer, SpanKind};
 use crate::runtime::ComputeBackend;
 
 use deadline::{Cutoff, DeadlinePolicy, DeadlineState};
@@ -135,6 +139,8 @@ pub(crate) struct RetryEnv<'a> {
     /// Per-block task costs, if the executor prices flop-aware compute.
     pub(crate) costs: Option<&'a TaskCosts>,
     pub(crate) compute: ComputeModel,
+    /// Armed observability tracer, if the executor carries one.
+    pub(crate) tracer: Option<&'a SharedTracer>,
 }
 
 /// Speculatively re-dispatch every still-missing moment block to a
@@ -155,12 +161,18 @@ pub(crate) struct RetryEnv<'a> {
 /// retry rounds consumed beyond `now_ms`.
 pub(crate) fn redispatch_missing(
     env: RetryEnv<'_>,
+    step: usize,
     theta: &[f64],
     masked: &mut [Option<Vec<f64>>],
     retry: &RetryPolicy,
     now_ms: f64,
 ) -> Result<RedispatchOutcome> {
     let w = env.payloads.len();
+    let emit = |kind: SpanKind, lane: usize, task: u64, begin: f64, end: f64| {
+        if let Some(tr) = env.tracer {
+            tr.borrow_mut().span(kind, lane, step, task, begin, end);
+        }
+    };
     let mut counts = FaultCounts::default();
     let mut time = now_ms;
     let mut lat: Vec<f64> = Vec::new();
@@ -199,6 +211,7 @@ pub(crate) fn redispatch_missing(
                 // observation (the round-trip never completes).
                 counts.crashed += 1;
                 env.faults.mark_down(s, launch);
+                emit(SpanKind::Down, s + 1, j as u64, launch, launch);
                 round_end = round_end.max(launch + retry.timeout_ms);
                 continue;
             }
@@ -214,22 +227,27 @@ pub(crate) fn redispatch_missing(
             env.deadline.observe(arrive - launch);
             if env.faults.omits(s) {
                 counts.omitted += 1;
+                emit(SpanKind::Omitted, s + 1, j as u64, launch + retry.timeout_ms, launch + retry.timeout_ms);
                 round_end = round_end.max(launch + retry.timeout_ms);
                 continue;
             }
             if arrive - launch > retry.timeout_ms {
+                emit(SpanKind::Dropped, s + 1, j as u64, launch + retry.timeout_ms, launch + retry.timeout_ms);
                 round_end = round_end.max(launch + retry.timeout_ms);
                 continue;
             }
             round_end = round_end.max(arrive);
+            emit(SpanKind::Retry, s + 1, j as u64, launch, arrive);
             if env.faults.corrupts(s) {
                 // Checksum mismatch on the retry response: detected,
                 // counted, erased — eligible for the next round.
                 counts.corrupt += 1;
+                emit(SpanKind::CorruptErase, s + 1, j as u64, arrive, arrive);
                 continue;
             }
             compute_into_slot(env.payloads, env.backend, j, theta, masked, env.spares)?;
             counts.recovered += 1;
+            emit(SpanKind::Arrival, s + 1, j as u64, arrive, arrive);
         }
         if !launched {
             break;
@@ -303,6 +321,8 @@ pub struct SimCluster<'a> {
     faults: FaultSampler,
     /// Fault/retry counters over the cluster's lifetime.
     faults_total: FaultCounts,
+    /// Armed observability tracer (virtual-ms domain); `None` = no-op.
+    tracer: Option<SharedTracer>,
 }
 
 impl<'a> SimCluster<'a> {
@@ -334,6 +354,23 @@ impl<'a> SimCluster<'a> {
             dropped_total: 0,
             faults: sim.faults.sampler(),
             faults_total: FaultCounts::default(),
+            tracer: None,
+        }
+    }
+
+    /// Record a span when the tracer is armed (single-branch no-op
+    /// otherwise). Reads only already-computed values — never RNG.
+    fn emit(&self, kind: SpanKind, lane: usize, step: usize, task: u64, begin: f64, end: f64) {
+        if let Some(tr) = &self.tracer {
+            tr.borrow_mut().span(kind, lane, step, task, begin, end);
+        }
+    }
+
+    /// Push the virtual clock into the tracer so master-lane spans from
+    /// the shared loop line up with the simulator's time.
+    fn sync_cursor(&self) {
+        if let Some(tr) = &self.tracer {
+            tr.borrow_mut().set_cursor(self.now_ms);
         }
     }
 
@@ -367,11 +404,13 @@ impl<'a> SimCluster<'a> {
     /// (bit-identical masking to the thread cluster for a fixed seed).
     fn execute_mirror_step(
         &mut self,
+        t: usize,
         theta: &[f64],
         masked: &mut [Option<Vec<f64>>],
     ) -> Result<StepExecution> {
         let sampler =
             self.mirror.as_mut().expect("mirror step without a straggler sampler");
+        let start = self.now_ms;
         let (exec, advance) = mirror_step(
             self.payloads,
             self.backend.as_ref(),
@@ -382,6 +421,17 @@ impl<'a> SimCluster<'a> {
         )?;
         self.dropped_total += exec.stragglers as u64;
         self.now_ms += advance;
+        if self.tracer.is_some() {
+            for (j, m) in masked.iter().enumerate() {
+                if m.is_some() {
+                    self.emit(SpanKind::Compute, j + 1, t, j as u64, start, self.now_ms);
+                } else {
+                    self.emit(SpanKind::Dropped, j + 1, t, j as u64, self.now_ms, self.now_ms);
+                }
+            }
+            self.emit(SpanKind::Collect, 0, t, 0, start, self.now_ms);
+            self.sync_cursor();
+        }
         Ok(exec)
     }
 }
@@ -391,14 +441,19 @@ impl StepExecutor for SimCluster<'_> {
         self.payloads.len()
     }
 
+    fn set_tracer(&mut self, tracer: SharedTracer) {
+        tracer.borrow_mut().set_cursor(self.now_ms);
+        self.tracer = Some(tracer);
+    }
+
     fn execute_step(
         &mut self,
-        _t: usize,
+        t: usize,
         theta: &[f64],
         masked: &mut [Option<Vec<f64>>],
     ) -> Result<StepExecution> {
         if self.mirror.is_some() {
-            return self.execute_mirror_step(theta, masked);
+            return self.execute_mirror_step(t, theta, masked);
         }
         let w = self.payloads.len();
         if w == 0 {
@@ -419,6 +474,7 @@ impl StepExecutor for SimCluster<'_> {
             if self.faults.is_down(j, self.now_ms) {
                 // Still restarting (or gone for good): no task, no event.
                 fc.down += 1;
+                self.emit(SpanKind::Down, j + 1, t, j as u64, self.now_ms, self.now_ms);
                 continue;
             }
             if self.faults.crashes(j) {
@@ -430,6 +486,9 @@ impl StepExecutor for SimCluster<'_> {
                 fc.crashed += 1;
                 if let Some(up) = self.faults.mark_down(j, self.now_ms) {
                     self.queue.push(up + l, j);
+                    self.emit(SpanKind::Down, j + 1, t, j as u64, self.now_ms, up);
+                } else {
+                    self.emit(SpanKind::Down, j + 1, t, j as u64, self.now_ms, self.now_ms);
                 }
                 continue;
             }
@@ -437,6 +496,7 @@ impl StepExecutor for SimCluster<'_> {
                 // Silent omission: the task runs but the response is
                 // never sent; the master just never hears back.
                 fc.omitted += 1;
+                self.emit(SpanKind::Omitted, j + 1, t, j as u64, self.now_ms + l, self.now_ms + l);
                 continue;
             }
             self.queue.push(self.now_ms + l, j);
@@ -462,6 +522,7 @@ impl StepExecutor for SimCluster<'_> {
         self.counted.resize(w, false);
         let mut counted = 0usize;
         let mut dropped = 0usize;
+        let step_start = self.now_ms;
         let mut last_arrival = self.now_ms;
         while let Some(ev) = self.queue.pop() {
             // Feed the policy the realized latency of *every* arrival,
@@ -488,13 +549,18 @@ impl StepExecutor for SimCluster<'_> {
                     // decoded and never counted toward the cutoff.
                     fc.corrupt += 1;
                     last_arrival = ev.time_ms;
+                    self.emit(SpanKind::Compute, ev.worker + 1, t, ev.worker as u64, step_start, ev.time_ms);
+                    self.emit(SpanKind::CorruptErase, ev.worker + 1, t, ev.worker as u64, ev.time_ms, ev.time_ms);
                 } else {
                     counted += 1;
                     last_arrival = ev.time_ms;
                     self.counted[ev.worker] = true;
+                    self.emit(SpanKind::Compute, ev.worker + 1, t, ev.worker as u64, step_start, ev.time_ms);
+                    self.emit(SpanKind::Arrival, ev.worker + 1, t, ev.worker as u64, ev.time_ms, ev.time_ms);
                 }
             } else {
                 dropped += 1;
+                self.emit(SpanKind::Dropped, ev.worker + 1, t, ev.worker as u64, ev.time_ms, ev.time_ms);
             }
         }
 
@@ -518,6 +584,10 @@ impl StepExecutor for SimCluster<'_> {
         self.now_ms = proceed_at;
         self.dropped_total += dropped as u64;
         self.faults_total.merge(&fc);
+        if self.tracer.is_some() {
+            self.emit(SpanKind::Collect, 0, t, counted as u64, step_start, proceed_at);
+            self.sync_cursor();
+        }
         Ok(StepExecution {
             stragglers: dropped,
             worker_ns: 0,
@@ -528,7 +598,7 @@ impl StepExecutor for SimCluster<'_> {
 
     fn redispatch(
         &mut self,
-        _t: usize,
+        t: usize,
         theta: &[f64],
         masked: &mut [Option<Vec<f64>>],
         retry: &RetryPolicy,
@@ -551,7 +621,9 @@ impl StepExecutor for SimCluster<'_> {
                 net: None,
                 costs: None,
                 compute: ComputeModel::Opaque,
+                tracer: self.tracer.as_ref(),
             },
+            t,
             theta,
             masked,
             retry,
@@ -559,6 +631,7 @@ impl StepExecutor for SimCluster<'_> {
         )?;
         self.now_ms += out.extra_ms;
         self.faults_total.merge(&out.faults);
+        self.sync_cursor();
         Ok(out)
     }
 }
@@ -577,16 +650,30 @@ pub fn run_simulated(
     cfg: &RunConfig,
     sim: &SimConfig,
 ) -> Result<RunReport> {
+    run_simulated_traced(scheme, problem, cfg, sim, None)
+}
+
+/// [`run_simulated`] with an optional armed tracer (virtual-ms
+/// domain). Tracing reads only already-computed values — no RNG, no
+/// scheduling — so traced and untraced runs are bit-identical.
+pub fn run_simulated_traced(
+    scheme: &dyn GradientScheme,
+    problem: &RegressionProblem,
+    cfg: &RunConfig,
+    sim: &SimConfig,
+    tracer: Option<&SharedTracer>,
+) -> Result<RunReport> {
     sim.faults.validate()?;
     let backend = crate::coordinator::make_backend(cfg)?;
     let mut cluster = SimCluster::new(scheme.payloads(), backend, cfg, sim);
-    run_with_executor(scheme, &mut cluster, problem, cfg)
+    run_with_executor_traced(scheme, &mut cluster, problem, cfg, tracer)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::codes::ldpc::LdpcCode;
+    use crate::coordinator::run_with_executor;
     use crate::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
     use crate::coordinator::schemes::uncoded::UncodedScheme;
     use crate::coordinator::straggler::StragglerModel;

@@ -1,0 +1,251 @@
+//! Observability integration: the tracing subsystem's hard invariant —
+//! an armed tracer draws no RNG and touches no scheduling decision, so
+//! traced and untraced runs are bit-identical on every backend — plus
+//! per-worker lane coverage, ring-overflow behavior at integration
+//! scale, and a golden Chrome-trace snippet for a fully deterministic
+//! virtual-time run.
+
+use std::sync::Arc;
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::faults::{FaultModel, RetryPolicy};
+use moment_ldpc::coordinator::metrics::RunReport;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::uncoded::UncodedScheme;
+use moment_ldpc::coordinator::straggler::{LatencyModel, StragglerModel};
+use moment_ldpc::coordinator::{run_distributed, run_distributed_traced};
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::obs::{shared, SharedTracer, SpanKind, TimeDomain, Tracer};
+use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::{
+    run_simulated, run_simulated_async, run_simulated_async_traced, run_simulated_traced,
+    AsyncSimConfig, LinkModel, SimConfig, Topology,
+};
+
+fn scheme_and_problem(data_seed: u64) -> (LdpcMomentScheme, RegressionProblem) {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), data_seed);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 2).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    (scheme, problem)
+}
+
+fn trace_view(r: &RunReport) -> Vec<(usize, Option<f64>, f64)> {
+    r.trace.iter().map(|m| (m.stragglers, m.collect_ms, m.error)).collect()
+}
+
+/// Every worker lane (plus the master lane) recorded at least one span.
+fn assert_all_lanes_populated(tracer: &SharedTracer, workers: usize, label: &str) {
+    let tr = tracer.borrow();
+    assert_eq!(tr.lane_count(), workers + 1, "{label}: lane count");
+    for lane in 0..=workers {
+        assert!(
+            !tr.lane_spans(lane).is_empty(),
+            "{label}: lane {lane} recorded no spans"
+        );
+    }
+}
+
+/// The tentpole invariant, config 1 of 5 — OS-thread cluster. Fault
+/// timing on real threads is wall-clock nondeterministic, so this
+/// config runs fault-free with RNG-drawn (FixedCount) stragglers: the
+/// masked set, and hence θ, is seed-deterministic, and arming the
+/// tracer must not move it.
+#[test]
+fn traced_thread_run_is_bit_identical() {
+    let (_, problem) = scheme_and_problem(42);
+    let mk = || {
+        let code = LdpcCode::gallager(40, 20, 3, 6, 2).unwrap();
+        Box::new(LdpcMomentScheme::new(&problem, code).unwrap())
+    };
+    let cfg = RunConfig {
+        straggler: StragglerModel::FixedCount { s: 5, seed: 1 },
+        rel_tol: 1e-9, // unreachable: run exactly max_steps
+        max_steps: 12,
+        record_trace: true,
+        ..Default::default()
+    };
+    let plain = run_distributed(mk(), &problem, &cfg).unwrap();
+    let tracer = shared(Tracer::new(TimeDomain::WallNs));
+    let traced = run_distributed_traced(mk(), &problem, &cfg, Some(&tracer)).unwrap();
+    assert_eq!(plain.theta, traced.theta, "thread: θ diverged under tracing");
+    assert_eq!(plain.steps, traced.steps);
+    assert_eq!(plain.totals.faults, traced.totals.faults);
+    let view = |r: &RunReport| -> Vec<(usize, f64)> {
+        r.trace.iter().map(|m| (m.stragglers, m.error)).collect()
+    };
+    assert_eq!(view(&plain), view(&traced), "thread: step trace diverged");
+    assert_all_lanes_populated(&tracer, 40, "thread");
+}
+
+/// Configs 2-5: the virtual-time backends, with a live fault model and
+/// the retry layer armed so the trace-emitting fault/retry paths are
+/// exercised while being pinned. Bit-identity covers θ, the step
+/// trace, AND the realized fault counters.
+#[test]
+fn traced_simulator_runs_are_bit_identical() {
+    let (scheme, problem) = scheme_and_problem(7);
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 1500,
+        record_trace: true,
+        retry: RetryPolicy {
+            max_retries: 2,
+            backoff_ms: 1.0,
+            backoff_cap_ms: 8.0,
+            timeout_ms: 50.0,
+        },
+        ..Default::default()
+    };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 21 };
+    let model = FaultModel::parse("crash-restart:0.02:25,corrupt:0.03,omit:0.03")
+        .unwrap()
+        .reseed(77);
+    let policy = DeadlinePolicy::WaitForK(30);
+
+    // Config 2: synchronous simulator.
+    let sync_cfg =
+        SimConfig::new(latency.clone(), policy.clone()).with_faults(model.clone());
+    let plain = run_simulated(&scheme, &problem, &cfg, &sync_cfg).unwrap();
+    let tracer = shared(Tracer::new(TimeDomain::VirtualMs));
+    let traced =
+        run_simulated_traced(&scheme, &problem, &cfg, &sync_cfg, Some(&tracer)).unwrap();
+    assert_eq!(plain.theta, traced.theta, "sync: θ diverged under tracing");
+    assert_eq!(plain.totals.faults, traced.totals.faults, "sync: fault counters");
+    assert_eq!(trace_view(&plain), trace_view(&traced), "sync: step trace");
+    assert!(plain.totals.faults.any(), "the fault model must actually fire");
+    assert_all_lanes_populated(&tracer, 40, "sync");
+
+    // Configs 3-5: pipelined executor at S=0, S=2, and S=2 over a
+    // 4-rack hierarchy (rack NIC hops + θ relays in the trace).
+    let configs: Vec<(&str, AsyncSimConfig)> = vec![
+        ("async S=0", AsyncSimConfig::new(latency.clone(), policy.clone(), 0)),
+        ("async S=2", AsyncSimConfig::new(latency.clone(), policy.clone(), 2)),
+        (
+            "async S=2/4-rack",
+            AsyncSimConfig::new(latency.clone(), policy.clone(), 2).with_topology(
+                Topology::hierarchical(4, LinkModel::gigabit(), LinkModel::gigabit()),
+            ),
+        ),
+    ];
+    for (label, sim) in configs {
+        let sim = sim.with_faults(model.clone());
+        let plain = run_simulated_async(&scheme, &problem, &cfg, &sim).unwrap();
+        let tracer = shared(Tracer::new(TimeDomain::VirtualMs));
+        let traced =
+            run_simulated_async_traced(&scheme, &problem, &cfg, &sim, Some(&tracer))
+                .unwrap();
+        assert_eq!(plain.theta, traced.theta, "{label}: θ diverged under tracing");
+        assert_eq!(plain.totals.faults, traced.totals.faults, "{label}: fault counters");
+        assert_eq!(trace_view(&plain), trace_view(&traced), "{label}: step trace");
+        assert_all_lanes_populated(&tracer, 40, label);
+    }
+}
+
+/// Ring overflow at integration scale: a tiny per-lane capacity keeps
+/// the NEWEST spans (the master lane's retained steps are the final
+/// ones), reports what it dropped, and — being pure bookkeeping —
+/// still leaves the run bit-identical.
+#[test]
+fn ring_overflow_keeps_newest_spans_and_counts_drops() {
+    let (scheme, problem) = scheme_and_problem(5);
+    let cfg = RunConfig {
+        rel_tol: 0.0, // never converge: run exactly max_steps
+        max_steps: 30,
+        record_trace: true,
+        ..Default::default()
+    };
+    let sim = SimConfig::new(
+        LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 3 },
+        DeadlinePolicy::WaitForK(35),
+    );
+    let plain = run_simulated(&scheme, &problem, &cfg, &sim).unwrap();
+    let cap = 8usize;
+    let tracer = shared(Tracer::with_capacity(TimeDomain::VirtualMs, cap));
+    let traced = run_simulated_traced(&scheme, &problem, &cfg, &sim, Some(&tracer)).unwrap();
+    assert_eq!(plain.theta, traced.theta, "tiny ring must not perturb the run");
+
+    let tr = tracer.borrow();
+    assert!(tr.dropped_total() > 0, "30 steps must overflow an 8-span ring");
+    for lane in 0..tr.lane_count() {
+        assert!(tr.lane_spans(lane).len() <= cap, "lane {lane} exceeded capacity");
+    }
+    // Master lane: ≥4 spans per step (collect, decode, update, step),
+    // so an 8-span ring retains at most the final two (1-indexed)
+    // steps; the newest span is the final step's.
+    let master = tr.lane_spans(0);
+    assert_eq!(master.len(), cap);
+    assert!(tr.dropped(0) > 0);
+    assert!(
+        master.iter().all(|s| s.step as usize >= traced.steps - 1),
+        "overflow must evict oldest first: retained steps {:?} of {} total",
+        master.iter().map(|s| s.step).collect::<Vec<_>>(),
+        traced.steps
+    );
+    assert_eq!(master.last().unwrap().step as usize, traced.steps);
+}
+
+/// Golden Chrome-trace snippet: a 4-worker synchronous run on a replayed
+/// latency table is deterministic in virtual time, so the exported
+/// trace_event JSON must contain exactly-known lane metadata, compute
+/// spans, arrival instants, and collection windows (µs timestamps:
+/// virtual ms × 1000). Host-timed master spans (decode/update) are
+/// checked for presence, not position.
+#[test]
+fn golden_chrome_trace_for_deterministic_four_worker_run() {
+    let k = 8usize;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 11);
+    let scheme = UncodedScheme::new(&problem, 4).unwrap();
+    let cfg = RunConfig {
+        workers: 4,
+        rel_tol: 0.0, // never converge: exactly 2 steps
+        max_steps: 2,
+        ..Default::default()
+    };
+    // Worker j always takes j + 1 virtual ms.
+    let sim = SimConfig::new(
+        LatencyModel::Trace { table: Arc::new(vec![vec![1.0, 2.0, 3.0, 4.0]]) },
+        DeadlinePolicy::WaitForAll,
+    );
+    let tracer = shared(Tracer::new(TimeDomain::VirtualMs));
+    let r = run_simulated_traced(&scheme, &problem, &cfg, &sim, Some(&tracer)).unwrap();
+    assert_eq!(r.steps, 2);
+
+    let body = tracer.borrow().to_chrome_json();
+    // Lane metadata: one process, master + 4 worker threads.
+    for golden in [
+        "\"args\":{\"name\":\"moment_ldpc\"}",
+        "\"tid\":0,\"name\":\"thread_name\",\"args\":{\"name\":\"master\"}",
+        "\"tid\":1,\"name\":\"thread_name\",\"args\":{\"name\":\"worker 0\"}",
+        "\"tid\":4,\"name\":\"thread_name\",\"args\":{\"name\":\"worker 3\"}",
+        // Step 1 (steps are 1-indexed) starts at virtual 0: worker 0
+        // computes for 1 ms (1000 µs), worker 3 for 4 ms.
+        "\"tid\":1,\"name\":\"compute\",\"cat\":\"compute\",\"ts\":0,\"dur\":1000,\
+         \"args\":{\"step\":1,\"task\":0}",
+        "\"tid\":4,\"name\":\"compute\",\"cat\":\"compute\",\"ts\":0,\"dur\":4000,\
+         \"args\":{\"step\":1,\"task\":3}",
+        // Arrival instants at each worker's completion.
+        "\"tid\":2,\"name\":\"arrival\",\"cat\":\"arrival\",\"ts\":2000,\"dur\":0,\
+         \"args\":{\"step\":1,\"task\":1}",
+        // Wait-for-all collection window: dispatch → last arrival (4 ms),
+        // counting all 4 workers.
+        "\"tid\":0,\"name\":\"collect\",\"cat\":\"collect\",\"ts\":0,\"dur\":4000,\
+         \"args\":{\"step\":1,\"task\":4}",
+        // Step 2 dispatches at the simulator clock (4 ms), replaying the
+        // same latency row.
+        "\"tid\":1,\"name\":\"compute\",\"cat\":\"compute\",\"ts\":4000,\"dur\":1000,\
+         \"args\":{\"step\":2,\"task\":0}",
+        "\"tid\":0,\"name\":\"collect\",\"cat\":\"collect\",\"ts\":4000,\"dur\":4000,\
+         \"args\":{\"step\":2,\"task\":4}",
+    ] {
+        assert!(body.contains(golden), "missing golden snippet {golden} in:\n{body}");
+    }
+    // Host-timed master spans exist (positions fold in real ns).
+    for kind in [SpanKind::Decode, SpanKind::Update, SpanKind::Step] {
+        assert!(
+            body.contains(&format!("\"name\":\"{}\"", kind.as_str())),
+            "missing {} span in:\n{body}",
+            kind.as_str()
+        );
+    }
+}
