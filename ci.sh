@@ -57,6 +57,23 @@ cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
     --async --staleness 2 --faults corrupt:0.05 --retries 1 \
     --max-steps 500 --rel-tol 1e-2
 
+echo "== decode-ladder smoke (run: --decoder ladder vs peel on a straggler-heavy fleet) =="
+cargo run -q -- run --m 256 --k 64 --workers 40 --stragglers 8 --trials 1 \
+    --decoder ladder --max-steps 500 --rel-tol 1e-2
+cargo run -q -- run --m 256 --k 64 --workers 40 --stragglers 8 --trials 1 \
+    --decoder peel --max-steps 500 --rel-tol 1e-2
+
+echo "== decode-ladder smoke (simulate: sync + async 4-rack under faults) =="
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --decoder ladder --faults crash:0.02,omit:0.02 \
+    --max-steps 500 --rel-tol 1e-2
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --async --staleness 2 --nic-gbps 1 --racks 4 \
+    --decoder ladder --faults crash:0.02,omit:0.02 \
+    --max-steps 500 --rel-tol 1e-2
+
 echo "== trace smoke (run + simulate with --trace; Perfetto-loadable JSON) =="
 rm -rf bench_out/ci_trace
 cargo run -q -- run --m 256 --k 64 --workers 40 --stragglers 5 --trials 1 \

@@ -8,6 +8,7 @@
 //!
 //! `cargo bench --offline --bench ablation_comm_cost`
 
+use moment_ldpc::codes::peeling::DecoderKind;
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
 use moment_ldpc::harness::experiment::SchemeSpec;
 use moment_ldpc::harness::report::{write_csv, Table};
@@ -21,7 +22,7 @@ fn main() {
     for k in [200usize, 400, 1000] {
         let problem = RegressionProblem::generate(&SynthConfig::dense(2048, k), 1);
         let specs = vec![
-            SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 },
+            SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7, decoder: DecoderKind::Ladder },
             SchemeSpec::Mds { code_k: 20 },
             SchemeSpec::GradCoding { s: 5, seed: 9 },
             SchemeSpec::Ksdy {
@@ -57,7 +58,7 @@ fn main() {
 
     // The §3 claims, asserted:
     let problem = RegressionProblem::generate(&SynthConfig::dense(2048, 1000), 1);
-    let ldpc = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 }
+    let ldpc = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7, decoder: DecoderKind::Ladder }
         .build(&problem, workers)
         .unwrap();
     let gc = SchemeSpec::GradCoding { s: 5, seed: 9 }.build(&problem, workers).unwrap();

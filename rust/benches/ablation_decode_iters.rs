@@ -11,6 +11,7 @@
 //! `cargo bench --offline --bench ablation_decode_iters`
 
 use moment_ldpc::codes::density::DensityEvolution;
+use moment_ldpc::codes::peeling::DecoderKind;
 use moment_ldpc::config::RunConfig;
 use moment_ldpc::coordinator::straggler::StragglerModel;
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
@@ -26,7 +27,7 @@ fn main() {
     let q0 = 0.25;
     let problem = RegressionProblem::generate(&SynthConfig::dense(m, k), 5);
     let de = DensityEvolution::new(3, 6);
-    let scheme = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 };
+    let scheme = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7, decoder: DecoderKind::Ladder };
 
     let mut t = Table::new(
         format!("decode-iteration ablation: Bernoulli q0={q0}, m={m}, k={k}, {trials} trials"),

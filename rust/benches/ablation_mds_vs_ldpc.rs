@@ -10,6 +10,7 @@
 
 use std::time::Instant;
 
+use moment_ldpc::codes::peeling::DecoderKind;
 use moment_ldpc::config::RunConfig;
 use moment_ldpc::coordinator::schemes::GradientScheme;
 use moment_ldpc::coordinator::straggler::StragglerModel;
@@ -58,7 +59,7 @@ fn main() {
     let mut rng = Rng::new(4);
     let theta = rng.gaussian_vec(k);
 
-    let ldpc = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 };
+    let ldpc = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7, decoder: DecoderKind::Ladder };
     let mds = SchemeSpec::Mds { code_k: 20 };
     let ldpc_scheme = ldpc.build(&problem, workers).unwrap();
     let mds_scheme = mds.build(&problem, workers).unwrap();

@@ -17,6 +17,7 @@
 //!
 //! `cargo bench --offline --bench sim_deadline`
 
+use moment_ldpc::codes::peeling::DecoderKind;
 use moment_ldpc::config::RunConfig;
 use moment_ldpc::coordinator::faults::FaultModel;
 use moment_ldpc::coordinator::straggler::LatencyModel;
@@ -33,7 +34,16 @@ fn main() {
     let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 17);
 
     let schemes: Vec<(&str, SchemeSpec)> = vec![
-        ("ldpc", SchemeSpec::Ldpc { code_k: workers / 2, l: 3, r: 6, seed: 7 }),
+        (
+            "ldpc",
+            SchemeSpec::Ldpc {
+                code_k: workers / 2,
+                l: 3,
+                r: 6,
+                seed: 7,
+                decoder: DecoderKind::Ladder,
+            },
+        ),
         ("uncoded", SchemeSpec::Uncoded),
     ];
     let latencies: Vec<(&str, LatencyModel)> = if smoke {

@@ -9,6 +9,12 @@
 //! per-step crash probability for three masters: wait-for-all,
 //! wait-k, and wait-k with the re-dispatch retry layer armed.
 //!
+//! A `decoder` column ablates the decode ladder: at the top crash rate
+//! the wait-k row is re-run with the peel-only decoder on the same code
+//! and fault draws, and the ladder must leave no more coordinates
+//! unrecovered per step than greedy peeling (the rows differ only in
+//! how decode stalls are escalated, never in timing).
+//!
 //! Two structural facts are asserted, not just tabulated:
 //! * wait-for-all's θ-trajectory is crash-invariant (crash-restart
 //!   workers redeliver, so every step decodes all blocks) — its step
@@ -28,6 +34,7 @@
 //! `cargo bench --offline --bench sim_faults`
 
 use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::codes::peeling::DecoderKind;
 use moment_ldpc::config::RunConfig;
 use moment_ldpc::coordinator::faults::{FaultModel, RetryPolicy};
 use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
@@ -43,7 +50,11 @@ fn main() {
     let k = 32usize;
     let problem = RegressionProblem::generate(&SynthConfig::dense(4 * k, k), 31);
     let code = LdpcCode::gallager(40, 20, 3, 6, 7).unwrap();
-    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code.clone()).unwrap();
+    // The ablation twin: same code, same everything, peel-only decode.
+    let peel_scheme = LdpcMomentScheme::new(&problem, code)
+        .unwrap()
+        .with_decoder(DecoderKind::Peel);
     let cfg = RunConfig {
         decode_iters: 40,
         rel_tol: if smoke { 1e-2 } else { 1e-3 },
@@ -72,8 +83,8 @@ fn main() {
             if smoke { ", SMOKE" } else { "" }
         ),
         &[
-            "crash", "policy", "converged", "steps", "virtual ms", "degraded steps", "lost",
-            "recovered",
+            "crash", "policy", "decoder", "converged", "steps", "virtual ms",
+            "degraded steps", "unrec", "lost", "recovered",
         ],
     );
     let mut json: Vec<(String, f64)> = Vec::new();
@@ -82,6 +93,8 @@ fn main() {
     let mut top_wait_all_per_step = f64::NAN;
     let mut top_wait_k_per_step = f64::NAN;
     let mut top_wait_k_lost = 0u32;
+    let mut top_wait_k_unrec = 0usize;
+    let mut top_wait_k_steps = 0usize;
     let mut top_retry_recovered = 0u32;
     let mut faultfree_wait_k_converged = false;
 
@@ -105,10 +118,12 @@ fn main() {
             table.row(vec![
                 format!("{rate}"),
                 (*pname).into(),
+                scheme.decoder().as_str().into(),
                 format!("{}", r.converged),
                 format!("{}", r.steps),
                 format!("{:.2}", r.totals.collect_ms),
                 format!("{}", r.totals.degraded_steps),
+                format!("{}", r.totals.unrecovered),
                 format!("{}", fc.lost()),
                 format!("{}", fc.recovered),
             ]);
@@ -129,6 +144,8 @@ fn main() {
                     if rate == top {
                         top_wait_k_per_step = per_step;
                         top_wait_k_lost = fc.lost();
+                        top_wait_k_unrec = r.totals.unrecovered;
+                        top_wait_k_steps = r.steps;
                     }
                 }
                 _ => {
@@ -139,6 +156,35 @@ fn main() {
             }
         }
     }
+
+    // Decoder ablation: the wait-k row at the top crash rate, re-run
+    // with greedy peel-only decoding. Latency and fault draws are
+    // θ-independent, so both rows see identical per-step erasure
+    // patterns — any difference in `unrec` is pure decode ladder.
+    let top_model = FaultModel { crash: top, restart_ms: Some(RESTART_MS), ..FaultModel::none() }
+        .reseed(9);
+    let sim = SimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(30))
+        .with_faults(top_model);
+    let r = run_simulated(&peel_scheme, &problem, &cfg, &sim).expect("peel ablation run");
+    table.row(vec![
+        format!("{top}"),
+        "wait-k".into(),
+        peel_scheme.decoder().as_str().into(),
+        format!("{}", r.converged),
+        format!("{}", r.steps),
+        format!("{:.2}", r.totals.collect_ms),
+        format!("{}", r.totals.degraded_steps),
+        format!("{}", r.totals.unrecovered),
+        format!("{}", r.totals.faults.lost()),
+        format!("{}", r.totals.faults.recovered),
+    ]);
+    json.push((format!("crash{top}_wait-k_peel_virtual_ms"), r.totals.collect_ms));
+    json.push((format!("crash{top}_wait-k_peel_unrec_per_step"),
+        r.totals.unrecovered as f64 / r.steps.max(1) as f64));
+    json.push((format!("crash{top}_wait-k_ladder_unrec_per_step"),
+        top_wait_k_unrec as f64 / top_wait_k_steps.max(1) as f64));
+    let peel_unrec_per_step = r.totals.unrecovered as f64 / r.steps.max(1) as f64;
+    let ladder_unrec_per_step = top_wait_k_unrec as f64 / top_wait_k_steps.max(1) as f64;
 
     print!("{}", table.render());
     let csv = smoke_out_path("bench_out/sim_faults.csv", smoke);
@@ -172,6 +218,12 @@ fn main() {
     assert!(
         top_retry_recovered > 0,
         "the retry layer must recover blocks from survivors at crash={top}"
+    );
+    // The ladder's whole point: per step it never zeroes more than peel.
+    assert!(
+        ladder_unrec_per_step <= peel_unrec_per_step + 1e-12,
+        "ladder {ladder_unrec_per_step:.3} unrec/step !<= peel \
+         {peel_unrec_per_step:.3} unrec/step at crash={top}"
     );
     eprintln!("sim_faults done -> {csv}, {jsonp}");
 }

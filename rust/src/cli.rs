@@ -89,6 +89,10 @@ COMMANDS:
              --scheme ldpc|mds|uncoded|replication|ksdy-hadamard|ksdy-gaussian|gradcoding
              --m N --k N [--sparsity U] --workers W --stragglers S
              --decode-iters D --rel-tol T --max-steps N --trials N
+             [--decoder peel|ladder] LDPC erasure decoder (default
+               ladder: escalates peeling stalls through a BP pass and
+               an exact inactivation solve; peel = the paper's greedy
+               D-iteration decoder, which zeroes whatever stalls)
              --backend native|pjrt [--json]
              [--trace PATH] write a timeline of trial 0 (per-worker
                lanes; wall-clock ns) [--trace-format chrome|jsonl]
@@ -102,6 +106,7 @@ COMMANDS:
   simulate   Virtual-time run: deadline-driven collection over simulated
              workers (scales past host cores; default 512 workers)
              --workers N --m N --k N --scheme <as run> --trials N
+             [--decoder peel|ladder] as in `run`
              --latency shifted-exp|pareto|markov|hetero
                [--shift-ms F --rate F] [--scale-ms F --shape F]
                [--slowdown F --p-slow F --p-fast F] [--spread F]

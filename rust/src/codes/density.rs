@@ -13,6 +13,14 @@
 //! positive fixed point. These quantities drive the `(1 − q_D)` factor in
 //! Theorem 1's convergence bound and are validated empirically against
 //! the peeling decoder in the test-suite.
+//!
+//! The threshold also sizes the decode ladder's escalation work
+//! ([`super::ladder`]): below `q*` the rungs past peeling are almost
+//! always idle (peeling alone clears the pattern), while above it the
+//! stalled fixed point `q_∞` is exactly the expected fraction of
+//! coordinates the BP pass and the inactivation (Gaussian-elimination)
+//! tail must take over — i.e. `q_∞ · n` is the expected size of the
+//! residual stopping-set system the ladder solves instead of zeroing.
 
 /// Density-evolution state for an `(l, r)`-regular ensemble.
 #[derive(Debug, Clone, Copy)]

@@ -1,0 +1,736 @@
+//! The decode ladder: peeling → BP erasure pass → inactivation.
+//!
+//! Greedy peeling stalls on *stopping sets* — erased-coordinate subsets
+//! whose every check touches ≥ 2 erasures — even when the residual
+//! linear system is full rank and the values are exactly recoverable.
+//! The seed decoder then zeroed those coordinates, silently biasing the
+//! gradient. The ladder escalates instead of giving up:
+//!
+//! 1. **Peeling** (rung 1): exactly the [`super::peeling`] decoder,
+//!    budgeted by the paper's `D`. When it fully recovers, the ladder
+//!    schedule is byte-identical to the peel-only schedule (the
+//!    escalation tail is empty) — the bit-identity contract.
+//! 2. **BP erasure pass** (rung 2): the residual degree-2 checks form a
+//!    graph on the erased coordinates. A connected component containing
+//!    a cycle with inconsistent signs pins one coordinate (sum-product
+//!    message passing resolves exactly these), after which the whole
+//!    component unravels and peeling resumes. Cost: `O(component
+//!    edges)` per resolved component.
+//! 3. **Inactivation** (rung 3): whatever still stalls is solved by
+//!    Gauss–Jordan elimination of the residual stopping-set system.
+//!    Every coordinate the system determines uniquely gets an exact
+//!    schedule op; only genuinely rank-deficient coordinates remain in
+//!    `unrecovered`. Cost: `O(rows · |E|²)` on the (small) residual
+//!    system only.
+//!
+//! All three rungs emit [`PeelOp`]s (rungs 2–3 use the generic linear
+//! form `inv_coeff = -1`, explicit coefficients), so a ladder schedule
+//! replays over the step's block codewords with the same sequential
+//! apply loop — and is cached in the same [`PeelScheduleCache`] under
+//! the pattern bitmask key.
+
+use std::sync::Arc;
+
+use super::ldpc::LdpcCode;
+use super::peeling::{erasure_state, peel_rounds, PeelOp, PeelSchedule, PeelScheduleCache};
+use super::SparseMatrix;
+
+/// Coefficient magnitudes at or below this are treated as structural
+/// zeros when detecting resolvable cycles and rank deficiency. The H
+/// entries are ±1, so genuine pivots/cycle sums are Θ(1) and the
+/// residual systems are tiny — the separation is many orders of
+/// magnitude.
+const LADDER_TOL: f64 = 1e-9;
+
+/// Threshold below which a derived linear coefficient is dropped from an
+/// op's term list (exact cancellations plus float dust).
+const TERM_TOL: f64 = 1e-12;
+
+/// A replayable decode schedule produced by the ladder: the rung-1 peel
+/// schedule plus an escalation tail of sequential ops.
+#[derive(Debug, Clone)]
+pub struct LadderSchedule {
+    /// Rung 1, byte-identical to [`super::peeling::PeelingDecoder::schedule`]
+    /// for the same pattern and budget.
+    pub peel: PeelSchedule,
+    /// Escalation ops (BP resolutions, the re-peels they unlock, and
+    /// inactivation solutions), in execution order after `peel`.
+    pub tail: Vec<PeelOp>,
+    /// Ops appended per BP round (one resolved component plus the
+    /// re-peeling it unlocked; the first round also absorbs any rung-1
+    /// budget stall).
+    pub bp_round_ops: Vec<usize>,
+    /// Ops emitted by the inactivation (Gauss–Jordan) rung.
+    pub inactivation_ops: usize,
+    /// Coordinates the residual system genuinely cannot determine.
+    pub unrecovered: Vec<usize>,
+}
+
+impl LadderSchedule {
+    /// Number of coordinates recovered across all rungs.
+    pub fn recovered_count(&self) -> usize {
+        self.peel.ops.len() + self.tail.len()
+    }
+
+    /// Number of BP rounds fired (resolved components).
+    pub fn bp_rounds(&self) -> usize {
+        self.bp_round_ops.len()
+    }
+
+    /// Total ops appended by the BP rung (including unlocked re-peels).
+    pub fn bp_ops(&self) -> usize {
+        self.bp_round_ops.iter().sum()
+    }
+
+    /// Did the ladder escalate past peeling at all?
+    pub fn escalated(&self) -> bool {
+        !self.tail.is_empty()
+    }
+
+    /// Apply the schedule to a codeword whose erased coordinates hold
+    /// arbitrary values. Coordinates in `unrecovered` are left untouched.
+    pub fn apply(&self, values: &mut [f64]) {
+        self.peel.apply(values);
+        for op in &self.tail {
+            let mut s = 0.0;
+            for &(j, h) in &op.terms {
+                s += h * values[j];
+            }
+            values[op.target] = -op.inv_coeff * s;
+        }
+    }
+}
+
+/// Decode-ladder scheduler bound to a code.
+#[derive(Debug, Clone)]
+pub struct LadderDecoder<'a> {
+    code: &'a LdpcCode,
+}
+
+impl<'a> LadderDecoder<'a> {
+    /// Create a ladder decoder for the given code.
+    pub fn new(code: &'a LdpcCode) -> Self {
+        LadderDecoder { code }
+    }
+
+    /// Build the ladder schedule for an erasure pattern. Rung 1 runs at
+    /// most `max_iters` peel rounds (the paper's `D`, exactly as the
+    /// peel-only decoder); the escalation rungs are unbounded — under
+    /// the ladder, `D` shapes the traced round structure but never
+    /// truncates recovery.
+    pub fn schedule(&self, erased: &[usize], max_iters: usize) -> LadderSchedule {
+        let h = self.code.parity_check();
+        let n = h.cols();
+        let (mut is_erased, mut erased_count) = erasure_state(h, erased);
+
+        // Rung 1: bounded peeling, byte-identical to the peel-only path.
+        let mut ops: Vec<PeelOp> = Vec::new();
+        let mut round_offsets = vec![0usize];
+        let rounds = peel_rounds(
+            h,
+            &mut is_erased,
+            &mut erased_count,
+            &mut ops,
+            &mut round_offsets,
+            max_iters,
+        );
+        let unrecovered: Vec<usize> = (0..n).filter(|&v| is_erased[v]).collect();
+        let peel = PeelSchedule { ops, round_offsets, unrecovered, rounds };
+
+        let mut tail: Vec<PeelOp> = Vec::new();
+        let mut bp_round_ops: Vec<usize> = Vec::new();
+        let mut inactivation_ops = 0usize;
+
+        if !peel.unrecovered.is_empty() {
+            // Rung 2: alternate unbounded re-peeling with BP component
+            // resolution until neither makes progress. The first round
+            // also absorbs a pure budget stall (degree-1 checks left
+            // when `max_iters` ran out); each resolved component can
+            // unlock further peeling.
+            let mut offsets_scratch = vec![tail.len()];
+            loop {
+                let before = tail.len();
+                peel_rounds(
+                    h,
+                    &mut is_erased,
+                    &mut erased_count,
+                    &mut tail,
+                    &mut offsets_scratch,
+                    usize::MAX,
+                );
+                let resolved =
+                    bp_resolve_component(h, &mut is_erased, &mut erased_count, &mut tail);
+                if tail.len() > before {
+                    bp_round_ops.push(tail.len() - before);
+                }
+                if !resolved {
+                    break;
+                }
+            }
+            // Rung 3: Gauss–Jordan on the residual stopping-set system.
+            inactivation_ops =
+                inactivation_solve(h, &mut is_erased, &mut erased_count, &mut tail);
+        }
+
+        let unrecovered: Vec<usize> = (0..n).filter(|&v| is_erased[v]).collect();
+        LadderSchedule { peel, tail, bp_round_ops, inactivation_ops, unrecovered }
+    }
+
+    /// [`LadderDecoder::schedule`] with memoization in the shared
+    /// [`PeelScheduleCache`] (keyed by pattern, budget, and decoder
+    /// kind, so peel-only and ladder schedules never collide).
+    pub fn schedule_cached(
+        &self,
+        cache: &mut PeelScheduleCache,
+        erased: &[usize],
+        max_iters: usize,
+    ) -> Arc<LadderSchedule> {
+        let n = self.code.parity_check().cols();
+        if let Some(sched) = cache.get_ladder(n, erased, max_iters) {
+            return sched;
+        }
+        let sched = Arc::new(self.schedule(erased, max_iters));
+        cache.put_ladder(n, erased, max_iters, Arc::clone(&sched));
+        sched
+    }
+
+    /// Convenience: schedule + apply in one call. Returns the
+    /// coordinates that remain unrecovered (genuinely rank-deficient).
+    pub fn decode(
+        &self,
+        values: &mut [f64],
+        erased: &[usize],
+        max_iters: usize,
+    ) -> Vec<usize> {
+        let sched = self.schedule(erased, max_iters);
+        sched.apply(values);
+        sched.unrecovered.clone()
+    }
+}
+
+/// Rung 2 core: find one resolvable connected component of the residual
+/// degree-2-check graph, emit its ops onto `tail`, and un-erase it.
+///
+/// Within a component, every coordinate is an affine function of one
+/// root: `x_v = β_v·x_root + Σ_j α_v[j]·v_j` over known coordinates,
+/// propagated by BFS over tree edges. A non-tree check then yields
+/// `(h_u β_u + h_v β_v)·x_root = known terms`; whenever that cycle
+/// coefficient is nonzero (an odd-sign cycle — exactly the patterns
+/// sum-product resolves that greedy peeling cannot), the root and with
+/// it the whole component is pinned. Returns whether a component was
+/// resolved.
+fn bp_resolve_component(
+    h: &SparseMatrix,
+    is_erased: &mut [bool],
+    erased_count: &mut [usize],
+    tail: &mut Vec<PeelOp>,
+) -> bool {
+    let n = h.cols();
+    let p = h.rows();
+
+    // Adjacency of erased coordinates through degree-2 checks.
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut any = false;
+    for c in 0..p {
+        if erased_count[c] != 2 {
+            continue;
+        }
+        for &(v, _) in h.row(c) {
+            if is_erased[v] {
+                adj[v].push(c);
+                any = true;
+            }
+        }
+    }
+    if !any {
+        return false;
+    }
+
+    let mut visited = vec![false; n];
+    for root in 0..n {
+        if !is_erased[root] || visited[root] || adj[root].is_empty() {
+            continue;
+        }
+        // BFS labels: x_v = beta[v]·x_root + alpha[v]·v_known.
+        let mut label: Vec<Option<(f64, Vec<f64>)>> = vec![None; n];
+        let mut check_seen = vec![false; p];
+        let mut comp: Vec<usize> = vec![root];
+        let mut comp_checks: Vec<usize> = Vec::new();
+        label[root] = Some((1.0, vec![0.0; n]));
+        visited[root] = true;
+        let mut qi = 0;
+        while qi < comp.len() {
+            let u = comp[qi];
+            qi += 1;
+            for &c in &adj[u] {
+                if check_seen[c] {
+                    continue;
+                }
+                check_seen[c] = true;
+                comp_checks.push(c);
+                let (h_u, other, h_other) = degree2_endpoints(h, is_erased, c, u);
+                if label[other].is_some() {
+                    continue; // non-tree edge, evaluated below
+                }
+                // h_u·x_u + h_other·x_other + Σ_known h_j·v_j = 0.
+                let (beta_u, alpha_u) = label[u].clone().expect("BFS order");
+                let ratio = -(h_u / h_other);
+                let mut alpha: Vec<f64> = alpha_u.iter().map(|a| ratio * a).collect();
+                for &(j, coeff) in h.row(c) {
+                    if !is_erased[j] {
+                        alpha[j] -= coeff / h_other;
+                    }
+                }
+                label[other] = Some((ratio * beta_u, alpha));
+                visited[other] = true;
+                comp.push(other);
+            }
+        }
+        // Scan the component's checks for a resolving cycle (tree edges
+        // give a zero coefficient by construction).
+        for &c in &comp_checks {
+            let (e1, h1, e2, h2) = degree2_pair(h, is_erased, c);
+            let (b1, a1) = label[e1].as_ref().expect("component var labeled");
+            let (b2, a2) = label[e2].as_ref().expect("component var labeled");
+            let coef = h1 * b1 + h2 * b2;
+            if coef.abs() <= LADDER_TOL {
+                continue;
+            }
+            // coef·x_root + Σ_j (h1·a1[j] + h2·a2[j])·v_j
+            //             + Σ_{known j ∈ row c} h_j·v_j = 0.
+            let mut rhs: Vec<f64> = (0..n).map(|j| h1 * a1[j] + h2 * a2[j]).collect();
+            for &(j, coeff) in h.row(c) {
+                if !is_erased[j] {
+                    rhs[j] += coeff;
+                }
+            }
+            let terms: Vec<(usize, f64)> = rhs
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.abs() > TERM_TOL)
+                .map(|(j, &a)| (j, a))
+                .collect();
+            tail.push(PeelOp { target: root, inv_coeff: 1.0 / coef, terms });
+            // The rest of the component reads off its affine label (the
+            // root's op runs first; apply is sequential).
+            for &v in comp.iter().skip(1) {
+                let (beta_v, alpha_v) = label[v].as_ref().expect("component var labeled");
+                let mut terms: Vec<(usize, f64)> = vec![(root, *beta_v)];
+                for (j, &a) in alpha_v.iter().enumerate() {
+                    if a.abs() > TERM_TOL {
+                        terms.push((j, a));
+                    }
+                }
+                tail.push(PeelOp { target: v, inv_coeff: -1.0, terms });
+            }
+            for &v in &comp {
+                is_erased[v] = false;
+                for &(check, _) in h.col(v) {
+                    erased_count[check] -= 1;
+                }
+            }
+            return true;
+        }
+    }
+    false
+}
+
+/// The coefficient of `u` and the other erased endpoint (with its
+/// coefficient) of a degree-2 check.
+fn degree2_endpoints(
+    h: &SparseMatrix,
+    is_erased: &[bool],
+    check: usize,
+    u: usize,
+) -> (f64, usize, f64) {
+    let mut h_u = 0.0;
+    let mut other = usize::MAX;
+    let mut h_other = 0.0;
+    for &(v, coeff) in h.row(check) {
+        if !is_erased[v] {
+            continue;
+        }
+        if v == u {
+            h_u = coeff;
+        } else {
+            other = v;
+            h_other = coeff;
+        }
+    }
+    debug_assert!(other != usize::MAX, "check {check} is not degree-2");
+    (h_u, other, h_other)
+}
+
+/// Both erased endpoints of a degree-2 check.
+fn degree2_pair(h: &SparseMatrix, is_erased: &[bool], check: usize) -> (usize, f64, usize, f64) {
+    let mut pair = h.row(check).iter().copied().filter(|&(v, _)| is_erased[v]);
+    let (e1, h1) = pair.next().expect("degree-2 check");
+    let (e2, h2) = pair.next().expect("degree-2 check");
+    (e1, h1, e2, h2)
+}
+
+/// Rung 3: Gauss–Jordan elimination of the residual stopping-set system.
+///
+/// Variables are the still-erased coordinates `E`; every check touching
+/// one contributes the equation `Σ_{e∈E} h_e·x_e = -Σ_{known j} h_j·v_j`
+/// with the right-hand side carried *symbolically* as coefficients over
+/// known coordinates (the schedule must replay over many codewords).
+/// After reduction, a pivot row with no support on free columns
+/// determines its pivot coordinate uniquely — exactly the coordinates
+/// `i` with `rank([H_E; e_i]) = rank(H_E)`. Emits one op per determined
+/// coordinate and returns how many.
+fn inactivation_solve(
+    h: &SparseMatrix,
+    is_erased: &mut [bool],
+    erased_count: &mut [usize],
+    tail: &mut Vec<PeelOp>,
+) -> usize {
+    let n = h.cols();
+    let p = h.rows();
+    let evars: Vec<usize> = (0..n).filter(|&v| is_erased[v]).collect();
+    if evars.is_empty() {
+        return 0;
+    }
+    let ncols = evars.len();
+    let mut col_of = vec![usize::MAX; n];
+    for (i, &v) in evars.iter().enumerate() {
+        col_of[v] = i;
+    }
+
+    // Dense system rows + symbolic right-hand sides.
+    let mut a_mat: Vec<Vec<f64>> = Vec::new();
+    let mut r_mat: Vec<Vec<f64>> = Vec::new();
+    for c in 0..p {
+        if erased_count[c] == 0 {
+            continue;
+        }
+        let mut arow = vec![0.0; ncols];
+        let mut rrow = vec![0.0; n];
+        for &(v, coeff) in h.row(c) {
+            if is_erased[v] {
+                arow[col_of[v]] = coeff;
+            } else {
+                rrow[v] = -coeff;
+            }
+        }
+        a_mat.push(arow);
+        r_mat.push(rrow);
+    }
+    let nrows = a_mat.len();
+
+    // Gauss–Jordan with partial pivoting, row ops mirrored onto the
+    // symbolic right-hand sides.
+    let mut pivot_row_of_col: Vec<Option<usize>> = vec![None; ncols];
+    let mut row = 0usize;
+    for col in 0..ncols {
+        if row == nrows {
+            break;
+        }
+        let (best, best_abs) = (row..nrows)
+            .map(|r| (r, a_mat[r][col].abs()))
+            .max_by(|x, y| x.1.total_cmp(&y.1))
+            .expect("row < nrows");
+        if best_abs <= LADDER_TOL {
+            continue;
+        }
+        a_mat.swap(row, best);
+        r_mat.swap(row, best);
+        let piv = a_mat[row][col];
+        for x in a_mat[row].iter_mut() {
+            *x /= piv;
+        }
+        for x in r_mat[row].iter_mut() {
+            *x /= piv;
+        }
+        for r in 0..nrows {
+            if r == row {
+                continue;
+            }
+            let f = a_mat[r][col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..ncols {
+                let v = a_mat[row][j];
+                a_mat[r][j] -= f * v;
+            }
+            for j in 0..n {
+                let v = r_mat[row][j];
+                r_mat[r][j] -= f * v;
+            }
+        }
+        pivot_row_of_col[col] = Some(row);
+        row += 1;
+    }
+
+    let free_cols: Vec<usize> =
+        (0..ncols).filter(|&c| pivot_row_of_col[c].is_none()).collect();
+    let emitted_from = tail.len();
+    for col in 0..ncols {
+        let Some(r) = pivot_row_of_col[col] else { continue };
+        // Any support on a free column means this pivot coordinate
+        // depends on an undetermined variable.
+        if free_cols.iter().any(|&fc| a_mat[r][fc].abs() > LADDER_TOL) {
+            continue;
+        }
+        let terms: Vec<(usize, f64)> = r_mat[r]
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.abs() > TERM_TOL)
+            .map(|(j, &a)| (j, a))
+            .collect();
+        // x = Σ_j R[j]·v_j  (inv_coeff = -1 flips apply's leading minus).
+        tail.push(PeelOp { target: evars[col], inv_coeff: -1.0, terms });
+    }
+    let solved = tail.len() - emitted_from;
+    for op in &tail[emitted_from..] {
+        is_erased[op.target] = false;
+        for &(check, _) in h.col(op.target) {
+            erased_count[check] -= 1;
+        }
+    }
+    solved
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::peeling::PeelingDecoder;
+    use crate::linalg::rank;
+    use crate::rng::Rng;
+
+    fn code() -> LdpcCode {
+        LdpcCode::gallager(40, 20, 3, 6, 17).unwrap()
+    }
+
+    fn encode_truth(code: &LdpcCode, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let x = rng.gaussian_vec(code.k());
+        code.encode(&x)
+    }
+
+    #[test]
+    fn empty_tail_and_identical_ops_when_peeling_succeeds() {
+        // Bit-identity contract: on peel-solvable patterns the ladder
+        // schedule *is* the peel schedule — empty tail, identical ops,
+        // identical applied values.
+        let c = code();
+        let peel = PeelingDecoder::new(&c);
+        let ladder = LadderDecoder::new(&c);
+        let truth = encode_truth(&c, 99);
+        let mut rng = Rng::new(5);
+        let mut checked = 0;
+        for _ in 0..50 {
+            let erased = rng.choose_k(40, 8);
+            let ps = peel.schedule(&erased, 40);
+            if !ps.unrecovered.is_empty() {
+                continue;
+            }
+            let ls = ladder.schedule(&erased, 40);
+            assert!(!ls.escalated(), "tail must be empty on peel-solvable patterns");
+            assert_eq!(ls.peel.rounds, ps.rounds);
+            assert_eq!(ls.peel.round_offsets, ps.round_offsets);
+            assert_eq!(ls.bp_rounds(), 0);
+            assert_eq!(ls.inactivation_ops, 0);
+            let apply_peel = {
+                let mut v = truth.clone();
+                for &e in &erased {
+                    v[e] = 0.0;
+                }
+                ps.apply(&mut v);
+                v
+            };
+            let apply_ladder = {
+                let mut v = truth.clone();
+                for &e in &erased {
+                    v[e] = 0.0;
+                }
+                ls.apply(&mut v);
+                v
+            };
+            assert_eq!(apply_ladder, apply_peel, "bit-identical values required");
+            checked += 1;
+        }
+        assert!(checked >= 20, "only {checked} peel-solvable patterns seen");
+    }
+
+    #[test]
+    fn ladder_recovers_full_rank_patterns_peeling_stalls_on() {
+        // The bugfix itself: find erasure patterns where peeling stalls
+        // but the erased columns are independent — the ladder must
+        // recover them exactly where the peel-only decoder zeroed them.
+        let c = code();
+        let h_dense = c.parity_check().to_dense();
+        let peel = PeelingDecoder::new(&c);
+        let ladder = LadderDecoder::new(&c);
+        let truth = encode_truth(&c, 99);
+        let mut rng = Rng::new(7);
+        let mut rescued = 0;
+        for _ in 0..300 {
+            let erased = rng.choose_k(40, 18);
+            let ps = peel.schedule(&erased, 40);
+            if ps.unrecovered.is_empty() {
+                continue;
+            }
+            let sub = h_dense.select_cols(&erased);
+            if rank(&sub, 1e-9) != erased.len() {
+                continue;
+            }
+            // Full-rank stall: the ladder must finish the job.
+            let ls = ladder.schedule(&erased, 40);
+            assert!(
+                ls.unrecovered.is_empty(),
+                "ladder left {:?} unrecovered on a full-rank pattern {erased:?}",
+                ls.unrecovered
+            );
+            assert!(ls.escalated());
+            let mut v = truth.clone();
+            for &e in &erased {
+                v[e] = f64::NAN; // escalation ops must never read erased slots
+            }
+            ls.apply(&mut v);
+            for (i, (g, t)) in v.iter().zip(&truth).enumerate() {
+                assert!(
+                    (g - t).abs() < 1e-7,
+                    "coordinate {i}: {g} vs {t} on pattern {erased:?}"
+                );
+            }
+            rescued += 1;
+        }
+        assert!(rescued >= 5, "only {rescued} full-rank stalls found — widen the search");
+    }
+
+    #[test]
+    fn unrecovered_matches_per_coordinate_rank_oracle() {
+        // The ladder's unrecovered set must be exactly the coordinates
+        // the residual system cannot determine: x_i is recoverable iff
+        // appending the unit row e_i to the erased-column submatrix does
+        // not raise its rank.
+        let c = code();
+        let h_dense = c.parity_check().to_dense();
+        let ladder = LadderDecoder::new(&c);
+        let mut rng = Rng::new(11);
+        for trial in 0..40 {
+            let s = 10 + rng.below(16); // 10..=25 erasures: plenty of stalls
+            let erased = rng.choose_k(40, s);
+            let ls = ladder.schedule(&erased, 40);
+            let sub = h_dense.select_cols(&erased);
+            let base_rank = rank(&sub, 1e-9);
+            for (ei, &coord) in erased.iter().enumerate() {
+                let mut rows: Vec<Vec<f64>> = Vec::with_capacity(sub.rows() + 1);
+                for r in 0..sub.rows() {
+                    rows.push((0..sub.cols()).map(|j| sub[(r, j)]).collect());
+                }
+                let mut unit = vec![0.0; sub.cols()];
+                unit[ei] = 1.0;
+                rows.push(unit);
+                let aug = crate::linalg::Matrix::from_rows(&rows).unwrap();
+                let determined = rank(&aug, 1e-9) == base_rank;
+                assert_eq!(
+                    !ls.unrecovered.contains(&coord),
+                    determined,
+                    "trial {trial}: coordinate {coord} of {erased:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_erased_recovers_nothing() {
+        let c = code();
+        let ladder = LadderDecoder::new(&c);
+        let erased: Vec<usize> = (0..40).collect();
+        let ls = ladder.schedule(&erased, 100);
+        assert_eq!(ls.unrecovered.len(), 40);
+        assert!(ls.tail.is_empty());
+    }
+
+    #[test]
+    fn budget_stall_is_absorbed_by_the_escalation_rungs() {
+        // With D = 0 peeling recovers nothing, but the ladder's
+        // escalation is unbounded: a peel-solvable pattern must still
+        // decode exactly.
+        let c = code();
+        let ladder = LadderDecoder::new(&c);
+        let truth = encode_truth(&c, 99);
+        let erased = Rng::new(13).choose_k(40, 6);
+        let ls = ladder.schedule(&erased, 0);
+        assert_eq!(ls.peel.rounds, 0);
+        assert!(ls.unrecovered.is_empty());
+        let mut v = truth.clone();
+        for &e in &erased {
+            v[e] = f64::NAN;
+        }
+        ls.apply(&mut v);
+        for (g, t) in v.iter().zip(&truth) {
+            assert!((g - t).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cached_ladder_schedule_matches_fresh() {
+        let c = code();
+        let ladder = LadderDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let truth = encode_truth(&c, 99);
+        let mut rng = Rng::new(19);
+        for _ in 0..60 {
+            let s = 1 + rng.below(20);
+            let erased = rng.choose_k(40, s);
+            let fresh = ladder.schedule(&erased, 40);
+            let cached = ladder.schedule_cached(&mut cache, &erased, 40);
+            assert_eq!(cached.unrecovered, fresh.unrecovered);
+            assert_eq!(cached.bp_round_ops, fresh.bp_round_ops);
+            assert_eq!(cached.inactivation_ops, fresh.inactivation_ops);
+            let run = |s: &LadderSchedule| {
+                let mut v = truth.clone();
+                for &e in &erased {
+                    v[e] = 0.0;
+                }
+                s.apply(&mut v);
+                v
+            };
+            assert_eq!(run(&cached), run(&fresh));
+            // A replay must be served from the cache.
+            let hits_before = cache.hits();
+            let again = ladder.schedule_cached(&mut cache, &erased, 40);
+            assert!(Arc::ptr_eq(&cached, &again));
+            assert_eq!(cache.hits(), hits_before + 1);
+        }
+    }
+
+    #[test]
+    fn schedule_stats_are_consistent() {
+        let c = code();
+        let ladder = LadderDecoder::new(&c);
+        let mut rng = Rng::new(23);
+        for _ in 0..40 {
+            let s = 1 + rng.below(24);
+            let erased = rng.choose_k(40, s);
+            let ls = ladder.schedule(&erased, 40);
+            assert_eq!(ls.bp_ops() + ls.inactivation_ops, ls.tail.len());
+            assert_eq!(
+                ls.recovered_count() + ls.unrecovered.len(),
+                {
+                    let mut e = erased.clone();
+                    e.sort_unstable();
+                    e.dedup();
+                    e.len()
+                },
+                "recovered + unrecovered must partition the erasures"
+            );
+            // Targets unique across the whole schedule.
+            let mut targets: Vec<usize> = ls
+                .peel
+                .ops
+                .iter()
+                .chain(&ls.tail)
+                .map(|o| o.target)
+                .collect();
+            let total = targets.len();
+            targets.sort_unstable();
+            targets.dedup();
+            assert_eq!(targets.len(), total, "duplicate target across rungs");
+        }
+    }
+}

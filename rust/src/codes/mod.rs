@@ -9,6 +9,9 @@
 //! * [`peeling`] — the iterative erasure-correction (peeling) decoder of
 //!   Scheme 2, with a position-only schedule that is computed once per
 //!   gradient step and replayed over all `k/K` block codewords.
+//! * [`ladder`] — the peel → BP → inactivation decode ladder: escalates
+//!   past peeling stalls so only genuinely rank-deficient coordinates
+//!   are ever zeroed.
 //! * [`density`] — the density-evolution recursion of Proposition 2 and
 //!   the decoding threshold `q*(r, l)` of Remark 3.
 //! * [`mds`] — real Vandermonde (MDS) codes: Scheme 1's exact decoder and
@@ -21,6 +24,7 @@
 
 pub mod density;
 pub mod gradcode;
+pub mod ladder;
 pub mod ldpc;
 pub mod mds;
 pub mod peeling;
@@ -28,9 +32,10 @@ pub mod replication;
 pub mod sketch;
 pub mod systematic;
 
+pub use ladder::{LadderDecoder, LadderSchedule};
 pub use ldpc::LdpcCode;
 pub use mds::VandermondeCode;
-pub use peeling::{PeelSchedule, PeelScheduleCache, PeelingDecoder};
+pub use peeling::{DecoderKind, PeelSchedule, PeelScheduleCache, PeelingDecoder};
 
 /// A sparse matrix in row-list + column-list form, used for parity-check
 /// matrices. Entries are real (±1 for the standard ensemble).

@@ -11,13 +11,26 @@
 //! block codewords of that step, the decoder separates **schedule
 //! construction** (positions only, done once per step) from **value
 //! application** (replayed per block codeword in `O(edges touched)`).
+//!
+//! Peeling is rung 1 of the decode ladder; the escalation rungs
+//! (belief-propagation erasure pass and inactivation/Gaussian
+//! elimination) live in [`super::ladder`] and reuse [`peel_rounds`] so
+//! that rung 1 of a ladder schedule is byte-identical to a peel-only
+//! schedule.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use super::ladder::LadderSchedule;
 use super::ldpc::LdpcCode;
+use super::SparseMatrix;
 
 /// One resolved coordinate: `values[target] = -inv_coeff * Σ terms`.
+///
+/// Peeling emits ops with `inv_coeff = 1/h[check, target]` and the
+/// check's other neighbours as terms; the ladder's escalation rungs
+/// reuse the same encoding for arbitrary linear combinations
+/// (`inv_coeff = -1` and explicit coefficients in `terms`).
 #[derive(Debug, Clone)]
 pub struct PeelOp {
     /// Coordinate being solved.
@@ -70,6 +83,114 @@ impl PeelSchedule {
     }
 }
 
+/// Which decoder the master runs on each step's erasure pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DecoderKind {
+    /// Peeling only (the paper's `D`-iteration decoder): stalls on
+    /// stopping sets and zeroes whatever is left erased.
+    Peel,
+    /// The full peel → BP → inactivation ladder: zeroes only coordinates
+    /// the residual linear system genuinely cannot determine.
+    #[default]
+    Ladder,
+}
+
+impl DecoderKind {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<DecoderKind> {
+        match s {
+            "peel" => Some(DecoderKind::Peel),
+            "ladder" => Some(DecoderKind::Ladder),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DecoderKind::Peel => "peel",
+            DecoderKind::Ladder => "ladder",
+        }
+    }
+}
+
+/// Initial peeling state for an erasure pattern: per-coordinate erased
+/// flags and per-check erased-neighbour counters.
+pub(crate) fn erasure_state(h: &SparseMatrix, erased: &[usize]) -> (Vec<bool>, Vec<usize>) {
+    let n = h.cols();
+    let mut is_erased = vec![false; n];
+    for &e in erased {
+        debug_assert!(e < n, "erasure index {e} out of range {n}");
+        is_erased[e] = true;
+    }
+    let mut erased_count = vec![0usize; h.rows()];
+    for (c, count) in erased_count.iter_mut().enumerate() {
+        *count = h.row(c).iter().filter(|&&(v, _)| is_erased[v]).count();
+    }
+    (is_erased, erased_count)
+}
+
+/// The round-parallel peeling core, shared by [`PeelingDecoder`] and the
+/// ladder's rung 1 / re-peel passes. Appends up to `max_iters` rounds of
+/// ops to `ops` (pushing a boundary onto `round_offsets` after each
+/// committed round; the caller seeds it with the current `ops.len()`),
+/// updating `is_erased` / `erased_count` in place. Returns the number of
+/// rounds executed.
+pub(crate) fn peel_rounds(
+    h: &SparseMatrix,
+    is_erased: &mut [bool],
+    erased_count: &mut [usize],
+    ops: &mut Vec<PeelOp>,
+    round_offsets: &mut Vec<usize>,
+    max_iters: usize,
+) -> usize {
+    let p = h.rows();
+    let mut rounds = 0;
+    for _ in 0..max_iters {
+        // Collect all (check, target) solvable at this round start.
+        // A coordinate may be solvable through several checks; keep the
+        // first and mark it claimed so the round stays conflict-free.
+        let mut claimed: Vec<usize> = Vec::new();
+        let round_start = ops.len();
+        for check in 0..p {
+            if erased_count[check] != 1 {
+                continue;
+            }
+            let row = h.row(check);
+            let (target, coeff) = row
+                .iter()
+                .copied()
+                .find(|&(v, _)| is_erased[v])
+                .expect("counter said one erased neighbour");
+            // Skip if another check already claimed this target in
+            // this round.
+            if claimed.contains(&target) {
+                continue;
+            }
+            claimed.push(target);
+            let terms: Vec<(usize, f64)> =
+                row.iter().copied().filter(|&(v, _)| v != target).collect();
+            ops.push(PeelOp { target, inv_coeff: 1.0 / coeff, terms });
+        }
+        if ops.len() == round_start {
+            break; // stalled: no degree-1 checks left
+        }
+        rounds += 1;
+        // Commit the round: clear erasure flags and update counters.
+        for op in &ops[round_start..] {
+            is_erased[op.target] = false;
+            for &(check, _) in h.col(op.target) {
+                erased_count[check] -= 1;
+            }
+        }
+        round_offsets.push(ops.len());
+        if is_erased.iter().all(|&e| !e) {
+            break;
+        }
+    }
+    rounds
+}
+
 /// Canonical identity of an erasure pattern: a bitmask for codes with
 /// `n ≤ 64` (one shift+or per erasure, no allocation), the sorted
 /// deduplicated index list otherwise (hashed as a `Vec<usize>`).
@@ -97,14 +218,23 @@ impl PatternKey {
     }
 }
 
-/// Schedules are invalidated wholesale past this many distinct
-/// `(pattern, D)` entries — a backstop against adversarial straggler
-/// streams that never repeat; realistic runs revisit a small set of
-/// patterns and never come near it.
+/// Past this many distinct `(pattern, D, decoder)` entries the cache
+/// evicts its least-recently-used entry — a backstop against adversarial
+/// straggler streams that never repeat; realistic runs revisit a small
+/// set of patterns and never come near it.
 const PEEL_CACHE_CAP: usize = 1024;
 
-/// Memo of peel schedules keyed by erasure pattern (and the iteration
-/// budget `D`, which changes the schedule).
+/// Either kind of cached decode schedule.
+#[derive(Debug, Clone)]
+enum CachedSchedule {
+    Peel(Arc<PeelSchedule>),
+    Ladder(Arc<LadderSchedule>),
+}
+
+type CacheKey = (PatternKey, usize, DecoderKind);
+
+/// Memo of decode schedules keyed by erasure pattern (plus the iteration
+/// budget `D` and the decoder kind, both of which change the schedule).
 ///
 /// Straggler sets repeat across gradient steps — a fixed deadline
 /// erases the same worker subset for many consecutive steps — yet the
@@ -113,14 +243,20 @@ const PEEL_CACHE_CAP: usize = 1024;
 /// hash lookup; the schedule is shared as an [`Arc`] so a cache hit
 /// allocates nothing.
 ///
+/// At capacity the single least-recently-used entry is evicted (each
+/// entry carries the tick of its last touch), so hot patterns survive a
+/// churny straggler stream instead of being dropped wholesale.
+///
 /// A cache is bound to one code: callers must not share it across
 /// decoders for different codes (the pattern key does not encode the
 /// graph).
 #[derive(Debug, Clone, Default)]
 pub struct PeelScheduleCache {
-    map: HashMap<(PatternKey, usize), Arc<PeelSchedule>>,
+    map: HashMap<CacheKey, (CachedSchedule, u64)>,
     hits: u64,
     misses: u64,
+    /// Monotone access counter stamping entries for LRU eviction.
+    tick: u64,
 }
 
 impl PeelScheduleCache {
@@ -129,7 +265,7 @@ impl PeelScheduleCache {
         PeelScheduleCache::default()
     }
 
-    /// Number of distinct `(pattern, D)` schedules held.
+    /// Number of distinct `(pattern, D, decoder)` schedules held.
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -153,6 +289,65 @@ impl PeelScheduleCache {
     pub fn clear(&mut self) {
         self.map.clear();
     }
+
+    /// Look up a schedule, counting the hit/miss and refreshing the
+    /// entry's LRU tick on a hit.
+    fn lookup(&mut self, key: &CacheKey) -> Option<CachedSchedule> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some((sched, last_used)) => {
+                *last_used = self.tick;
+                self.hits += 1;
+                Some(sched.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly built schedule, evicting the single
+    /// least-recently-used entry if the cache is at capacity.
+    fn insert(&mut self, key: CacheKey, sched: CachedSchedule) {
+        if self.map.len() >= PEEL_CACHE_CAP {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, last_used))| *last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, (sched, self.tick));
+    }
+
+    /// Ladder-side lookup (see [`super::ladder::LadderDecoder::schedule_cached`]).
+    pub(crate) fn get_ladder(
+        &mut self,
+        n: usize,
+        erased: &[usize],
+        max_iters: usize,
+    ) -> Option<Arc<LadderSchedule>> {
+        let key = (PatternKey::build(n, erased), max_iters, DecoderKind::Ladder);
+        match self.lookup(&key) {
+            Some(CachedSchedule::Ladder(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Ladder-side insert.
+    pub(crate) fn put_ladder(
+        &mut self,
+        n: usize,
+        erased: &[usize],
+        max_iters: usize,
+        sched: Arc<LadderSchedule>,
+    ) {
+        let key = (PatternKey::build(n, erased), max_iters, DecoderKind::Ladder);
+        self.insert(key, CachedSchedule::Ladder(sched));
+    }
 }
 
 /// Peeling decoder bound to a code.
@@ -175,69 +370,18 @@ impl<'a> PeelingDecoder<'a> {
     pub fn schedule(&self, erased: &[usize], max_iters: usize) -> PeelSchedule {
         let h = self.code.parity_check();
         let n = h.cols();
-        let p = h.rows();
-
-        let mut is_erased = vec![false; n];
-        for &e in erased {
-            debug_assert!(e < n, "erasure index {e} out of range {n}");
-            is_erased[e] = true;
-        }
-
-        // Per-check erased-neighbour counters.
-        let mut erased_count = vec![0usize; p];
-        for c in 0..p {
-            erased_count[c] = h.row(c).iter().filter(|&&(v, _)| is_erased[v]).count();
-        }
-
+        let (mut is_erased, mut erased_count) = erasure_state(h, erased);
         let mut ops: Vec<PeelOp> = Vec::new();
         let mut round_offsets = vec![0usize];
-        let mut rounds = 0;
-
-        for _ in 0..max_iters {
-            // Collect all (check, target) solvable at this round start.
-            // A coordinate may be solvable through several checks; keep the
-            // first and mark it claimed so the round stays conflict-free.
-            let mut claimed: Vec<usize> = Vec::new();
-            let round_start = ops.len();
-            for check in 0..p {
-                if erased_count[check] != 1 {
-                    continue;
-                }
-                let row = h.row(check);
-                let (target, coeff) = row
-                    .iter()
-                    .copied()
-                    .find(|&(v, _)| is_erased[v])
-                    .expect("counter said one erased neighbour");
-                // Skip if another check already claimed this target in
-                // this round.
-                if claimed.contains(&target) {
-                    continue;
-                }
-                claimed.push(target);
-                let terms: Vec<(usize, f64)> =
-                    row.iter().copied().filter(|&(v, _)| v != target).collect();
-                ops.push(PeelOp { target, inv_coeff: 1.0 / coeff, terms });
-            }
-            if ops.len() == round_start {
-                break; // stalled: no degree-1 checks left
-            }
-            rounds += 1;
-            // Commit the round: clear erasure flags and update counters.
-            for op in &ops[round_start..] {
-                is_erased[op.target] = false;
-                for &(check, _) in h.col(op.target) {
-                    erased_count[check] -= 1;
-                }
-            }
-            round_offsets.push(ops.len());
-            if is_erased.iter().all(|&e| !e) {
-                break;
-            }
-        }
-
-        let unrecovered: Vec<usize> =
-            (0..n).filter(|&v| is_erased[v]).collect();
+        let rounds = peel_rounds(
+            h,
+            &mut is_erased,
+            &mut erased_count,
+            &mut ops,
+            &mut round_offsets,
+            max_iters,
+        );
+        let unrecovered: Vec<usize> = (0..n).filter(|&v| is_erased[v]).collect();
         PeelSchedule { ops, round_offsets, unrecovered, rounds }
     }
 
@@ -255,17 +399,12 @@ impl<'a> PeelingDecoder<'a> {
         max_iters: usize,
     ) -> Arc<PeelSchedule> {
         let n = self.code.parity_check().cols();
-        let key = (PatternKey::build(n, erased), max_iters);
-        if let Some(sched) = cache.map.get(&key) {
-            cache.hits += 1;
-            return Arc::clone(sched);
-        }
-        cache.misses += 1;
-        if cache.map.len() >= PEEL_CACHE_CAP {
-            cache.map.clear();
+        let key = (PatternKey::build(n, erased), max_iters, DecoderKind::Peel);
+        if let Some(CachedSchedule::Peel(sched)) = cache.lookup(&key) {
+            return sched;
         }
         let sched = Arc::new(self.schedule(erased, max_iters));
-        cache.map.insert(key, Arc::clone(&sched));
+        cache.insert(key, CachedSchedule::Peel(Arc::clone(&sched)));
         sched
     }
 
@@ -294,7 +433,11 @@ mod tests {
     }
 
     /// Erase `erased` coordinates of a random codeword, decode, compare.
-    fn roundtrip(code: &LdpcCode, erased: &[usize], max_iters: usize) -> (Vec<usize>, Vec<f64>, Vec<f64>) {
+    fn roundtrip(
+        code: &LdpcCode,
+        erased: &[usize],
+        max_iters: usize,
+    ) -> (Vec<usize>, Vec<f64>, Vec<f64>) {
         let mut rng = Rng::new(99);
         let x = rng.gaussian_vec(code.k());
         let truth = code.encode(&x);
@@ -541,6 +684,44 @@ mod tests {
     }
 
     #[test]
+    fn eviction_drops_one_entry_not_the_world() {
+        // Crossing the cap evicts the single least-recently-used entry:
+        // the map stays full instead of collapsing to one entry, so the
+        // hit rate survives a churny straggler stream.
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let erased = Rng::new(37).choose_k(40, 8);
+        for d in 0..1500usize {
+            dec.schedule_cached(&mut cache, &erased, d);
+        }
+        assert_eq!(cache.len(), 1024, "LRU eviction must keep the cache full");
+    }
+
+    #[test]
+    fn hot_cache_keys_survive_crossing_the_cap() {
+        // A key that keeps getting touched must never be the LRU victim,
+        // no matter how many cold keys churn past the cap.
+        let c = code();
+        let dec = PeelingDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let hot = Rng::new(43).choose_k(40, 6);
+        let cold = Rng::new(44).choose_k(40, 9);
+        let first = dec.schedule_cached(&mut cache, &hot, 40);
+        // 1500 distinct cold keys (distinct D values) push well past the
+        // 1024-entry cap; the hot key is touched between insertions.
+        for d in 0..1500usize {
+            dec.schedule_cached(&mut cache, &cold, d + 100);
+            let again = dec.schedule_cached(&mut cache, &hot, 40);
+            assert!(
+                Arc::ptr_eq(&first, &again),
+                "hot key evicted after {d} cold insertions"
+            );
+        }
+        assert!(cache.len() <= 1024);
+    }
+
+    #[test]
     fn erase_everything_stalls() {
         let c = code();
         let dec = PeelingDecoder::new(&c);
@@ -638,5 +819,31 @@ mod tests {
             assert_eq!(cache.hits(), 1, "n={n}");
             assert_eq!(cache.misses(), 2, "n={n}");
         }
+    }
+
+    #[test]
+    fn decoder_kind_round_trips_through_cli_spelling() {
+        for kind in [DecoderKind::Peel, DecoderKind::Ladder] {
+            assert_eq!(DecoderKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(DecoderKind::parse("bogus"), None);
+        assert_eq!(DecoderKind::default(), DecoderKind::Ladder);
+    }
+
+    #[test]
+    fn peel_and_ladder_keys_do_not_collide() {
+        // The same pattern cached under both decoder kinds yields two
+        // distinct entries; neither lookup is served the other's schedule.
+        use super::super::ladder::LadderDecoder;
+        let c = code();
+        let peel = PeelingDecoder::new(&c);
+        let ladder = LadderDecoder::new(&c);
+        let mut cache = PeelScheduleCache::new();
+        let erased = Rng::new(47).choose_k(40, 6);
+        peel.schedule_cached(&mut cache, &erased, 40);
+        ladder.schedule_cached(&mut cache, &erased, 40);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 0);
     }
 }

@@ -651,12 +651,28 @@ pub fn run_with_executor_traced(
             let mut tr = tr.borrow_mut();
             let (db, de) =
                 tr.span_host(SpanKind::Decode, 0, t, stats.decode_rounds as u64, decode_ns);
-            let rounds = scratch.peel_round_ops.len();
+            // Rounds are not timed individually; spread all decode
+            // events (peel rounds, then any ladder escalation) evenly
+            // inside the decode span, payload = ops fired.
+            let peel_n = scratch.peel_round_ops.len();
+            let bp_n = scratch.bp_round_ops.len();
+            let inact_n = usize::from(scratch.inactivation_ops > 0);
+            let total = (peel_n + bp_n + inact_n).max(1);
+            let slot = |i: usize| db + (de - db) * (i as f64 + 0.5) / total as f64;
             for (i, &ops) in scratch.peel_round_ops.iter().enumerate() {
-                // Rounds are not timed individually; spread them evenly
-                // inside the decode span, payload = peel ops fired.
-                let at = db + (de - db) * (i as f64 + 0.5) / rounds as f64;
-                tr.instant(SpanKind::PeelRound, 0, t, ops as u64, at);
+                tr.instant(SpanKind::PeelRound, 0, t, ops as u64, slot(i));
+            }
+            for (i, &ops) in scratch.bp_round_ops.iter().enumerate() {
+                tr.instant(SpanKind::BpRound, 0, t, ops as u64, slot(peel_n + i));
+            }
+            if inact_n > 0 {
+                tr.instant(
+                    SpanKind::Inactivation,
+                    0,
+                    t,
+                    scratch.inactivation_ops as u64,
+                    slot(peel_n + bp_n),
+                );
             }
         }
 

@@ -98,7 +98,7 @@ impl GradientScheme for GradCodingScheme {
                 crate::linalg::axpy(*ai, responses[j].as_ref().unwrap(), &mut out.gradient);
             }
         }
-        Ok(DecodeStats { unrecovered_coords: 0, decode_rounds: 0 })
+        Ok(DecodeStats::default())
     }
 }
 

@@ -142,7 +142,7 @@ impl GradientScheme for KsdyScheme {
         // any; report the effective-coordinate equivalent for parity with
         // the other schemes' metric.
         let unrecovered_coords = missing * self.k / self.workers;
-        Ok(DecodeStats { unrecovered_coords, decode_rounds: 0 })
+        Ok(DecodeStats { unrecovered_coords, ..Default::default() })
     }
 }
 

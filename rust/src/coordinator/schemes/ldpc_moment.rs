@@ -6,21 +6,29 @@
 //!
 //! 1. assembles each block codeword `C⁽ⁱ⁾θ` with erasures at the
 //!    straggler positions (identical pattern across blocks),
-//! 2. builds one peeling schedule for that pattern with at most `D`
-//!    rounds and replays it over every block,
+//! 2. builds one decode schedule for that pattern — by default the full
+//!    peel → BP → inactivation ladder ([`crate::codes::ladder`]); with
+//!    [`DecoderKind::Peel`] the paper's bare `D`-round peeling — and
+//!    replays it over every block,
 //! 3. zeroes the still-erased systematic coordinates **and the matching
 //!    coordinates of `b = Xᵀy`** (the `b̂_t` masking of eq. 15), and
 //! 4. returns `ĉ_sys − b̂` as the gradient estimate.
+//!
+//! Under the ladder, step 3 touches only coordinates the residual
+//! stopping-set system genuinely cannot determine; the peel-only
+//! decoder also zeroes recoverable coordinates whenever peeling stalls,
+//! silently biasing the gradient (the bug the ladder fixes).
 //!
 //! Under Assumption 1 this estimator satisfies
 //! `E[g_t] = (1 − q_D) ∇L(θ_{t-1})` (Lemma 1), which the
 //! `lemma1_unbiasedness` test validates empirically.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::{DecodeOutput, DecodeScratch, DecodeStats, GradientScheme};
+use crate::codes::ladder::{LadderDecoder, LadderSchedule};
 use crate::codes::ldpc::LdpcCode;
-use crate::codes::peeling::{PeelScheduleCache, PeelingDecoder};
+use crate::codes::peeling::{DecoderKind, PeelSchedule, PeelScheduleCache, PeelingDecoder};
 use crate::coordinator::encoder::BlockMomentEncoding;
 use crate::coordinator::protocol::WorkerPayload;
 use crate::data::RegressionProblem;
@@ -42,6 +50,9 @@ pub struct LdpcMomentScheme {
     pos_worker: Vec<usize>,
     /// position -> slot within the owner's per-block group.
     pos_slot: Vec<usize>,
+    /// Which decode schedule the master builds per erasure pattern
+    /// (default: the full ladder).
+    decoder: DecoderKind,
     /// Peel schedules memoized by straggler pattern: a step whose
     /// pattern repeats skips schedule construction entirely. Behind a
     /// `Mutex` only because decoding takes `&self`; the master decodes
@@ -112,8 +123,22 @@ impl LdpcMomentScheme {
             ppw,
             pos_worker,
             pos_slot,
+            decoder: DecoderKind::default(),
             sched_cache: Mutex::new(PeelScheduleCache::new()),
         })
+    }
+
+    /// Select the decoder (builder-style). `DecoderKind::Peel` restores
+    /// the legacy stall-and-zero behavior; the default ladder only
+    /// zeroes genuinely rank-deficient coordinates.
+    pub fn with_decoder(mut self, decoder: DecoderKind) -> Self {
+        self.decoder = decoder;
+        self
+    }
+
+    /// The decoder this scheme runs.
+    pub fn decoder(&self) -> DecoderKind {
+        self.decoder
     }
 
     /// The underlying code.
@@ -191,21 +216,53 @@ impl GradientScheme for LdpcMomentScheme {
         let erased = &mut out.indices;
         erased.clear();
         erased.extend((0..n).filter(|&p| responses[self.pos_worker[p]].is_none()));
-        let decoder = PeelingDecoder::new(&self.code);
+
+        enum Sched {
+            Peel(Arc<PeelSchedule>),
+            Ladder(Arc<LadderSchedule>),
+        }
         let sched = {
             let mut cache = self.sched_cache.lock().unwrap();
-            decoder.schedule_cached(&mut cache, erased, decode_iters)
+            match self.decoder {
+                DecoderKind::Peel => Sched::Peel(
+                    PeelingDecoder::new(&self.code)
+                        .schedule_cached(&mut cache, erased, decode_iters),
+                ),
+                DecoderKind::Ladder => Sched::Ladder(
+                    LadderDecoder::new(&self.code)
+                        .schedule_cached(&mut cache, erased, decode_iters),
+                ),
+            }
         };
 
-        // Export the per-round peel shape for the tracing layer; the
+        // Export the per-rung decode shape for the tracing layer; the
         // schedule is shared by all blocks, so this is once per step.
         out.peel_round_ops.clear();
-        out.peel_round_ops.extend(sched.ops_per_round());
+        out.bp_round_ops.clear();
+        out.inactivation_ops = 0;
+        let (unrecovered, rounds, bp_rounds, bp_ops, inactivation_ops) = match &sched {
+            Sched::Peel(s) => {
+                out.peel_round_ops.extend(s.ops_per_round());
+                (&s.unrecovered, s.rounds, 0, 0, 0)
+            }
+            Sched::Ladder(s) => {
+                out.peel_round_ops.extend(s.peel.ops_per_round());
+                out.bp_round_ops.extend_from_slice(&s.bp_round_ops);
+                out.inactivation_ops = s.inactivation_ops;
+                (
+                    &s.unrecovered,
+                    s.peel.rounds,
+                    s.bp_rounds(),
+                    s.bp_ops(),
+                    s.inactivation_ops,
+                )
+            }
+        };
 
         // Systematic positions that stay erased => the set U_t.
         let unrec_sys = &mut out.indices2;
         unrec_sys.clear();
-        unrec_sys.extend(sched.unrecovered.iter().copied().filter(|&p| p < kc));
+        unrec_sys.extend(unrecovered.iter().copied().filter(|&p| p < kc));
 
         out.gradient.resize(k, 0.0);
         out.codeword.resize(n, 0.0);
@@ -220,7 +277,10 @@ impl GradientScheme for LdpcMomentScheme {
                     None => 0.0,
                 };
             }
-            sched.apply(cw);
+            match &sched {
+                Sched::Peel(s) => s.apply(cw),
+                Sched::Ladder(s) => s.apply(cw),
+            }
             let lo = i * kc;
             let hi = ((i + 1) * kc).min(k);
             // g = ĉ_sys − b̂ (b̂ zeroed on U_t, handled by skipping).
@@ -238,10 +298,15 @@ impl GradientScheme for LdpcMomentScheme {
         for i in 0..self.enc.blocks {
             let lo = i * kc;
             let hi = ((i + 1) * kc).min(k);
-            unrecovered_coords +=
-                unrec_sys.iter().filter(|&&p| lo + p < hi).count();
+            unrecovered_coords += unrec_sys.iter().filter(|&&p| lo + p < hi).count();
         }
-        Ok(DecodeStats { unrecovered_coords, decode_rounds: sched.rounds })
+        Ok(DecodeStats {
+            unrecovered_coords,
+            decode_rounds: rounds,
+            bp_rounds,
+            bp_ops,
+            inactivation_ops,
+        })
     }
 }
 
@@ -300,7 +365,11 @@ mod tests {
 
     #[test]
     fn unrecovered_coords_zeroed() {
+        // Pinned on the peel-only decoder (`--decoder peel`): when
+        // peeling stalls, everything still erased is zeroed — the legacy
+        // behavior the ladder default exists to fix.
         let (p, s) = setup(40);
+        let s = s.with_decoder(DecoderKind::Peel);
         let mut rng = Rng::new(5);
         let theta = rng.gaussian_vec(40);
         // Erase many workers so peeling stalls.
@@ -320,6 +389,49 @@ mod tests {
             }
         }
         assert_eq!(zeros, out.unrecovered_coords);
+    }
+
+    #[test]
+    fn ladder_default_recovers_more_than_peel_and_stays_exact() {
+        // The bugfix at the scheme level: under heavy erasures with a
+        // tight iteration budget, the default ladder decoder recovers
+        // strictly more coordinates than peel-only on at least one
+        // pattern, never fewer on any, and every recovered coordinate
+        // is exact (only genuinely rank-deficient ones are zeroed).
+        let (p, ladder) = setup(40);
+        let (_, peel) = setup(40); // same seeds → identical scheme
+        let peel = peel.with_decoder(DecoderKind::Peel);
+        assert_eq!(ladder.decoder(), DecoderKind::Ladder);
+        let mut rng = Rng::new(5);
+        let theta = rng.gaussian_vec(40);
+        let want = p.gradient(&theta);
+        let clean = respond(&ladder, &theta);
+        let mut improved = 0;
+        for trial in 0..20 {
+            let mut responses = clean.clone();
+            for i in rng.choose_k(40, 16) {
+                responses[i] = None;
+            }
+            let lo = ladder.decode(&responses, 2).unwrap();
+            let po = peel.decode(&responses, 2).unwrap();
+            assert!(
+                lo.unrecovered_coords <= po.unrecovered_coords,
+                "trial {trial}: ladder worse than peel"
+            );
+            if lo.unrecovered_coords < po.unrecovered_coords {
+                improved += 1;
+            }
+            let mut zeros = 0;
+            for (g, w) in lo.gradient.iter().zip(&want) {
+                if *g == 0.0 && w.abs() > 1e-9 {
+                    zeros += 1;
+                } else {
+                    assert!((g - w).abs() < 1e-6, "trial {trial}: inexact recovery");
+                }
+            }
+            assert_eq!(zeros, lo.unrecovered_coords, "trial {trial}");
+        }
+        assert!(improved > 0, "ladder never beat peel across 20 heavy-erasure patterns");
     }
 
     #[test]
@@ -419,6 +531,14 @@ mod tests {
             // round, each round non-empty.
             assert_eq!(scratch.peel_round_ops.len(), stats.decode_rounds, "trial {trial}");
             assert!(scratch.peel_round_ops.iter().all(|&c| c > 0), "trial {trial}");
+            // Escalation shape mirrors the stats.
+            assert_eq!(scratch.bp_round_ops.len(), stats.bp_rounds, "trial {trial}");
+            assert_eq!(
+                scratch.bp_round_ops.iter().sum::<usize>(),
+                stats.bp_ops,
+                "trial {trial}"
+            );
+            assert_eq!(scratch.inactivation_ops, stats.inactivation_ops, "trial {trial}");
         }
     }
 

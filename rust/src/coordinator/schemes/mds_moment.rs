@@ -110,7 +110,7 @@ impl GradientScheme for MdsMomentScheme {
                 out.gradient[lo + p] = msg[p] - self.b[lo + p];
             }
         }
-        Ok(DecodeStats { unrecovered_coords: 0, decode_rounds: 0 })
+        Ok(DecodeStats::default())
     }
 }
 

@@ -35,8 +35,17 @@ pub struct DecodeOutput {
 pub struct DecodeStats {
     /// Gradient coordinates left at zero (the set `U_t`).
     pub unrecovered_coords: usize,
-    /// Peeling rounds actually executed.
+    /// Peeling rounds actually executed (rung 1 of the decode ladder).
     pub decode_rounds: usize,
+    /// BP escalation rounds fired after a peeling stall (0 unless the
+    /// LDPC ladder decoder escalated).
+    pub bp_rounds: usize,
+    /// Coordinates resolved by the BP rung, including the re-peeling it
+    /// unlocked.
+    pub bp_ops: usize,
+    /// Coordinates solved exactly by the inactivation (Gauss–Jordan)
+    /// rung.
+    pub inactivation_ops: usize,
 }
 
 /// Reusable decode workspace. The master allocates one per run and hands
@@ -70,6 +79,14 @@ pub struct DecodeScratch {
     /// tracing layer exports it as `PeelRound` events; schemes that
     /// never fill it cost one `clear()` per step.
     pub peel_round_ops: Vec<usize>,
+    /// Ops resolved per BP escalation round (LDPC ladder decoder),
+    /// exported by the tracing layer as `BpRound` events. Empty when the
+    /// decode never escalated.
+    pub bp_round_ops: Vec<usize>,
+    /// Ops emitted by the inactivation rung of the last decode (LDPC
+    /// ladder decoder), exported as a single `Inactivation` event when
+    /// nonzero.
+    pub inactivation_ops: usize,
 }
 
 /// Run a scheme's buffer-reusing decode with a throwaway scratch and
@@ -130,6 +147,7 @@ pub trait GradientScheme: Send + Sync {
         Ok(DecodeStats {
             unrecovered_coords: o.unrecovered_coords,
             decode_rounds: o.decode_rounds,
+            ..Default::default()
         })
     }
 

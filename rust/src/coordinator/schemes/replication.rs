@@ -94,7 +94,7 @@ impl GradientScheme for ReplicationScheme {
             }
         }
         let unrecovered_coords = lost_parts * self.k / self.assignment.num_parts();
-        Ok(DecodeStats { unrecovered_coords, decode_rounds: 0 })
+        Ok(DecodeStats { unrecovered_coords, ..Default::default() })
     }
 }
 

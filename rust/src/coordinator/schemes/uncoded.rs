@@ -89,7 +89,7 @@ impl GradientScheme for UncodedScheme {
         // sample mass; we report the number of lost *blocks* times k/w as
         // an effective-coordinates figure so the metric is comparable.
         let unrecovered_coords = missing * self.k / self.workers;
-        Ok(DecodeStats { unrecovered_coords, decode_rounds: 0 })
+        Ok(DecodeStats { unrecovered_coords, ..Default::default() })
     }
 }
 

@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::codes::ldpc::LdpcCode;
 use crate::codes::mds::{EvalPoints, VandermondeCode};
+use crate::codes::peeling::DecoderKind;
 use crate::config::RunConfig;
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::faults::{fault_plans, FaultModel};
@@ -36,8 +37,9 @@ use crate::sim::{
 /// Declarative scheme choice (factory).
 #[derive(Debug, Clone)]
 pub enum SchemeSpec {
-    /// Scheme 2: `(n, k)` LDPC with `(l, r)`-regular ensemble.
-    Ldpc { code_k: usize, l: usize, r: usize, seed: u64 },
+    /// Scheme 2: `(n, k)` LDPC with `(l, r)`-regular ensemble, decoded
+    /// with `decoder` (greedy peel-only, or the full decode ladder).
+    Ldpc { code_k: usize, l: usize, r: usize, seed: u64, decoder: DecoderKind },
     /// Scheme 1: `(n, k)` systematic Vandermonde MDS.
     Mds { code_k: usize },
     /// Uncoded data-parallel.
@@ -71,9 +73,9 @@ impl SchemeSpec {
         workers: usize,
     ) -> Result<Box<dyn GradientScheme>> {
         Ok(match *self {
-            SchemeSpec::Ldpc { code_k, l, r, seed } => {
+            SchemeSpec::Ldpc { code_k, l, r, seed, decoder } => {
                 let code = LdpcCode::gallager(workers, code_k, l, r, seed)?;
-                Box::new(LdpcMomentScheme::new(problem, code)?)
+                Box::new(LdpcMomentScheme::new(problem, code)?.with_decoder(decoder))
             }
             SchemeSpec::Mds { code_k } => {
                 let code = VandermondeCode::new(workers, code_k, EvalPoints::Chebyshev)?;
@@ -95,7 +97,13 @@ impl SchemeSpec {
     /// The §4 line-up: the paper's scheme plus its four baselines.
     pub fn paper_lineup(workers: usize) -> Vec<SchemeSpec> {
         vec![
-            SchemeSpec::Ldpc { code_k: workers / 2, l: 3, r: 6, seed: 7 },
+            SchemeSpec::Ldpc {
+                code_k: workers / 2,
+                l: 3,
+                r: 6,
+                seed: 7,
+                decoder: DecoderKind::Ladder,
+            },
             SchemeSpec::Ksdy { kind: SketchKind::Hadamard, beta: 2.0, seed: 11 },
             SchemeSpec::Ksdy { kind: SketchKind::Gaussian, beta: 2.0, seed: 13 },
             SchemeSpec::Uncoded,
@@ -449,7 +457,7 @@ mod tests {
             straggler_seed_base: 100,
         };
         let agg = run_trials(
-            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
+            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder },
             &p,
             &spec,
         )
@@ -475,7 +483,7 @@ mod tests {
             faults: FaultModel::none(),
         };
         let agg = run_sim_trials(
-            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
+            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder },
             &p,
             &spec,
             &sim,
@@ -506,7 +514,8 @@ mod tests {
             pipeline: None,
             faults: FaultModel::none(),
         };
-        let scheme = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 };
+        let scheme =
+            SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder };
         let a = run_sim_trials(&scheme, &p, &mk(100), &sim).unwrap();
         let b = run_sim_trials(&scheme, &p, &mk(900), &sim).unwrap();
         let c = run_sim_trials(&scheme, &p, &mk(100), &sim).unwrap();
@@ -530,7 +539,8 @@ mod tests {
             straggler_seed_base: 70,
         };
         let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 0 };
-        let scheme = SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 };
+        let scheme =
+            SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder };
         let sync = SimSpec {
             latency: latency.clone(),
             policy: DeadlinePolicy::WaitForK(34),
@@ -581,7 +591,7 @@ mod tests {
             faults: FaultModel::none(),
         };
         let agg = run_sim_trials(
-            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
+            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder },
             &p,
             &spec,
             &sim,
@@ -609,7 +619,7 @@ mod tests {
             faults: FaultModel { corrupt: 0.05, ..FaultModel::none() },
         };
         let agg = run_sim_trials(
-            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5 },
+            &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder },
             &p,
             &spec,
             &sim,

@@ -3,6 +3,7 @@
 
 use moment_ldpc::cli::{Args, USAGE};
 use moment_ldpc::codes::density::DensityEvolution;
+use moment_ldpc::codes::peeling::DecoderKind;
 use moment_ldpc::config::RunConfig;
 use moment_ldpc::coordinator::faults::{FaultModel, RetryPolicy};
 use moment_ldpc::coordinator::schemes::ksdy::SketchKind;
@@ -59,12 +60,17 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn scheme_spec_from(name: &str, args: &Args, workers: usize) -> Result<SchemeSpec> {
     let seed = args.get::<u64>("code-seed", 7)?;
+    let decoder_str = args.get_str("decoder", DecoderKind::default().as_str());
+    let decoder = DecoderKind::parse(&decoder_str).ok_or_else(|| {
+        Error::Config(format!("unknown decoder '{decoder_str}' (peel|ladder)"))
+    })?;
     Ok(match name {
         "ldpc" => SchemeSpec::Ldpc {
             code_k: args.get::<usize>("code-k", workers / 2)?,
             l: args.get::<usize>("ldpc-l", 3)?,
             r: args.get::<usize>("ldpc-r", 6)?,
             seed,
+            decoder,
         },
         "mds" => SchemeSpec::Mds { code_k: args.get::<usize>("code-k", workers / 2)? },
         "uncoded" => SchemeSpec::Uncoded,

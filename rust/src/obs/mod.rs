@@ -59,6 +59,15 @@ pub enum SpanKind {
     /// the decode span is schematic (rounds are not timed
     /// individually).
     PeelRound,
+    /// Master lane: one BP escalation round of the decode ladder;
+    /// `task` holds the ops the round resolved (component resolution
+    /// plus the re-peeling it unlocked). Placement is schematic, like
+    /// `PeelRound`.
+    BpRound,
+    /// Master lane instant: the decode ladder's inactivation
+    /// (Gauss–Jordan) rung fired; `task` holds the coordinates it
+    /// solved.
+    Inactivation,
     /// Master lane: θ update + projection.
     Update,
     /// Worker lane: task compute (dispatch/θ-receipt → completion).
@@ -98,6 +107,8 @@ impl SpanKind {
             SpanKind::Comm => "comm",
             SpanKind::Decode => "decode",
             SpanKind::PeelRound => "peel_round",
+            SpanKind::BpRound => "bp_round",
+            SpanKind::Inactivation => "inactivation",
             SpanKind::Update => "update",
             SpanKind::Compute => "compute",
             SpanKind::ThetaWait => "theta_wait",

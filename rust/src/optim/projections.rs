@@ -52,8 +52,13 @@ impl Projection {
 
 /// `H_u`: zero all but the `u` largest-magnitude coordinates.
 /// O(k) selection via quickselect on a scratch copy; ties broken toward
-/// lower indices (deterministic).
+/// lower indices (deterministic). Magnitudes are ranked with
+/// [`f64::total_cmp`], which is total over NaN — a NaN coordinate ranks
+/// above every finite magnitude (and is kept) instead of panicking the
+/// comparator mid-sort.
 pub fn hard_threshold(theta: &mut [f64], u: usize) {
+    use std::cmp::Ordering;
+
     let k = theta.len();
     if u >= k {
         return;
@@ -67,22 +72,23 @@ pub fn hard_threshold(theta: &mut [f64], u: usize) {
     let thresh = {
         let idx = u - 1;
         // select_nth_unstable sorts descending around the pivot.
-        let (_, t, _) = mags.select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
+        let (_, t, _) = mags.select_nth_unstable_by(idx, |a, b| b.total_cmp(a));
         *t
     };
     // Keep entries strictly above the threshold, then fill remaining
-    // capacity with ties (scanning left to right for determinism).
-    let mut kept = theta.iter().filter(|v| v.abs() > thresh).count();
+    // capacity with ties (scanning left to right for determinism). The
+    // same total order as the selection above, so exactly u survive even
+    // when the threshold is NaN.
+    let mut kept = theta
+        .iter()
+        .filter(|v| v.abs().total_cmp(&thresh) == Ordering::Greater)
+        .count();
     for v in theta.iter_mut() {
-        let m = v.abs();
-        if m > thresh {
-            continue;
+        match v.abs().total_cmp(&thresh) {
+            Ordering::Greater => {}
+            Ordering::Equal if kept < u => kept += 1,
+            _ => *v = 0.0,
         }
-        if m == thresh && kept < u {
-            kept += 1;
-            continue;
-        }
-        *v = 0.0;
     }
 }
 
@@ -103,9 +109,15 @@ pub fn project_l1_ball(theta: &mut [f64], r: f64) {
     if l1 <= r {
         return;
     }
+    // A non-finite norm (NaN/inf coordinate) has no meaningful
+    // projection; leave θ unchanged rather than tripping the rho > 0
+    // invariant below on vacuous comparisons.
+    if !l1.is_finite() {
+        return;
+    }
     // Find the soft threshold tau via the sorted-magnitudes formula.
     let mut mags: Vec<f64> = theta.iter().map(|v| v.abs()).collect();
-    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    mags.sort_unstable_by(|a, b| b.total_cmp(a));
     let mut cumsum = 0.0;
     let mut rho = 0;
     let mut tau = 0.0;
@@ -178,7 +190,7 @@ mod tests {
             // magnitudes — no u-sparse vector does better.
             let err: f64 = orig.iter().zip(&ht).map(|(a, b)| (a - b) * (a - b)).sum();
             let mut mags: Vec<f64> = orig.iter().map(|v| v * v).collect();
-            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            mags.sort_by(|a, b| b.total_cmp(a));
             let best: f64 = mags.iter().skip(u).sum();
             assert!((err - best).abs() < 1e-10, "err {err} vs best {best}");
         }
@@ -266,6 +278,35 @@ mod tests {
                     assert!((a - b).abs() < 1e-10, "{proj:?} not idempotent");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn nan_inputs_do_not_panic() {
+        // A NaN coordinate (e.g. an upstream 0/0) must never panic a
+        // projection. hard_threshold ranks NaN as the largest magnitude
+        // and keeps it deterministically.
+        let mut v = vec![1.0, f64::NAN, 3.0, 2.0];
+        hard_threshold(&mut v, 2);
+        assert!(v[1].is_nan(), "{v:?}");
+        assert_eq!((v[0], v[2], v[3]), (0.0, 3.0, 0.0), "{v:?}");
+
+        // The ball projections leave a non-finite-norm vector unchanged.
+        let mut w = vec![f64::NAN, 5.0];
+        project_l1_ball(&mut w, 1.0);
+        assert!(w[0].is_nan() && w[1] == 5.0, "{w:?}");
+        let mut z = vec![f64::NAN, 5.0];
+        project_l2_ball(&mut z, 1.0);
+        assert!(z[0].is_nan() && z[1] == 5.0, "{z:?}");
+
+        // And the enum dispatch path.
+        for proj in [
+            Projection::HardThreshold(1),
+            Projection::L1Ball(1.0),
+            Projection::L2Ball(1.0),
+        ] {
+            let mut t = vec![f64::NAN, 1.0, -2.0];
+            proj.apply(&mut t);
         }
     }
 

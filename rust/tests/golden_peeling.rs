@@ -13,9 +13,10 @@
 //! (stopping sets), but on this code it must still fully solve the
 //! overwhelming majority of ML-recoverable patterns.
 
+use moment_ldpc::codes::ladder::LadderDecoder;
 use moment_ldpc::codes::ldpc::LdpcCode;
 use moment_ldpc::codes::peeling::PeelingDecoder;
-use moment_ldpc::linalg::rank;
+use moment_ldpc::linalg::{rank, Matrix};
 use moment_ldpc::rng::Rng;
 
 #[test]
@@ -99,9 +100,9 @@ fn peeling_matches_brute_force_on_all_erasure_patterns() {
 
 /// The same ground truth through the memoized path: `schedule_cached`
 /// must agree with the fresh schedule pattern for pattern. The sweep
-/// stays under the cache's wholesale-invalidation cap (1024 entries) so
-/// the second pass is served entirely from the cache — both the hit and
-/// the miss path are pinned against brute-force-checked schedules.
+/// stays under the cache's LRU capacity (1024 entries) so the second
+/// pass is served entirely from the cache — both the hit and the miss
+/// path are pinned against brute-force-checked schedules.
 #[test]
 fn cached_schedules_agree_with_fresh_across_sweep() {
     use moment_ldpc::codes::peeling::PeelScheduleCache;
@@ -131,4 +132,117 @@ fn cached_schedules_agree_with_fresh_across_sweep() {
     // Second pass must have been served entirely from the cache.
     assert_eq!(cache.misses(), sweep as u64);
     assert_eq!(cache.hits(), sweep as u64);
+}
+
+/// The decode ladder against the same brute-force oracle, across all
+/// 2^12 erasure patterns — but with a *stronger* contract than peeling:
+///
+/// * every uniquely solvable pattern (independent erased columns) must
+///   decode **exactly**, with nothing left unrecovered — the ladder's
+///   whole point is that stopping sets short of rank deficiency are not
+///   an excuse to zero coordinates;
+/// * on rank-deficient patterns, the unrecovered set must equal the
+///   per-coordinate oracle `{ j ∈ E : e_j ∉ rowspace(H_E) }`, and every
+///   coordinate *outside* that set still decodes exactly;
+/// * on patterns plain peeling already solves, the ladder's applied
+///   values are bitwise identical to the peel schedule's (empty tail).
+#[test]
+fn ladder_matches_brute_force_on_all_erasure_patterns() {
+    let n = 12usize;
+    let code = (0..20)
+        .find_map(|seed| LdpcCode::gallager(12, 6, 3, 6, seed).ok())
+        .expect("a (12,6) (3,6)-regular code must be constructible");
+    let h_dense = code.parity_check().to_dense(); // 6 x 12
+    let peel = PeelingDecoder::new(&code);
+    let ladder = LadderDecoder::new(&code);
+
+    let mut rng = Rng::new(77);
+    let x = rng.gaussian_vec(6);
+    let truth = code.encode(&x);
+
+    let mut full_rank = 0usize;
+    let mut rescued = 0usize; // full-rank patterns peeling alone stalls on
+    for mask in 0u32..(1 << n) {
+        let erased: Vec<usize> = (0..n).filter(|&i| mask >> i & 1 == 1).collect();
+        let base_rank = if erased.is_empty() {
+            0
+        } else {
+            rank(&h_dense.select_cols(&erased), 1e-9)
+        };
+        let ml_ok = base_rank == erased.len();
+
+        let psched = peel.schedule(&erased, n);
+        let lsched = ladder.schedule(&erased, n);
+        let mut received = truth.clone();
+        for &e in &erased {
+            received[e] = 0.0;
+        }
+        let mut peeled = received.clone();
+        psched.apply(&mut peeled);
+        lsched.apply(&mut received);
+
+        if ml_ok {
+            full_rank += 1;
+            assert!(
+                lsched.unrecovered.is_empty(),
+                "pattern {mask:#014b}: full-rank but ladder left {:?} unrecovered",
+                lsched.unrecovered
+            );
+            for i in 0..n {
+                assert!(
+                    (received[i] - truth[i]).abs() < 1e-8,
+                    "pattern {mask:#014b}: coordinate {i} decoded to {} instead of {}",
+                    received[i],
+                    truth[i]
+                );
+            }
+            if !psched.unrecovered.is_empty() {
+                rescued += 1;
+            }
+        } else {
+            // Per-coordinate oracle: x_j is determined by H_E x = b iff
+            // appending the row e_j does not raise the rank.
+            let sub = h_dense.select_cols(&erased);
+            let ncols = erased.len();
+            let mut oracle = Vec::new();
+            for (jj, &j) in erased.iter().enumerate() {
+                let mut rows: Vec<Vec<f64>> =
+                    (0..sub.rows()).map(|r| sub.row(r).to_vec()).collect();
+                let mut e = vec![0.0; ncols];
+                e[jj] = 1.0;
+                rows.push(e);
+                let aug = Matrix::from_rows(&rows).unwrap();
+                if rank(&aug, 1e-9) > base_rank {
+                    oracle.push(j);
+                }
+            }
+            let mut got = lsched.unrecovered.clone();
+            got.sort_unstable();
+            assert_eq!(got, oracle, "pattern {mask:#014b}: unrecovered set is wrong");
+            for i in 0..n {
+                if !oracle.contains(&i) {
+                    assert!(
+                        (received[i] - truth[i]).abs() < 1e-8,
+                        "pattern {mask:#014b}: determined coordinate {i} decoded to {} \
+                         instead of {}",
+                        received[i],
+                        truth[i]
+                    );
+                }
+            }
+        }
+
+        // Bit-identity with peel-only whenever peeling succeeds.
+        if psched.unrecovered.is_empty() {
+            assert!(lsched.tail.is_empty(), "pattern {mask:#014b}: spurious escalation");
+            for i in 0..n {
+                assert!(
+                    received[i].to_bits() == peeled[i].to_bits(),
+                    "pattern {mask:#014b}: ladder diverged from peeling at {i}"
+                );
+            }
+        }
+    }
+    assert!(full_rank >= 64, "only {full_rank} full-rank patterns");
+    assert!(rescued > 0, "the sweep never exercised the escalation rungs");
 }

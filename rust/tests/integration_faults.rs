@@ -266,3 +266,86 @@ fn thread_cluster_faults_and_retry_end_to_end() {
     assert!(fc.retried >= fc.recovered);
     assert_eq!(fc.down, 0, "no crash clauses were armed");
 }
+
+/// The decode-ladder pin, end to end under live faults: on identical
+/// deterministic schedules (the virtual-time simulators draw latency
+/// and faults independently of θ, and both schemes carry the same code,
+/// so every step sees the same erasure pattern) the ladder never leaves
+/// more coordinates unrecovered than peel-only — and whenever peeling
+/// alone already recovered everything, the ladder's trajectory is
+/// bit-for-bit the peel trajectory.
+#[test]
+fn ladder_dominates_peel_under_faults_on_both_simulators() {
+    use moment_ldpc::codes::peeling::DecoderKind;
+
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 42);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 2).unwrap();
+    let peel = LdpcMomentScheme::new(&problem, code.clone())
+        .unwrap()
+        .with_decoder(DecoderKind::Peel);
+    let ladder = LdpcMomentScheme::new(&problem, code)
+        .unwrap()
+        .with_decoder(DecoderKind::Ladder);
+    let cfg = RunConfig { rel_tol: 1e-4, max_steps: 500, ..Default::default() };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 33 };
+    let model = FaultModel::parse("crash:0.05,omit:0.05").unwrap().reseed(91);
+
+    // Synchronous simulator.
+    let sync_cfg = SimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(28))
+        .with_faults(model.clone());
+    let p = run_simulated(&peel, &problem, &cfg, &sync_cfg).unwrap();
+    let l = run_simulated(&ladder, &problem, &cfg, &sync_cfg).unwrap();
+    assert_eq!(p.totals.faults, l.totals.faults, "sync: fault draws must match");
+    assert!(
+        l.totals.unrecovered <= p.totals.unrecovered,
+        "sync: ladder left {} unrecovered, peel {}",
+        l.totals.unrecovered,
+        p.totals.unrecovered
+    );
+    assert!(
+        l.totals.degraded_steps <= p.totals.degraded_steps,
+        "sync: ladder degraded more steps than peel"
+    );
+    if p.totals.unrecovered == 0 {
+        assert_eq!(p.theta, l.theta, "sync: peel never stalled, yet ladder diverged");
+    }
+
+    // Asynchronous pipelined executor.
+    let async_cfg = AsyncSimConfig::new(latency, DeadlinePolicy::WaitForK(28), 2)
+        .with_faults(model);
+    let p = run_simulated_async(&peel, &problem, &cfg, &async_cfg).unwrap();
+    let l = run_simulated_async(&ladder, &problem, &cfg, &async_cfg).unwrap();
+    assert_eq!(p.totals.faults, l.totals.faults, "async: fault draws must match");
+    assert!(
+        l.totals.unrecovered <= p.totals.unrecovered,
+        "async: ladder left {} unrecovered, peel {}",
+        l.totals.unrecovered,
+        p.totals.unrecovered
+    );
+    if p.totals.unrecovered == 0 {
+        assert_eq!(p.theta, l.theta, "async: peel never stalled, yet ladder diverged");
+    }
+}
+
+/// The ladder on the OS-thread cluster, worst case: a fully corrupted
+/// fleet erases *every* coordinate, the residual system determines
+/// nothing, and the ladder — like peeling before it — must refuse to
+/// fabricate data. θ stays at the origin regardless of thread timing.
+#[test]
+fn thread_cluster_ladder_never_fabricates_under_total_corruption() {
+    let (scheme, problem) = scheme_and_problem(9);
+    let cfg = RunConfig {
+        rel_tol: 1e-6,
+        max_steps: 4,
+        faults: FaultModel { corrupt: 1.0, ..FaultModel::none() }.reseed(5),
+        ..Default::default()
+    };
+    let r = run_distributed(Box::new(scheme), &problem, &cfg).unwrap();
+    assert_eq!(r.steps, 4);
+    assert!(!r.converged);
+    assert!(
+        r.theta.iter().all(|&x| x == 0.0),
+        "an all-erased step determines nothing; the ladder must not move θ"
+    );
+    assert_eq!(r.totals.faults.corrupt, 40 * 4);
+}

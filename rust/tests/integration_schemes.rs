@@ -3,6 +3,7 @@
 //! paper's workload shapes (scaled down for CI), and the schemes order
 //! the way the paper's figures claim.
 
+use moment_ldpc::codes::peeling::DecoderKind;
 use moment_ldpc::config::RunConfig;
 use moment_ldpc::coordinator::straggler::StragglerModel;
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
@@ -72,7 +73,7 @@ fn paper_ordering_ldpc_beats_uncoded_at_high_straggling() {
     let p = RegressionProblem::generate(&SynthConfig::dense(320, 80), 4);
     let sp = spec(10, Projection::None, 10_000);
     let ldpc = run_trials(
-        &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 },
+        &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7, decoder: DecoderKind::Ladder },
         &p,
         &sp,
     )
@@ -121,7 +122,9 @@ fn exact_schemes_match_centralized_pgd_steps() {
     );
     // LDPC with 3 stragglers at D=40 nearly always decodes fully.
     let ldpc =
-        run_trials(&SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 }, &p, &sp).unwrap();
+        let spec =
+            SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7, decoder: DecoderKind::Ladder };
+        run_trials(&spec, &p, &sp).unwrap();
     assert!(
         (ldpc.mean_steps - central.steps as f64).abs() <= 2.0,
         "ldpc {} vs centralized {}",
@@ -165,7 +168,9 @@ fn bernoulli_straggling_converges_theorem1_regime() {
         straggler_seed_base: 70,
     };
     let agg =
-        run_trials(&SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7 }, &p, &sp).unwrap();
+        let spec =
+            SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 7, decoder: DecoderKind::Ladder };
+        run_trials(&spec, &p, &sp).unwrap();
     assert!(agg.convergence_rate > 0.99, "{agg:?}");
     // Analytic q_D for a length-40 code is only asymptotic, but the
     // measured erased fraction should be well below q0 after peeling.
