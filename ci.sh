@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 gate in one command: format, lint, test, examples, sim smoke.
+# Tier-1 gate in one command: format, lint, test, examples, sim smoke,
+# and a live networked-cluster smoke (TCP daemons + trace replay).
 #
 #   ./ci.sh            # fmt --check, clippy -D warnings, test -q,
 #                      # build --examples, and a quick `simulate` run
@@ -114,6 +115,45 @@ for l in lines:
     json.loads(l)
 print(f"{sys.argv[1]}: {len(lines)} step records, all valid JSON")
 PY
+
+echo "== networked-cluster smoke (2 TCP daemons, capture -> sim replay) =="
+cargo build -q
+rm -rf bench_out/ci_net
+mkdir -p bench_out/ci_net
+target/debug/moment_ldpc worker --listen 127.0.0.1:0 > bench_out/ci_net/w0.log &
+NET_W0=$!
+target/debug/moment_ldpc worker --listen 127.0.0.1:0 > bench_out/ci_net/w1.log &
+NET_W1=$!
+trap 'kill $NET_W0 $NET_W1 2>/dev/null || true' EXIT
+for log in bench_out/ci_net/w0.log bench_out/ci_net/w1.log; do
+    for _ in $(seq 1 100); do
+        grep -q '^listening ' "$log" 2>/dev/null && break
+        sleep 0.05
+    done
+    grep -q '^listening ' "$log" || { echo "worker daemon never came up: $log" >&2; exit 1; }
+done
+NET_ADDRS="$(sed -n 's/^listening //p' bench_out/ci_net/w0.log),$(sed -n 's/^listening //p' bench_out/ci_net/w1.log)"
+# 8 logical workers over the 2 daemons; capture trial 0's latency table.
+cargo run -q -- run --m 256 --k 64 --workers 8 --stragglers 0 --trials 1 \
+    --max-steps 20 --rel-tol 1e-9 \
+    --cluster tcp --addrs "$NET_ADDRS" --retries 1 --timeout-ms 5000 \
+    --capture-trace bench_out/ci_net/capture.txt
+test -s bench_out/ci_net/capture.txt || { echo "no captured latency table" >&2; exit 1; }
+# The captured table must replay through the simulator deterministically.
+cargo run -q -- simulate --workers 8 --k 32 --trials 1 \
+    --latency trace --trace-table bench_out/ci_net/capture.txt \
+    --policy wait-k --wait-k 6 --max-steps 200 --rel-tol 1e-2 \
+    --json > bench_out/ci_net/replay1.json
+cargo run -q -- simulate --workers 8 --k 32 --trials 1 \
+    --latency trace --trace-table bench_out/ci_net/capture.txt \
+    --policy wait-k --wait-k 6 --max-steps 200 --rel-tol 1e-2 \
+    --json > bench_out/ci_net/replay2.json
+diff bench_out/ci_net/replay1.json bench_out/ci_net/replay2.json \
+    || { echo "trace replay is not deterministic" >&2; exit 1; }
+# The master shut the daemons down over the wire; the trap is a backstop.
+
+echo "== net_loopback smoke (TCP-vs-threads overhead; writes *_smoke outputs) =="
+NET_LOOPBACK_SMOKE=1 cargo bench --bench net_loopback
 
 echo "== sim_faults smoke (tiny crash-rate sweep; writes *_smoke outputs) =="
 SIM_FAULTS_SMOKE=1 cargo bench --bench sim_faults

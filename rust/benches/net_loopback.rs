@@ -1,0 +1,126 @@
+//! Networked-backend overhead: what does real TCP cost per step?
+//!
+//! The thread cluster and the TCP executor run the *same* master loop
+//! over the same (8,4) moment-encoded scheme, so the per-step delta is
+//! pure transport: framing + checksums + loopback sockets + the
+//! heartbeat/reader machinery. Rows compare the OS-thread cluster
+//! against loopback fleets of 2 and 4 in-process daemons (8 slots
+//! round-robin), with the capture layer armed on the 4-daemon row to
+//! price it too.
+//!
+//! Structural facts asserted, not just tabulated:
+//! * every backend completes the fixed step budget fault-free;
+//! * the θ-trajectory is bit-identical across all rows (transport must
+//!   never change the math);
+//! * the captured latency table has one finite row per step.
+//!
+//! Output: a table on stdout, `bench_out/net_loopback.csv`, and
+//! `bench_out/BENCH_net_loopback.json` (cell → µs/step).
+//!
+//! Set `NET_LOOPBACK_SMOKE=1` (what ci.sh does) for a seconds-long run
+//! writing `*_smoke` file names.
+//!
+//! `cargo bench --offline --bench net_loopback`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::cluster::Cluster;
+use moment_ldpc::coordinator::faults::RetryPolicy;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::straggler::StragglerModel;
+use moment_ldpc::coordinator::{run_with_executor, ThreadStepExecutor};
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::bench::{bench_smoke, smoke_out_path};
+use moment_ldpc::harness::report::{write_csv, write_json_kv, Table};
+use moment_ldpc::net::{LocalWorker, NetConfig, TcpStepExecutor};
+use moment_ldpc::runtime::{ComputeBackend, NativeBackend};
+
+fn main() {
+    let smoke = bench_smoke("net_loopback");
+    let steps = if smoke { 40 } else { 300 };
+    let problem = RegressionProblem::generate(&SynthConfig::dense(240, 48), 17);
+    let code = LdpcCode::gallager(8, 4, 3, 6, 2).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        workers: 8,
+        straggler: StragglerModel::None,
+        rel_tol: 1e-15, // unreachable: every row runs exactly `steps`
+        max_steps: steps,
+        ..Default::default()
+    };
+    // A wide collection window: the bench measures cost, not timeouts.
+    let window = RetryPolicy { max_retries: 0, backoff_ms: 1.0, backoff_cap_ms: 8.0, timeout_ms: 5000.0 };
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+
+    let mut table = Table::new(
+        format!("loopback TCP vs OS threads, 8 slots, {steps} steps{}",
+            if smoke { ", SMOKE" } else { "" }),
+        &["backend", "daemons", "steps", "us/step", "capture"],
+    );
+    let mut json: Vec<(String, f64)> = Vec::new();
+
+    // Baseline: the OS-thread cluster.
+    let cluster = Cluster::spawn(scheme.payloads(), backend.clone());
+    let mut texec = ThreadStepExecutor::new(&cluster, &cfg.straggler);
+    let t0 = Instant::now();
+    let thread = run_with_executor(&scheme, &mut texec, &problem, &cfg).unwrap();
+    let thread_us = t0.elapsed().as_secs_f64() * 1e6 / steps as f64;
+    cluster.shutdown();
+    assert_eq!(thread.steps, steps, "thread row must run the full budget");
+    table.row(vec![
+        "threads".into(), "-".into(), format!("{steps}"), format!("{thread_us:.1}"), "off".into(),
+    ]);
+    json.push(("threads_us_per_step".into(), thread_us));
+
+    // Loopback TCP fleets: 2 daemons, then 4 with capture armed.
+    for (daemons, capture) in [(2usize, false), (4usize, true)] {
+        let fleet: Vec<LocalWorker> =
+            (0..daemons).map(|_| LocalWorker::spawn(backend.clone()).unwrap()).collect();
+        let addrs: Vec<String> = fleet.iter().map(|d| d.addr.clone()).collect();
+        let mut exec =
+            TcpStepExecutor::connect(scheme.payloads(), &cfg.straggler, NetConfig::new(addrs))
+                .unwrap()
+                .with_retry(window);
+        if capture {
+            exec.enable_capture();
+        }
+        let t0 = Instant::now();
+        let r = run_with_executor(&scheme, &mut exec, &problem, &cfg).unwrap();
+        let us = t0.elapsed().as_secs_f64() * 1e6 / steps as f64;
+        assert_eq!(r.steps, steps, "tcp/{daemons} row must run the full budget");
+        assert!(!r.totals.faults.any(), "loopback run must be fault-free: {}", r.summary());
+        assert_eq!(
+            r.theta, thread.theta,
+            "tcp/{daemons}: transport must never change the math"
+        );
+        if capture {
+            let cap = exec.take_capture().expect("capture armed");
+            assert_eq!(cap.len(), steps, "one captured row per step");
+            assert!(
+                cap.iter().all(|row| row.len() == 8
+                    && row.iter().all(|v| v.is_finite() && *v >= 0.0)),
+                "captured rows must be finite"
+            );
+        }
+        exec.shutdown();
+        table.row(vec![
+            "tcp".into(),
+            format!("{daemons}"),
+            format!("{steps}"),
+            format!("{us:.1}"),
+            if capture { "on" } else { "off" }.into(),
+        ]);
+        json.push((format!("tcp{daemons}_us_per_step"), us));
+    }
+
+    print!("{}", table.render());
+    let csv = smoke_out_path("bench_out/net_loopback.csv", smoke);
+    let jsonp = smoke_out_path("bench_out/BENCH_net_loopback.json", smoke);
+    write_csv(&table, std::path::Path::new(&csv)).unwrap();
+    write_json_kv(std::path::Path::new(&jsonp), &json).unwrap();
+    eprintln!("net_loopback done -> {csv}, {jsonp}");
+}

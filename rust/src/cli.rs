@@ -103,13 +103,36 @@ COMMANDS:
              [--faults SPEC] [--retries N ...] fault injection and
                re-dispatch, as in `simulate` (crash-restart degrades to
                crash-stop here: an OS thread cannot rejoin)
+             [--cluster threads|tcp] execution backend (default
+               threads: one OS thread per worker in-process)
+               [--addrs HOST:PORT,...] tcp daemon addresses; logical
+                 workers map onto them round-robin, so W workers can
+                 share fewer daemon processes
+               [--connect-timeout-ms F] [--redial-timeout-ms F]
+               [--heartbeat-ms F] [--heartbeat-misses N] failure
+                 detection: a connection silent for F*N ms is declared
+                 down; its shards re-dispatch to survivors (--retries)
+               [--capture-trace PATH] record trial 0's per-worker
+                 per-step collect latencies (ms) as a table replayable
+                 with `simulate --latency trace --trace-table PATH`
+               (injected --faults are thread/sim-only; over tcp, kill a
+                worker process instead — detection is socket-level)
+  worker     Serve coded-gradient steps over TCP until shut down
+             --listen HOST:PORT (port 0 picks an ephemeral port; the
+               daemon prints `listening HOST:PORT` on stdout)
+             [--backend native|pjrt] [--exit-after N] exit(86) before
+               the (N+1)-th served step — deterministic crash injection
+               for tests and demos
   simulate   Virtual-time run: deadline-driven collection over simulated
              workers (scales past host cores; default 512 workers)
              --workers N --m N --k N --scheme <as run> --trials N
              [--decoder peel|ladder] as in `run`
-             --latency shifted-exp|pareto|markov|hetero
+             --latency shifted-exp|pareto|markov|hetero|trace
                [--shift-ms F --rate F] [--scale-ms F --shape F]
                [--slowdown F --p-slow F --p-fast F] [--spread F]
+               [--trace-table PATH] (trace) replay a latency table
+                 captured from a real cluster by `run --cluster tcp
+                 --capture-trace PATH`; steps wrap past the end
              --policy all|wait-k|wait-fresh|deadline|quantile|mirror
                [--wait-k N] [--deadline-ms F]
                [--quantile F --slack F --window N] [--mirror-stragglers S]

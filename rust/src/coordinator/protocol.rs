@@ -166,17 +166,56 @@ pub enum Request {
     Shutdown,
 }
 
-/// FNV-1a over the response values' bit patterns: the wire checksum a
-/// worker attaches to its response and the master re-derives to detect
-/// in-transit corruption (mismatch ⇒ the response is erased, never
-/// decoded).
+/// FNV-1a offset basis (the digest of nothing at all).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over the response values' bit patterns alone. This is the
+/// payload half of the integrity story; responses on the wire carry
+/// [`response_digest`], which additionally binds the envelope fields —
+/// `checksum_of(&[])` is the bare offset basis, identical for every
+/// empty payload, so it can never authenticate a frame by itself.
 pub fn checksum_of(values: &[f64]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut h = FNV_OFFSET;
     for v in values {
-        for b in v.to_bits().to_le_bytes() {
-            h ^= u64::from(b);
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        h = fnv_fold(h, &v.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// The wire integrity digest a worker attaches to its response and the
+/// master re-derives to detect in-transit damage (mismatch ⇒ the
+/// response is erased, never decoded).
+///
+/// FNV-1a over the response *envelope* — worker id, step, sequence
+/// number, an Ok/Err discriminant — and then the payload's bit
+/// patterns (`values: None` is the Err case; errors carry no payload).
+/// Folding the envelope in means an empty or error response whose
+/// header was damaged in transit cannot verify: the digest of an empty
+/// `Ok` from worker 3 at step 5 differs from worker 4's, from step
+/// 6's, and from every `Err`.
+pub fn response_digest(worker: usize, t: usize, seq: u64, values: Option<&[f64]>) -> u64 {
+    let mut h = FNV_OFFSET;
+    h = fnv_fold(h, &(worker as u64).to_le_bytes());
+    h = fnv_fold(h, &(t as u64).to_le_bytes());
+    h = fnv_fold(h, &seq.to_le_bytes());
+    match values {
+        Some(vs) => {
+            h = fnv_fold(h, &[1]);
+            for v in vs {
+                h = fnv_fold(h, &v.to_bits().to_le_bytes());
+            }
         }
+        None => h = fnv_fold(h, &[0]),
     }
     h
 }
@@ -192,20 +231,19 @@ pub struct Response {
     pub seq: u64,
     /// Task result (see [`WorkerPayload::response_len`]).
     pub values: Result<Vec<f64>>,
-    /// Sender-side [`checksum_of`] the task result.
+    /// Sender-side [`response_digest`] of the envelope + task result.
     pub checksum: u64,
     /// Worker compute time in nanoseconds.
     pub compute_ns: u64,
 }
 
 impl Response {
-    /// Does the payload match its sender-side checksum? Errors carry no
-    /// payload to damage and verify trivially.
+    /// Does the response match its sender-side digest? The digest binds
+    /// the envelope (worker, step, seq) as well as the payload, so an
+    /// error or empty response with a damaged header fails too.
     pub fn verify(&self) -> bool {
-        match &self.values {
-            Ok(v) => checksum_of(v) == self.checksum,
-            Err(_) => true,
-        }
+        let values = self.values.as_ref().ok().map(|v| v.as_slice());
+        response_digest(self.worker, self.t, self.seq, values) == self.checksum
     }
 }
 
@@ -308,7 +346,7 @@ mod tests {
             worker: 0,
             t: 1,
             seq: 9,
-            checksum: checksum_of(&values),
+            checksum: response_digest(0, 1, 9, Some(&values)),
             values: Ok(values),
             compute_ns: 0,
         };
@@ -317,19 +355,53 @@ mod tests {
             v[7] = f64::from_bits(v[7].to_bits() ^ 1);
         }
         assert!(!r.verify(), "a one-bit flip must break the checksum");
-        // Distinct payloads hash apart; the empty payload is stable.
+        // Distinct payloads hash apart; the payload-only hash of the
+        // empty payload is the bare offset basis (which is exactly why
+        // the wire digest folds the envelope in too).
         assert_ne!(checksum_of(&[1.0]), checksum_of(&[2.0]));
         assert_eq!(checksum_of(&[]), 0xcbf2_9ce4_8422_2325);
-        // An error response has nothing to verify.
+        // An error response only verifies against its own envelope
+        // digest — a stale or damaged checksum no longer passes.
+        let boom = || crate::error::Error::Runtime("boom".into());
         let e = Response {
             worker: 0,
             t: 1,
             seq: 0,
-            values: Err(crate::error::Error::Runtime("boom".into())),
+            values: Err(boom()),
             checksum: 123,
             compute_ns: 0,
         };
+        assert!(!e.verify(), "an Err frame must not verify trivially");
+        let e = Response { checksum: response_digest(0, 1, 0, None), values: Err(boom()), ..e };
         assert!(e.verify());
+    }
+
+    #[test]
+    fn envelope_digest_binds_header_fields() {
+        // The empty-payload digest is no longer the bare FNV offset
+        // basis, and every envelope field participates: damage to the
+        // worker id, step, seq, or the Ok/Err discriminant — not just
+        // the payload — breaks verification.
+        let d = response_digest(0, 1, 9, Some(&[]));
+        assert_ne!(d, 0xcbf2_9ce4_8422_2325, "empty Ok must not hash to the basis");
+        assert_ne!(response_digest(0, 1, 9, None), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(d, response_digest(1, 1, 9, Some(&[])), "worker id folded in");
+        assert_ne!(d, response_digest(0, 2, 9, Some(&[])), "step folded in");
+        assert_ne!(d, response_digest(0, 1, 8, Some(&[])), "seq folded in");
+        assert_ne!(d, response_digest(0, 1, 9, None), "Ok/Err discriminant folded in");
+        // A header-damaged empty response fails verify: same payload,
+        // same checksum, shifted envelope.
+        let honest = Response {
+            worker: 3,
+            t: 5,
+            seq: 7,
+            checksum: response_digest(3, 5, 7, Some(&[])),
+            values: Ok(Vec::new()),
+            compute_ns: 0,
+        };
+        assert!(honest.verify());
+        let damaged = Response { worker: 4, values: Ok(Vec::new()), ..honest };
+        assert!(!damaged.verify(), "a damaged header must break the digest");
     }
 
     #[test]

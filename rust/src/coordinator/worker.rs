@@ -10,7 +10,7 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use crate::coordinator::faults::WorkerFaultPlan;
-use crate::coordinator::protocol::{checksum_of, Request, Response, WorkerPayload};
+use crate::coordinator::protocol::{response_digest, Request, Response, WorkerPayload};
 use crate::runtime::ComputeBackend;
 
 /// Per-thread CPU time in nanoseconds.
@@ -75,7 +75,8 @@ pub fn worker_loop(
                     .compute_into(&theta, backend.as_ref(), Some(id as u64), &mut buf)
                     .map(|()| buf);
                 let compute_ns = thread_cpu_ns().saturating_sub(start);
-                let mut checksum = values.as_ref().map(|v| checksum_of(v)).unwrap_or(0);
+                let mut checksum =
+                    response_digest(id, t, seq, values.as_ref().ok().map(|v| v.as_slice()));
                 if plan.corrupts(t) && faulted_at != t {
                     faulted_at = t;
                     if let Ok(v) = values.as_mut() {

@@ -318,6 +318,78 @@ pub fn run_trials_traced(
     Ok(stats.finish(scheme.name(), spec.trials))
 }
 
+/// Run `spec.trials` trials against a live TCP worker fleet — the
+/// multi-process counterpart of [`run_trials`]. The fleet is dialed
+/// once and reused across trials (daemons are stateless between steps
+/// beyond their payload assignments, which the executor re-pushes as
+/// needed). Injected fault models are rejected: over TCP the failures
+/// are real — kill a daemon, yank a cable — and the straggler mask is
+/// the only synthetic ingredient, so a fault-free fleet run stays
+/// θ-bit-identical to the thread cluster.
+pub fn run_net_trials(
+    scheme_spec: &SchemeSpec,
+    problem: &RegressionProblem,
+    spec: &ExperimentSpec,
+    net: &crate::net::NetConfig,
+    capture: Option<&std::path::Path>,
+) -> Result<Aggregate> {
+    run_net_trials_traced(scheme_spec, problem, spec, net, capture, None)
+}
+
+/// [`run_net_trials`] with an optional trace of trial 0 (wall-clock
+/// domain). With `capture` set, trial 0's per-step per-worker collect
+/// latencies are written there as a [`LatencyModel::Trace`] table.
+pub fn run_net_trials_traced(
+    scheme_spec: &SchemeSpec,
+    problem: &RegressionProblem,
+    spec: &ExperimentSpec,
+    net: &crate::net::NetConfig,
+    capture: Option<&std::path::Path>,
+    trace: Option<&TraceSpec>,
+) -> Result<Aggregate> {
+    if !spec.config.faults.is_none() {
+        return Err(crate::error::Error::Config(
+            "injected fault models are thread/sim-only; over TCP kill a worker process instead"
+                .into(),
+        ));
+    }
+    let scheme = scheme_spec.build(problem, spec.config.workers)?;
+    let mut exec = crate::net::TcpStepExecutor::connect(
+        scheme.payloads(),
+        &spec.config.straggler,
+        net.clone(),
+    )?
+    .with_retry(spec.config.retry);
+    if capture.is_some() {
+        exec.enable_capture();
+    }
+    let mut stats = TrialStats::default();
+    for trial in 0..spec.trials {
+        let seed = spec.straggler_seed_base + trial as u64;
+        let mut cfg = spec.config.clone();
+        cfg.straggler = reseed(&spec.config.straggler, seed);
+        exec.reseed_straggler(&cfg.straggler);
+        let tracer = trial_tracer(trial, trace, TimeDomain::WallNs);
+        let report = crate::coordinator::run_with_executor_traced(
+            scheme.as_ref(),
+            &mut exec,
+            problem,
+            &cfg,
+            tracer.as_ref(),
+        )?;
+        write_trial_trace(&tracer, trace)?;
+        if trial == 0 {
+            if let Some(path) = capture {
+                let table = exec.take_capture().unwrap_or_default();
+                crate::net::write_trace_table(path, &table)?;
+            }
+        }
+        stats.add(&report);
+    }
+    exec.shutdown();
+    Ok(stats.finish(scheme.name(), spec.trials))
+}
+
 /// Virtual-time counterpart of the experiment spec: a latency model and
 /// a deadline policy for the simulated master. The latency seed is
 /// varied per trial (base + trial index) exactly like the straggler

@@ -9,7 +9,7 @@ pub mod report;
 
 pub use bench::{bench_smoke, smoke_out_path};
 pub use experiment::{
-    run_sim_trials, run_sim_trials_traced, run_trials, run_trials_traced, Aggregate,
-    ExperimentSpec, PipelineSpec, SchemeSpec, SimSpec,
+    run_net_trials, run_net_trials_traced, run_sim_trials, run_sim_trials_traced, run_trials,
+    run_trials_traced, Aggregate, ExperimentSpec, PipelineSpec, SchemeSpec, SimSpec,
 };
 pub use report::{write_csv, Table};

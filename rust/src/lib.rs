@@ -61,6 +61,7 @@ pub mod data;
 pub mod error;
 pub mod harness;
 pub mod linalg;
+pub mod net;
 pub mod obs;
 pub mod optim;
 pub mod rng;
@@ -86,6 +87,7 @@ pub mod prelude {
     pub use crate::coordinator::straggler::{LatencyModel, StragglerModel};
     pub use crate::coordinator::{run_with_executor, StepExecutor};
     pub use crate::data::{RegressionProblem, SynthConfig};
+    pub use crate::net::{NetConfig, TcpStepExecutor};
     pub use crate::obs::{LogHistogram, SpanKind, TraceFormat, TraceSpec, Tracer};
     pub use crate::sim::deadline::DeadlinePolicy;
     pub use crate::sim::{run_simulated, SimCluster, SimConfig};

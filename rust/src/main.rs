@@ -11,8 +11,8 @@ use moment_ldpc::coordinator::straggler::{LatencyModel, StragglerModel};
 use moment_ldpc::data::{RegressionProblem, SynthConfig};
 use moment_ldpc::error::{Error, Result};
 use moment_ldpc::harness::experiment::{
-    run_sim_trials_traced, run_trials_traced, Aggregate, ExperimentSpec, PipelineSpec, SchemeSpec,
-    SimSpec,
+    run_net_trials_traced, run_sim_trials_traced, run_trials_traced, Aggregate, ExperimentSpec,
+    PipelineSpec, SchemeSpec, SimSpec,
 };
 use moment_ldpc::harness::figures::{fig1, fig2, fig3, FigureScale};
 use moment_ldpc::harness::report::{write_csv, Table};
@@ -48,6 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         "run" => cmd_run(args),
+        "worker" => cmd_worker(args),
         "simulate" => cmd_simulate(args),
         "fig1" => cmd_fig(args, 1),
         "fig2" => cmd_fig(args, 2),
@@ -139,17 +140,107 @@ fn cmd_run(args: &Args) -> Result<()> {
         straggler_seed_base: args.get::<u64>("straggler-seed", 1000)?,
     };
     let scheme = scheme_spec_from(&args.get_str("scheme", "ldpc"), args, workers)?;
-    let setup = if faults.is_none() {
+    let mut setup = if faults.is_none() {
         spec.config.straggler.name()
     } else {
         format!("{}/{}", spec.config.straggler.name(), faults.name())
     };
-    let agg = run_trials_traced(&scheme, &problem, &spec, trace.as_ref())?;
+    let cluster = args.get_str("cluster", "threads");
+    let capture = args.get_opt::<String>("capture-trace")?;
+    let agg = match cluster.as_str() {
+        "threads" => {
+            if capture.is_some() || args.get_opt::<String>("addrs")?.is_some() {
+                return Err(Error::Config(
+                    "--addrs / --capture-trace drive the networked backend: add \
+                     --cluster tcp"
+                        .into(),
+                ));
+            }
+            run_trials_traced(&scheme, &problem, &spec, trace.as_ref())?
+        }
+        "tcp" => {
+            let net = net_config_from(args)?;
+            setup = format!("{setup}/tcp({})", net.addrs.len());
+            let capture_path = capture.as_ref().map(std::path::PathBuf::from);
+            let agg = run_net_trials_traced(
+                &scheme,
+                &problem,
+                &spec,
+                &net,
+                capture_path.as_deref(),
+                trace.as_ref(),
+            )?;
+            if let Some(p) = &capture_path {
+                eprintln!("latency capture written -> {}", p.display());
+            }
+            agg
+        }
+        other => {
+            return Err(Error::Config(format!("unknown cluster '{other}' (threads|tcp)")))
+        }
+    };
     if let Some(ts) = &trace {
         eprintln!("trace written -> {}", ts.path.display());
     }
     print_aggregate(&agg, &setup, args.has("json"));
     Ok(())
+}
+
+/// Parse the `--cluster tcp` flags of `run`: the daemon address list
+/// and the optional heartbeat/dial tuning knobs.
+fn net_config_from(args: &Args) -> Result<moment_ldpc::net::NetConfig> {
+    let addrs_raw = args.get_opt::<String>("addrs")?.ok_or_else(|| {
+        Error::Config(
+            "--cluster tcp needs --addrs HOST:PORT[,HOST:PORT...] (start daemons with \
+             `moment-ldpc worker --listen ADDR`)"
+                .into(),
+        )
+    })?;
+    let addrs: Vec<String> = addrs_raw
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut net = moment_ldpc::net::NetConfig::new(addrs);
+    if let Some(v) = args.get_opt::<f64>("connect-timeout-ms")? {
+        net.connect_timeout_ms = v;
+    }
+    if let Some(v) = args.get_opt::<f64>("redial-timeout-ms")? {
+        net.redial_timeout_ms = v;
+    }
+    if let Some(v) = args.get_opt::<f64>("heartbeat-ms")? {
+        net.heartbeat_interval_ms = v;
+    }
+    if let Some(v) = args.get_opt::<u32>("heartbeat-misses")? {
+        net.heartbeat_misses = v;
+    }
+    Ok(net)
+}
+
+/// The `worker` subcommand: a long-lived daemon serving coded-gradient
+/// steps over TCP until the master sends a shutdown frame.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let listen = args.get_opt::<String>("listen")?.ok_or_else(|| {
+        Error::Config("worker needs --listen ADDR (e.g. 127.0.0.1:7401 or 127.0.0.1:0)".into())
+    })?;
+    let backend: BackendChoice = args
+        .get_str("backend", "native")
+        .parse()
+        .map_err(Error::Config)?;
+    let cfg = RunConfig { backend, ..Default::default() };
+    let backend = moment_ldpc::coordinator::make_backend(&cfg)?;
+    let listener = moment_ldpc::net::bind_reusable(&listen)?;
+    let addr = listener.local_addr()?;
+    // Parents (ci.sh, the integration tests) poll stdout for this line
+    // to learn the ephemeral port when --listen ends in :0.
+    println!("listening {addr}");
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    let opts = moment_ldpc::net::WorkerOptions {
+        backend,
+        exit_after_steps: args.get_opt::<u64>("exit-after")?,
+    };
+    moment_ldpc::net::serve(listener, opts)
 }
 
 /// Parse `--trace PATH [--trace-format chrome|jsonl] [--trace-ring N]`.
@@ -186,7 +277,13 @@ fn latency_model_from(args: &Args) -> Result<LatencyModel> {
     let seed = 0;
     let shift_ms = args.get::<f64>("shift-ms", 1.0)?;
     let rate = args.get::<f64>("rate", 0.5)?;
-    Ok(match args.get_str("latency", "shifted-exp").as_str() {
+    let name = args.get_str("latency", "shifted-exp");
+    if name != "trace" && args.get_opt::<String>("trace-table")?.is_some() {
+        return Err(Error::Config(
+            "--trace-table replays a captured latency table: add --latency trace".into(),
+        ));
+    }
+    Ok(match name.as_str() {
         "shifted-exp" => LatencyModel::ShiftedExp { shift_ms, rate, seed },
         "pareto" => LatencyModel::Pareto {
             scale_ms: args.get::<f64>("scale-ms", 1.0)?,
@@ -207,6 +304,18 @@ fn latency_model_from(args: &Args) -> Result<LatencyModel> {
             spread: args.get::<f64>("spread", 3.0)?,
             seed,
         },
+        "trace" => {
+            let path = args.get_opt::<String>("trace-table")?.ok_or_else(|| {
+                Error::Config(
+                    "--latency trace replays a captured table: add --trace-table PATH \
+                     (write one with `run --cluster tcp --capture-trace PATH`)"
+                        .into(),
+                )
+            })?;
+            let table =
+                moment_ldpc::net::read_trace_table(std::path::Path::new(&path))?;
+            LatencyModel::Trace { table: std::sync::Arc::new(table) }
+        }
         other => return Err(Error::Config(format!("unknown latency model '{other}'"))),
     })
 }

@@ -1,0 +1,788 @@
+//! [`TcpStepExecutor`] — the networked master half of the cluster.
+//!
+//! Implements [`StepExecutor`] over real TCP connections so
+//! [`crate::coordinator::run_with_executor`] drives a multi-process
+//! deployment with the *same* master loop as the OS-thread cluster and
+//! the virtual-time simulator. Design points:
+//!
+//! * **Slots over connections.** The scheme's `w` logical workers
+//!   ("slots") are mapped round-robin onto the configured daemon
+//!   addresses; each connection hosts `⌈w / addrs⌉` slots. A slot's
+//!   payload is pushed (`K_ASSIGN`) the first time its connection
+//!   needs it, so a reconnecting daemon re-registers lazily.
+//! * **Failure detection.** Each connection has a reader thread that
+//!   polls with a read timeout of one heartbeat interval and declares
+//!   the peer dead after `heartbeat_misses` intervals of silence — a
+//!   dead socket thus becomes `down` accounting (and a `Heartbeat`
+//!   trace instant) within a bounded window rather than a hung step.
+//!   Write failures kill the connection immediately.
+//! * **Elastic membership.** At every step boundary (and every retry
+//!   round) down addresses are re-dialed with a short timeout; a
+//!   daemon that came back re-registers mid-job, receives the current
+//!   θ with the next step broadcast, and degraded steps stop accruing.
+//!   This is strictly stronger than the thread cluster, where a
+//!   crashed worker thread is documented to stay down (crash-stop).
+//! * **Re-dispatch to survivors.** The thread cluster can only retry a
+//!   missing block on the worker that owns the shard. Over TCP the
+//!   master holds every payload, so a retry round re-assigns a dead
+//!   slot's shard to a surviving connection — crashes become
+//!   recoverable, not just omissions.
+//! * **Trace capture.** With capture enabled, every step appends one
+//!   row of per-slot first-attempt collect latencies (ms; slots that
+//!   never answered get the full collection window), in exactly the
+//!   per-step per-worker shape of
+//!   [`crate::coordinator::straggler::record_trace`] — so a captured
+//!   real-cluster run replays through
+//!   [`crate::coordinator::straggler::LatencyModel::Trace`] as a
+//!   reproducible sim scenario.
+
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::faults::{FaultCounts, RetryPolicy};
+use crate::coordinator::protocol::{Response, WorkerPayload};
+use crate::coordinator::straggler::{StragglerModel, StragglerSampler};
+use crate::coordinator::{RedispatchOutcome, StepExecution, StepExecutor};
+use crate::error::{Error, Result};
+use crate::net::frame::{read_frame, write_frame, ReadFrame};
+use crate::net::wire::{self, SeqGate};
+use crate::obs::{SharedTracer, SpanKind};
+
+/// Cluster transport knobs.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Daemon addresses (`host:port`); slots map onto them round-robin.
+    pub addrs: Vec<String>,
+    /// Initial dial timeout (ms) — [`TcpStepExecutor::connect`] fails
+    /// fast if any address is unreachable.
+    pub connect_timeout_ms: f64,
+    /// Per-step re-dial timeout (ms) for down addresses. Kept short so
+    /// a dead daemon costs each step a bounded probe, not a stall.
+    pub redial_timeout_ms: f64,
+    /// Heartbeat interval (ms) the daemons are told to emit at; also
+    /// the reader threads' poll granularity.
+    pub heartbeat_interval_ms: f64,
+    /// Intervals of total silence before a connection is declared
+    /// dead (the miss budget).
+    pub heartbeat_misses: u32,
+}
+
+impl NetConfig {
+    /// Defaults tuned for LAN/loopback: 1 s dial, 50 ms re-dial probe,
+    /// 25 ms heartbeats with a 4-miss budget (dead in ≤ 100 ms).
+    pub fn new(addrs: Vec<String>) -> Self {
+        NetConfig {
+            addrs,
+            connect_timeout_ms: 1000.0,
+            redial_timeout_ms: 50.0,
+            heartbeat_interval_ms: 25.0,
+            heartbeat_misses: 4,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.addrs.is_empty() {
+            return Err(Error::Config("tcp cluster needs at least one worker address".into()));
+        }
+        for v in [
+            self.connect_timeout_ms,
+            self.redial_timeout_ms,
+            self.heartbeat_interval_ms,
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(Error::Config("net timeouts must be finite and positive".into()));
+            }
+        }
+        if self.heartbeat_misses == 0 {
+            return Err(Error::Config("heartbeat miss budget must be at least 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// What a reader thread forwards to the master.
+enum Event {
+    /// A decoded, checksummed-enough-to-frame response.
+    Resp { conn: usize, gen: u64, resp: Response },
+    /// The connection ended: clean close, damaged framing, an I/O
+    /// error, or (`expired`) the heartbeat miss budget ran out.
+    Closed { conn: usize, gen: u64, expired: bool },
+}
+
+/// One live connection to a daemon address.
+struct Conn {
+    writer: TcpStream,
+    /// Generation stamp: events from a reader of a previous connection
+    /// to the same address are stale and ignored.
+    gen: u64,
+    /// Per-slot: has this connection been sent the slot's payload?
+    assigned: Vec<bool>,
+}
+
+fn ms_since(epoch: Instant) -> u64 {
+    epoch.elapsed().as_millis() as u64
+}
+
+/// [`StepExecutor`] over TCP daemons. See the module docs.
+pub struct TcpStepExecutor {
+    cfg: NetConfig,
+    retry: RetryPolicy,
+    payloads: Vec<WorkerPayload>,
+    /// Slot → home address index (`j % addrs.len()`).
+    home: Vec<usize>,
+    /// Per-address connection (None = down, awaiting re-dial).
+    conns: Vec<Option<Conn>>,
+    events_tx: Sender<Event>,
+    events_rx: Receiver<Event>,
+    epoch: Instant,
+    sampler: StragglerSampler,
+    next_seq: u64,
+    next_gen: u64,
+    gate: SeqGate,
+    sent: Vec<bool>,
+    dispatch_conn: Vec<usize>,
+    /// Generation of the connection each slot was dispatched on, so a
+    /// `Closed` event cancels exactly the dispatches it orphaned (and
+    /// never those re-issued on a replacement connection).
+    dispatch_gen: Vec<u64>,
+    slots: Vec<Option<Response>>,
+    capture: Option<Vec<Vec<f64>>>,
+    tracer: Option<SharedTracer>,
+    w: usize,
+    /// Encode scratch: message body and frame bytes.
+    body: Vec<u8>,
+    fbuf: Vec<u8>,
+}
+
+impl TcpStepExecutor {
+    /// Dial every address, shake hands, and map `payloads` onto the
+    /// fleet. Fails fast if any address is unreachable — a cluster
+    /// that starts degraded is a configuration error; degradation is
+    /// for failures that happen *after* liftoff.
+    pub fn connect(
+        payloads: &[WorkerPayload],
+        model: &StragglerModel,
+        cfg: NetConfig,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let w = payloads.len();
+        if w == 0 {
+            return Err(Error::Config("tcp cluster needs at least one worker slot".into()));
+        }
+        let (events_tx, events_rx) = mpsc::channel();
+        let mut exec = TcpStepExecutor {
+            home: (0..w).map(|j| j % cfg.addrs.len()).collect(),
+            conns: (0..cfg.addrs.len()).map(|_| None).collect(),
+            cfg,
+            retry: RetryPolicy::disabled(),
+            payloads: payloads.to_vec(),
+            events_tx,
+            events_rx,
+            epoch: Instant::now(),
+            sampler: model.sampler(),
+            next_seq: 1,
+            next_gen: 1,
+            gate: SeqGate::new(w),
+            sent: vec![false; w],
+            dispatch_conn: vec![0; w],
+            dispatch_gen: vec![0; w],
+            slots: (0..w).map(|_| None).collect(),
+            capture: None,
+            tracer: None,
+            w,
+            body: Vec::new(),
+            fbuf: Vec::new(),
+        };
+        for ai in 0..exec.cfg.addrs.len() {
+            exec.dial(ai, exec.cfg.connect_timeout_ms, 0)?;
+        }
+        Ok(exec)
+    }
+
+    /// Builder-style retry policy; `timeout_ms` is both the collection
+    /// deadline and the per-connection write timeout.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        let io = self.io_timeout();
+        for c in self.conns.iter().flatten() {
+            let _ = c.writer.set_write_timeout(Some(io));
+        }
+        self
+    }
+
+    /// Start recording per-step per-slot collect latencies.
+    pub fn enable_capture(&mut self) {
+        self.capture = Some(Vec::new());
+    }
+
+    /// Take the captured latency table (rows = steps, cols = slots)
+    /// and stop capturing.
+    pub fn take_capture(&mut self) -> Option<Vec<Vec<f64>>> {
+        self.capture.take()
+    }
+
+    /// Re-seed the straggler mask sampler (fresh trial, same fleet).
+    pub fn reseed_straggler(&mut self, model: &StragglerModel) {
+        self.sampler = model.sampler();
+    }
+
+    /// Consume the executor; `Drop` sends each daemon a shutdown frame.
+    pub fn shutdown(self) {}
+
+    /// How many daemon addresses are currently connected.
+    pub fn live_conns(&self) -> usize {
+        self.conns.iter().filter(|c| c.is_some()).count()
+    }
+
+    fn io_timeout(&self) -> Duration {
+        Duration::from_millis(self.retry.timeout_ms.max(100.0).ceil() as u64)
+    }
+
+    fn heartbeat_interval(&self) -> Duration {
+        Duration::from_secs_f64((self.cfg.heartbeat_interval_ms / 1000.0).max(0.001))
+    }
+
+    fn trace_now(&self) -> f64 {
+        self.tracer.as_ref().map_or(0.0, |tr| tr.borrow().now())
+    }
+
+    fn emit(&self, kind: SpanKind, lane: usize, step: usize, task: u64, begin: f64, end: f64) {
+        if let Some(tr) = &self.tracer {
+            tr.borrow_mut().span(kind, lane, step, task, begin, end);
+        }
+    }
+
+    fn emit_instant(&self, kind: SpanKind, step: usize, task: u64) {
+        if let Some(tr) = &self.tracer {
+            let mut tr = tr.borrow_mut();
+            let at = tr.now();
+            tr.instant(kind, 0, step, task, at);
+        }
+    }
+
+    /// Dial address `ai`, handshake, and spawn its reader thread.
+    fn dial(&mut self, ai: usize, timeout_ms: f64, step: usize) -> Result<()> {
+        let begin = self.trace_now();
+        let addr: SocketAddr = self.cfg.addrs[ai]
+            .parse()
+            .map_err(|_| Error::Config(format!("invalid worker address '{}'", self.cfg.addrs[ai])))?;
+        let stream =
+            TcpStream::connect_timeout(&addr, Duration::from_millis(timeout_ms.max(1.0).ceil() as u64))?;
+        stream.set_nodelay(true)?;
+        stream.set_write_timeout(Some(self.io_timeout()))?;
+        let reader = stream.try_clone()?;
+        reader.set_read_timeout(Some(self.heartbeat_interval()))?;
+
+        wire::encode_hello(&mut self.body, self.cfg.heartbeat_interval_ms);
+        write_frame(&mut &stream, wire::K_HELLO, &self.body, &mut self.fbuf)?;
+
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        self.spawn_reader(ai, gen, reader);
+        self.conns[ai] = Some(Conn { writer: stream, gen, assigned: vec![false; self.w] });
+        self.emit(SpanKind::Connect, 0, step, ai as u64, begin, self.trace_now());
+        Ok(())
+    }
+
+    fn spawn_reader(&self, ai: usize, gen: u64, mut stream: TcpStream) {
+        let tx = self.events_tx.clone();
+        let epoch = self.epoch;
+        let budget_ms =
+            (self.cfg.heartbeat_interval_ms * f64::from(self.cfg.heartbeat_misses)).ceil() as u64;
+        let last_heard = Arc::new(AtomicU64::new(ms_since(epoch)));
+        std::thread::spawn(move || {
+            let mut payload = Vec::new();
+            let mut expired = false;
+            loop {
+                let lh = Arc::clone(&last_heard);
+                let keep_waiting =
+                    move || ms_since(epoch).saturating_sub(lh.load(Ordering::Relaxed)) < budget_ms;
+                match read_frame(&mut stream, &mut payload, keep_waiting) {
+                    Ok(ReadFrame::Frame { kind }) => {
+                        // Any verified frame — response, heartbeat,
+                        // hello ack — proves the peer alive.
+                        last_heard.store(ms_since(epoch), Ordering::Relaxed);
+                        if kind == wire::K_RESPONSE {
+                            if let Ok(resp) = wire::decode_response(&payload) {
+                                if tx.send(Event::Resp { conn: ai, gen, resp }).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                    // A damaged payload under an intact header is a
+                    // detected erasure; the stream itself is fine.
+                    Ok(ReadFrame::CorruptPayload) => {
+                        last_heard.store(ms_since(epoch), Ordering::Relaxed);
+                    }
+                    Ok(ReadFrame::Eof) | Ok(ReadFrame::CorruptHeader) => break,
+                    Err(e) => {
+                        expired = e.kind() == std::io::ErrorKind::TimedOut;
+                        break;
+                    }
+                }
+            }
+            let _ = tx.send(Event::Closed { conn: ai, gen, expired });
+        });
+    }
+
+    /// Is this event's generation the current connection on `ai`?
+    fn gen_ok(&self, ai: usize, gen: u64) -> bool {
+        self.conns[ai].as_ref().map_or(false, |c| c.gen == gen)
+    }
+
+    fn kill_conn(&mut self, ai: usize) {
+        if let Some(c) = self.conns[ai].take() {
+            let _ = c.writer.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Handle a `Closed` event: if it names the live generation, drop
+    /// the connection (and emit the heartbeat-death instant if the
+    /// miss budget, not a clean close, killed it). Either way, disarm
+    /// every slot dispatched on exactly that generation — a dispatch
+    /// can outlive its connection (killed by a later write failure),
+    /// and waiting out the full deadline for an answer that can never
+    /// come would stall the step. Returns how many armed slots were
+    /// cancelled (the caller's `outstanding` decrement).
+    fn handle_closed(&mut self, ai: usize, gen: u64, step: usize, expired: bool) -> usize {
+        if self.gen_ok(ai, gen) {
+            self.kill_conn(ai);
+            if expired {
+                self.emit_instant(SpanKind::Heartbeat, step, ai as u64);
+            }
+        }
+        let mut cancelled = 0;
+        for j in 0..self.w {
+            if self.sent[j]
+                && self.dispatch_conn[j] == ai
+                && self.dispatch_gen[j] == gen
+                && self.gate.is_armed(j)
+            {
+                self.gate.disarm(j);
+                cancelled += 1;
+            }
+        }
+        cancelled
+    }
+
+    /// Drain any events queued between steps (late answers, deaths
+    /// noticed while the master was decoding).
+    fn drain_idle_events(&mut self, step: usize) {
+        loop {
+            let ev = self.events_rx.try_recv();
+            match ev {
+                Ok(Event::Resp { .. }) => continue, // stale answer, no gate armed
+                Ok(Event::Closed { conn, gen, expired }) => {
+                    if self.gen_ok(conn, gen) {
+                        self.kill_conn(conn);
+                        if expired {
+                            self.emit_instant(SpanKind::Heartbeat, step, conn as u64);
+                        }
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Re-dial every down address with the short per-step probe
+    /// timeout; a success is elastic membership in action.
+    fn redial_down(&mut self, step: usize) {
+        for ai in 0..self.conns.len() {
+            if self.conns[ai].is_some() {
+                continue;
+            }
+            if self.dial(ai, self.cfg.redial_timeout_ms, step).is_ok() {
+                self.emit_instant(SpanKind::Reconnect, step, ai as u64);
+            }
+        }
+    }
+
+    /// Send one frame on connection `ai` from `self.body`; a failed
+    /// write kills the connection. Returns whether the frame went out.
+    fn send_body(&mut self, ai: usize, kind: u8) -> bool {
+        let Some(c) = self.conns[ai].as_mut() else { return false };
+        if write_frame(&mut c.writer, kind, &self.body, &mut self.fbuf).is_err() {
+            self.kill_conn(ai);
+            return false;
+        }
+        true
+    }
+
+    /// Push slot `j`'s payload to connection `ai` if it has not seen
+    /// it yet (first dispatch after connect/reconnect, or a survivor
+    /// adopting a dead slot's shard during re-dispatch).
+    fn ensure_assigned(&mut self, ai: usize, j: usize) -> bool {
+        match self.conns[ai].as_ref() {
+            Some(c) if c.assigned[j] => return true,
+            Some(_) => {}
+            None => return false,
+        }
+        wire::encode_assign(&mut self.body, j as u32, &self.payloads[j]);
+        if !self.send_body(ai, wire::K_ASSIGN) {
+            return false;
+        }
+        if let Some(c) = self.conns[ai].as_mut() {
+            c.assigned[j] = true;
+        }
+        true
+    }
+
+    /// First alive connection, preferring slot `j`'s home address.
+    fn target_for(&self, j: usize) -> Option<usize> {
+        let home = self.home[j];
+        if self.conns[home].is_some() {
+            return Some(home);
+        }
+        (0..self.conns.len()).find(|&ai| self.conns[ai].is_some())
+    }
+
+    fn collect_deadline(&self) -> Instant {
+        Instant::now() + self.io_timeout()
+    }
+}
+
+impl Drop for TcpStepExecutor {
+    fn drop(&mut self) {
+        for ai in 0..self.conns.len() {
+            self.body.clear();
+            let _ = self.send_body(ai, wire::K_SHUTDOWN);
+        }
+    }
+}
+
+impl StepExecutor for TcpStepExecutor {
+    fn workers(&self) -> usize {
+        self.w
+    }
+
+    fn set_tracer(&mut self, tracer: SharedTracer) {
+        self.tracer = Some(tracer);
+    }
+
+    fn execute_step(
+        &mut self,
+        t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+    ) -> Result<StepExecution> {
+        // The mask sampler draws first, unconditionally — the exact
+        // discipline of the thread executor, which is what makes a
+        // fault-free TCP run θ-bit-identical to a thread run on the
+        // same seed.
+        let straggling = self.sampler.next_step(self.w);
+        let trace_begin = self.trace_now();
+
+        self.drain_idle_events(t);
+        self.redial_down(t);
+
+        let mut fc = FaultCounts::default();
+        self.gate.reset();
+        self.sent.iter_mut().for_each(|s| *s = false);
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        for j in 0..self.w {
+            let ai = self.home[j];
+            // Broadcast goes to the slot's home only; cross-connection
+            // adoption is the retry layer's job.
+            if self.conns[ai].is_none() || !self.ensure_assigned(ai, j) {
+                fc.down += 1;
+                continue;
+            }
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            wire::encode_step(&mut self.body, j as u32, t as u64, seq, theta);
+            if !self.send_body(ai, wire::K_STEP) {
+                fc.down += 1;
+                continue;
+            }
+            self.gate.arm(j, seq);
+            self.sent[j] = true;
+            self.dispatch_conn[j] = ai;
+            self.dispatch_gen[j] = self.conns[ai].as_ref().map_or(0, |c| c.gen);
+            masked[j] = None; // buffer ownership does not round-trip TCP
+        }
+        let bcast_end = self.trace_now();
+        let dispatch_done = Instant::now();
+
+        let mut arrive_ms = vec![f64::NAN; self.w];
+        let mut outstanding = self.sent.iter().filter(|&&s| s).count();
+        let deadline = self.collect_deadline();
+        let interval = self.heartbeat_interval();
+        while outstanding > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let slice = (deadline - now).min(interval);
+            let ev = self.events_rx.recv_timeout(slice);
+            match ev {
+                Ok(Event::Resp { conn, gen, resp }) => {
+                    if !self.gen_ok(conn, gen) || resp.t != t {
+                        continue;
+                    }
+                    let j = resp.worker;
+                    if j < self.w && self.gate.accept(j, resp.seq) {
+                        arrive_ms[j] = dispatch_done.elapsed().as_secs_f64() * 1e3;
+                        self.slots[j] = Some(resp);
+                        outstanding -= 1;
+                    }
+                }
+                Ok(Event::Closed { conn, gen, expired }) => {
+                    outstanding -= self.handle_closed(conn, gen, t, expired);
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let collect_end = self.trace_now();
+        if self.tracer.is_some() {
+            self.emit(SpanKind::Broadcast, 0, t, 0, trace_begin, bcast_end);
+            self.emit(SpanKind::Collect, 0, t, 0, bcast_end, collect_end);
+        }
+        if let Some(cap) = self.capture.as_mut() {
+            let window_ms = dispatch_done.elapsed().as_secs_f64() * 1e3;
+            cap.push(
+                arrive_ms
+                    .iter()
+                    .map(|&a| if a.is_finite() { a } else { window_ms })
+                    .collect(),
+            );
+        }
+
+        // Mask phase — bit-for-bit the thread executor's semantics:
+        // stragglers are dropped by decree, silence from a reached
+        // worker is an omission, silence from an unreached one was
+        // already counted down, checksum mismatches erase, worker-side
+        // errors abort the run.
+        let mut worker_ns = 0u64;
+        let mut strag_iter = straggling.stragglers.iter().peekable();
+        for j in 0..self.w {
+            let is_straggler = matches!(strag_iter.peek(), Some(&&s) if s == j);
+            if is_straggler {
+                strag_iter.next();
+            }
+            let Some(r) = self.slots[j].take() else {
+                masked[j] = None;
+                if self.sent[j] {
+                    fc.omitted += 1;
+                    self.emit(SpanKind::Omitted, j + 1, t, 0, collect_end, collect_end);
+                } else {
+                    self.emit(SpanKind::Down, j + 1, t, 0, collect_end, collect_end);
+                }
+                continue;
+            };
+            let seq = r.seq;
+            if is_straggler {
+                masked[j] = None;
+                self.emit(SpanKind::Dropped, j + 1, t, seq, collect_end, collect_end);
+                continue;
+            }
+            let intact = r.verify();
+            let compute_ns = r.compute_ns;
+            let values = r
+                .values
+                .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
+            if !intact {
+                fc.corrupt += 1;
+                masked[j] = None;
+                self.emit(SpanKind::CorruptErase, j + 1, t, seq, collect_end, collect_end);
+                continue;
+            }
+            worker_ns = worker_ns.max(compute_ns);
+            self.emit(SpanKind::Compute, j + 1, t, seq, bcast_end, bcast_end + compute_ns as f64);
+            masked[j] = Some(values);
+        }
+        Ok(StepExecution {
+            stragglers: straggling.stragglers.len(),
+            worker_ns,
+            collect_ms: straggling.collect_ms,
+            faults: fc,
+        })
+    }
+
+    fn redispatch(
+        &mut self,
+        t: usize,
+        theta: &[f64],
+        masked: &mut [Option<Vec<f64>>],
+        retry: &RetryPolicy,
+    ) -> Result<RedispatchOutcome> {
+        let mut counts = FaultCounts::default();
+        // (slot, seq, connection, generation) still expected this round.
+        let mut expecting: Vec<(usize, u64, usize, u64)> = Vec::new();
+        for _attempt in 0..retry.max_retries {
+            if masked.iter().all(|m| m.is_some()) {
+                break;
+            }
+            // A retry round is also a membership round: a daemon that
+            // restarted since the broadcast gets re-dialed and can
+            // adopt work immediately.
+            self.drain_idle_events(t);
+            self.redial_down(t);
+            expecting.clear();
+            for j in 0..self.w {
+                if masked[j].is_some() {
+                    continue;
+                }
+                // Unlike the thread cluster, the master owns every
+                // payload: a dead slot's shard is re-assigned to any
+                // surviving connection.
+                let Some(ai) = self.target_for(j) else { continue };
+                if !self.ensure_assigned(ai, j) {
+                    continue;
+                }
+                let seq = self.next_seq;
+                self.next_seq += 1;
+                wire::encode_step(&mut self.body, j as u32, t as u64, seq, theta);
+                if !self.send_body(ai, wire::K_STEP) {
+                    continue;
+                }
+                counts.retried += 1;
+                let gen = self.conns[ai].as_ref().map_or(0, |c| c.gen);
+                expecting.push((j, seq, ai, gen));
+            }
+            if expecting.is_empty() {
+                break; // no one left to ask
+            }
+            let launch = self.trace_now();
+            let deadline = self.collect_deadline();
+            let interval = self.heartbeat_interval();
+            while !expecting.is_empty() {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let slice = (deadline - now).min(interval);
+                let ev = self.events_rx.recv_timeout(slice);
+                match ev {
+                    Ok(Event::Resp { conn, gen, resp }) => {
+                        if !self.gen_ok(conn, gen) || resp.t != t {
+                            continue;
+                        }
+                        let Some(pos) = expecting
+                            .iter()
+                            .position(|&(j, s, _, _)| j == resp.worker && s == resp.seq)
+                        else {
+                            continue;
+                        };
+                        let (j, seq, _, _) = expecting.swap_remove(pos);
+                        let intact = resp.verify();
+                        let values = resp
+                            .values
+                            .map_err(|e| Error::Runtime(format!("worker {j} failed: {e}")))?;
+                        let arrive = self.trace_now();
+                        self.emit(SpanKind::Retry, j + 1, t, seq, launch, arrive);
+                        if !intact {
+                            counts.corrupt += 1;
+                            self.emit(SpanKind::CorruptErase, j + 1, t, seq, arrive, arrive);
+                            continue;
+                        }
+                        self.emit(SpanKind::Arrival, j + 1, t, seq, arrive, arrive);
+                        masked[j] = Some(values);
+                        counts.recovered += 1;
+                    }
+                    Ok(Event::Closed { conn, gen, expired }) => {
+                        if self.gen_ok(conn, gen) {
+                            self.kill_conn(conn);
+                            if expired {
+                                self.emit_instant(SpanKind::Heartbeat, t, conn as u64);
+                            }
+                        }
+                        // Answers from that connection generation are
+                        // never coming; stop waiting for them.
+                        expecting.retain(|&(_, _, ai, g)| !(ai == conn && g == gen));
+                    }
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        Ok(RedispatchOutcome { faults: counts, extra_ms: 0.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::net::worker::LocalWorker;
+    use crate::runtime::NativeBackend;
+
+    fn rows_payloads() -> Vec<WorkerPayload> {
+        vec![
+            WorkerPayload::Rows {
+                rows: Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]).unwrap(),
+            },
+            WorkerPayload::Rows { rows: Matrix::from_rows(&[vec![2.0, 3.0]]).unwrap() },
+        ]
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(NetConfig::new(vec![]).validate().is_err());
+        let mut cfg = NetConfig::new(vec!["127.0.0.1:1".into()]);
+        assert!(cfg.validate().is_ok());
+        cfg.heartbeat_misses = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = NetConfig::new(vec!["127.0.0.1:1".into()]);
+        cfg.heartbeat_interval_ms = -1.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn connect_fails_fast_on_unreachable_address() {
+        let mut cfg = NetConfig::new(vec!["127.0.0.1:1".into()]);
+        cfg.connect_timeout_ms = 200.0;
+        let err = TcpStepExecutor::connect(&rows_payloads(), &StragglerModel::None, cfg);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn one_step_round_trip_over_loopback() {
+        let backend = Arc::new(NativeBackend);
+        let w0 = LocalWorker::spawn(backend.clone()).unwrap();
+        let w1 = LocalWorker::spawn(backend).unwrap();
+        let payloads = rows_payloads();
+        let cfg = NetConfig::new(vec![w0.addr.clone(), w1.addr.clone()]);
+        let mut exec =
+            TcpStepExecutor::connect(&payloads, &StragglerModel::None, cfg).unwrap();
+        assert_eq!(exec.workers(), 2);
+        assert_eq!(exec.live_conns(), 2);
+        let mut masked: Vec<Option<Vec<f64>>> = vec![None, None];
+        let stats = exec.execute_step(1, &[5.0, 7.0], &mut masked).unwrap();
+        assert_eq!(stats.stragglers, 0);
+        assert!(!stats.faults.any());
+        assert_eq!(masked[0].as_deref(), Some(&[5.0, 7.0][..]));
+        assert_eq!(masked[1].as_deref(), Some(&[31.0][..]));
+        exec.shutdown();
+    }
+
+    #[test]
+    fn capture_records_one_row_per_step_with_finite_latencies() {
+        let backend = Arc::new(NativeBackend);
+        let w0 = LocalWorker::spawn(backend).unwrap();
+        let payloads = rows_payloads();
+        let cfg = NetConfig::new(vec![w0.addr.clone()]);
+        let mut exec =
+            TcpStepExecutor::connect(&payloads, &StragglerModel::None, cfg).unwrap();
+        exec.enable_capture();
+        let mut masked: Vec<Option<Vec<f64>>> = vec![None, None];
+        for t in 1..=3 {
+            exec.execute_step(t, &[1.0, 1.0], &mut masked).unwrap();
+        }
+        let table = exec.take_capture().unwrap();
+        assert_eq!(table.len(), 3);
+        for row in &table {
+            assert_eq!(row.len(), 2);
+            assert!(row.iter().all(|v| v.is_finite() && *v >= 0.0));
+        }
+        assert!(exec.take_capture().is_none(), "capture is taken once");
+        exec.shutdown();
+    }
+}

@@ -1,0 +1,35 @@
+//! Networked TCP cluster backend — the multi-process deployment of
+//! the paper's master/worker protocol (std::net + libc only).
+//!
+//! Layers, bottom up:
+//!
+//! * [`frame`] — length-prefixed binary framing with independent
+//!   header and payload FNV-1a checksums, so damaged headers (not
+//!   just payloads) become detected erasures.
+//! * [`wire`] — message encodings (hello/assign/step/response/
+//!   heartbeat) over frames, plus the first-wins [`wire::SeqGate`].
+//! * [`worker`] — the `moment_ldpc worker --listen ADDR` daemon loop
+//!   and the in-process [`worker::LocalWorker`] used by tests/benches.
+//! * [`executor`] — [`TcpStepExecutor`], a
+//!   [`crate::coordinator::StepExecutor`] over real sockets with
+//!   heartbeat-driven failure detection, elastic membership
+//!   (reconnecting daemons rejoin mid-job), and cross-connection
+//!   re-dispatch of dead slots' shards.
+//! * [`trace`] — the captured-latency table format that replays a
+//!   real-cluster run through
+//!   [`crate::coordinator::straggler::LatencyModel::Trace`].
+//!
+//! The executor plugs into [`crate::coordinator::run_with_executor`]
+//! unchanged, so a fault-free TCP run on a fixed seed is θ-bit-
+//! identical to the OS-thread cluster — pinned in
+//! `tests/integration_net.rs`.
+
+pub mod executor;
+pub mod frame;
+pub mod trace;
+pub mod wire;
+pub mod worker;
+
+pub use executor::{NetConfig, TcpStepExecutor};
+pub use trace::{read_trace_table, write_trace_table};
+pub use worker::{bind_reusable, serve, LocalWorker, WorkerOptions};

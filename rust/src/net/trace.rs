@@ -1,0 +1,131 @@
+//! Captured latency-table file format: the bridge from a real TCP run
+//! back into the simulator.
+//!
+//! The table is plain text — `#`-prefixed comment lines, then one line
+//! per step of space-separated per-worker collect latencies in
+//! milliseconds. Values are written with Rust's shortest-round-trip
+//! `f64` formatting, so `write` → `read` reproduces every value
+//! bit-exactly and a replay through
+//! [`crate::coordinator::straggler::LatencyModel::Trace`] is
+//! deterministic.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Write a captured latency table (rows = steps, cols = workers).
+/// Parent directories are created as needed.
+pub fn write_trace_table(path: &Path, table: &[Vec<f64>]) -> Result<()> {
+    if table.is_empty() {
+        return Err(Error::Config("refusing to write an empty latency trace".into()));
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "# captured per-step per-worker collect latencies (ms)")?;
+    writeln!(w, "# steps={} workers={}", table.len(), table[0].len())?;
+    for row in table {
+        let mut first = true;
+        for v in row {
+            if first {
+                first = false;
+            } else {
+                write!(w, " ")?;
+            }
+            write!(w, "{v}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a latency table written by [`write_trace_table`] (or by hand).
+/// Every value must be a finite, non-negative f64; blank lines and
+/// `#` comments are skipped.
+pub fn read_trace_table(path: &Path) -> Result<Vec<Vec<f64>>> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| Error::Config(format!("cannot open trace table {}: {e}", path.display())))?;
+    let mut table = Vec::new();
+    for (ln, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut row = Vec::new();
+        for tok in line.split_ascii_whitespace() {
+            let v: f64 = tok.parse().map_err(|_| {
+                Error::Config(format!(
+                    "trace table {} line {}: '{tok}' is not a number",
+                    path.display(),
+                    ln + 1
+                ))
+            })?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(Error::Config(format!(
+                    "trace table {} line {}: latency {v} must be finite and >= 0",
+                    path.display(),
+                    ln + 1
+                )));
+            }
+            row.push(v);
+        }
+        if row.is_empty() {
+            continue;
+        }
+        table.push(row);
+    }
+    if table.is_empty() {
+        return Err(Error::Config(format!(
+            "trace table {} has no latency rows",
+            path.display()
+        )));
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::TempDir;
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let dir = TempDir::new("net_trace").unwrap();
+        let path = dir.path().join("capture/trace.txt");
+        let table = vec![
+            vec![0.0, 1.5, 2.25, 1e-3],
+            vec![100.125, 0.3333333333333333, 7.0, 42.0],
+        ];
+        write_trace_table(&path, &table).unwrap();
+        let got = read_trace_table(&path).unwrap();
+        assert_eq!(got.len(), table.len());
+        for (a, b) in got.iter().zip(&table) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "round-trip must be exact");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_tables() {
+        let dir = TempDir::new("net_trace_bad").unwrap();
+        assert!(write_trace_table(&dir.path().join("e.txt"), &[]).is_err());
+        let p = dir.path().join("junk.txt");
+        std::fs::write(&p, "# only comments\n\n").unwrap();
+        assert!(read_trace_table(&p).is_err(), "comment-only file has no rows");
+        std::fs::write(&p, "1.0 nope 2.0\n").unwrap();
+        assert!(read_trace_table(&p).is_err(), "non-numeric token rejected");
+        std::fs::write(&p, "1.0 -2.0\n").unwrap();
+        assert!(read_trace_table(&p).is_err(), "negative latency rejected");
+        std::fs::write(&p, "1.0 inf\n").unwrap();
+        assert!(read_trace_table(&p).is_err(), "non-finite latency rejected");
+        assert!(read_trace_table(&dir.path().join("missing.txt")).is_err());
+    }
+}

@@ -1,0 +1,507 @@
+//! Wire encoding of cluster messages over [`super::frame`] frames.
+//!
+//! Everything is little-endian and fixed-layout — no self-describing
+//! container, just the fields the protocol structs already carry.
+//! `f64` values travel as raw IEEE-754 bit patterns, so a value that
+//! round-trips the wire is *bit-identical* to the one computed (the
+//! loopback-vs-thread θ identity test depends on this).
+//!
+//! Message kinds:
+//!
+//! | kind          | dir            | payload |
+//! |---------------|----------------|---------|
+//! | `K_HELLO`     | master→worker  | version `u32`, heartbeat interval ms `f64` |
+//! | `K_HELLO_ACK` | worker→master  | version `u32` |
+//! | `K_ASSIGN`    | master→worker  | slot `u32`, [`WorkerPayload`] |
+//! | `K_STEP`      | master→worker  | slot `u32`, t `u64`, seq `u64`, θ (`u32` len + bits) |
+//! | `K_RESPONSE`  | worker→master  | slot `u32`, t `u64`, seq `u64`, ok `u8`, values *or* error string, digest `u64`, compute ns `u64` |
+//! | `K_HEARTBEAT` | worker→master  | empty |
+//! | `K_SHUTDOWN`  | master→worker  | empty |
+//!
+//! A "slot" is a logical worker index `j ∈ 0..w` — one TCP connection
+//! can host several slots (the master maps slots onto addresses
+//! round-robin), which is what lets a small daemon fleet serve a
+//! code's full worker count.
+
+use crate::coordinator::protocol::{CodedBlock, Response, WorkerPayload};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+/// Protocol version spoken by this build; a mismatched hello is
+/// rejected at handshake time, before any payload is trusted.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+pub const K_HELLO: u8 = 1;
+pub const K_HELLO_ACK: u8 = 2;
+pub const K_ASSIGN: u8 = 3;
+pub const K_STEP: u8 = 4;
+pub const K_RESPONSE: u8 = 5;
+pub const K_HEARTBEAT: u8 = 6;
+pub const K_SHUTDOWN: u8 = 7;
+
+// ---- writers --------------------------------------------------------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(out, vs.len() as u32);
+    out.reserve(vs.len() * 8);
+    for &v in vs {
+        put_f64(out, v);
+    }
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    put_u32(out, m.rows() as u32);
+    put_u32(out, m.cols() as u32);
+    for &v in m.as_slice() {
+        put_f64(out, v);
+    }
+}
+
+// ---- reader ---------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a payload slice. Every
+/// failure is an [`Error::Runtime`] — by the time a payload reaches a
+/// `Cursor` its checksum has verified, so a malformed field means a
+/// peer speaking a different dialect, not line noise.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| overrun())?;
+        if end > self.buf.len() {
+            return Err(overrun());
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a `u32`-prefixed f64 vector into `out` (cleared first).
+    pub fn f64s_into(&mut self, out: &mut Vec<f64>) -> Result<()> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(8).ok_or_else(overrun)?)?;
+        out.clear();
+        out.reserve(n);
+        for c in bytes.chunks_exact(8) {
+            out.push(f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())));
+        }
+        Ok(())
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let mut v = Vec::new();
+        self.f64s_into(&mut v)?;
+        Ok(v)
+    }
+
+    pub fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows.checked_mul(cols).ok_or_else(overrun)?;
+        let bytes = self.take(n.checked_mul(8).ok_or_else(overrun)?)?;
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(8) {
+            data.push(f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())));
+        }
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Runtime("wire: invalid utf-8 string".into()))
+    }
+
+    /// All payload bytes consumed?
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn overrun() -> Error {
+    Error::Runtime("wire: truncated message body".into())
+}
+
+// ---- hello ----------------------------------------------------------
+
+pub fn encode_hello(out: &mut Vec<u8>, heartbeat_interval_ms: f64) {
+    out.clear();
+    put_u32(out, PROTOCOL_VERSION);
+    put_f64(out, heartbeat_interval_ms);
+}
+
+pub struct HelloMsg {
+    pub version: u32,
+    pub heartbeat_interval_ms: f64,
+}
+
+pub fn decode_hello(buf: &[u8]) -> Result<HelloMsg> {
+    let mut c = Cursor::new(buf);
+    let msg = HelloMsg { version: c.u32()?, heartbeat_interval_ms: c.f64()? };
+    Ok(msg)
+}
+
+pub fn encode_hello_ack(out: &mut Vec<u8>) {
+    out.clear();
+    put_u32(out, PROTOCOL_VERSION);
+}
+
+// ---- assign ---------------------------------------------------------
+
+const PAYLOAD_IDLE: u8 = 0;
+const PAYLOAD_ROWS: u8 = 1;
+const PAYLOAD_LOCAL_GRAD: u8 = 2;
+const PAYLOAD_CODED_GRAD: u8 = 3;
+
+pub fn encode_assign(out: &mut Vec<u8>, slot: u32, payload: &WorkerPayload) {
+    out.clear();
+    put_u32(out, slot);
+    match payload {
+        WorkerPayload::Idle => put_u8(out, PAYLOAD_IDLE),
+        WorkerPayload::Rows { rows } => {
+            put_u8(out, PAYLOAD_ROWS);
+            put_matrix(out, rows);
+        }
+        WorkerPayload::LocalGrad { x, y } => {
+            put_u8(out, PAYLOAD_LOCAL_GRAD);
+            put_matrix(out, x);
+            put_f64s(out, y);
+        }
+        WorkerPayload::CodedGrad { blocks } => {
+            put_u8(out, PAYLOAD_CODED_GRAD);
+            put_u32(out, blocks.len() as u32);
+            for b in blocks {
+                put_f64(out, b.coeff);
+                put_matrix(out, &b.x);
+                put_f64s(out, &b.y);
+            }
+        }
+    }
+}
+
+pub struct AssignMsg {
+    pub slot: u32,
+    pub payload: WorkerPayload,
+}
+
+pub fn decode_assign(buf: &[u8]) -> Result<AssignMsg> {
+    let mut c = Cursor::new(buf);
+    let slot = c.u32()?;
+    let payload = match c.u8()? {
+        PAYLOAD_IDLE => WorkerPayload::Idle,
+        PAYLOAD_ROWS => WorkerPayload::Rows { rows: c.matrix()? },
+        PAYLOAD_LOCAL_GRAD => WorkerPayload::LocalGrad { x: c.matrix()?, y: c.f64s()? },
+        PAYLOAD_CODED_GRAD => {
+            let n = c.u32()? as usize;
+            let mut blocks = Vec::with_capacity(n);
+            for _ in 0..n {
+                blocks.push(CodedBlock { coeff: c.f64()?, x: c.matrix()?, y: c.f64s()? });
+            }
+            WorkerPayload::CodedGrad { blocks }
+        }
+        tag => {
+            return Err(Error::Runtime(format!("wire: unknown payload tag {tag}")));
+        }
+    };
+    Ok(AssignMsg { slot, payload })
+}
+
+// ---- step -----------------------------------------------------------
+
+pub fn encode_step(out: &mut Vec<u8>, slot: u32, t: u64, seq: u64, theta: &[f64]) {
+    out.clear();
+    put_u32(out, slot);
+    put_u64(out, t);
+    put_u64(out, seq);
+    put_f64s(out, theta);
+}
+
+pub struct StepMsg {
+    pub slot: u32,
+    pub t: u64,
+    pub seq: u64,
+}
+
+/// Decode a step header, reading θ into `theta` (cleared first).
+pub fn decode_step(buf: &[u8], theta: &mut Vec<f64>) -> Result<StepMsg> {
+    let mut c = Cursor::new(buf);
+    let slot = c.u32()?;
+    let t = c.u64()?;
+    let seq = c.u64()?;
+    c.f64s_into(theta)?;
+    Ok(StepMsg { slot, t, seq })
+}
+
+// ---- response -------------------------------------------------------
+
+pub fn encode_response(
+    out: &mut Vec<u8>,
+    slot: u32,
+    t: u64,
+    seq: u64,
+    values: &std::result::Result<Vec<f64>, String>,
+    digest: u64,
+    compute_ns: u64,
+) {
+    out.clear();
+    put_u32(out, slot);
+    put_u64(out, t);
+    put_u64(out, seq);
+    match values {
+        Ok(vs) => {
+            put_u8(out, 1);
+            put_f64s(out, vs);
+        }
+        Err(e) => {
+            put_u8(out, 0);
+            put_u32(out, e.len() as u32);
+            out.extend_from_slice(e.as_bytes());
+        }
+    }
+    put_u64(out, digest);
+    put_u64(out, compute_ns);
+}
+
+/// Decode a response into the coordinator's [`Response`] struct; the
+/// wire digest lands in `checksum`, so the master reuses the hardened
+/// [`Response::verify`] unchanged.
+pub fn decode_response(buf: &[u8]) -> Result<Response> {
+    let mut c = Cursor::new(buf);
+    let slot = c.u32()?;
+    let t = c.u64()?;
+    let seq = c.u64()?;
+    let values = match c.u8()? {
+        1 => Ok(c.f64s()?),
+        0 => Err(Error::Runtime(c.str()?)),
+        tag => {
+            return Err(Error::Runtime(format!("wire: bad ok/err discriminant {tag}")));
+        }
+    };
+    let checksum = c.u64()?;
+    let compute_ns = c.u64()?;
+    Ok(Response { worker: slot as usize, t: t as usize, seq, values, checksum, compute_ns })
+}
+
+// ---- sequence gate --------------------------------------------------
+
+/// First-wins per-slot answer acceptance. The master arms a slot with
+/// the seq it dispatched; an arriving response is accepted once iff the
+/// slot is armed with that exact seq — duplicates, answers to stale
+/// seqs, and answers for never-armed slots are all ignored.
+#[derive(Debug)]
+pub struct SeqGate {
+    expected: Vec<u64>,
+    armed: Vec<bool>,
+    filled: Vec<bool>,
+}
+
+impl SeqGate {
+    pub fn new(w: usize) -> Self {
+        SeqGate { expected: vec![0; w], armed: vec![false; w], filled: vec![false; w] }
+    }
+
+    /// Forget all arms/fills (start of a dispatch phase).
+    pub fn reset(&mut self) {
+        self.expected.iter_mut().for_each(|e| *e = 0);
+        self.armed.iter_mut().for_each(|a| *a = false);
+        self.filled.iter_mut().for_each(|f| *f = false);
+    }
+
+    /// Expect `seq` as the next answer for `slot`.
+    pub fn arm(&mut self, slot: usize, seq: u64) {
+        self.expected[slot] = seq;
+        self.armed[slot] = true;
+        self.filled[slot] = false;
+    }
+
+    /// Stop expecting an answer for `slot` (its connection died).
+    pub fn disarm(&mut self, slot: usize) {
+        self.armed[slot] = false;
+    }
+
+    pub fn is_armed(&self, slot: usize) -> bool {
+        self.armed[slot] && !self.filled[slot]
+    }
+
+    /// Accept the answer `(slot, seq)` if it is the armed, unfilled
+    /// expectation. Returns whether the caller should keep the answer.
+    pub fn accept(&mut self, slot: usize, seq: u64) -> bool {
+        if slot >= self.expected.len() {
+            return false;
+        }
+        if !self.armed[slot] || self.filled[slot] || self.expected[slot] != seq {
+            return false;
+        }
+        self.filled[slot] = true;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn hello_round_trip() {
+        let mut buf = Vec::new();
+        encode_hello(&mut buf, 25.0);
+        let h = decode_hello(&buf).unwrap();
+        assert_eq!(h.version, PROTOCOL_VERSION);
+        assert_eq!(h.heartbeat_interval_ms, 25.0);
+    }
+
+    #[test]
+    fn step_round_trip_is_bit_exact() {
+        let mut rng = Rng::new(11);
+        let mut theta = rng.gaussian_vec(33);
+        theta[0] = -0.0;
+        theta[1] = f64::MIN_POSITIVE / 2.0; // subnormal
+        let mut buf = Vec::new();
+        encode_step(&mut buf, 3, 17, 99, &theta);
+        let mut got = Vec::new();
+        let m = decode_step(&buf, &mut got).unwrap();
+        assert_eq!((m.slot, m.t, m.seq), (3, 17, 99));
+        assert_eq!(got.len(), theta.len());
+        for (a, b) in got.iter().zip(&theta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn response_round_trip_preserves_digest_fields() {
+        use crate::coordinator::protocol::response_digest;
+        let values = vec![1.5, -2.25, 0.0];
+        let digest = response_digest(4, 7, 12, Some(&values));
+        let mut buf = Vec::new();
+        encode_response(&mut buf, 4, 7, 12, &Ok(values.clone()), digest, 555);
+        let r = decode_response(&buf).unwrap();
+        assert_eq!((r.worker, r.t, r.seq, r.compute_ns), (4, 7, 12, 555));
+        assert!(r.verify(), "a round-tripped honest response verifies");
+        assert_eq!(r.values.unwrap(), values);
+
+        let digest = response_digest(2, 3, 5, None);
+        encode_response(&mut buf, 2, 3, 5, &Err("shard failed".into()), digest, 1);
+        let r = decode_response(&buf).unwrap();
+        assert!(r.verify());
+        assert_eq!(r.values.unwrap_err().to_string(), "runtime error: shard failed");
+    }
+
+    #[test]
+    fn assign_round_trip_all_payloads() {
+        let mut rng = Rng::new(5);
+        let payloads = [
+            WorkerPayload::Idle,
+            WorkerPayload::Rows { rows: Matrix::gaussian(3, 4, &mut rng) },
+            WorkerPayload::LocalGrad {
+                x: Matrix::gaussian(2, 3, &mut rng),
+                y: rng.gaussian_vec(2),
+            },
+            WorkerPayload::CodedGrad {
+                blocks: vec![
+                    CodedBlock {
+                        coeff: 0.5,
+                        x: Matrix::gaussian(2, 3, &mut rng),
+                        y: rng.gaussian_vec(2),
+                    },
+                    CodedBlock {
+                        coeff: -1.25,
+                        x: Matrix::gaussian(2, 3, &mut rng),
+                        y: rng.gaussian_vec(2),
+                    },
+                ],
+            },
+        ];
+        let mut buf = Vec::new();
+        for (i, p) in payloads.iter().enumerate() {
+            encode_assign(&mut buf, i as u32, p);
+            let m = decode_assign(&buf).unwrap();
+            assert_eq!(m.slot, i as u32);
+            // Compare through compute: payload equality via behavior.
+            let theta = rng.gaussian_vec(3);
+            let backend = crate::runtime::NativeBackend;
+            let theta_in = match p {
+                WorkerPayload::Rows { rows } => rng.gaussian_vec(rows.cols()),
+                _ => theta,
+            };
+            let want = p.compute(&theta_in, &backend).unwrap();
+            let got = m.payload.compute(&theta_in, &backend).unwrap();
+            assert_eq!(want.len(), got.len());
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "payload {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_bodies_error_not_panic() {
+        let mut buf = Vec::new();
+        encode_step(&mut buf, 1, 2, 3, &[1.0, 2.0, 3.0]);
+        let mut theta = Vec::new();
+        for cut in 0..buf.len() {
+            assert!(decode_step(&buf[..cut], &mut theta).is_err(), "cut {cut}");
+        }
+        encode_response(&mut buf, 1, 2, 3, &Ok(vec![1.0]), 9, 9);
+        for cut in 0..buf.len() {
+            assert!(decode_response(&buf[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn seq_gate_first_wins() {
+        let mut g = SeqGate::new(4);
+        g.arm(2, 10);
+        assert!(!g.accept(2, 9), "stale seq rejected");
+        assert!(!g.accept(1, 10), "unarmed slot rejected");
+        assert!(!g.accept(99, 10), "out-of-range slot rejected");
+        assert!(g.accept(2, 10), "armed seq accepted once");
+        assert!(!g.accept(2, 10), "duplicate rejected");
+        g.arm(2, 11);
+        assert!(g.is_armed(2));
+        g.disarm(2);
+        assert!(!g.is_armed(2));
+        assert!(!g.accept(2, 11), "disarmed slot rejected");
+        g.reset();
+        assert!(!g.accept(2, 0), "reset clears arms");
+    }
+}

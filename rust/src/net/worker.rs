@@ -1,0 +1,439 @@
+//! Networked worker daemon: `moment_ldpc worker --listen ADDR`.
+//!
+//! A daemon is a long-lived process that accepts one master connection
+//! at a time. The master's hello names the heartbeat interval; after
+//! the handshake the daemon receives slot assignments (`K_ASSIGN`) and
+//! step requests (`K_STEP`), computes each slot's task, and streams
+//! back digested responses — while a background thread emits
+//! heartbeats so the master's miss budget can tell a slow worker from
+//! a dead one. When the master disconnects the daemon returns to
+//! `accept`, which is exactly what makes elastic membership work: a
+//! master that re-dials a previously-dead address finds a fresh
+//! daemon (or a restarted one) willing to re-register mid-job.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::protocol::{response_digest, WorkerPayload};
+use crate::coordinator::worker::thread_cpu_ns;
+use crate::error::{Error, Result};
+use crate::net::frame::{read_frame, write_frame, ReadFrame};
+use crate::net::wire;
+use crate::runtime::ComputeBackend;
+
+/// Daemon configuration.
+pub struct WorkerOptions {
+    /// Backend used for every slot's compute.
+    pub backend: Arc<dyn ComputeBackend>,
+    /// Kill switch for fault-injection tests: the process exits
+    /// abruptly (no shutdown frame, no flush — `SIGKILL`-like) just
+    /// before serving step request number `n+1`.
+    pub exit_after_steps: Option<u64>,
+}
+
+enum ConnEnd {
+    /// The master sent `K_SHUTDOWN`: the daemon's job is done.
+    Shutdown,
+    /// The connection died or misbehaved; go back to `accept`.
+    Disconnected,
+}
+
+/// Serve master connections on `listener` until a master sends
+/// `K_SHUTDOWN`. Each connection is handled to completion before the
+/// next `accept` — a daemon serves one master at a time.
+pub fn serve(listener: TcpListener, opts: WorkerOptions) -> Result<()> {
+    // The daemon computes shards serially per step request; routing
+    // them through the shared linalg pool would only add contention
+    // when several daemons share a host (the loopback tests).
+    crate::linalg::pool::set_thread_inline(true);
+    let mut steps_served = 0u64;
+    loop {
+        let (stream, _peer) = listener.accept()?;
+        match serve_conn(stream, &opts, &mut steps_served) {
+            Ok(ConnEnd::Shutdown) => return Ok(()),
+            Ok(ConnEnd::Disconnected) | Err(_) => continue,
+        }
+    }
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    opts: &WorkerOptions,
+    steps_served: &mut u64,
+) -> Result<ConnEnd> {
+    stream.set_nodelay(true)?;
+    let mut reader = stream.try_clone()?;
+
+    // Handshake: the first frame must be a version-matched hello.
+    let mut payload = Vec::new();
+    let hello = match read_frame(&mut reader, &mut payload, || true)? {
+        ReadFrame::Frame { kind } if kind == wire::K_HELLO => wire::decode_hello(&payload)?,
+        _ => return Ok(ConnEnd::Disconnected),
+    };
+    if hello.version != wire::PROTOCOL_VERSION {
+        return Ok(ConnEnd::Disconnected);
+    }
+    let heartbeat = Duration::from_secs_f64((hello.heartbeat_interval_ms / 1000.0).max(0.001));
+
+    // All writes (responses, heartbeats, the hello ack) funnel through
+    // one writer thread so frames never interleave on the socket.
+    let (tx, rx) = mpsc::channel::<(u8, Vec<u8>)>();
+    let writer_handle = {
+        let mut w = stream;
+        std::thread::spawn(move || {
+            let mut scratch = Vec::new();
+            while let Ok((kind, body)) = rx.recv() {
+                if write_frame(&mut w, kind, &body, &mut scratch).is_err() {
+                    return;
+                }
+                if w.flush().is_err() {
+                    return;
+                }
+            }
+        })
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let heartbeat_handle = {
+        let tx = tx.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let tick = Duration::from_millis(10).min(heartbeat);
+            let mut slept = Duration::ZERO;
+            loop {
+                std::thread::sleep(tick);
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                slept += tick;
+                if slept >= heartbeat {
+                    slept = Duration::ZERO;
+                    if tx.send((wire::K_HEARTBEAT, Vec::new())).is_err() {
+                        return;
+                    }
+                }
+            }
+        })
+    };
+
+    let mut ack = Vec::new();
+    wire::encode_hello_ack(&mut ack);
+    let _ = tx.send((wire::K_HELLO_ACK, ack));
+
+    let end = conn_loop(&mut reader, &tx, opts, steps_served);
+
+    stop.store(true, Ordering::Relaxed);
+    drop(tx);
+    let _ = heartbeat_handle.join();
+    let _ = writer_handle.join();
+    end
+}
+
+fn conn_loop(
+    reader: &mut TcpStream,
+    tx: &mpsc::Sender<(u8, Vec<u8>)>,
+    opts: &WorkerOptions,
+    steps_served: &mut u64,
+) -> Result<ConnEnd> {
+    let mut slots: HashMap<u32, WorkerPayload> = HashMap::new();
+    let mut payload = Vec::new();
+    let mut theta = Vec::new();
+    let mut values_buf = Vec::new();
+    let mut out = Vec::new();
+    loop {
+        match read_frame(reader, &mut payload, || true) {
+            Ok(ReadFrame::Frame { kind }) => match kind {
+                wire::K_ASSIGN => {
+                    let m = wire::decode_assign(&payload)?;
+                    slots.insert(m.slot, m.payload);
+                }
+                wire::K_STEP => {
+                    *steps_served += 1;
+                    if let Some(n) = opts.exit_after_steps {
+                        if *steps_served > n {
+                            // Abrupt death: no farewell frame, no
+                            // flush. The master finds out through the
+                            // closed socket and its heartbeat budget,
+                            // exactly as with a SIGKILLed process.
+                            std::process::exit(86);
+                        }
+                    }
+                    let m = wire::decode_step(&payload, &mut theta)?;
+                    let start = thread_cpu_ns();
+                    let values: std::result::Result<&[f64], String> = match slots.get(&m.slot)
+                    {
+                        Some(p) => p
+                            .compute_into(
+                                &theta,
+                                opts.backend.as_ref(),
+                                Some(u64::from(m.slot)),
+                                &mut values_buf,
+                            )
+                            .map(|()| values_buf.as_slice())
+                            .map_err(|e| e.to_string()),
+                        None => Err(format!("slot {} has no assigned payload", m.slot)),
+                    };
+                    let compute_ns = thread_cpu_ns().saturating_sub(start);
+                    let digest = response_digest(
+                        m.slot as usize,
+                        m.t as usize,
+                        m.seq,
+                        values.as_ref().ok().copied(),
+                    );
+                    let owned = match values {
+                        Ok(vs) => Ok(vs.to_vec()),
+                        Err(e) => Err(e),
+                    };
+                    wire::encode_response(&mut out, m.slot, m.t, m.seq, &owned, digest, compute_ns);
+                    if tx.send((wire::K_RESPONSE, std::mem::take(&mut out))).is_err() {
+                        return Ok(ConnEnd::Disconnected);
+                    }
+                }
+                wire::K_SHUTDOWN => return Ok(ConnEnd::Shutdown),
+                // Unexpected-but-verified kinds (e.g. a confused peer
+                // echoing heartbeats) are ignored.
+                _ => {}
+            },
+            // A damaged payload under a verified header is a detected
+            // erasure: skip the frame, keep the stream.
+            Ok(ReadFrame::CorruptPayload) => continue,
+            Ok(ReadFrame::Eof) | Ok(ReadFrame::CorruptHeader) => {
+                return Ok(ConnEnd::Disconnected)
+            }
+            Err(_) => return Ok(ConnEnd::Disconnected),
+        }
+    }
+}
+
+/// Bind a TCP listener with `SO_REUSEADDR`, so a restarted daemon can
+/// re-bind its old port while the previous socket lingers in
+/// `TIME_WAIT` (the reconnect test depends on this). IPv4 only — the
+/// cluster addresses things as `a.b.c.d:port`.
+pub fn bind_reusable(addr: &str) -> Result<TcpListener> {
+    use std::net::SocketAddr;
+    use std::os::unix::io::FromRawFd;
+
+    let sockaddr: SocketAddr = addr
+        .parse()
+        .map_err(|_| Error::Config(format!("invalid listen address '{addr}'")))?;
+    let SocketAddr::V4(v4) = sockaddr else {
+        return Err(Error::Config(format!("IPv6 listen address '{addr}' not supported")));
+    };
+    unsafe {
+        let fd = libc::socket(libc::AF_INET, libc::SOCK_STREAM, 0);
+        if fd < 0 {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        let close_err = |fd: i32| -> Error {
+            let e = std::io::Error::last_os_error();
+            libc::close(fd);
+            Error::Io(e)
+        };
+        let one: libc::c_int = 1;
+        if libc::setsockopt(
+            fd,
+            libc::SOL_SOCKET,
+            libc::SO_REUSEADDR,
+            (&one as *const libc::c_int).cast(),
+            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+        ) != 0
+        {
+            return Err(close_err(fd));
+        }
+        let sin = libc::sockaddr_in {
+            sin_family: libc::AF_INET as libc::sa_family_t,
+            sin_port: v4.port().to_be(),
+            sin_addr: libc::in_addr { s_addr: u32::from(*v4.ip()).to_be() },
+            sin_zero: [0; 8],
+        };
+        if libc::bind(
+            fd,
+            (&sin as *const libc::sockaddr_in).cast(),
+            std::mem::size_of::<libc::sockaddr_in>() as libc::socklen_t,
+        ) != 0
+        {
+            return Err(close_err(fd));
+        }
+        if libc::listen(fd, 16) != 0 {
+            return Err(close_err(fd));
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+/// An in-process daemon on an ephemeral loopback port — the unit- and
+/// bench-test stand-in for a separately launched `worker` process.
+pub struct LocalWorker {
+    /// `127.0.0.1:port` the daemon listens on.
+    pub addr: String,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LocalWorker {
+    /// Bind `127.0.0.1:0` and serve on a background thread.
+    pub fn spawn(backend: Arc<dyn ComputeBackend>) -> Result<LocalWorker> {
+        let listener = bind_reusable("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let handle = std::thread::spawn(move || {
+            let _ = serve(listener, WorkerOptions { backend, exit_after_steps: None });
+        });
+        Ok(LocalWorker { addr, handle: Some(handle) })
+    }
+}
+
+impl Drop for LocalWorker {
+    fn drop(&mut self) {
+        // The serve loop may be blocked in `accept`; detach rather
+        // than join. A master that shut the daemon down cleanly will
+        // have let the thread finish already.
+        if let Some(h) = self.handle.take() {
+            if h.is_finished() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::net::frame;
+    use crate::runtime::NativeBackend;
+    use std::io::Read;
+
+    fn hello_and_assign(stream: &mut TcpStream) {
+        let mut body = Vec::new();
+        let mut scratch = Vec::new();
+        wire::encode_hello(&mut body, 20.0);
+        write_frame(stream, wire::K_HELLO, &body, &mut scratch).unwrap();
+        let rows = Matrix::from_rows(&[vec![1.0, 1.0], vec![2.0, 0.0]]).unwrap();
+        wire::encode_assign(&mut body, 0, &WorkerPayload::Rows { rows });
+        write_frame(stream, wire::K_ASSIGN, &body, &mut scratch).unwrap();
+    }
+
+    fn next_frame_of_kind(
+        stream: &mut impl Read,
+        payload: &mut Vec<u8>,
+        want: u8,
+    ) -> ReadFrame {
+        loop {
+            match read_frame(stream, payload, || true).unwrap() {
+                ReadFrame::Frame { kind } if kind != want => continue,
+                other => return other,
+            }
+        }
+    }
+
+    #[test]
+    fn daemon_serves_steps_over_loopback() {
+        let worker = LocalWorker::spawn(Arc::new(NativeBackend)).unwrap();
+        let mut stream = TcpStream::connect(&worker.addr).unwrap();
+        hello_and_assign(&mut stream);
+        let mut body = Vec::new();
+        let mut scratch = Vec::new();
+        wire::encode_step(&mut body, 0, 1, 42, &[1.0, 2.0]);
+        write_frame(&mut stream, wire::K_STEP, &body, &mut scratch).unwrap();
+        let mut payload = Vec::new();
+        assert_eq!(
+            next_frame_of_kind(&mut stream, &mut payload, wire::K_RESPONSE),
+            ReadFrame::Frame { kind: wire::K_RESPONSE }
+        );
+        let r = wire::decode_response(&payload).unwrap();
+        assert_eq!((r.worker, r.t, r.seq), (0, 1, 42));
+        assert!(r.verify());
+        assert_eq!(r.values.unwrap(), vec![3.0, 2.0]);
+        // Clean shutdown ends the serve loop.
+        write_frame(&mut stream, wire::K_SHUTDOWN, &[], &mut scratch).unwrap();
+    }
+
+    #[test]
+    fn daemon_heartbeats_between_steps() {
+        let worker = LocalWorker::spawn(Arc::new(NativeBackend)).unwrap();
+        let mut stream = TcpStream::connect(&worker.addr).unwrap();
+        let mut body = Vec::new();
+        let mut scratch = Vec::new();
+        wire::encode_hello(&mut body, 5.0);
+        write_frame(&mut stream, wire::K_HELLO, &body, &mut scratch).unwrap();
+        let mut payload = Vec::new();
+        // Ack first, then heartbeats with no steps in flight.
+        assert_eq!(
+            read_frame(&mut stream, &mut payload, || true).unwrap(),
+            ReadFrame::Frame { kind: wire::K_HELLO_ACK }
+        );
+        assert_eq!(
+            next_frame_of_kind(&mut stream, &mut payload, wire::K_HEARTBEAT),
+            ReadFrame::Frame { kind: wire::K_HEARTBEAT }
+        );
+        write_frame(&mut stream, wire::K_SHUTDOWN, &[], &mut scratch).unwrap();
+    }
+
+    #[test]
+    fn daemon_survives_master_disconnect_and_reaccepts() {
+        let worker = LocalWorker::spawn(Arc::new(NativeBackend)).unwrap();
+        {
+            let mut stream = TcpStream::connect(&worker.addr).unwrap();
+            hello_and_assign(&mut stream);
+            // Drop without shutdown: a dead master.
+        }
+        // A second master can connect and get work done.
+        let mut stream = TcpStream::connect(&worker.addr).unwrap();
+        hello_and_assign(&mut stream);
+        let mut body = Vec::new();
+        let mut scratch = Vec::new();
+        wire::encode_step(&mut body, 0, 3, 7, &[0.5, 0.5]);
+        write_frame(&mut stream, wire::K_STEP, &body, &mut scratch).unwrap();
+        let mut payload = Vec::new();
+        assert_eq!(
+            next_frame_of_kind(&mut stream, &mut payload, wire::K_RESPONSE),
+            ReadFrame::Frame { kind: wire::K_RESPONSE }
+        );
+        let r = wire::decode_response(&payload).unwrap();
+        assert!(r.verify());
+        assert_eq!(r.values.unwrap(), vec![1.0, 1.0]);
+        write_frame(&mut stream, wire::K_SHUTDOWN, &[], &mut scratch).unwrap();
+    }
+
+    #[test]
+    fn damaged_payload_is_skipped_not_fatal() {
+        let worker = LocalWorker::spawn(Arc::new(NativeBackend)).unwrap();
+        let mut stream = TcpStream::connect(&worker.addr).unwrap();
+        hello_and_assign(&mut stream);
+        // A step frame with a flipped payload bit: the daemon must
+        // skip it and keep serving.
+        let mut body = Vec::new();
+        wire::encode_step(&mut body, 0, 1, 1, &[1.0, 2.0]);
+        let mut framed = Vec::new();
+        frame::encode_frame(wire::K_STEP, &body, &mut framed);
+        let last = framed.len() - 1;
+        framed[last] ^= 0x40;
+        use std::io::Write as _;
+        stream.write_all(&framed).unwrap();
+        // An intact step after the damaged one still gets answered.
+        let mut scratch = Vec::new();
+        wire::encode_step(&mut body, 0, 1, 2, &[1.0, 2.0]);
+        write_frame(&mut stream, wire::K_STEP, &body, &mut scratch).unwrap();
+        let mut payload = Vec::new();
+        assert_eq!(
+            next_frame_of_kind(&mut stream, &mut payload, wire::K_RESPONSE),
+            ReadFrame::Frame { kind: wire::K_RESPONSE }
+        );
+        let r = wire::decode_response(&payload).unwrap();
+        assert_eq!(r.seq, 2, "the damaged frame's seq never got an answer");
+        assert!(r.verify());
+        write_frame(&mut stream, wire::K_SHUTDOWN, &[], &mut scratch).unwrap();
+    }
+
+    #[test]
+    fn bind_reusable_rejects_bad_addresses() {
+        assert!(bind_reusable("not-an-addr").is_err());
+        assert!(bind_reusable("[::1]:0").is_err());
+        let l = bind_reusable("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        assert!(addr.port() > 0);
+    }
+}

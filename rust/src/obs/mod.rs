@@ -94,6 +94,16 @@ pub enum SpanKind {
     Down,
     /// Worker lane instant: straggler cut off at the deadline.
     Dropped,
+    /// Master lane: TCP dial + hello handshake (networked cluster);
+    /// `task` holds the address index.
+    Connect,
+    /// Master lane instant: the heartbeat monitor declared a
+    /// connection dead; `task` holds the address index.
+    Heartbeat,
+    /// Master lane instant: a previously-down worker address was
+    /// re-dialed and rejoined the dispatch set (elastic membership);
+    /// `task` holds the address index.
+    Reconnect,
 }
 
 impl SpanKind {
@@ -121,6 +131,9 @@ impl SpanKind {
             SpanKind::Cancelled => "cancelled",
             SpanKind::Down => "down",
             SpanKind::Dropped => "dropped",
+            SpanKind::Connect => "connect",
+            SpanKind::Heartbeat => "heartbeat",
+            SpanKind::Reconnect => "reconnect",
         }
     }
 }

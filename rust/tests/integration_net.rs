@@ -1,0 +1,270 @@
+//! Networked-cluster integration: fault-free loopback TCP runs are
+//! θ-bit-identical to the OS-thread cluster; a daemon killed mid-job
+//! still completes with down/retried/degraded accounting; a restarted
+//! daemon rejoins the same executor and degradation stops; and a
+//! captured latency table replays bit-identically through the
+//! virtual-time simulator.
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::cluster::Cluster;
+use moment_ldpc::coordinator::faults::{FaultCounts, RetryPolicy};
+use moment_ldpc::coordinator::metrics::RunReport;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::straggler::{LatencyModel, StragglerModel};
+use moment_ldpc::coordinator::{run_with_executor, ThreadStepExecutor};
+use moment_ldpc::net::{read_trace_table, write_trace_table, LocalWorker, NetConfig, TcpStepExecutor};
+use moment_ldpc::runtime::{ComputeBackend, NativeBackend};
+use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::{run_simulated, SimConfig};
+use moment_ldpc::testing::TempDir;
+
+/// An (8, 4) rate-1/2 (3,6)-regular moment-encoded scheme: small enough
+/// that a loopback fleet is cheap, coded enough that masked slots decode.
+fn scheme_and_problem(data_seed: u64) -> (LdpcMomentScheme, moment_ldpc::data::RegressionProblem) {
+    let problem = moment_ldpc::data::RegressionProblem::generate(
+        &moment_ldpc::data::SynthConfig::dense(120, 24),
+        data_seed,
+    );
+    let code = LdpcCode::gallager(8, 4, 3, 6, 2).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    (scheme, problem)
+}
+
+/// A retry policy whose collection window is wide enough that loopback
+/// responses never miss the deadline (the knob under test is
+/// `max_retries`, not the timeout).
+fn wide_window(max_retries: u32) -> RetryPolicy {
+    RetryPolicy { max_retries, backoff_ms: 1.0, backoff_cap_ms: 8.0, timeout_ms: 5000.0 }
+}
+
+fn trace_view(r: &RunReport) -> Vec<(usize, f64)> {
+    r.trace.iter().map(|m| (m.stragglers, m.error)).collect()
+}
+
+/// Spawn a real `worker` daemon subprocess and parse the `listening
+/// HOST:PORT` banner (`--listen 127.0.0.1:0` picks an ephemeral port).
+fn spawn_daemon(listen: &str, exit_after: Option<u64>) -> (Child, String) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_moment_ldpc"));
+    cmd.args(["worker", "--listen", listen])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null());
+    if let Some(n) = exit_after {
+        cmd.args(["--exit-after", &n.to_string()]);
+    }
+    let mut child = cmd.spawn().expect("spawn worker daemon");
+    let mut line = String::new();
+    let mut rd = std::io::BufReader::new(child.stdout.take().expect("piped stdout"));
+    rd.read_line(&mut line).expect("read daemon banner");
+    let addr = line
+        .trim()
+        .strip_prefix("listening ")
+        .unwrap_or_else(|| panic!("unexpected daemon banner: {line:?}"))
+        .to_string();
+    (child, addr)
+}
+
+/// The acceptance pin: with a fixed straggler seed and no faults, the
+/// TCP executor over four loopback daemons (eight slots, two per
+/// daemon) produces the exact θ-trajectory of the OS-thread cluster —
+/// same mask draws, same decode, same update, bit for bit.
+#[test]
+fn tcp_fault_free_run_matches_thread_cluster_bit_for_bit() {
+    let (scheme, problem) = scheme_and_problem(42);
+    let cfg = RunConfig {
+        workers: 8,
+        straggler: StragglerModel::FixedCount { s: 2, seed: 9 },
+        rel_tol: 1e-4,
+        max_steps: 50,
+        record_trace: true,
+        ..Default::default()
+    };
+
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+    let cluster = Cluster::spawn(scheme.payloads(), backend.clone());
+    let mut texec = ThreadStepExecutor::new(&cluster, &cfg.straggler);
+    let thread = run_with_executor(&scheme, &mut texec, &problem, &cfg).unwrap();
+    cluster.shutdown();
+
+    let daemons: Vec<LocalWorker> =
+        (0..4).map(|_| LocalWorker::spawn(backend.clone()).unwrap()).collect();
+    let addrs: Vec<String> = daemons.iter().map(|d| d.addr.clone()).collect();
+    let mut exec =
+        TcpStepExecutor::connect(scheme.payloads(), &cfg.straggler, NetConfig::new(addrs))
+            .unwrap()
+            .with_retry(wide_window(0));
+    let tcp = run_with_executor(&scheme, &mut exec, &problem, &cfg).unwrap();
+    exec.shutdown();
+
+    assert_eq!(thread.theta, tcp.theta, "θ must be bit-identical across backends");
+    assert_eq!(thread.steps, tcp.steps);
+    assert_eq!(thread.converged, tcp.converged);
+    assert_eq!(trace_view(&thread), trace_view(&tcp), "per-step mask/error must match");
+    assert_eq!(tcp.totals.faults, FaultCounts::default(), "fault-free run: {}", tcp.summary());
+    assert_eq!(thread.totals.degraded_steps, tcp.totals.degraded_steps);
+    assert_eq!(thread.totals.unrecovered, tcp.totals.unrecovered);
+}
+
+/// Kill a daemon mid-job (exit(86) between served steps, emulating
+/// SIGKILL): the heartbeat/EOF path declares its slots down, the retry
+/// layer re-dispatches their shards to surviving daemons, and the run
+/// completes every step with zero degradation.
+#[test]
+fn mid_run_daemon_kill_completes_with_redispatch_accounting() {
+    let (scheme, problem) = scheme_and_problem(7);
+    // The doomed daemon owns slots {0, 4}: two K_STEP frames per step,
+    // so --exit-after 6 kills it while dispatching step 4.
+    let (doomed, doomed_addr) = spawn_daemon("127.0.0.1:0", Some(6));
+    let mut children = vec![doomed];
+    let mut addrs = vec![doomed_addr];
+    for _ in 0..3 {
+        let (c, a) = spawn_daemon("127.0.0.1:0", None);
+        children.push(c);
+        addrs.push(a);
+    }
+
+    let cfg = RunConfig {
+        workers: 8,
+        straggler: StragglerModel::None,
+        rel_tol: 1e-12, // unreachable: run exactly max_steps
+        max_steps: 12,
+        retry: wide_window(2),
+        ..Default::default()
+    };
+    let mut net = NetConfig::new(addrs);
+    net.heartbeat_interval_ms = 10.0; // fast failure detection
+    let mut exec = TcpStepExecutor::connect(scheme.payloads(), &cfg.straggler, net)
+        .unwrap()
+        .with_retry(cfg.retry);
+    let r = run_with_executor(&scheme, &mut exec, &problem, &cfg).unwrap();
+    exec.shutdown();
+
+    assert_eq!(r.steps, 12, "the job must run to completion: {}", r.summary());
+    let fc = r.totals.faults;
+    assert!(fc.down > 0, "dispatches to the dead daemon must count as down: {fc:?}");
+    assert!(fc.retried > 0, "lost slots must be re-dispatched: {fc:?}");
+    assert!(fc.recovered > 0, "survivors must recover the re-dispatched shards: {fc:?}");
+    assert!(fc.retried >= fc.recovered);
+    assert_eq!(
+        r.totals.degraded_steps, 0,
+        "survivor adoption must leave no step degraded: {}",
+        r.summary()
+    );
+
+    let status = children[0].wait().unwrap();
+    assert_eq!(status.code(), Some(86), "the doomed daemon must die by exit(86)");
+    for c in children.iter_mut().skip(1) {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Elastic membership: with every slot on one daemon and no retry
+/// layer, the daemon's death degrades each remaining step (all blocks
+/// erased, θ frozen). Restarting the daemon on the same port and
+/// re-running on the *same* executor re-dials, re-registers the
+/// payloads, and the degradation stops.
+#[test]
+fn reconnected_daemon_rejoins_and_degradation_stops() {
+    let (scheme, problem) = scheme_and_problem(13);
+    // Eight slots on one daemon: --exit-after 16 kills it while
+    // dispatching step 3, so steps 3..6 of run A are fully erased.
+    let (mut doomed, addr) = spawn_daemon("127.0.0.1:0", Some(16));
+
+    let cfg = RunConfig {
+        workers: 8,
+        straggler: StragglerModel::None,
+        rel_tol: 1e-12,
+        max_steps: 6,
+        ..Default::default()
+    };
+    let mut net = NetConfig::new(vec![addr.clone()]);
+    net.heartbeat_interval_ms = 10.0;
+    let mut exec = TcpStepExecutor::connect(scheme.payloads(), &cfg.straggler, net)
+        .unwrap()
+        .with_retry(wide_window(0));
+
+    let a = run_with_executor(&scheme, &mut exec, &problem, &cfg).unwrap();
+    assert_eq!(a.steps, 6);
+    assert!(a.totals.faults.down > 0, "post-death dispatches must count down: {}", a.summary());
+    assert!(
+        a.totals.degraded_steps >= 3,
+        "an all-erased fleet must degrade every remaining step: {}",
+        a.summary()
+    );
+    assert_eq!(doomed.wait().unwrap().code(), Some(86));
+
+    // Restart on the SAME port (SO_REUSEADDR carries the rebind through
+    // TIME_WAIT) and drive a second job through the same executor.
+    let (mut revived, addr2) = spawn_daemon(&addr, None);
+    assert_eq!(addr2, addr, "the revived daemon must reclaim its address");
+    let b = run_with_executor(&scheme, &mut exec, &problem, &cfg).unwrap();
+    assert_eq!(b.steps, 6);
+    assert_eq!(
+        b.totals.degraded_steps, 0,
+        "a rejoined daemon must stop the degradation: {}",
+        b.summary()
+    );
+    assert!(!b.totals.faults.any(), "run B is fault-free: {}", b.summary());
+    assert_eq!(exec.live_conns(), 1);
+    exec.shutdown();
+    let _ = revived.kill();
+    let _ = revived.wait();
+}
+
+/// The trace-capture loop back into the simulator: a real loopback run
+/// captures one finite latency row per step, the on-disk table
+/// round-trips bit-exactly, and replaying it through
+/// `LatencyModel::Trace` in the virtual-time simulator is deterministic.
+#[test]
+fn captured_trace_replays_bit_identically_through_the_simulator() {
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend);
+    let d0 = LocalWorker::spawn(backend.clone()).unwrap();
+    let d1 = LocalWorker::spawn(backend).unwrap();
+    let (scheme, problem) = scheme_and_problem(21);
+    let cfg = RunConfig {
+        workers: 8,
+        straggler: StragglerModel::None,
+        rel_tol: 1e-12,
+        max_steps: 10,
+        record_trace: true,
+        ..Default::default()
+    };
+    let net = NetConfig::new(vec![d0.addr.clone(), d1.addr.clone()]);
+    let mut exec = TcpStepExecutor::connect(scheme.payloads(), &cfg.straggler, net)
+        .unwrap()
+        .with_retry(wide_window(0));
+    exec.enable_capture();
+    let r = run_with_executor(&scheme, &mut exec, &problem, &cfg).unwrap();
+    assert_eq!(r.steps, 10);
+    let table = exec.take_capture().expect("capture was armed");
+    exec.shutdown();
+
+    assert_eq!(table.len(), 10, "one captured row per executed step");
+    for row in &table {
+        assert_eq!(row.len(), 8, "one latency per slot");
+        assert!(row.iter().all(|v| v.is_finite() && *v >= 0.0), "bad row: {row:?}");
+    }
+
+    let dir = TempDir::new("net-capture").unwrap();
+    let path = dir.path().join("capture.txt");
+    write_trace_table(&path, &table).unwrap();
+    let read_back = read_trace_table(&path).unwrap();
+    let bits = |t: &[Vec<f64>]| -> Vec<Vec<u64>> {
+        t.iter().map(|row| row.iter().map(|v| v.to_bits()).collect()).collect()
+    };
+    assert_eq!(bits(&table), bits(&read_back), "the table must round-trip bit-exactly");
+
+    let latency = LatencyModel::Trace { table: Arc::new(read_back) };
+    let sim = SimConfig::new(latency, DeadlinePolicy::WaitForK(6));
+    let s1 = run_simulated(&scheme, &problem, &cfg, &sim).unwrap();
+    let s2 = run_simulated(&scheme, &problem, &cfg, &sim).unwrap();
+    assert_eq!(s1.theta, s2.theta, "trace replay must be bit-reproducible");
+    assert_eq!(s1.steps, s2.steps);
+    assert_eq!(trace_view(&s1), trace_view(&s2));
+}

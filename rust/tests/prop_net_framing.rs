@@ -1,0 +1,210 @@
+//! Framing-robustness properties: random frames round-trip; truncated
+//! frames are always `Incomplete`; any single bit flip is a *detected*
+//! erasure (header damage loses the stream, payload damage is
+//! skippable) — never a decoded corrupt payload, never a panic; corrupt
+//! frames mid-stream don't desynchronize the reader; and duplicated or
+//! reordered responses are first-wins at the [`SeqGate`].
+
+use moment_ldpc::net::frame::{
+    decode_frame, encode_frame, read_frame, FrameOutcome, ReadFrame, HEADER_LEN,
+};
+use moment_ldpc::net::wire::SeqGate;
+use moment_ldpc::testing::{prop_check, PropCase};
+
+/// A random frame: arbitrary kind byte, payload of 0..512 random bytes.
+fn random_frame(case: &mut PropCase) -> (u8, Vec<u8>, Vec<u8>) {
+    let kind = (case.rng.next_u64() & 0xFF) as u8;
+    let len = case.rng.below(512);
+    let payload: Vec<u8> = (0..len).map(|_| (case.rng.next_u64() & 0xFF) as u8).collect();
+    let mut buf = Vec::new();
+    encode_frame(kind, &payload, &mut buf);
+    (kind, payload, buf)
+}
+
+#[test]
+fn prop_random_frames_round_trip() {
+    prop_check("frame-round-trip", 200, 0xF4A1, |case| {
+        let (kind, payload, buf) = random_frame(case);
+        match decode_frame(&buf) {
+            FrameOutcome::Frame { kind: k, payload: p, consumed } => {
+                if k != kind {
+                    return Err(format!("kind {k} != {kind}"));
+                }
+                if p != &payload[..] {
+                    return Err("payload mismatch".into());
+                }
+                if consumed != buf.len() {
+                    return Err(format!("consumed {consumed} != {}", buf.len()));
+                }
+                Ok(())
+            }
+            other => Err(format!("expected Frame, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_truncation_is_always_incomplete() {
+    prop_check("frame-truncation", 200, 0xF4A2, |case| {
+        let (_, _, buf) = random_frame(case);
+        // A random strict prefix — and the two boundary prefixes most
+        // likely to confuse a decoder (empty, header-only).
+        let cut = case.rng.below(buf.len());
+        for prefix_len in [0, HEADER_LEN.min(buf.len() - 1), cut] {
+            match decode_frame(&buf[..prefix_len]) {
+                FrameOutcome::Incomplete => {}
+                other => {
+                    return Err(format!(
+                        "prefix of {prefix_len}/{}: expected Incomplete, got {other:?}",
+                        buf.len()
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Any single flipped bit is detected, and the detection is *classified*:
+/// header damage (the first `HEADER_LEN` bytes) reports `consumed: None`
+/// (framing lost — the connection must drop), payload damage reports the
+/// full frame length (skippable — the stream stays synchronized). A
+/// damaged frame never decodes.
+#[test]
+fn prop_single_bit_damage_is_a_detected_classified_erasure() {
+    prop_check("frame-bit-damage", 400, 0xF4A3, |case| {
+        let (_, _, mut buf) = random_frame(case);
+        let byte = case.rng.below(buf.len());
+        let bit = case.rng.below(8);
+        buf[byte] ^= 1 << bit;
+        match decode_frame(&buf) {
+            FrameOutcome::Corrupt { consumed: None } if byte < HEADER_LEN => Ok(()),
+            FrameOutcome::Corrupt { consumed: Some(n) } if byte >= HEADER_LEN => {
+                if n == buf.len() {
+                    Ok(())
+                } else {
+                    Err(format!("skippable erasure consumed {n} != {}", buf.len()))
+                }
+            }
+            other => Err(format!("flip of byte {byte} bit {bit}: got {other:?}")),
+        }
+    });
+}
+
+/// A payload-corrupted frame between two good ones: the reader reports
+/// the erasure and stays synchronized — the third frame decodes intact.
+/// Duplicated frames simply decode twice (dedup is the SeqGate's job).
+#[test]
+fn prop_corrupt_payload_mid_stream_keeps_the_reader_synchronized() {
+    prop_check("stream-resync", 100, 0xF4A4, |case| {
+        let (k1, p1, f1) = random_frame(case);
+        let (_, p2, mut f2) = random_frame(case);
+        let (k3, p3, f3) = random_frame(case);
+        if p2.is_empty() {
+            return Ok(()); // nothing to damage; covered by other cases
+        }
+        let byte = HEADER_LEN + case.rng.below(p2.len());
+        f2[byte] ^= 1 << case.rng.below(8);
+
+        // f1, damaged f2, f3, and a duplicate of f1.
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&f1);
+        stream.extend_from_slice(&f2);
+        stream.extend_from_slice(&f3);
+        stream.extend_from_slice(&f1);
+        let mut rd = std::io::Cursor::new(stream);
+        let mut payload = Vec::new();
+
+        let expect = [
+            (Some((k1, &p1)), "first"),
+            (None, "damaged"),
+            (Some((k3, &p3)), "third"),
+            (Some((k1, &p1)), "duplicate"),
+        ];
+        for (want, label) in expect {
+            let got = read_frame(&mut rd, &mut payload, || true)
+                .map_err(|e| format!("{label}: io error {e}"))?;
+            match (want, got) {
+                (Some((wk, wp)), ReadFrame::Frame { kind }) => {
+                    if kind != wk || payload != *wp {
+                        return Err(format!("{label}: wrong frame decoded"));
+                    }
+                }
+                (None, ReadFrame::CorruptPayload) => {}
+                (w, g) => return Err(format!("{label}: wanted {w:?}, got {g:?}")),
+            }
+        }
+        match read_frame(&mut rd, &mut payload, || true) {
+            Ok(ReadFrame::Eof) => Ok(()),
+            other => Err(format!("stream end: {other:?}")),
+        }
+    });
+}
+
+/// Header damage mid-stream is the unrecoverable class: the reader
+/// reports `CorruptHeader` (the caller drops the connection) instead of
+/// ever decoding garbage or panicking.
+#[test]
+fn prop_corrupt_header_mid_stream_loses_the_stream_loudly() {
+    prop_check("stream-header-loss", 100, 0xF4A5, |case| {
+        let (k1, p1, f1) = random_frame(case);
+        let (_, _, mut f2) = random_frame(case);
+        f2[case.rng.below(HEADER_LEN)] ^= 1 << case.rng.below(8);
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&f1);
+        stream.extend_from_slice(&f2);
+        let mut rd = std::io::Cursor::new(stream);
+        let mut payload = Vec::new();
+        match read_frame(&mut rd, &mut payload, || true) {
+            Ok(ReadFrame::Frame { kind }) if kind == k1 && payload == p1 => {}
+            other => return Err(format!("first frame: {other:?}")),
+        }
+        match read_frame(&mut rd, &mut payload, || true) {
+            Ok(ReadFrame::CorruptHeader) => Ok(()),
+            other => Err(format!("damaged header: {other:?}")),
+        }
+    });
+}
+
+/// Duplicate and reordered step answers are first-wins per (slot, seq):
+/// the gate accepts each armed slot exactly once, in any arrival order,
+/// and rejects duplicates, stale seqs, and disarmed slots.
+#[test]
+fn prop_seq_gate_is_first_wins_under_duplication_and_reorder() {
+    prop_check("seq-gate", 200, 0xF4A6, |case| {
+        let w = 1 + case.rng.below(16);
+        let mut gate = SeqGate::new(w);
+        gate.reset();
+        let seqs: Vec<u64> = (0..w).map(|j| 1000 + j as u64).collect();
+        for (j, &s) in seqs.iter().enumerate() {
+            gate.arm(j, s);
+        }
+        // Deliver in a random order, each answer duplicated.
+        let order = case.rng.permutation(w);
+        for &j in &order {
+            if gate.accept(j, seqs[j] + 1) {
+                return Err(format!("slot {j}: accepted a wrong seq"));
+            }
+            if !gate.accept(j, seqs[j]) {
+                return Err(format!("slot {j}: first answer rejected"));
+            }
+            if gate.accept(j, seqs[j]) {
+                return Err(format!("slot {j}: duplicate accepted"));
+            }
+            if gate.is_armed(j) {
+                return Err(format!("slot {j}: still armed after filling"));
+            }
+        }
+        // Out-of-range slots and a fresh re-arm behave.
+        if gate.accept(w, 1) {
+            return Err("out-of-range slot accepted".into());
+        }
+        gate.reset();
+        gate.arm(0, 7);
+        gate.disarm(0);
+        if gate.accept(0, 7) {
+            return Err("disarmed slot accepted".into());
+        }
+        Ok(())
+    });
+}
