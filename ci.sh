@@ -170,4 +170,19 @@ SIM_DEADLINE_SMOKE=1 cargo bench --bench sim_deadline
 echo "== sim_async smoke (tiny sync-vs-async ablation; writes *_smoke outputs) =="
 SIM_ASYNC_SMOKE=1 cargo bench --bench sim_async
 
+echo "== ring-collective smoke (pipelined segments instead of master fan-in) =="
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --async --nic-gbps 1 --collective ring \
+    --max-steps 500 --rel-tol 1e-2
+
+echo "== tree-collective smoke (log-depth reduce over the same NIC) =="
+cargo run -q -- simulate --workers 64 --k 32 --trials 1 \
+    --latency shifted-exp --policy wait-k --wait-k 56 \
+    --async --nic-gbps 1 --collective tree \
+    --max-steps 500 --rel-tol 1e-2
+
+echo "== sim_scale smoke (timer-wheel throughput + star-vs-ring step; writes *_smoke outputs) =="
+SIM_SCALE_SMOKE=1 cargo bench --bench sim_scale
+
 echo "ci.sh: all gates passed"

@@ -26,6 +26,7 @@ use moment_ldpc::harness::bench::{bench_smoke, smoke_out_path};
 use moment_ldpc::harness::experiment::{run_sim_trials, ExperimentSpec, SchemeSpec, SimSpec};
 use moment_ldpc::harness::report::{pm, write_csv, write_json_kv, Table};
 use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::Collective;
 
 fn main() {
     let smoke = bench_smoke("sim_deadline");
@@ -106,6 +107,7 @@ fn main() {
                     policy: policy.clone(),
                     pipeline: None,
                     faults: FaultModel::none(),
+                    collective: Collective::Star,
                 };
                 let agg = run_sim_trials(scheme, &problem, &spec, &sim)
                     .unwrap_or_else(|e| panic!("{sname}/{lname}/{pname}: {e}"));

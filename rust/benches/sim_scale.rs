@@ -1,0 +1,197 @@
+//! Event-core throughput at fleet scales the host could never thread:
+//! 10^3 -> 10^6 simulated workers.
+//!
+//! Two questions, two sections:
+//!
+//!   1. **Queue churn** — raw events/second through [`EventQueue`] at
+//!      each fleet size. Below [`WHEEL_HINT_THRESHOLD`] the queue is the
+//!      legacy binary heap; at and past it, the hierarchical timer
+//!      wheel. The churn pattern mirrors a simulation step: pop the
+//!      earliest event, reschedule it a short latency draw into the
+//!      future, repeat — so the wheel's cascade and overlay paths are
+//!      all exercised. Pop order is asserted monotone.
+//!
+//!   2. **A real 10^5-worker step** — one full pipelined
+//!      [`AsyncSimCluster`] step (uncoded scheme, flat NIC topology)
+//!      at 100 000 workers, reporting arrival-events/second of wall
+//!      time. The same step is then re-run under `--collective ring`
+//!      at equal NIC parameters; the ring must finish the collection
+//!      in less virtual time than star, because star serializes every
+//!      response through the master NIC while the ring pipelines
+//!      segments peer to peer and lands one aggregate on the master.
+//!
+//! Output: a table on stdout, `bench_out/sim_scale.csv`, and
+//! `bench_out/BENCH_sim_scale.json` (cell -> events/second or ms).
+//!
+//! Set `SIM_SCALE_SMOKE=1` (what ci.sh does) for a seconds-long run
+//! capped at 10^4 workers that writes `*_smoke` file names instead, so
+//! a CI pass can never clobber real measurements.
+//!
+//! `cargo bench --offline --bench sim_scale`
+
+use std::time::Instant;
+
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::make_backend;
+use moment_ldpc::coordinator::schemes::uncoded::UncodedScheme;
+use moment_ldpc::coordinator::schemes::GradientScheme;
+use moment_ldpc::coordinator::straggler::LatencyModel;
+use moment_ldpc::coordinator::StepExecutor;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::harness::bench::{bench_smoke, smoke_out_path};
+use moment_ldpc::harness::report::{write_csv, write_json_kv, Table};
+use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::event::{EventQueue, WHEEL_HINT_THRESHOLD};
+use moment_ldpc::sim::{
+    AsyncSimCluster, AsyncSimConfig, Collective, LinkModel, TaskCosts, Topology,
+};
+
+/// Tiny deterministic generator for the churn's latency draws —
+/// splitmix64 folded to a fraction. Not the crate RNG on purpose: the
+/// bench must not perturb or depend on simulation streams.
+struct Mix(u64);
+
+impl Mix {
+    fn frac(&mut self) -> f64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        (z ^ (z >> 31)) as f64 / u64::MAX as f64
+    }
+}
+
+/// Pop-reschedule churn: `rounds` sweeps over a `workers`-event queue,
+/// then a full drain. Returns (events moved, wall seconds) where one
+/// "event" is a push + its pop.
+fn churn(workers: usize, rounds: usize) -> (u64, f64) {
+    let mut q = EventQueue::with_hint(workers);
+    let mut mix = Mix(workers as u64 | 1);
+    let start = Instant::now();
+    for j in 0..workers {
+        q.push(mix.frac() * 100.0, j);
+    }
+    let mut last = f64::NEG_INFINITY;
+    for _ in 0..rounds {
+        for _ in 0..workers {
+            let ev = q.pop().expect("queue cannot run dry mid-round");
+            assert!(ev.time_ms >= last, "pop order went backwards");
+            last = ev.time_ms;
+            // Reschedule like a step would: a fresh latency draw ahead
+            // of the popped event (occasionally far ahead, to push
+            // events across L1 chunks and into the overflow heap).
+            let ahead = if ev.worker % 97 == 0 { 10_000.0 } else { 10.0 };
+            q.push(ev.time_ms + 0.01 + mix.frac() * ahead, ev.worker);
+        }
+    }
+    while let Some(ev) = q.pop() {
+        assert!(ev.time_ms >= last, "drain order went backwards");
+        last = ev.time_ms;
+    }
+    let secs = start.elapsed().as_secs_f64();
+    (q.pushed_total(), secs)
+}
+
+/// One pipelined step at `workers` scale under `collective`, on a flat
+/// NIC slow enough that collection cost is bandwidth- not
+/// overhead-dominated. Returns (virtual ms after the step, wall secs).
+fn one_step(workers: usize, k: usize, collective: Collective) -> (f64, f64) {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(workers, k), 23);
+    let scheme = UncodedScheme::new(&problem, workers).expect("uncoded scheme");
+    let cfg = RunConfig { workers, max_steps: 1, ..Default::default() };
+    let backend = make_backend(&cfg).expect("native backend");
+    // Zero per-message overhead isolates the serialization term the
+    // collectives differ on; 0.05 Gbps makes it visible over latency.
+    let link = LinkModel { gbps: 0.05, overhead_ms: 0.0 };
+    let sim = AsyncSimConfig::new(
+        LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 29 },
+        DeadlinePolicy::WaitForAll,
+        1,
+    )
+    .with_topology(Topology::flat(link))
+    .with_collective(collective);
+    let mut cluster = AsyncSimCluster::new(
+        scheme.payloads(),
+        TaskCosts::of(&scheme),
+        backend,
+        &cfg,
+        &sim,
+    )
+    .expect("cluster");
+    let theta = vec![0.0; k];
+    let mut masked: Vec<Option<Vec<f64>>> = vec![None; workers];
+    let start = Instant::now();
+    cluster.execute_step(0, &theta, &mut masked).expect("step");
+    (cluster.now_ms(), start.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let smoke = bench_smoke("sim_scale");
+    let scales: &[usize] =
+        if smoke { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000, 1_000_000] };
+    let rounds = 4;
+
+    let mut table = Table::new(
+        format!(
+            "event-core throughput, heap < {WHEEL_HINT_THRESHOLD} workers <= wheel{}",
+            if smoke { ", SMOKE" } else { "" }
+        ),
+        &["fleet", "backend", "events", "wall s", "events/s"],
+    );
+    let mut json: Vec<(String, f64)> = Vec::new();
+
+    for &w in scales {
+        let (events, secs) = churn(w, rounds);
+        let rate = events as f64 / secs.max(1e-9);
+        let backend = if w >= WHEEL_HINT_THRESHOLD { "wheel" } else { "heap" };
+        table.row(vec![
+            format!("{w}"),
+            backend.into(),
+            format!("{events}"),
+            format!("{secs:.3}"),
+            format!("{rate:.0}"),
+        ]);
+        json.push((format!("churn_{w}_events_per_s"), rate));
+    }
+
+    // The real-cluster section: one full async step, star vs ring at
+    // identical NIC parameters, latency seed, and scheme.
+    let step_w = if smoke { 10_000 } else { 100_000 };
+    let step_k = 16;
+    let (star_ms, star_wall) = one_step(step_w, step_k, Collective::Star);
+    let (ring_ms, ring_wall) = one_step(step_w, step_k, Collective::Ring);
+    for (name, ms, wall) in [("star", star_ms, star_wall), ("ring", ring_ms, ring_wall)] {
+        // One arrival event per worker per step (wait-for-all, no
+        // faults), so worker count is the step's arrival-event count.
+        let rate = step_w as f64 / wall.max(1e-9);
+        table.row(vec![
+            format!("{step_w} ({name} step)"),
+            "wheel".into(),
+            format!("{step_w}"),
+            format!("{wall:.3}"),
+            format!("{rate:.0}"),
+        ]);
+        json.push((format!("step_{name}_virtual_ms"), ms));
+        json.push((format!("step_{name}_events_per_s"), rate));
+    }
+
+    print!("{}", table.render());
+    let csv = smoke_out_path("bench_out/sim_scale.csv", smoke);
+    let jsonp = smoke_out_path("bench_out/BENCH_sim_scale.json", smoke);
+    write_csv(&table, std::path::Path::new(&csv)).unwrap();
+    write_json_kv(std::path::Path::new(&jsonp), &json).unwrap();
+
+    // The acceptance pin: at equal NIC parameters the ring removes the
+    // master-NIC serialization term (W response transfers, one by one)
+    // and replaces it with 2(W-1) pipelined segment hops plus a single
+    // master landing — strictly less virtual time at every scale.
+    assert!(
+        ring_ms < star_ms,
+        "ring ({ring_ms:.2} virtual ms) must beat star ({star_ms:.2} virtual ms) \
+         at {step_w} workers on an equal flat NIC"
+    );
+    eprintln!(
+        "sim_scale done -> {csv}, {jsonp} \
+         (step at {step_w}: ring {ring_ms:.2} ms vs star {star_ms:.2} ms virtual)"
+    );
+}

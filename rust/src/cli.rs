@@ -149,6 +149,13 @@ COMMANDS:
                  uplinking into the master link (θ fans out per rack,
                  responses queue twice; racks=1 = flat; rack NIC
                  defaults to the master link's parameters)
+             [--collective star|ring|tree|gossip] aggregation schedule
+               (default star = master fan-out/fan-in). Ring pipelines
+               2(W-1) segment hops peer to peer, tree reduces in
+               ceil(log2 W) hop levels, gossip pushes epidemically on a
+               seeded stream; non-star hops are priced by the NIC
+               topology (add --nic-gbps), so the master link stops
+               serializing the collection
              [--faults SPEC] deterministic fault injection, composable
                with every latency model; SPEC = comma-separated
                crash:P | crash-restart:P:MS | corrupt:P | omit:P

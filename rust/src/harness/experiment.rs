@@ -31,7 +31,8 @@ use crate::error::Result;
 use crate::obs::{SharedTracer, TimeDomain, TraceSpec, Tracer};
 use crate::sim::deadline::DeadlinePolicy;
 use crate::sim::{
-    AsyncSimCluster, AsyncSimConfig, ComputeModel, SimCluster, SimConfig, TaskCosts, Topology,
+    AsyncSimCluster, AsyncSimConfig, Collective, ComputeModel, SimCluster, SimConfig, TaskCosts,
+    Topology,
 };
 
 /// Declarative scheme choice (factory).
@@ -409,6 +410,12 @@ pub struct SimSpec {
     /// latency model, it is reseeded per trial (`base + trial`), so each
     /// trial sees a fresh fault realization of the same rates.
     pub faults: FaultModel,
+    /// Aggregation collective (star = legacy). Gossip's target stream
+    /// is reseeded per trial like the latency and fault models; on the
+    /// synchronous simulator non-star collectives are priced through
+    /// `pipeline`-independent topology only when one reaches the config
+    /// (see `SimConfig::topology`), otherwise they are unpriced.
+    pub collective: Collective,
 }
 
 /// Pipelined-executor add-on for [`SimSpec`].
@@ -468,9 +475,10 @@ pub fn run_sim_trials_traced(
         let report = match &sim.pipeline {
             None => {
                 let sim_cfg = SimConfig::new(sim.latency.reseed(seed), sim.policy.clone())
-                    .with_faults(sim.faults.reseed(seed));
+                    .with_faults(sim.faults.reseed(seed))
+                    .with_collective(sim.collective.reseed(seed));
                 let mut cluster =
-                    SimCluster::new(scheme.payloads(), Arc::clone(&backend), &cfg, &sim_cfg);
+                    SimCluster::new(scheme.payloads(), Arc::clone(&backend), &cfg, &sim_cfg)?;
                 crate::coordinator::run_with_executor_traced(
                     scheme.as_ref(),
                     &mut cluster,
@@ -487,6 +495,7 @@ pub fn run_sim_trials_traced(
                     compute: p.compute,
                     topology: p.topology.clone(),
                     faults: sim.faults.reseed(seed),
+                    collective: sim.collective.reseed(seed),
                 };
                 let mut cluster = AsyncSimCluster::new(
                     scheme.payloads(),
@@ -553,6 +562,7 @@ mod tests {
             policy: DeadlinePolicy::WaitForK(34),
             pipeline: None,
             faults: FaultModel::none(),
+            collective: Collective::Star,
         };
         let agg = run_sim_trials(
             &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder },
@@ -585,6 +595,7 @@ mod tests {
             policy: DeadlinePolicy::WaitForK(34),
             pipeline: None,
             faults: FaultModel::none(),
+            collective: Collective::Star,
         };
         let scheme =
             SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder };
@@ -618,6 +629,7 @@ mod tests {
             policy: DeadlinePolicy::WaitForK(34),
             pipeline: None,
             faults: FaultModel::none(),
+            collective: Collective::Star,
         };
         let s0 = SimSpec {
             pipeline: Some(PipelineSpec { max_staleness: 0, ..Default::default() }),
@@ -661,6 +673,7 @@ mod tests {
                 ..Default::default()
             }),
             faults: FaultModel::none(),
+            collective: Collective::Star,
         };
         let agg = run_sim_trials(
             &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder },
@@ -689,6 +702,7 @@ mod tests {
             policy: DeadlinePolicy::WaitForK(34),
             pipeline: None,
             faults: FaultModel { corrupt: 0.05, ..FaultModel::none() },
+            collective: Collective::Star,
         };
         let agg = run_sim_trials(
             &SchemeSpec::Ldpc { code_k: 20, l: 3, r: 6, seed: 5, decoder: DecoderKind::Ladder },

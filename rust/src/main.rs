@@ -21,7 +21,7 @@ use moment_ldpc::optim::projections::Projection;
 use moment_ldpc::runtime::artifact::{ArtifactRegistry, Kernel};
 use moment_ldpc::runtime::BackendChoice;
 use moment_ldpc::sim::deadline::DeadlinePolicy;
-use moment_ldpc::sim::{ComputeModel, LinkModel, Topology};
+use moment_ldpc::sim::{Collective, ComputeModel, LinkModel, Topology};
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -470,11 +470,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let scheme = scheme_spec_from(&args.get_str("scheme", "ldpc"), args, workers)?;
     let pipeline = pipeline_spec_from(args)?;
     let faults = fault_model_from(args)?;
+    let collective = Collective::parse(&args.get_str("collective", "star"))?;
+    // The banner names the active collective and fleet size so runs in a
+    // log are attributable: `racks=4/ring/w=512`-style when a topology
+    // prices the hops, `ring/w=512` when the fan-out is free.
     let mut setup = match &pipeline {
         Some(p) => {
             let topo = match &p.topology {
-                Some(t) => format!(",{}", t.label()),
-                None => String::new(),
+                Some(t) => format!(",{}", t.label_with(collective.name(), workers)),
+                None => format!(",{}/w={workers}", collective.name()),
             };
             format!(
                 "{}/{}/async(S={},{}{topo})",
@@ -484,13 +488,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 p.compute.name()
             )
         }
-        None => format!("{}/{}", latency.name(), policy.name()),
+        None => {
+            format!("{}/{}/{}/w={workers}", latency.name(), policy.name(), collective.name())
+        }
     };
     if !faults.is_none() {
         setup = format!("{setup}/{}", faults.name());
     }
     let trace = trace_spec_from(args)?;
-    let sim = SimSpec { latency: latency.clone(), policy: policy.clone(), pipeline, faults };
+    let sim =
+        SimSpec { latency: latency.clone(), policy: policy.clone(), pipeline, faults, collective };
     let agg = run_sim_trials_traced(&scheme, &problem, &spec, &sim, trace.as_ref())?;
     if let Some(ts) = &trace {
         eprintln!("trace written -> {}", ts.path.display());

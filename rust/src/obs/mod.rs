@@ -104,6 +104,13 @@ pub enum SpanKind {
     /// re-dialed and rejoined the dispatch set (elastic membership);
     /// `task` holds the address index.
     Reconnect,
+    /// Worker lane: θ (or a segment of it) in flight over a
+    /// worker↔worker peer edge — a non-star collective's fan-out hop.
+    NicPeer,
+    /// Master lane: a non-star collective's post-cut reduce phase
+    /// (ring/tree/gossip critical path down to the master); `task`
+    /// holds the participating-member count.
+    ReduceHop,
 }
 
 impl SpanKind {
@@ -134,6 +141,8 @@ impl SpanKind {
             SpanKind::Connect => "connect",
             SpanKind::Heartbeat => "heartbeat",
             SpanKind::Reconnect => "reconnect",
+            SpanKind::NicPeer => "nic_peer",
+            SpanKind::ReduceHop => "reduce_hop",
         }
     }
 }

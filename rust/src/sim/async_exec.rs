@@ -60,10 +60,12 @@ use crate::error::{Error, Result};
 use crate::obs::{SharedTracer, SpanKind};
 use crate::runtime::ComputeBackend;
 
+use super::collective::Collective;
 use super::deadline::{Cutoff, DeadlinePolicy, DeadlineState};
 use super::event::{EventKind, TaskEventQueue};
 use super::topology::{LinkModel, Topology, TopologyState};
 use super::{compute_into_slot, mirror_step, redispatch_missing, RetryEnv};
+use crate::rng::Rng;
 
 /// Tag for events that are not tied to a task (fault markers, θ-at-rack
 /// fan-outs): no real task id ever reaches this value.
@@ -164,6 +166,12 @@ pub struct AsyncSimConfig {
     /// RNG stream, so [`FaultModel::none`] leaves the run bit-identical
     /// to a fault-free one.
     pub faults: FaultModel,
+    /// Aggregation collective. [`Collective::Star`] keeps the legacy
+    /// per-worker master unicasts and per-response NIC queueing bit for
+    /// bit; ring/tree/gossip price θ fan-out over peer edges at
+    /// dispatch and charge one closed-form reduce surcharge after the
+    /// collection cut (unpriced when `topology` is `None`).
+    pub collective: Collective,
 }
 
 impl AsyncSimConfig {
@@ -177,7 +185,14 @@ impl AsyncSimConfig {
             compute: ComputeModel::Opaque,
             topology: None,
             faults: FaultModel::none(),
+            collective: Collective::Star,
         }
+    }
+
+    /// Builder-style aggregation collective.
+    pub fn with_collective(mut self, collective: Collective) -> Self {
+        self.collective = collective;
+        self
     }
 
     /// Builder-style compute model.
@@ -205,8 +220,8 @@ impl AsyncSimConfig {
     }
 
     /// Label for reports: `latency/policy/S=..`, plus the rack count
-    /// when the topology is hierarchical and the fault model when one
-    /// is active.
+    /// when the topology is hierarchical, the fault model when one is
+    /// active, and the collective when it is not the star.
     pub fn label(&self) -> String {
         let mut base =
             format!("{}/{}/S={}", self.latency.name(), self.policy.name(), self.max_staleness);
@@ -217,6 +232,9 @@ impl AsyncSimConfig {
         }
         if !self.faults.is_none() {
             base = format!("{base}/{}", self.faults.name());
+        }
+        if !self.collective.is_star() {
+            base = format!("{base}/{}", self.collective.name());
         }
         base
     }
@@ -304,6 +322,19 @@ pub struct AsyncSimCluster<'a> {
     stale_applied_total: u64,
     /// Fault counters accumulated over the cluster's lifetime.
     faults_total: FaultCounts,
+    /// Aggregation collective (star = the untouched legacy path).
+    collective: Collective,
+    /// Gossip's dedicated target stream (`Some` iff the collective is
+    /// gossip) — its draws never perturb the latency/fault streams, so
+    /// star/ring/tree trajectories are unaffected by its existence.
+    gossip_rng: Option<Rng>,
+    /// Per-worker θ-readiness offset of this window's non-star fan-out
+    /// (reused scratch; meaningful only for freshly dispatched workers).
+    bcast_sched: Vec<f64>,
+    /// Fan-out membership scratch (ascending worker ids).
+    members_buf: Vec<usize>,
+    /// Counted-worker ids of the current window (reduce pricing).
+    counted_ids: Vec<usize>,
     /// Armed observability tracer (virtual-ms domain); `None` = no-op.
     tracer: Option<SharedTracer>,
     /// Per-worker span anchor: when the current task's latest traced
@@ -377,7 +408,7 @@ impl<'a> AsyncSimCluster<'a> {
             compute: sim.compute,
             net,
             faults: sim.faults.sampler(),
-            queue: TaskEventQueue::new(),
+            queue: TaskEventQueue::with_hint(w),
             inflight: vec![None; w],
             theta_waiters: vec![Vec::new(); racks],
             next_task_id: 0,
@@ -389,6 +420,11 @@ impl<'a> AsyncSimCluster<'a> {
             cancelled_total: 0,
             stale_applied_total: 0,
             faults_total: FaultCounts::default(),
+            collective: sim.collective,
+            gossip_rng: sim.collective.gossip_rng(),
+            bcast_sched: Vec::new(),
+            members_buf: Vec::new(),
+            counted_ids: Vec::new(),
             tracer: None,
             trace_hop: vec![0.0; w],
         })
@@ -514,6 +550,37 @@ impl StepExecutor for AsyncSimCluster<'_> {
         if let Some(net) = self.net.as_mut() {
             net.begin_window();
         }
+        let star = self.collective.is_star();
+        if !star {
+            // Price this window's non-star θ fan-out over peer edges.
+            // The members are exactly the workers the dispatch loop
+            // below will freshly start: not down, not crashing this
+            // step, not a busy laggard. Fault queries are repeatable
+            // lookups after `next_step`, so this scan perturbs no RNG
+            // stream — and gossip draws from its own dedicated stream.
+            let mut members = std::mem::take(&mut self.members_buf);
+            members.clear();
+            for j in 0..w {
+                if !self.faults.is_down(j, self.now_ms)
+                    && !self.faults.crashes(j)
+                    && self.inflight[j].is_none()
+                {
+                    members.push(j);
+                }
+            }
+            let off = self.collective.broadcast_offsets(
+                self.net.as_ref(),
+                &members,
+                self.costs.broadcast_bytes,
+                self.gossip_rng.as_mut(),
+            );
+            self.bcast_sched.clear();
+            self.bcast_sched.resize(w, 0.0);
+            for (p, &j) in members.iter().enumerate() {
+                self.bcast_sched[j] = off[p];
+            }
+            self.members_buf = members;
+        }
         let mut fc = FaultCounts::default();
         let mut fresh_live = 0usize;
         let step_start = self.now_ms;
@@ -561,41 +628,72 @@ impl StepExecutor for AsyncSimCluster<'_> {
             // compute starts when the transfer lands. An omitted task
             // still loads every θ link — only its response vanishes —
             // but never ships a response event.
-            let eta = match self.net.as_mut() {
-                Some(net) if net.hierarchical() => {
-                    let (r, relay_at, newly) =
-                        net.relay_theta(j, self.now_ms, self.costs.broadcast_bytes);
-                    if newly {
-                        self.queue.push(relay_at, r, INFO_TASK, EventKind::ThetaAtRack);
-                    }
-                    self.theta_waiters[r].push((j, id, compute_ms, omit));
-                    net.eta_before_theta(relay_at, self.costs.broadcast_bytes, compute_ms, bytes)
+            let eta = if !star {
+                // Non-star: θ reaches this worker at its collective
+                // fan-out offset, and its contribution joins the
+                // aggregation the instant compute finishes — per-hop
+                // NIC queueing is replaced by the collective's
+                // closed-form schedule (fan-out here, reduce after the
+                // cut), which is what keeps the event count O(W).
+                let ready = self.now_ms + self.bcast_sched[j];
+                if self.net.is_some() && self.bcast_sched[j] > 0.0 {
+                    self.emit(SpanKind::NicPeer, j + 1, t, id, self.now_ms, ready);
                 }
-                Some(net) => {
-                    let done =
-                        net.unicast_theta(j, self.now_ms, self.costs.broadcast_bytes)
-                            + compute_ms;
-                    if !omit {
-                        self.queue.push(done, j, id, EventKind::ComputeDone);
-                    }
-                    net.eta_at_dispatch(done, bytes)
+                let done = ready + compute_ms;
+                if !omit {
+                    let kind = if corrupt {
+                        EventKind::CorruptArrival
+                    } else {
+                        EventKind::Arrival
+                    };
+                    self.queue.push(done, j, id, kind);
                 }
-                None => {
-                    let done = self.now_ms + compute_ms;
-                    if !omit {
-                        let kind = if corrupt {
-                            EventKind::CorruptArrival
-                        } else {
-                            EventKind::Arrival
-                        };
-                        self.queue.push(done, j, id, kind);
+                done
+            } else {
+                match self.net.as_mut() {
+                    Some(net) if net.hierarchical() => {
+                        let (r, relay_at, newly) =
+                            net.relay_theta(j, self.now_ms, self.costs.broadcast_bytes);
+                        if newly {
+                            self.queue.push(relay_at, r, INFO_TASK, EventKind::ThetaAtRack);
+                        }
+                        self.theta_waiters[r].push((j, id, compute_ms, omit));
+                        net.eta_before_theta(
+                            relay_at,
+                            self.costs.broadcast_bytes,
+                            compute_ms,
+                            bytes,
+                        )
                     }
-                    done
+                    Some(net) => {
+                        let done =
+                            net.unicast_theta(j, self.now_ms, self.costs.broadcast_bytes)
+                                + compute_ms;
+                        if !omit {
+                            self.queue.push(done, j, id, EventKind::ComputeDone);
+                        }
+                        net.eta_at_dispatch(done, bytes)
+                    }
+                    None => {
+                        let done = self.now_ms + compute_ms;
+                        if !omit {
+                            let kind = if corrupt {
+                                EventKind::CorruptArrival
+                            } else {
+                                EventKind::Arrival
+                            };
+                            self.queue.push(done, j, id, kind);
+                        }
+                        done
+                    }
                 }
             };
             self.inflight[j] =
                 Some(Task { id, version: t, start_ms: self.now_ms, eta_ms: eta, corrupt });
-            self.trace_hop[j] = self.now_ms;
+            // Non-star Compute spans begin when θ actually reached the
+            // worker, not at the master's broadcast instant.
+            self.trace_hop[j] =
+                if star { self.now_ms } else { self.now_ms + self.bcast_sched[j] };
         }
         self.lat_buf = lat;
         debug_assert!(self
@@ -635,6 +733,7 @@ impl StepExecutor for AsyncSimCluster<'_> {
         let mut fresh_counted = 0usize;
         let mut stale_counted = 0usize;
         let mut last_arrival = self.now_ms;
+        self.counted_ids.clear();
         loop {
             let stop_now = match stop {
                 StopRule::Count(n) => counted >= n,
@@ -758,10 +857,13 @@ impl StepExecutor for AsyncSimCluster<'_> {
                     fc.corrupt += 1;
                     last_arrival = ev.time_ms;
                     if self.tracer.is_some() {
-                        if self.net.is_some() {
+                        if self.net.is_some() && star {
                             self.emit(SpanKind::NicMaster, ev.worker + 1, task.version, ev.task, self.trace_hop[ev.worker], ev.time_ms);
-                        } else {
+                        } else if star {
                             self.emit(SpanKind::Compute, ev.worker + 1, task.version, ev.task, task.start_ms, ev.time_ms);
+                        } else {
+                            // Non-star arrivals land straight off compute.
+                            self.emit(SpanKind::Compute, ev.worker + 1, task.version, ev.task, self.trace_hop[ev.worker], ev.time_ms);
                         }
                         self.emit(SpanKind::CorruptErase, ev.worker + 1, task.version, ev.task, ev.time_ms, ev.time_ms);
                     }
@@ -772,6 +874,9 @@ impl StepExecutor for AsyncSimCluster<'_> {
                     // simulator: every realized latency is observed.
                     self.deadline.observe(ev.time_ms - task.start_ms);
                     counted += 1;
+                    if !star {
+                        self.counted_ids.push(ev.worker);
+                    }
                     last_arrival = ev.time_ms;
                     if task.version == t {
                         fresh_counted += 1;
@@ -782,10 +887,13 @@ impl StepExecutor for AsyncSimCluster<'_> {
                     // anything older was cancelled at a window end.
                     debug_assert!(t - task.version <= self.max_staleness);
                     if self.tracer.is_some() {
-                        if self.net.is_some() {
+                        if self.net.is_some() && star {
                             self.emit(SpanKind::NicMaster, ev.worker + 1, task.version, ev.task, self.trace_hop[ev.worker], ev.time_ms);
-                        } else {
+                        } else if star {
                             self.emit(SpanKind::Compute, ev.worker + 1, task.version, ev.task, task.start_ms, ev.time_ms);
+                        } else {
+                            // Non-star arrivals land straight off compute.
+                            self.emit(SpanKind::Compute, ev.worker + 1, task.version, ev.task, self.trace_hop[ev.worker], ev.time_ms);
                         }
                         self.emit(SpanKind::Arrival, ev.worker + 1, task.version, ev.task, ev.time_ms, ev.time_ms);
                     }
@@ -811,10 +919,37 @@ impl StepExecutor for AsyncSimCluster<'_> {
         //    budget when responses are still pending; otherwise it
         //    proceeds at the last counted arrival.
         let pending = self.inflight.iter().filter(|x| x.is_some()).count();
-        let proceed_at = match stop {
+        let mut proceed_at = match stop {
             StopRule::Time(d) if pending > 0 => d,
             _ => last_arrival,
         };
+
+        // 4b. Non-star collectives reduce after the cut: one closed-form
+        //     critical-path surcharge over the counted members' worst
+        //     payload, replacing the star's per-arrival master-NIC
+        //     serialization (which is exactly the term ring all-reduce
+        //     removes at equal NIC parameters).
+        if !star && counted > 0 {
+            self.counted_ids.sort_unstable();
+            let bytes = self
+                .counted_ids
+                .iter()
+                .map(|&j| self.costs.response_bytes[j])
+                .max()
+                .unwrap_or(0);
+            let reduce = self.collective.reduce_ms(self.net.as_ref(), &self.counted_ids, bytes);
+            if reduce > 0.0 {
+                self.emit(
+                    SpanKind::ReduceHop,
+                    0,
+                    t,
+                    self.counted_ids.len() as u64,
+                    proceed_at,
+                    proceed_at + reduce,
+                );
+                proceed_at += reduce;
+            }
+        }
 
         // 5. Cancel every in-flight task that could no longer meet the
         //    staleness bound at the next window (version + S ≤ t), and

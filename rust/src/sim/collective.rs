@@ -1,0 +1,454 @@
+//! Pluggable aggregation collectives: how θ fans out to the fleet and
+//! how responses are reduced back to the master.
+//!
+//! The paper's master decodes moment-encoded gradients collected from
+//! `W` workers. Every backend historically aggregated over a **star**:
+//! `W` unicasts serializing into one master NIC — the exact bottleneck
+//! that stops deadline-policy and rack results from extrapolating to
+//! millions of workers. [`Collective`] makes the aggregation topology a
+//! first-class axis:
+//!
+//! | collective | θ broadcast critical path        | reduce surcharge after the cut      |
+//! |------------|----------------------------------|-------------------------------------|
+//! | `star`     | per-worker master unicasts       | none (arrivals already priced NIC)  |
+//! | `ring`     | `master + p·hop(B/S)` (pipelined)| `2(S−1)·hop(B/S) + master(B)`       |
+//! | `tree`     | `master + Σ rank·hop(B)` to depth| `(⌈log₂S⌉)·hop(B) + master(B)`      |
+//! | `gossip`   | `master + rounds·hop(B)` (seeded)| `⌈log₂S⌉·hop(B) + master(B)`        |
+//!
+//! where `S` is the participating-member count, `B` the payload bytes,
+//! and `hop` the unqueued worker↔worker edge price from
+//! [`Topology::peer_service_ms`] — so oversubscribed uplinks and
+//! heterogeneous per-rack NICs fall out of the same pricing code path.
+//!
+//! Two invariants keep the refactor safe:
+//!
+//! 1. **Star is the untouched legacy path.** A star collective never
+//!    calls into this module's pricing; the executors keep their
+//!    historical per-arrival NIC queueing bit-for-bit (pinned in
+//!    `tests/integration_collective.rs`).
+//! 2. **Non-star reduces are closed-form.** A literal event-driven ring
+//!    all-reduce at `W = 10⁶` would schedule `O(W²)` segment events;
+//!    instead the cut happens on compute-done arrivals and one
+//!    closed-form surcharge prices the reduce's critical path. That is
+//!    what removes the star's `W·master(B)` serialization term — the
+//!    ring pays `2(S−1)` *segment* hops on disjoint edges plus a single
+//!    master landing.
+//!
+//! With one member, every collective degenerates to exactly one master
+//! landing — bit-identical to the star (`0·hop + master(B)` is IEEE-754
+//! exact), which the `W = 1` integration pins rely on.
+//!
+//! [`Topology::peer_service_ms`]: super::topology::Topology::peer_service_ms
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+
+use super::topology::TopologyState;
+
+/// Gossip's default stream seed when none is given on the CLI; the
+/// harness reseeds per trial so trials stay independent.
+const GOSSIP_DEFAULT_SEED: u64 = 0xC0551B;
+
+/// Cap on gossip rounds relative to `⌈log₂ S⌉` before the epidemic is
+/// force-completed (push gossip informs everyone in `O(log S)` rounds
+/// with overwhelming probability; the cap bounds the adversarial tail).
+const GOSSIP_ROUND_SLACK: u32 = 8;
+
+/// The aggregation topology used for θ fan-out and response reduction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    /// Per-worker master unicasts — the legacy serializing path, kept
+    /// bit-identical to the pre-collective code.
+    Star,
+    /// Segmented pipelined ring: broadcast flows around the ring in
+    /// `S` segments; all-reduce pays `2(S−1)` segment hops.
+    Ring,
+    /// Binary (heap-indexed) reduce/broadcast tree rooted next to the
+    /// master; a parent serializes its two child sends.
+    Tree,
+    /// Seeded push-gossip epidemic: each informed member pushes to one
+    /// uniformly random member per round. Deterministic given the seed;
+    /// draws from its own stream so star/ring/tree trajectories are
+    /// unaffected by its existence.
+    Gossip {
+        /// Seed of the gossip target stream.
+        seed: u64,
+    },
+}
+
+impl Default for Collective {
+    fn default() -> Self {
+        Collective::Star
+    }
+}
+
+impl Collective {
+    /// Short name for labels and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Collective::Star => "star",
+            Collective::Ring => "ring",
+            Collective::Tree => "tree",
+            Collective::Gossip { .. } => "gossip",
+        }
+    }
+
+    /// Parse a CLI spelling: `star`, `ring`, `tree`, `gossip`.
+    pub fn parse(s: &str) -> Result<Collective> {
+        match s {
+            "star" => Ok(Collective::Star),
+            "ring" => Ok(Collective::Ring),
+            "tree" => Ok(Collective::Tree),
+            "gossip" => Ok(Collective::Gossip { seed: GOSSIP_DEFAULT_SEED }),
+            other => Err(Error::Config(format!(
+                "unknown collective '{other}' (expected star|ring|tree|gossip)"
+            ))),
+        }
+    }
+
+    /// Is this the legacy star path?
+    pub fn is_star(&self) -> bool {
+        matches!(self, Collective::Star)
+    }
+
+    /// Rebind the gossip stream seed (per-trial independence, like the
+    /// latency/fault models' `reseed`). No-op for the deterministic
+    /// collectives.
+    pub fn reseed(&self, seed: u64) -> Collective {
+        match self {
+            Collective::Gossip { .. } => Collective::Gossip { seed },
+            other => *other,
+        }
+    }
+
+    /// The gossip stream for this collective, if it needs one.
+    pub fn gossip_rng(&self) -> Option<Rng> {
+        match self {
+            Collective::Gossip { seed } => Some(Rng::new(*seed)),
+            _ => None,
+        }
+    }
+
+    /// Per-member θ-readiness offsets (ms, relative to the broadcast
+    /// instant) for a non-star fan-out over `members` (ascending worker
+    /// ids). Entry `p` is when `members[p]` holds this window's θ.
+    /// Without a network model every offset is zero — collectives are
+    /// unpriced, exactly like the legacy no-NIC configurations. Pure
+    /// pricing: no busy cursor moves (peer edges are private to the
+    /// schedule; see [`Topology::peer_service_ms`]).
+    ///
+    /// `rng` is only drawn from by [`Collective::Gossip`].
+    ///
+    /// [`Topology::peer_service_ms`]: super::topology::Topology::peer_service_ms
+    pub fn broadcast_offsets(
+        &self,
+        net: Option<&TopologyState>,
+        members: &[usize],
+        bytes: usize,
+        rng: Option<&mut Rng>,
+    ) -> Vec<f64> {
+        let s = members.len();
+        let mut out = vec![0.0; s];
+        let Some(net) = net else { return out };
+        if s == 0 || self.is_star() {
+            return out;
+        }
+        // Every non-star fan-out starts with one master→root landing.
+        let head = net.master_service_ms(bytes);
+        match self {
+            Collective::Star => unreachable!("handled above"),
+            Collective::Ring => {
+                // Pipelined segmented broadcast: the message crosses the
+                // ring in S segments, so member p finishes receiving one
+                // segment-hop after member p−1.
+                let hop = worst_peer_hop(net, members, segment_bytes(bytes, s));
+                for (p, slot) in out.iter_mut().enumerate() {
+                    *slot = head + p as f64 * hop;
+                }
+            }
+            Collective::Tree => {
+                out[0] = head;
+                for p in 1..s {
+                    let parent = (p - 1) / 2;
+                    // A parent's two sends serialize on its egress: the
+                    // second child waits one extra hop.
+                    let rank = if p % 2 == 1 { 1.0 } else { 2.0 };
+                    out[p] = out[parent] + rank * net.peer_ms(members[parent], members[p], bytes);
+                }
+            }
+            Collective::Gossip { .. } => {
+                let rng = rng.expect("gossip broadcast needs its rng stream");
+                let hop = worst_peer_hop(net, members, bytes);
+                let mut informed = vec![false; s];
+                informed[0] = true;
+                out[0] = head;
+                let mut n_informed = 1;
+                let cap = 4 * ceil_log2(s) + GOSSIP_ROUND_SLACK;
+                let mut round = 0;
+                while n_informed < s && round < cap {
+                    round += 1;
+                    let t = head + f64::from(round) * hop;
+                    // Push from the round-start informed set only.
+                    let senders = informed.clone();
+                    for &was_informed in &senders {
+                        if !was_informed {
+                            continue;
+                        }
+                        let tgt = rng.below(s);
+                        if !informed[tgt] {
+                            informed[tgt] = true;
+                            out[tgt] = t;
+                            n_informed += 1;
+                        }
+                    }
+                }
+                if n_informed < s {
+                    // Force-complete the adversarial tail one round
+                    // later (a real system would fall back to a direct
+                    // send once the epidemic stalls).
+                    let t = head + f64::from(round + 1) * hop;
+                    for (p, got) in informed.iter().enumerate() {
+                        if !got {
+                            out[p] = t;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Closed-form reduce surcharge (ms) added once per step after the
+    /// collection cut: the critical path of aggregating the `counted`
+    /// members' `bytes`-sized contributions down to the master. Zero
+    /// for the star (its arrivals already paid the serializing NIC
+    /// hops), zero without a network model, and exactly one master
+    /// landing with a single member — the `W = 1 ≡ star` degeneracy.
+    pub fn reduce_ms(&self, net: Option<&TopologyState>, counted: &[usize], bytes: usize) -> f64 {
+        let Some(net) = net else { return 0.0 };
+        let s = counted.len();
+        if s == 0 || self.is_star() {
+            return 0.0;
+        }
+        match self {
+            Collective::Star => 0.0,
+            Collective::Ring => {
+                // Reduce-scatter + all-gather: 2(S−1) segment hops on
+                // disjoint ring edges, then the root lands the full
+                // reduced vector on the master. No W·master(B) term —
+                // the star's serialization bottleneck is gone.
+                let hop = worst_peer_hop(net, counted, segment_bytes(bytes, s));
+                2.0 * (s as f64 - 1.0) * hop + net.master_service_ms(bytes)
+            }
+            Collective::Tree => {
+                // One worst hop per tree level: sibling uplinks are
+                // disjoint switched edges, so a level's receives
+                // overlap and the critical path is the level count.
+                f64::from(ceil_log2(s)) * worst_peer_hop(net, counted, bytes)
+                    + net.master_service_ms(bytes)
+            }
+            Collective::Gossip { .. } => {
+                // Push-sum style aggregation converges in ⌈log₂ S⌉
+                // rounds of one hop each.
+                f64::from(ceil_log2(s)) * worst_peer_hop(net, counted, bytes)
+                    + net.master_service_ms(bytes)
+            }
+        }
+    }
+}
+
+/// Segment size of a `bytes`-payload split `s` ways (ring pipelining).
+/// Zero-byte payloads (the sync simulator's opaque responses) stay
+/// zero, so pricing degenerates to per-hop overheads.
+fn segment_bytes(bytes: usize, s: usize) -> usize {
+    if bytes == 0 {
+        0
+    } else {
+        bytes.div_ceil(s).max(1)
+    }
+}
+
+/// `⌈log₂ s⌉` (0 for `s ≤ 1`).
+fn ceil_log2(s: usize) -> u32 {
+    if s <= 1 {
+        0
+    } else {
+        usize::BITS - (s - 1).leading_zeros()
+    }
+}
+
+/// Worst-case single peer-hop price among `members` (ascending ids).
+/// Peer prices take only two values — same-rack and cross-rack — so the
+/// scan is O(S): cross-rack iff the members span more than one rack.
+fn worst_peer_hop(net: &TopologyState, members: &[usize], bytes: usize) -> f64 {
+    let topo = net.topology();
+    if topo.is_flat() || members.is_empty() {
+        return topo.peer_service_ms(0, 0, bytes);
+    }
+    let r0 = net.rack_of_worker(members[0]);
+    if members.iter().all(|&m| net.rack_of_worker(m) == r0) {
+        topo.peer_service_ms(r0, r0, bytes)
+    } else {
+        topo.peer_service_ms(0, 1, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::topology::{LinkModel, Topology};
+    use super::*;
+
+    fn ms(overhead: f64) -> LinkModel {
+        LinkModel { gbps: 1e6, overhead_ms: overhead }
+    }
+
+    fn flat_state(w: usize, master_ms: f64) -> TopologyState {
+        TopologyState::new(Topology::flat(ms(master_ms)), w).unwrap()
+    }
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for name in ["star", "ring", "tree", "gossip"] {
+            assert_eq!(Collective::parse(name).unwrap().name(), name);
+        }
+        assert!(Collective::parse("mesh").is_err());
+        assert!(Collective::parse("star").unwrap().is_star());
+        assert!(!Collective::parse("ring").unwrap().is_star());
+    }
+
+    #[test]
+    fn reseed_only_touches_gossip() {
+        assert_eq!(Collective::Ring.reseed(7), Collective::Ring);
+        assert_eq!(Collective::Star.reseed(7), Collective::Star);
+        assert_eq!(
+            Collective::Gossip { seed: 1 }.reseed(7),
+            Collective::Gossip { seed: 7 }
+        );
+        assert!(Collective::Tree.gossip_rng().is_none());
+        assert!(Collective::Gossip { seed: 3 }.gossip_rng().is_some());
+    }
+
+    #[test]
+    fn no_network_model_means_no_pricing() {
+        let members = [0, 1, 2, 3];
+        let off = Collective::Ring.broadcast_offsets(None, &members, 1000, None);
+        assert_eq!(off, vec![0.0; 4]);
+        assert_eq!(Collective::Tree.reduce_ms(None, &members, 1000), 0.0);
+    }
+
+    #[test]
+    fn ring_broadcast_pipelines_one_segment_hop_per_member() {
+        // Flat, master overhead 2 ms, negligible byte cost: head = 2,
+        // each further member one segment hop (= 2 ms) later.
+        let net = flat_state(4, 2.0);
+        let off = Collective::Ring.broadcast_offsets(Some(&net), &[0, 1, 2, 3], 0, None);
+        for (p, o) in off.iter().enumerate() {
+            assert!((o - (2.0 + p as f64 * 2.0)).abs() < 1e-9, "member {p}: {o}");
+        }
+    }
+
+    #[test]
+    fn tree_broadcast_serializes_the_second_child() {
+        let net = flat_state(7, 1.0);
+        let off = Collective::Tree.broadcast_offsets(Some(&net), &[0, 1, 2, 3, 4, 5, 6], 0, None);
+        // Root at 1; children of the root at 1+1 and 1+2; node 3 is the
+        // first child of node 1 (ready 2) → 3, node 6 the second child
+        // of node 2 (ready 3) → 5.
+        assert!((off[0] - 1.0).abs() < 1e-9);
+        assert!((off[1] - 2.0).abs() < 1e-9);
+        assert!((off[2] - 3.0).abs() < 1e-9);
+        assert!((off[3] - 3.0).abs() < 1e-9);
+        assert!((off[6] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_reduce_pays_two_s_minus_one_hops_plus_master_landing() {
+        // Flat master 2 ms overhead, S = 4, zero bytes: hop = 2,
+        // reduce = 2·3·2 + 2 = 14.
+        let net = flat_state(4, 2.0);
+        let r = Collective::Ring.reduce_ms(Some(&net), &[0, 1, 2, 3], 0);
+        assert!((r - 14.0).abs() < 1e-9, "{r}");
+    }
+
+    #[test]
+    fn ring_reduce_splits_bytes_into_segments() {
+        // 1 Gbit/s, no overhead: full payload 125 kB = 1 ms; S = 5 →
+        // segment 25 kB = 0.2 ms per hop; 2·4 hops = 1.6 ms + 1 ms
+        // master landing.
+        let link = LinkModel { gbps: 1.0, overhead_ms: 0.0 };
+        let net = TopologyState::new(Topology::flat(link), 5).unwrap();
+        let r = Collective::Ring.reduce_ms(Some(&net), &[0, 1, 2, 3, 4], 125_000);
+        assert!((r - 2.6).abs() < 1e-9, "{r}");
+    }
+
+    #[test]
+    fn tree_and_gossip_reduce_scale_with_log_depth() {
+        let net = flat_state(8, 1.0);
+        let members: Vec<usize> = (0..8).collect();
+        // ⌈log₂ 8⌉ = 3 hops of 1 ms + 1 ms landing.
+        let t = Collective::Tree.reduce_ms(Some(&net), &members, 0);
+        assert!((t - 4.0).abs() < 1e-9, "{t}");
+        let g = Collective::Gossip { seed: 1 }.reduce_ms(Some(&net), &members, 0);
+        assert!((g - 4.0).abs() < 1e-9, "{g}");
+    }
+
+    #[test]
+    fn single_member_degenerates_to_one_master_landing() {
+        // The W = 1 ≡ star pin: every collective's surcharge is exactly
+        // the master service time, bitwise.
+        let net = flat_state(1, 3.0);
+        let m = net.master_service_ms(640);
+        for c in [Collective::Ring, Collective::Tree, Collective::Gossip { seed: 9 }] {
+            let r = c.reduce_ms(Some(&net), &[0], 640);
+            assert_eq!(r.to_bits(), m.to_bits(), "{}", c.name());
+        }
+        assert_eq!(Collective::Star.reduce_ms(Some(&net), &[0], 640), 0.0);
+    }
+
+    #[test]
+    fn cross_rack_members_pay_the_cross_rack_hop() {
+        // 2 racks: rack hop 1 ms, master 4 ms → cross-rack peer 6 ms.
+        let topo = Topology::hierarchical(2, ms(1.0), ms(4.0));
+        let net = TopologyState::new(topo, 4).unwrap();
+        // All of rack 0: hops priced same-rack (1 ms). S=2 → 2·1·1 + 4.
+        let same = Collective::Ring.reduce_ms(Some(&net), &[0, 1], 0);
+        assert!((same - 6.0).abs() < 1e-9, "{same}");
+        // Spanning both racks: hops priced cross-rack (6 ms).
+        let cross = Collective::Ring.reduce_ms(Some(&net), &[1, 2], 0);
+        assert!((cross - 16.0).abs() < 1e-9, "{cross}");
+    }
+
+    #[test]
+    fn gossip_is_deterministic_given_seed_and_reaches_everyone() {
+        let net = flat_state(64, 1.0);
+        let members: Vec<usize> = (0..64).collect();
+        let c = Collective::Gossip { seed: 42 };
+        let mut r1 = c.gossip_rng().unwrap();
+        let mut r2 = c.gossip_rng().unwrap();
+        let a = c.broadcast_offsets(Some(&net), &members, 0, Some(&mut r1));
+        let b = c.broadcast_offsets(Some(&net), &members, 0, Some(&mut r2));
+        assert_eq!(a, b, "same seed, same epidemic");
+        // Everyone is informed at a finite offset ≥ the master landing.
+        assert!(a.iter().all(|&t| t.is_finite() && t >= 1.0));
+        // A different seed gives a different epidemic (overwhelmingly).
+        let mut r3 = Rng::new(43);
+        let d = Collective::Gossip { seed: 43 }.broadcast_offsets(
+            Some(&net),
+            &members,
+            0,
+            Some(&mut r3),
+        );
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn ceil_log2_and_segmenting() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(1 << 20), 20);
+        assert_eq!(segment_bytes(0, 8), 0);
+        assert_eq!(segment_bytes(100, 8), 13);
+        assert_eq!(segment_bytes(3, 8), 1);
+    }
+}

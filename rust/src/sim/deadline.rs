@@ -23,6 +23,17 @@
 //! which scales count cuts to the freshly dispatched cohort so a policy
 //! keeps its tolerated *miss fraction* when part of the fleet is still
 //! busy with earlier steps.
+//!
+//! What an *observation* means follows the active collective's hop
+//! structure ([`crate::sim::collective::Collective`]): under the star, a
+//! latency runs dispatch → compute → rack/master NIC hops → master
+//! arrival; under ring/tree/gossip, it runs dispatch → peer-edge θ
+//! fan-out offset → compute → the member's contribution joining the
+//! aggregation (the post-cut reduce is a collective-wide surcharge, not
+//! part of any single member's latency). Cancelled tasks feed their
+//! transfer-aware ETA under the same definition, so adaptive budgets
+//! compare like with like within a configuration — but observed windows
+//! are *not* comparable across collectives.
 
 /// Per-step collection policy of the simulated master.
 #[derive(Debug, Clone)]

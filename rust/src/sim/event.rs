@@ -1,15 +1,427 @@
-//! Deterministic discrete-event heaps for the virtual-time simulator.
+//! Deterministic discrete-event queues for the virtual-time simulator.
 //!
-//! Min-heaps keyed by simulated time with an insertion-sequence
-//! tie-break, so two events at the same instant always pop in the order
-//! they were scheduled — runs are bit-reproducible regardless of float
-//! ties. [`EventQueue`] carries the synchronous simulator's bare
-//! arrivals; [`TaskEventQueue`] carries the pipelined simulator's
-//! task-tagged events ([`TaskEvent`]), whose task generation number lets
-//! cancelled tasks' stale events be recognized and skipped on pop.
+//! One generic min-queue, [`SimQueue`], keyed by simulated time with an
+//! insertion-sequence tie-break, so two events at the same instant
+//! always pop in the order they were scheduled — runs are
+//! bit-reproducible regardless of float ties. [`EventQueue`] carries the
+//! synchronous simulator's bare arrivals; [`TaskEventQueue`] carries the
+//! pipelined simulator's task-tagged events ([`TaskEvent`]), whose task
+//! generation number lets cancelled tasks' stale events be recognized
+//! and skipped on pop. Both are thin wrappers over the same
+//! [`SimQueue`], so the ordering contract lives in exactly one place.
+//!
+//! # Backends
+//!
+//! [`SimQueue::new`] is a plain binary heap — O(log n) per operation and
+//! unbeatable at the fleet sizes the repo's experiments historically ran
+//! (≤ a few thousand workers). [`SimQueue::with_hint`] switches to a
+//! two-level hierarchical timer wheel (a calendar queue) once the
+//! expected event population crosses [`WHEEL_HINT_THRESHOLD`]: events
+//! hash into 1 ms buckets (256 near buckets, 256 × 256 ms far chunks,
+//! an overflow heap beyond the ~65 s horizon), a bucket is sorted
+//! lazily once when the clock reaches it, and pushes into the past land
+//! in a small overlay heap consulted on every pop. Pop order is
+//! **identical** to the heap's — the same `(time, seq)` total order —
+//! so backend choice can never change a simulated trajectory; it only
+//! changes the constant: at 10⁵–10⁶ pending events the wheel replaces
+//! O(log n) sift-downs with O(1) bucket appends plus one amortized sort
+//! per bucket. The equivalence is property-tested here and in
+//! `tests/prop_event_queue.rs`.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
+
+/// Buckets per wheel level: 256 near buckets of [`BUCKET_MS`], then 256
+/// far chunks of 256 buckets each.
+const SLOTS: usize = 256;
+const SLOTS_U64: u64 = SLOTS as u64;
+
+/// Width of one near bucket in simulated milliseconds.
+const BUCKET_MS: f64 = 1.0;
+
+/// Expected-population hint at which [`SimQueue::with_hint`] picks the
+/// timer wheel over the binary heap. Below this the heap's cache
+/// behavior wins and — more importantly — every config the repo has
+/// ever published numbers for stays on the exact code path it was
+/// measured on.
+pub const WHEEL_HINT_THRESHOLD: usize = 4096;
+
+/// An event a [`SimQueue`] can order: an absolute simulated time plus
+/// the queue-assigned insertion sequence number (the tie-break).
+pub trait SimEvent: Copy {
+    /// Absolute simulated time (ms).
+    fn time_ms(&self) -> f64;
+    /// Insertion sequence number (unique per queue; assigned on push).
+    fn seq(&self) -> u64;
+}
+
+/// The one total order both backends share: `(time, seq)` via
+/// `total_cmp`, so NaN-free float times stay deterministic and equal
+/// times pop in insertion order.
+fn event_cmp<T: SimEvent>(a: &T, b: &T) -> Ordering {
+    a.time_ms().total_cmp(&b.time_ms()).then_with(|| a.seq().cmp(&b.seq()))
+}
+
+/// Newtype giving any [`SimEvent`] the shared total order, so the heap
+/// backend, the wheel's overlay, and the wheel's overflow all use one
+/// `Ord` impl instead of per-event copy-pastes.
+#[derive(Debug, Clone, Copy)]
+struct Ordered<T: SimEvent>(T);
+
+impl<T: SimEvent> PartialEq for Ordered<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T: SimEvent> Eq for Ordered<T> {}
+
+impl<T: SimEvent> PartialOrd for Ordered<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T: SimEvent> Ord for Ordered<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        event_cmp(&self.0, &other.0)
+    }
+}
+
+/// Two-level hierarchical timer wheel with an overflow heap beyond the
+/// horizon and an overlay heap for pushes into already-drained buckets.
+/// Maintains the primed invariant: after every `push`/`pop`, the sorted
+/// drain of the earliest non-empty bucket is loaded whenever the wheel
+/// or overflow holds events, so `peek_time` needs no mutation.
+#[derive(Debug)]
+struct TimerWheel<T: SimEvent> {
+    /// Next absolute bucket index not yet collected into `drain`; every
+    /// bucket below it is fully behind the clock. Monotone.
+    cursor: u64,
+    /// Absolute bucket index of `l0[0]`; `l0` covers
+    /// `[l0_base, l0_base + SLOTS)`.
+    l0_base: u64,
+    l0: Vec<Vec<T>>,
+    /// Far chunks: logical chunk `c` covers absolute buckets
+    /// `[l0_base + SLOTS + c·SLOTS, … + SLOTS)` and lives in physical
+    /// slot `(l1_head + c) % SLOTS`. Cascading one chunk into `l0`
+    /// advances `l1_head` instead of shifting 256 vectors.
+    l1: Vec<Vec<T>>,
+    l1_head: usize,
+    /// Events beyond the wheel horizon; drained back in as the horizon
+    /// advances (every cascade/rebase), so its minimum is never earlier
+    /// than anything still spinning in the wheels.
+    overflow: BinaryHeap<Reverse<Ordered<T>>>,
+    /// Pushes whose bucket was already collected (time at or before the
+    /// draining bucket); compared against the drain front on every pop.
+    overlay: BinaryHeap<Reverse<Ordered<T>>>,
+    /// The earliest collected bucket, sorted by `(time, seq)`.
+    drain: Vec<T>,
+    drain_pos: usize,
+    /// Events currently in `l0` (fast-forward when zero).
+    in_l0: usize,
+    /// Events currently in `l0` + `l1` (rebase from overflow when zero).
+    in_wheel: usize,
+    len: usize,
+}
+
+impl<T: SimEvent> TimerWheel<T> {
+    fn new() -> Self {
+        TimerWheel {
+            cursor: 0,
+            l0_base: 0,
+            l0: (0..SLOTS).map(|_| Vec::new()).collect(),
+            l1: (0..SLOTS).map(|_| Vec::new()).collect(),
+            l1_head: 0,
+            overflow: BinaryHeap::new(),
+            overlay: BinaryHeap::new(),
+            drain: Vec::new(),
+            drain_pos: 0,
+            in_l0: 0,
+            in_wheel: 0,
+            len: 0,
+        }
+    }
+
+    /// Absolute bucket of a time. Simulated times are finite and ≥ 0;
+    /// the `as` cast saturates, so even a hostile input cannot index out
+    /// of range — it just lands in a semantically "wrong" bucket and is
+    /// still popped in correct `(time, seq)` order via the sort/overlay.
+    fn bucket_of(time_ms: f64) -> u64 {
+        (time_ms / BUCKET_MS) as u64
+    }
+
+    /// First absolute bucket past the L1 horizon.
+    fn horizon_end(&self) -> u64 {
+        self.l0_base + SLOTS_U64 + SLOTS_U64 * SLOTS_U64
+    }
+
+    fn push(&mut self, ev: T) {
+        self.len += 1;
+        if Self::bucket_of(ev.time_ms()) < self.cursor {
+            self.overlay.push(Reverse(Ordered(ev)));
+        } else {
+            self.place(ev);
+        }
+        self.prime();
+    }
+
+    /// File an event ≥ the cursor into `l0`, `l1`, or overflow.
+    fn place(&mut self, ev: T) {
+        let b = Self::bucket_of(ev.time_ms());
+        debug_assert!(b >= self.l0_base, "placed event behind the wheel base");
+        if b < self.l0_base + SLOTS_U64 {
+            self.l0[(b - self.l0_base) as usize].push(ev);
+            self.in_l0 += 1;
+            self.in_wheel += 1;
+        } else if b < self.horizon_end() {
+            let chunk = ((b - self.l0_base - SLOTS_U64) / SLOTS_U64) as usize;
+            self.l1[(self.l1_head + chunk) % SLOTS].push(ev);
+            self.in_wheel += 1;
+        } else {
+            self.overflow.push(Reverse(Ordered(ev)));
+        }
+    }
+
+    /// Pull overflow events that now fit under the horizon back into the
+    /// wheels. Called whenever the horizon advances, which keeps the
+    /// overflow minimum at or beyond the horizon in between — the
+    /// invariant that lets `pop` ignore the overflow entirely.
+    fn pull_overflow(&mut self) {
+        let end = self.horizon_end();
+        while let Some(Reverse(min)) = self.overflow.peek() {
+            if Self::bucket_of(min.0.time_ms()) >= end {
+                break;
+            }
+            let ev = self.overflow.pop().expect("peeked overflow entry").0 .0;
+            self.place(ev);
+        }
+    }
+
+    /// Rotate the next far chunk into `l0` (one horizon step of 256
+    /// buckets), re-bucketing its events.
+    fn cascade(&mut self) {
+        self.l0_base += SLOTS_U64;
+        debug_assert_eq!(self.cursor, self.l0_base);
+        let chunk = std::mem::take(&mut self.l1[self.l1_head]);
+        self.l1_head = (self.l1_head + 1) % SLOTS;
+        for ev in chunk {
+            let slot = (Self::bucket_of(ev.time_ms()) - self.l0_base) as usize;
+            self.l0[slot].push(ev);
+            self.in_l0 += 1;
+        }
+        self.pull_overflow();
+    }
+
+    /// Ensure the drain holds the earliest uncollected events whenever
+    /// any exist outside the overlay.
+    fn prime(&mut self) {
+        if self.drain_pos >= self.drain.len() && (self.in_wheel > 0 || !self.overflow.is_empty())
+        {
+            self.advance();
+        }
+    }
+
+    /// Collect the earliest non-empty bucket into `drain` (sorted), fast-
+    /// forwarding over empty regions and rebasing onto the overflow
+    /// minimum when the wheels are dry.
+    fn advance(&mut self) {
+        self.drain.clear();
+        self.drain_pos = 0;
+        loop {
+            if self.in_wheel == 0 {
+                let Some(Reverse(min)) = self.overflow.peek() else { return };
+                // The wheels are empty and the overflow minimum is past
+                // the horizon: teleport the wheel to it (cursor stays
+                // monotone — see `pull_overflow`'s invariant).
+                let b = Self::bucket_of(min.0.time_ms());
+                debug_assert!(b >= self.cursor);
+                self.l0_base = b;
+                self.cursor = b;
+                self.pull_overflow();
+            }
+            if self.in_l0 == 0 {
+                self.cursor = self.l0_base + SLOTS_U64;
+            }
+            while self.cursor < self.l0_base + SLOTS_U64 {
+                let slot = (self.cursor - self.l0_base) as usize;
+                self.cursor += 1;
+                if !self.l0[slot].is_empty() {
+                    // `drain` was cleared above, so the swap parks an
+                    // empty recycled Vec in the slot.
+                    std::mem::swap(&mut self.drain, &mut self.l0[slot]);
+                    self.in_l0 -= self.drain.len();
+                    self.in_wheel -= self.drain.len();
+                    self.drain.sort_unstable_by(event_cmp);
+                    return;
+                }
+            }
+            self.cascade();
+        }
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        self.prime();
+        let drain_next = self.drain.get(self.drain_pos);
+        let overlay_next = self.overlay.peek().map(|Reverse(o)| &o.0);
+        let from_overlay = match (drain_next, overlay_next) {
+            (None, None) => return None,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            // seq is unique, so this is never Equal.
+            (Some(d), Some(o)) => event_cmp(o, d) == Ordering::Less,
+        };
+        let ev = if from_overlay {
+            self.overlay.pop().expect("peeked overlay entry").0 .0
+        } else {
+            let ev = self.drain[self.drain_pos];
+            self.drain_pos += 1;
+            ev
+        };
+        self.len -= 1;
+        self.prime();
+        Some(ev)
+    }
+
+    /// Earliest pending time. The primed invariant makes the answer the
+    /// min of the drain front and the overlay top.
+    fn peek_time(&self) -> Option<f64> {
+        let d = self.drain.get(self.drain_pos).map(SimEvent::time_ms);
+        let o = self.overlay.peek().map(|Reverse(e)| e.0.time_ms());
+        match (d, o) {
+            (None, t) | (t, None) => t,
+            (Some(a), Some(b)) => Some(a.min(b)),
+        }
+    }
+
+    fn clear(&mut self) {
+        for v in &mut self.l0 {
+            v.clear();
+        }
+        for v in &mut self.l1 {
+            v.clear();
+        }
+        self.overflow.clear();
+        self.overlay.clear();
+        self.drain.clear();
+        self.drain_pos = 0;
+        self.in_l0 = 0;
+        self.in_wheel = 0;
+        self.len = 0;
+        // cursor/l0_base stay put: virtual time is monotone and a later
+        // push behind the old cursor is still correct via the overlay.
+    }
+}
+
+#[derive(Debug)]
+enum Backend<T: SimEvent> {
+    Heap(BinaryHeap<Reverse<Ordered<T>>>),
+    Wheel(Box<TimerWheel<T>>),
+}
+
+/// Generic deterministic min-queue in `(time, seq)` order over any
+/// [`SimEvent`], with a heap backend (default) and a timer-wheel backend
+/// for large fleets ([`SimQueue::with_hint`]). Both pop in exactly the
+/// same order; the choice is purely a constant-factor decision.
+#[derive(Debug)]
+pub struct SimQueue<T: SimEvent> {
+    backend: Backend<T>,
+    /// Next insertion sequence number; survives `clear` so later pushes
+    /// still order after earlier ones.
+    seq: u64,
+    /// Lifetime push count (throughput accounting for `benches/sim_scale`).
+    pushed: u64,
+}
+
+impl<T: SimEvent> Default for SimQueue<T> {
+    fn default() -> Self {
+        SimQueue::new()
+    }
+}
+
+impl<T: SimEvent> SimQueue<T> {
+    /// Empty heap-backed queue (the exact historical code path).
+    pub fn new() -> Self {
+        SimQueue { backend: Backend::Heap(BinaryHeap::new()), seq: 0, pushed: 0 }
+    }
+
+    /// Empty queue sized for roughly `expected` concurrently pending
+    /// events: heap below [`WHEEL_HINT_THRESHOLD`], timer wheel at or
+    /// above it. Pop order is identical either way.
+    pub fn with_hint(expected: usize) -> Self {
+        if expected >= WHEEL_HINT_THRESHOLD {
+            SimQueue {
+                backend: Backend::Wheel(Box::new(TimerWheel::new())),
+                seq: 0,
+                pushed: 0,
+            }
+        } else {
+            SimQueue::new()
+        }
+    }
+
+    /// Is the wheel backend active? (Introspection for tests/benches.)
+    pub fn is_wheel(&self) -> bool {
+        matches!(self.backend, Backend::Wheel(_))
+    }
+
+    /// Schedule the event `make(seq)`, where `seq` is the queue-assigned
+    /// insertion sequence number the constructed event must carry.
+    pub fn push(&mut self, make: impl FnOnce(u64) -> T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.pushed += 1;
+        let ev = make(seq);
+        debug_assert_eq!(ev.seq(), seq, "event must carry the assigned seq");
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(Reverse(Ordered(ev))),
+            Backend::Wheel(w) => w.push(ev),
+        }
+    }
+
+    /// Pop the earliest event (ties in insertion order).
+    pub fn pop(&mut self) -> Option<T> {
+        match &mut self.backend {
+            Backend::Heap(h) => h.pop().map(|Reverse(o)| o.0),
+            Backend::Wheel(w) => w.pop(),
+        }
+    }
+
+    /// Earliest pending time, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        match &self.backend {
+            Backend::Heap(h) => h.peek().map(|Reverse(o)| o.0.time_ms()),
+            Backend::Wheel(w) => w.peek_time(),
+        }
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Wheel(w) => w.len,
+        }
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all pending events (the sequence counter keeps running so
+    /// later pushes still order after earlier ones).
+    pub fn clear(&mut self) {
+        match &mut self.backend {
+            Backend::Heap(h) => h.clear(),
+            Backend::Wheel(w) => w.clear(),
+        }
+    }
+
+    /// Lifetime push count (not reset by `clear`).
+    pub fn pushed_total(&self) -> u64 {
+        self.pushed
+    }
+}
 
 /// A scheduled arrival: worker `worker`'s response becomes available at
 /// simulated time `time_ms`.
@@ -23,73 +435,67 @@ pub struct Event {
     pub worker: usize,
 }
 
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // total_cmp: latencies are finite, but stay total-order-safe.
+impl SimEvent for Event {
+    fn time_ms(&self) -> f64 {
         self.time_ms
-            .total_cmp(&other.time_ms)
-            .then_with(|| self.seq.cmp(&other.seq))
+    }
+    fn seq(&self) -> u64 {
+        self.seq
     }
 }
 
 /// Min-queue of [`Event`]s in (time, insertion) order.
 #[derive(Debug, Default)]
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<Event>>,
-    seq: u64,
+    q: SimQueue<Event>,
 }
 
 impl EventQueue {
-    /// Empty queue.
+    /// Empty queue (heap-backed).
     pub fn new() -> Self {
         EventQueue::default()
     }
 
+    /// Empty queue sized for a `workers`-strong fleet (timer wheel at
+    /// [`WHEEL_HINT_THRESHOLD`] and beyond; identical pop order).
+    pub fn with_hint(workers: usize) -> Self {
+        EventQueue { q: SimQueue::with_hint(workers) }
+    }
+
     /// Schedule worker `worker` at absolute time `time_ms`.
     pub fn push(&mut self, time_ms: f64, worker: usize) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Reverse(Event { time_ms, seq, worker }));
+        self.q.push(|seq| Event { time_ms, seq, worker });
     }
 
     /// Pop the earliest event (ties in insertion order).
     pub fn pop(&mut self) -> Option<Event> {
-        self.heap.pop().map(|Reverse(e)| e)
+        self.q.pop()
     }
 
     /// Earliest pending time, if any.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|Reverse(e)| e.time_ms)
+        self.q.peek_time()
     }
 
     /// Number of pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.q.len()
     }
 
     /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.q.is_empty()
     }
 
     /// Drop all pending events (the sequence counter keeps running so
     /// later pushes still order after earlier ones).
     pub fn clear(&mut self) {
-        self.heap.clear();
+        self.q.clear()
+    }
+
+    /// Lifetime push count (events/second accounting).
+    pub fn pushed_total(&self) -> u64 {
+        self.q.pushed_total()
     }
 }
 
@@ -139,25 +545,12 @@ pub struct TaskEvent {
     pub kind: EventKind,
 }
 
-impl PartialEq for TaskEvent {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-
-impl Eq for TaskEvent {}
-
-impl PartialOrd for TaskEvent {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for TaskEvent {
-    fn cmp(&self, other: &Self) -> Ordering {
+impl SimEvent for TaskEvent {
+    fn time_ms(&self) -> f64 {
         self.time_ms
-            .total_cmp(&other.time_ms)
-            .then_with(|| self.seq.cmp(&other.seq))
+    }
+    fn seq(&self) -> u64 {
+        self.seq
     }
 }
 
@@ -167,41 +560,49 @@ impl Ord for TaskEvent {
 /// must never assume the queue drains at a step boundary.
 #[derive(Debug, Default)]
 pub struct TaskEventQueue {
-    heap: BinaryHeap<Reverse<TaskEvent>>,
-    seq: u64,
+    q: SimQueue<TaskEvent>,
 }
 
 impl TaskEventQueue {
-    /// Empty queue.
+    /// Empty queue (heap-backed).
     pub fn new() -> Self {
         TaskEventQueue::default()
     }
 
+    /// Empty queue sized for a `workers`-strong fleet (timer wheel at
+    /// [`WHEEL_HINT_THRESHOLD`] and beyond; identical pop order).
+    pub fn with_hint(workers: usize) -> Self {
+        TaskEventQueue { q: SimQueue::with_hint(workers) }
+    }
+
     /// Schedule an event at absolute time `time_ms`.
     pub fn push(&mut self, time_ms: f64, worker: usize, task: u64, kind: EventKind) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Reverse(TaskEvent { time_ms, seq, worker, task, kind }));
+        self.q.push(|seq| TaskEvent { time_ms, seq, worker, task, kind });
     }
 
     /// Pop the earliest event (ties in insertion order).
     pub fn pop(&mut self) -> Option<TaskEvent> {
-        self.heap.pop().map(|Reverse(e)| e)
+        self.q.pop()
     }
 
     /// Earliest pending time, if any.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|Reverse(e)| e.time_ms)
+        self.q.peek_time()
     }
 
     /// Number of pending events (ghosts of cancelled tasks included).
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.q.len()
     }
 
     /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.q.is_empty()
+    }
+
+    /// Lifetime push count (events/second accounting).
+    pub fn pushed_total(&self) -> u64 {
+        self.q.pushed_total()
     }
 }
 
@@ -313,5 +714,159 @@ mod tests {
         q.push(2.0, 8, 43, EventKind::RackDone);
         let e = q.pop().unwrap();
         assert_eq!((e.worker, e.task, e.kind), (8, 43, EventKind::RackDone));
+    }
+
+    // ---- timer-wheel backend -------------------------------------------
+
+    /// Deterministic LCG for test schedules (no external crates).
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            self.0
+        }
+        fn uniform(&mut self) -> f64 {
+            (self.next() >> 11) as f64 / (1u64 << 53) as f64
+        }
+    }
+
+    #[test]
+    fn with_hint_picks_the_backend() {
+        assert!(!SimQueue::<Event>::new().is_wheel());
+        assert!(!SimQueue::<Event>::with_hint(WHEEL_HINT_THRESHOLD - 1).is_wheel());
+        assert!(SimQueue::<Event>::with_hint(WHEEL_HINT_THRESHOLD).is_wheel());
+        assert!(EventQueue::with_hint(1_000_000).q.is_wheel());
+        assert!(TaskEventQueue::with_hint(1_000_000).q.is_wheel());
+    }
+
+    fn wheel_and_heap() -> (EventQueue, EventQueue) {
+        (EventQueue::with_hint(WHEEL_HINT_THRESHOLD), EventQueue::new())
+    }
+
+    fn assert_same_drain(wheel: &mut EventQueue, heap: &mut EventQueue) {
+        loop {
+            let (a, b) = (wheel.pop(), heap.pop());
+            match (a, b) {
+                (None, None) => break,
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.time_ms.to_bits(), y.time_ms.to_bits());
+                    assert_eq!(x.seq, y.seq);
+                    assert_eq!(x.worker, y.worker);
+                }
+                (x, y) => panic!("length mismatch: wheel {x:?} vs heap {y:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn wheel_matches_heap_with_ties_and_fractions() {
+        let (mut w, mut h) = wheel_and_heap();
+        let mut rng = Lcg(7);
+        for i in 0..4000 {
+            // Coarse times force bucket collisions and exact ties.
+            let t = (rng.next() % 64) as f64 + if i % 3 == 0 { 0.5 } else { 0.0 };
+            w.push(t, i);
+            h.push(t, i);
+        }
+        assert_same_drain(&mut w, &mut h);
+    }
+
+    #[test]
+    fn wheel_matches_heap_across_l1_and_overflow_horizons() {
+        let (mut w, mut h) = wheel_and_heap();
+        let mut rng = Lcg(11);
+        for i in 0..3000 {
+            // Spread far past the 65 s L1 horizon to exercise cascade,
+            // rebase, and overflow pull paths.
+            let t = rng.uniform() * 400_000.0;
+            w.push(t, i);
+            h.push(t, i);
+        }
+        assert_same_drain(&mut w, &mut h);
+    }
+
+    #[test]
+    fn wheel_matches_heap_under_interleaved_push_pop() {
+        let (mut w, mut h) = wheel_and_heap();
+        let mut rng = Lcg(13);
+        let mut clock = 0.0f64;
+        let mut worker = 0usize;
+        for _ in 0..200 {
+            for _ in 0..(rng.next() % 40) {
+                // Mix near-future, far-future, and *past* times (the
+                // overlay path: a push behind the drained cursor).
+                let dt = match rng.next() % 4 {
+                    0 => rng.uniform() * 2.0 - 1.5, // possibly behind the clock
+                    1 => rng.uniform() * 10.0,
+                    2 => rng.uniform() * 1000.0,
+                    _ => rng.uniform() * 100_000.0,
+                };
+                let t = (clock + dt).max(0.0);
+                w.push(t, worker);
+                h.push(t, worker);
+                worker += 1;
+            }
+            for _ in 0..(rng.next() % 32) {
+                let (a, b) = (w.pop(), h.pop());
+                let key = |e: Event| (e.time_ms.to_bits(), e.seq);
+                assert_eq!(a.map(key), b.map(key));
+                if let Some(e) = a {
+                    clock = clock.max(e.time_ms);
+                }
+            }
+            assert_eq!(w.len(), h.len());
+            assert_eq!(
+                w.peek_time().map(f64::to_bits),
+                h.peek_time().map(f64::to_bits)
+            );
+        }
+        assert_same_drain(&mut w, &mut h);
+    }
+
+    #[test]
+    fn wheel_overlay_handles_pushes_into_the_past() {
+        let mut q = EventQueue::with_hint(WHEEL_HINT_THRESHOLD);
+        q.push(100.0, 0);
+        assert_eq!(q.pop().unwrap().worker, 0);
+        // The 100 ms bucket is drained; these land in the overlay.
+        q.push(50.0, 1);
+        q.push(100.2, 2);
+        q.push(100.1, 3);
+        q.push(150.0, 4);
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.worker).collect();
+        assert_eq!(order, vec![1, 3, 2, 4]);
+    }
+
+    #[test]
+    fn wheel_clear_keeps_sequence_and_cursor_monotone() {
+        let mut q = EventQueue::with_hint(WHEEL_HINT_THRESHOLD);
+        q.push(500.0, 0);
+        assert_eq!(q.pop().unwrap().worker, 0);
+        q.push(1.0, 9);
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        q.push(2.0, 1); // behind the cursor after clear: overlay path
+        q.push(2.0, 2);
+        assert_eq!(q.pop().unwrap().worker, 1);
+        assert_eq!(q.pop().unwrap().worker, 2);
+        assert_eq!(q.pushed_total(), 4);
+    }
+
+    #[test]
+    fn wheel_tracks_pushed_total_and_len() {
+        let mut q = TaskEventQueue::with_hint(WHEEL_HINT_THRESHOLD);
+        for i in 0..100u64 {
+            q.push(i as f64 * 3.7, i as usize, i, EventKind::Arrival);
+        }
+        assert_eq!(q.len(), 100);
+        assert_eq!(q.pushed_total(), 100);
+        let mut n = 0;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 100);
+        assert_eq!(q.pushed_total(), 100);
+        assert!(q.is_empty());
     }
 }

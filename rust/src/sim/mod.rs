@@ -35,6 +35,7 @@
 //! max staleness 0 it reproduces [`SimCluster`] bit for bit.
 
 pub mod async_exec;
+pub mod collective;
 pub mod deadline;
 pub mod event;
 pub mod topology;
@@ -43,6 +44,7 @@ pub use async_exec::{
     run_simulated_async, run_simulated_async_traced, AsyncSimCluster, AsyncSimConfig,
     ComputeModel, TaskCosts,
 };
+pub use collective::Collective;
 pub use topology::{LinkModel, Topology};
 
 use std::sync::Arc;
@@ -269,12 +271,30 @@ pub struct SimConfig {
     /// own RNG stream, so [`FaultModel::none`] leaves the run
     /// bit-identical to a faultless build.
     pub faults: FaultModel,
+    /// Aggregation collective. [`Collective::Star`] is the legacy path
+    /// and stays bit-identical to the pre-collective code; non-star
+    /// collectives price θ fan-out and a post-cut reduce through
+    /// `topology` (and are unpriced without one).
+    pub collective: Collective,
+    /// Network used *only* to price non-star collectives (the
+    /// synchronous simulator's own arrivals keep their opaque latency
+    /// draws — there is no per-response NIC queueing here; that is the
+    /// pipelined executor's domain). Ignored under
+    /// [`Collective::Star`].
+    pub topology: Option<Topology>,
 }
 
 impl SimConfig {
-    /// Bundle a latency model with a deadline policy (no faults).
+    /// Bundle a latency model with a deadline policy (no faults,
+    /// star aggregation).
     pub fn new(latency: LatencyModel, policy: DeadlinePolicy) -> Self {
-        SimConfig { latency, policy, faults: FaultModel::none() }
+        SimConfig {
+            latency,
+            policy,
+            faults: FaultModel::none(),
+            collective: Collective::Star,
+            topology: None,
+        }
     }
 
     /// Builder-style fault model.
@@ -283,12 +303,28 @@ impl SimConfig {
         self
     }
 
-    /// Label for reports: `latency/policy[/faults]`.
+    /// Builder-style aggregation collective.
+    pub fn with_collective(mut self, collective: Collective) -> Self {
+        self.collective = collective;
+        self
+    }
+
+    /// Builder-style collective-pricing topology.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = Some(topology);
+        self
+    }
+
+    /// Label for reports: `latency/policy[/faults][/collective]`.
     pub fn label(&self) -> String {
         let mut base = format!("{}/{}", self.latency.name(), self.policy.name());
         if !self.faults.is_none() {
             base.push('/');
             base.push_str(&self.faults.name());
+        }
+        if !self.collective.is_star() {
+            base.push('/');
+            base.push_str(self.collective.name());
         }
         base
     }
@@ -321,6 +357,21 @@ pub struct SimCluster<'a> {
     faults: FaultSampler,
     /// Fault/retry counters over the cluster's lifetime.
     faults_total: FaultCounts,
+    /// Aggregation collective (star = the untouched legacy path).
+    collective: Collective,
+    /// Pricing-only network for non-star collectives (no busy cursors
+    /// are ever moved by the synchronous simulator).
+    net: Option<TopologyState>,
+    /// Gossip's dedicated target stream (`Some` iff the collective is
+    /// gossip), so its draws never perturb latency/fault streams.
+    gossip_rng: Option<crate::rng::Rng>,
+    /// Per-worker θ-readiness offset of this window's non-star fan-out
+    /// (reused scratch; all-zero under star or without a topology).
+    bcast_sched: Vec<f64>,
+    /// Fan-out membership scratch (ascending worker ids).
+    members_buf: Vec<usize>,
+    /// Counted-worker ids of the current window (reduce pricing).
+    counted_ids: Vec<usize>,
     /// Armed observability tracer (virtual-ms domain); `None` = no-op.
     tracer: Option<SharedTracer>,
 }
@@ -334,19 +385,26 @@ impl<'a> SimCluster<'a> {
         backend: Arc<dyn ComputeBackend>,
         cfg: &RunConfig,
         sim: &SimConfig,
-    ) -> SimCluster<'a> {
+    ) -> Result<SimCluster<'a>> {
         let mirror = if matches!(sim.policy, DeadlinePolicy::MirrorStraggler) {
             Some(cfg.straggler.sampler())
         } else {
             None
         };
-        SimCluster {
+        // The topology exists only to price non-star collectives here;
+        // a star configuration drops it so the legacy path stays
+        // byte-for-byte free of network state.
+        let net = match (&sim.topology, sim.collective.is_star()) {
+            (Some(topo), false) => Some(TopologyState::new(topo.clone(), payloads.len())?),
+            _ => None,
+        };
+        Ok(SimCluster {
             payloads,
             backend,
             latency: sim.latency.sampler(),
             deadline: DeadlineState::new(sim.policy.clone()),
             mirror,
-            queue: EventQueue::new(),
+            queue: EventQueue::with_hint(payloads.len()),
             lat_buf: Vec::new(),
             counted: Vec::new(),
             spares: Vec::new(),
@@ -354,8 +412,14 @@ impl<'a> SimCluster<'a> {
             dropped_total: 0,
             faults: sim.faults.sampler(),
             faults_total: FaultCounts::default(),
+            collective: sim.collective,
+            net,
+            gossip_rng: sim.collective.gossip_rng(),
+            bcast_sched: Vec::new(),
+            members_buf: Vec::new(),
+            counted_ids: Vec::new(),
             tracer: None,
-        }
+        })
     }
 
     /// Record a span when the tracer is armed (single-branch no-op
@@ -469,6 +533,36 @@ impl StepExecutor for SimCluster<'_> {
         self.faults.next_step(w);
         let mut fc = FaultCounts::default();
         debug_assert!(self.queue.is_empty());
+        let star = self.collective.is_star();
+        if !star {
+            // Price this window's non-star θ fan-out: the collective
+            // delays each live member's start by its peer-hop schedule
+            // instead of assuming instantaneous broadcast. Fault
+            // queries are repeatable lookups after `next_step`, so the
+            // membership scan perturbs no RNG stream.
+            let mut members = std::mem::take(&mut self.members_buf);
+            members.clear();
+            for j in 0..w {
+                if !self.faults.is_down(j, self.now_ms) && !self.faults.crashes(j) {
+                    members.push(j);
+                }
+            }
+            let off = self.collective.broadcast_offsets(
+                self.net.as_ref(),
+                &members,
+                0, // sync responses are opaque draws: overhead-only pricing
+                self.gossip_rng.as_mut(),
+            );
+            self.bcast_sched.clear();
+            self.bcast_sched.resize(w, 0.0);
+            for (p, &j) in members.iter().enumerate() {
+                self.bcast_sched[j] = off[p];
+                if self.net.is_some() && off[p] > 0.0 {
+                    self.emit(SpanKind::NicPeer, j + 1, t, j as u64, self.now_ms, self.now_ms + off[p]);
+                }
+            }
+            self.members_buf = members;
+        }
         for (j, &l) in lat.iter().enumerate() {
             debug_assert!(l.is_finite() && l >= 0.0, "latency {l} for worker {j}");
             if self.faults.is_down(j, self.now_ms) {
@@ -499,7 +593,13 @@ impl StepExecutor for SimCluster<'_> {
                 self.emit(SpanKind::Omitted, j + 1, t, j as u64, self.now_ms + l, self.now_ms + l);
                 continue;
             }
-            self.queue.push(self.now_ms + l, j);
+            if star {
+                self.queue.push(self.now_ms + l, j);
+            } else {
+                // The worker starts computing once the collective's
+                // fan-out reaches it.
+                self.queue.push(self.now_ms + self.bcast_sched[j] + l, j);
+            }
         }
         self.lat_buf = lat;
 
@@ -576,10 +676,28 @@ impl StepExecutor for SimCluster<'_> {
         // 4. Advance the clock: a master with a time budget sits out the
         //    full budget when anyone missed it; otherwise it proceeds at
         //    the last counted arrival.
-        let proceed_at = match deadline_abs {
+        let mut proceed_at = match deadline_abs {
             Some(d) if dropped > 0 => d,
             _ => last_arrival,
         };
+
+        // 4b. Non-star collectives reduce after the cut: one closed-form
+        //     critical-path surcharge over the counted members (star's
+        //     aggregation is free here — its serialization cost is the
+        //     pipelined executor's NIC model, not the sync simulator's).
+        if !star && counted > 0 {
+            self.counted_ids.clear();
+            for (j, &c) in self.counted.iter().enumerate() {
+                if c {
+                    self.counted_ids.push(j);
+                }
+            }
+            let reduce = self.collective.reduce_ms(self.net.as_ref(), &self.counted_ids, 0);
+            if reduce > 0.0 {
+                self.emit(SpanKind::ReduceHop, 0, t, counted as u64, proceed_at, proceed_at + reduce);
+                proceed_at += reduce;
+            }
+        }
         let collect_ms = proceed_at - self.now_ms;
         self.now_ms = proceed_at;
         self.dropped_total += dropped as u64;
@@ -665,7 +783,7 @@ pub fn run_simulated_traced(
 ) -> Result<RunReport> {
     sim.faults.validate()?;
     let backend = crate::coordinator::make_backend(cfg)?;
-    let mut cluster = SimCluster::new(scheme.payloads(), backend, cfg, sim);
+    let mut cluster = SimCluster::new(scheme.payloads(), backend, cfg, sim)?;
     run_with_executor_traced(scheme, &mut cluster, problem, cfg, tracer)
 }
 
@@ -807,7 +925,7 @@ mod tests {
         // A cluster over a *subset* of payloads must be rejected by the
         // shared loop.
         let sim = sim_exp(DeadlinePolicy::WaitForAll);
-        let mut cluster = SimCluster::new(&s.payloads()[..8], backend, &cfg, &sim);
+        let mut cluster = SimCluster::new(&s.payloads()[..8], backend, &cfg, &sim).unwrap();
         assert!(run_with_executor(&s, &mut cluster, &p, &cfg).is_err());
     }
 
@@ -841,7 +959,7 @@ mod tests {
         let backend = crate::coordinator::make_backend(&cfg).unwrap();
         let sim = sim_exp(DeadlinePolicy::WaitForAll)
             .with_faults(FaultModel { corrupt: 1.0, ..FaultModel::none() });
-        let mut cluster = SimCluster::new(s.payloads(), backend, &cfg, &sim);
+        let mut cluster = SimCluster::new(s.payloads(), backend, &cfg, &sim).unwrap();
         let r = run_with_executor(&s, &mut cluster, &p, &cfg).unwrap();
         assert!(!r.converged);
         assert!(r.theta.iter().all(|&v| v == 0.0), "corrupt responses must not decode");
@@ -860,7 +978,7 @@ mod tests {
         let backend = crate::coordinator::make_backend(&cfg).unwrap();
         let sim = sim_exp(DeadlinePolicy::WaitForK(20))
             .with_faults(FaultModel { crash: 0.05, ..FaultModel::none() });
-        let mut cluster = SimCluster::new(s.payloads(), backend, &cfg, &sim);
+        let mut cluster = SimCluster::new(s.payloads(), backend, &cfg, &sim).unwrap();
         let r = run_with_executor(&s, &mut cluster, &p, &cfg).unwrap();
         assert_eq!(r.steps, 30, "the run completes every step despite crashes");
         let fc = cluster.faults_total();
@@ -875,7 +993,7 @@ mod tests {
         let cfg = RunConfig { max_steps: 25, record_trace: true, ..Default::default() };
         let backend = crate::coordinator::make_backend(&cfg).unwrap();
         let sim = sim_exp(DeadlinePolicy::WaitForK(30));
-        let mut cluster = SimCluster::new(s.payloads(), backend, &cfg, &sim);
+        let mut cluster = SimCluster::new(s.payloads(), backend, &cfg, &sim).unwrap();
         let r = run_with_executor(&s, &mut cluster, &p, &cfg).unwrap();
         let total: f64 = r.trace.iter().map(|m| m.collect_ms.unwrap()).sum();
         assert!((cluster.now_ms() - total).abs() < 1e-9, "clock equals summed collects");

@@ -143,6 +143,34 @@ impl Topology {
         }
     }
 
+    /// Provenance label naming the aggregation collective and fleet
+    /// size alongside the topology: `flat/ring/w=100000`,
+    /// `racks=4/star/w=64`. Pinned by a unit test so trace/report
+    /// provenance strings cannot drift silently.
+    pub fn label_with(&self, collective: &str, workers: usize) -> String {
+        format!("{}/{collective}/w={workers}", self.label())
+    }
+
+    /// Unqueued service price (ms) of shipping `bytes` over one
+    /// worker↔worker edge between racks `a` and `b` — the per-hop cost
+    /// ring/tree/gossip collectives are built from. Flat: peers share
+    /// the master's switch, so one hop costs one master-link service
+    /// time. Same rack: one rack-NIC service time. Cross-rack: up the
+    /// source rack's NIC, across the master link, down the destination
+    /// rack's NIC. Deliberately *unqueued* (no busy cursors): peer
+    /// traffic rides a switched fabric where each edge is private to the
+    /// hop, unlike the serializing master/rack uplinks used for star
+    /// collection — so this is a service-time floor, exact when the
+    /// collective schedule keeps each edge busy with at most one
+    /// message, which ring/tree schedules do by construction.
+    pub fn peer_service_ms(&self, a: usize, b: usize, bytes: usize) -> f64 {
+        match &self.rack {
+            None => self.master.transfer_ms(bytes),
+            Some(rack) if a == b => rack.transfer_ms(bytes),
+            Some(rack) => 2.0 * rack.transfer_ms(bytes) + self.master.transfer_ms(bytes),
+        }
+    }
+
     /// Reject configurations that cannot drive a `w`-worker cluster.
     pub fn validate(&self, w: usize) -> Result<()> {
         if self.racks == 0 {
@@ -292,6 +320,29 @@ impl TopologyState {
         rack_done + self.topo.master.transfer_ms(bytes)
     }
 
+    /// Rack of worker `j` (precomputed block assignment).
+    pub fn rack_of_worker(&self, j: usize) -> usize {
+        self.rack_of[j]
+    }
+
+    /// Unqueued peer-hop price between workers `i` and `j` — see
+    /// [`Topology::peer_service_ms`].
+    pub fn peer_ms(&self, i: usize, j: usize, bytes: usize) -> f64 {
+        self.topo.peer_service_ms(self.rack_of[i], self.rack_of[j], bytes)
+    }
+
+    /// Unqueued master-link service time for one `bytes`-sized message
+    /// (no cursor update): the price of the single root→master edge a
+    /// non-star collective pays to land its reduced result.
+    pub fn master_service_ms(&self, bytes: usize) -> f64 {
+        self.topo.master.transfer_ms(bytes)
+    }
+
+    /// The topology being priced.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
     /// Service-time ETA of a task still waiting for its rack's θ copy
     /// (hierarchical only): the relay arrival (exact — the master hop is
     /// scheduled eagerly) plus unqueued prices for every hop after it —
@@ -426,6 +477,37 @@ mod tests {
         assert!((a0 - 5.0).abs() < 1e-9);
         assert!((a1 - 9.0).abs() < 1e-9);
         assert!((a2 - 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn label_with_names_collective_and_fleet() {
+        // Pinned: report/trace provenance strings must not drift.
+        let flat = Topology::flat(ms(1.0));
+        assert_eq!(flat.label_with("ring", 100_000), "flat/ring/w=100000");
+        let hier = Topology::hierarchical(4, ms(1.0), ms(1.0));
+        assert_eq!(hier.label_with("star", 64), "racks=4/star/w=64");
+    }
+
+    #[test]
+    fn peer_hops_price_flat_same_rack_and_cross_rack() {
+        // Flat: a peer hop is one master-link service (2 ms).
+        let flat = Topology::flat(ms(2.0));
+        assert!((flat.peer_service_ms(0, 0, 0) - 2.0).abs() < 1e-9);
+        // Hierarchical, rack 1 ms / master 4 ms: same rack 1 ms,
+        // cross-rack up+across+down = 1 + 4 + 1 = 6 ms.
+        let hier = Topology::hierarchical(2, ms(1.0), ms(4.0));
+        assert!((hier.peer_service_ms(0, 0, 0) - 1.0).abs() < 1e-9);
+        assert!((hier.peer_service_ms(0, 1, 0) - 6.0).abs() < 1e-9);
+        // Through TopologyState the rack lookup is per-worker: 4 workers
+        // on 2 racks puts workers 0,1 on rack 0 and 2,3 on rack 1.
+        let s = TopologyState::new(hier, 4).unwrap();
+        assert!((s.peer_ms(0, 1, 0) - 1.0).abs() < 1e-9);
+        assert!((s.peer_ms(1, 2, 0) - 6.0).abs() < 1e-9);
+        assert!((s.master_service_ms(0) - 4.0).abs() < 1e-9);
+        assert_eq!(s.rack_of_worker(3), 1);
+        // Bytes flow through the underlying LinkModel arithmetic.
+        let b = Topology::flat(LinkModel { gbps: 1.0, overhead_ms: 0.1 });
+        assert!((b.peer_service_ms(0, 0, 125_000) - 1.1).abs() < 1e-9);
     }
 
     #[test]

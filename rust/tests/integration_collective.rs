@@ -1,0 +1,210 @@
+//! Integration tests for the pluggable aggregation collectives: the
+//! explicit star is bit-identical to every pre-collective
+//! configuration (the refactor moved nothing), degenerate one-worker
+//! fleets collapse every collective onto the star's arithmetic, gossip
+//! runs are reproducible from their seed, and on a slow master NIC the
+//! ring and tree actually remove the star's serialized collection.
+
+use moment_ldpc::codes::ldpc::LdpcCode;
+use moment_ldpc::config::RunConfig;
+use moment_ldpc::coordinator::metrics::RunReport;
+use moment_ldpc::coordinator::schemes::ldpc_moment::LdpcMomentScheme;
+use moment_ldpc::coordinator::schemes::uncoded::UncodedScheme;
+use moment_ldpc::coordinator::straggler::LatencyModel;
+use moment_ldpc::data::{RegressionProblem, SynthConfig};
+use moment_ldpc::sim::deadline::DeadlinePolicy;
+use moment_ldpc::sim::{
+    run_simulated, run_simulated_async, AsyncSimConfig, Collective, LinkModel, SimConfig, Topology,
+};
+
+/// Trajectory fingerprint: θ bitwise plus the per-step straggler count
+/// and collection window.
+fn view(r: &RunReport) -> (Vec<u64>, usize, Vec<(usize, Option<u64>)>) {
+    (
+        r.theta.iter().map(|v| v.to_bits()).collect(),
+        r.steps,
+        r.trace.iter().map(|m| (m.stragglers, m.collect_ms.map(f64::to_bits))).collect(),
+    )
+}
+
+/// The refactor's core promise: `--collective star` (and the default)
+/// reproduce the pre-collective simulators bit for bit — synchronous
+/// and pipelined, flat link and 4-rack hierarchy, across latency
+/// models. The sync simulator additionally pins that star + topology
+/// carries no network state at all (the legacy path is untouched).
+#[test]
+fn explicit_star_is_bitwise_the_default_everywhere() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(160, 40), 19);
+    let code = LdpcCode::gallager(40, 20, 3, 6, 12).unwrap();
+    let scheme = LdpcMomentScheme::new(&problem, code).unwrap();
+    let cfg = RunConfig {
+        rel_tol: 1e-4,
+        max_steps: 2500,
+        record_trace: true,
+        ..Default::default()
+    };
+    let latencies = [
+        LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 41 },
+        LatencyModel::Pareto { scale_ms: 1.0, shape: 1.5, seed: 43 },
+    ];
+    let topo = Topology::hierarchical(4, LinkModel::gigabit(), LinkModel::gigabit());
+
+    for latency in &latencies {
+        // Synchronous: default vs explicit star vs star with a topology
+        // attached (star must drop it — pricing belongs to `run`'s comm
+        // model there, exactly as before this refactor). Non-star
+        // collectives without a NIC model also price nothing and must
+        // replay the same trajectory.
+        let base = SimConfig::new(latency.clone(), DeadlinePolicy::WaitForK(35));
+        let default = run_simulated(&scheme, &problem, &cfg, &base).unwrap();
+        let variants = [
+            base.clone().with_collective(Collective::Star),
+            base.clone().with_collective(Collective::Star).with_topology(topo.clone()),
+            base.clone().with_collective(Collective::Ring),
+            base.clone().with_collective(Collective::parse("gossip").unwrap()),
+        ];
+        for (i, sim) in variants.iter().enumerate() {
+            let r = run_simulated(&scheme, &problem, &cfg, sim).unwrap();
+            assert_eq!(
+                view(&default),
+                view(&r),
+                "sync variant {i} diverged under {}",
+                latency.name()
+            );
+        }
+
+        // Pipelined: default vs explicit star, flat link and 4 racks,
+        // S = 0 and 2, wait-k and the observation-fed quantile policy.
+        for policy in [
+            DeadlinePolicy::WaitForK(35),
+            DeadlinePolicy::QuantileAdaptive { q: 0.9, slack: 1.5, window: 256 },
+        ] {
+            for s in [0usize, 2] {
+                for with_topo in [false, true] {
+                    let mk = |c: Option<Collective>| {
+                        let mut sim = AsyncSimConfig::new(latency.clone(), policy.clone(), s);
+                        if with_topo {
+                            sim = sim.with_topology(topo.clone());
+                        } else {
+                            sim = sim.with_link(LinkModel::gigabit());
+                        }
+                        if let Some(c) = c {
+                            sim = sim.with_collective(c);
+                        }
+                        run_simulated_async(&scheme, &problem, &cfg, &sim).unwrap()
+                    };
+                    let default = mk(None);
+                    let star = mk(Some(Collective::Star));
+                    assert_eq!(
+                        view(&default),
+                        view(&star),
+                        "async star diverged: {}/{}/S={s}/topo={with_topo}",
+                        latency.name(),
+                        policy.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// One worker makes every schedule the same schedule: a single θ
+/// landing, one compute, one aggregate on the master. Ring, tree, and
+/// gossip must collapse onto the star bitwise — the `2(W-1)`-hop and
+/// `log2(W)`-level surcharges vanish *exactly* (IEEE: `0 * hop + master`
+/// is the star's master landing), not just approximately.
+#[test]
+fn one_worker_fleet_collapses_every_collective_onto_star() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(8, 4), 7);
+    let scheme = UncodedScheme::new(&problem, 1).unwrap();
+    let cfg = RunConfig {
+        workers: 1,
+        rel_tol: 1e-6,
+        max_steps: 300,
+        record_trace: true,
+        ..Default::default()
+    };
+    let latency = LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 47 };
+    for policy in [DeadlinePolicy::WaitForAll, DeadlinePolicy::WaitForK(1)] {
+        let mk = |c: Collective| {
+            let sim = AsyncSimConfig::new(latency.clone(), policy.clone(), 1)
+                .with_link(LinkModel::gigabit())
+                .with_collective(c);
+            run_simulated_async(&scheme, &problem, &cfg, &sim).unwrap()
+        };
+        let star = mk(Collective::Star);
+        for c in [Collective::Ring, Collective::Tree, Collective::parse("gossip").unwrap()] {
+            let r = mk(c);
+            let tag = format!("{} diverged at W=1 under {}", c.name(), policy.name());
+            assert_eq!(view(&star), view(&r), "{tag}");
+        }
+    }
+}
+
+/// Gossip is seeded: identical configurations replay bitwise, and the
+/// epidemic still converges the optimization like any other schedule.
+#[test]
+fn gossip_is_deterministic_and_converges() {
+    let problem = RegressionProblem::generate(&SynthConfig::dense(128, 32), 11);
+    let scheme = UncodedScheme::new(&problem, 32).unwrap();
+    let cfg = RunConfig { workers: 32, rel_tol: 1e-4, max_steps: 2000, ..Default::default() };
+    let mk = || {
+        let sim = AsyncSimConfig::new(
+            LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 53 },
+            DeadlinePolicy::WaitForK(28),
+            1,
+        )
+        .with_link(LinkModel::gigabit())
+        .with_collective(Collective::parse("gossip").unwrap());
+        run_simulated_async(&scheme, &problem, &cfg, &sim).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert!(a.converged, "{}", a.summary());
+    assert_eq!(a.theta, b.theta, "same seed must replay the same epidemic");
+    assert_eq!(a.totals.collect_ms, b.totals.collect_ms);
+}
+
+/// The headline economics: on a bandwidth-starved master NIC the star
+/// serializes all W response transfers through one link, while the ring
+/// pipelines W segments peer to peer (2(W-1) short hops) and the tree
+/// reduces in log2(W) levels — both must close the wait-for-all window
+/// in strictly less virtual time at equal NIC parameters.
+#[test]
+fn ring_and_tree_remove_the_master_serialization_term() {
+    let w = 32usize;
+    let problem = RegressionProblem::generate(&SynthConfig::dense(w, 8), 13);
+    let scheme = UncodedScheme::new(&problem, w).unwrap();
+    let cfg = RunConfig {
+        workers: w,
+        max_steps: 1,
+        rel_tol: 0.0,
+        record_trace: true,
+        ..Default::default()
+    };
+    // Zero per-message overhead: the collectives differ purely in how
+    // many bytes serialize through which link.
+    let link = LinkModel { gbps: 0.01, overhead_ms: 0.0 };
+    let mk = |c: Collective| {
+        let sim = AsyncSimConfig::new(
+            LatencyModel::ShiftedExp { shift_ms: 1.0, rate: 1.0, seed: 59 },
+            DeadlinePolicy::WaitForAll,
+            0,
+        )
+        .with_topology(Topology::flat(link))
+        .with_collective(c);
+        let r = run_simulated_async(&scheme, &problem, &cfg, &sim).unwrap();
+        r.trace[0].collect_ms.expect("traced window")
+    };
+    let star = mk(Collective::Star);
+    let ring = mk(Collective::Ring);
+    let tree = mk(Collective::Tree);
+    assert!(
+        ring < star,
+        "ring window ({ring:.3} ms) must beat the star's serialized collection ({star:.3} ms)"
+    );
+    assert!(
+        tree < star,
+        "tree window ({tree:.3} ms) must beat the star's serialized collection ({star:.3} ms)"
+    );
+}

@@ -1,0 +1,180 @@
+//! Property tests for the event core: the hierarchical timer wheel must
+//! be observationally identical to the binary heap it replaced — same
+//! pop sequence (times, payloads, insertion sequence numbers) under
+//! ties, fractional times, pushes into the past, interleaved push/pop,
+//! horizon-crossing times, and mid-stream clears. The simulators pick
+//! the backend by fleet size ([`WHEEL_HINT_THRESHOLD`]), so bitwise
+//! reproducibility of every simulation rests on this equivalence.
+//!
+//! All randomness is a fixed-seed LCG: failures replay exactly.
+
+use moment_ldpc::sim::event::{EventKind, EventQueue, TaskEventQueue, WHEEL_HINT_THRESHOLD};
+
+/// Minimal deterministic generator (MMIX LCG) — no crate RNG here, so
+/// the test cannot couple to simulation streams.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    fn frac(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// Draw a time that deliberately stresses the wheel: mostly bucket-
+/// interior fractions, a heavy dose of exact-tie values on a coarse
+/// grid, and occasional far-future spikes past the L1 horizon.
+fn draw_time(lcg: &mut Lcg, base: f64) -> f64 {
+    match lcg.below(10) {
+        0..=5 => base + lcg.frac() * 300.0,
+        6..=7 => base + f64::from(lcg.below(64) as u32) * 0.5, // exact ties
+        8 => base + 256.0 + lcg.frac() * 65_536.0,             // L1 territory
+        _ => base + 70_000.0 + lcg.frac() * 200_000.0,         // overflow heap
+    }
+}
+
+fn drain_both(heap: &mut EventQueue, wheel: &mut EventQueue, tag: &str) {
+    loop {
+        let (hp, wp) = (heap.peek_time(), wheel.peek_time());
+        assert_eq!(hp.map(f64::to_bits), wp.map(f64::to_bits), "{tag}");
+        let (h, w) = (heap.pop(), wheel.pop());
+        match (h, w) {
+            (None, None) => break,
+            (Some(h), Some(w)) => {
+                assert_eq!(h.time_ms.to_bits(), w.time_ms.to_bits(), "{tag}: time diverged");
+                assert_eq!(h.seq, w.seq, "{tag}: tie-break order diverged");
+                assert_eq!(h.worker, w.worker, "{tag}: payload diverged");
+            }
+            (h, w) => panic!("{tag}: one backend ran dry early (heap {h:?}, wheel {w:?})"),
+        }
+    }
+}
+
+/// Bulk push, bulk drain: ties, fractions, L1 chunks, and the overflow
+/// heap all pop in exactly the heap's order.
+#[test]
+fn wheel_equals_heap_bulk_push_then_drain() {
+    let mut lcg = Lcg(0xA11CE);
+    for round in 0..6 {
+        let mut heap = EventQueue::new();
+        let mut wheel = EventQueue::with_hint(WHEEL_HINT_THRESHOLD);
+        for j in 0..5_000usize {
+            let t = draw_time(&mut lcg, 0.0);
+            heap.push(t, j);
+            wheel.push(t, j);
+        }
+        assert_eq!(heap.len(), wheel.len());
+        drain_both(&mut heap, &mut wheel, &format!("bulk round {round}"));
+    }
+}
+
+/// Interleaved push/pop with pushes keyed off the popped time — the
+/// simulator's actual pattern — including pushes slightly *behind* the
+/// cursor (the overlay path) and pops straddling cascades.
+#[test]
+fn wheel_equals_heap_interleaved_push_pop() {
+    let mut lcg = Lcg(0xBEEF);
+    let mut heap = EventQueue::new();
+    let mut wheel = EventQueue::with_hint(WHEEL_HINT_THRESHOLD);
+    for j in 0..2_000usize {
+        let t = draw_time(&mut lcg, 0.0);
+        heap.push(t, j);
+        wheel.push(t, j);
+    }
+    let mut last = 0.0f64;
+    for op in 0..30_000u64 {
+        if lcg.below(3) > 0 || heap.is_empty() {
+            // Push relative to the last popped time; 1 in 8 lands in
+            // the past (late arrival after the clock advanced).
+            let behind = lcg.below(8) == 0;
+            let t = if behind {
+                (last - lcg.frac() * 50.0).max(0.0)
+            } else {
+                draw_time(&mut lcg, last)
+            };
+            heap.push(t, op as usize);
+            wheel.push(t, op as usize);
+        } else {
+            let (h, w) = (heap.pop().unwrap(), wheel.pop().unwrap());
+            assert_eq!(h.time_ms.to_bits(), w.time_ms.to_bits(), "op {op}: time diverged");
+            assert_eq!((h.seq, h.worker), (w.seq, w.worker), "op {op}: order diverged");
+            last = h.time_ms;
+        }
+    }
+    drain_both(&mut heap, &mut wheel, "interleaved drain");
+}
+
+/// `clear` mid-stream: the insertion sequence keeps counting and the
+/// wheel's cursor stays monotone, so a reused queue still matches the
+/// heap exactly — even when post-clear pushes land before the old
+/// cursor position.
+#[test]
+fn wheel_equals_heap_through_clear_and_reuse() {
+    let mut lcg = Lcg(0xC1EA2);
+    let mut heap = EventQueue::new();
+    let mut wheel = EventQueue::with_hint(WHEEL_HINT_THRESHOLD);
+    for phase in 0..4 {
+        for j in 0..1_500usize {
+            let t = draw_time(&mut lcg, 0.0);
+            heap.push(t, j);
+            wheel.push(t, j);
+        }
+        // Advance partway, then wipe the window (what a step-abort
+        // would do) and start the next phase from small times again.
+        for _ in 0..700 {
+            let (h, w) = (heap.pop().unwrap(), wheel.pop().unwrap());
+            assert_eq!(h.time_ms.to_bits(), w.time_ms.to_bits(), "phase {phase}");
+            assert_eq!(h.seq, w.seq, "phase {phase}");
+        }
+        heap.clear();
+        wheel.clear();
+        assert_eq!(heap.len(), 0);
+        assert_eq!(wheel.len(), 0);
+        assert_eq!(heap.pushed_total(), wheel.pushed_total(), "phase {phase}");
+    }
+    drain_both(&mut heap, &mut wheel, "post-clear");
+}
+
+/// The task-event queue (async executor) under the same regime: kinds
+/// and task generations ride along untouched and ties stay in
+/// insertion order.
+#[test]
+fn task_queue_wheel_equals_heap() {
+    const KINDS: [EventKind; 4] =
+        [EventKind::ComputeDone, EventKind::Arrival, EventKind::CorruptArrival, EventKind::RackDone];
+    let mut lcg = Lcg(0x7A5C);
+    let mut heap = TaskEventQueue::new();
+    let mut wheel = TaskEventQueue::with_hint(WHEEL_HINT_THRESHOLD);
+    let mut last = 0.0f64;
+    for op in 0..20_000u64 {
+        if lcg.below(2) == 0 || heap.is_empty() {
+            let t = draw_time(&mut lcg, last * 0.5);
+            let kind = KINDS[lcg.below(4) as usize];
+            heap.push(t, op as usize % 97, op, kind);
+            wheel.push(t, op as usize % 97, op, kind);
+        } else {
+            let (h, w) = (heap.pop().unwrap(), wheel.pop().unwrap());
+            assert_eq!(h.time_ms.to_bits(), w.time_ms.to_bits(), "op {op}");
+            assert_eq!((h.seq, h.worker, h.task, h.kind), (w.seq, w.worker, w.task, w.kind));
+            last = h.time_ms;
+        }
+    }
+    loop {
+        match (heap.pop(), wheel.pop()) {
+            (None, None) => break,
+            (Some(h), Some(w)) => {
+                assert_eq!(h.time_ms.to_bits(), w.time_ms.to_bits());
+                assert_eq!((h.seq, h.worker, h.task, h.kind), (w.seq, w.worker, w.task, w.kind));
+            }
+            _ => panic!("task queues ran dry at different lengths"),
+        }
+    }
+}
